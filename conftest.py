@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `python/` importable so the suite can be
+invoked either as `pytest python/tests/` (from the repo root) or as
+`cd python && pytest tests/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

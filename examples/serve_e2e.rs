@@ -1,0 +1,152 @@
+//! END-TO-END serving driver (the DESIGN.md deliverable): start the full
+//! coordinator (XLA engine + continuous batcher + HTTP server) in-process,
+//! fire a concurrent batched workload of real infilling requests over HTTP,
+//! and report latency/throughput/NFE — the paper's serving claim exercised
+//! through every layer (Pallas kernels -> HLO artifact -> PJRT -> decode
+//! machines -> batcher -> HTTP).
+//!
+//!     make artifacts && make models
+//!     cargo run --release --example serve_e2e
+//!
+//! Env: ASARM_E2E_REQS (default 24), ASARM_E2E_CONC (default 6).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use asarm::coordinator::http::{http_get, http_post, HttpServer};
+use asarm::coordinator::{self, Metrics, SchedulerConfig};
+use asarm::data::stories;
+use asarm::util::json::Json;
+use asarm::util::rng::Rng;
+use asarm::util::stats::{percentile, Summary};
+use asarm::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let ckpt = std::path::Path::new(artifacts).join("ckpt_stories_ft.bin");
+    if !ckpt.exists() {
+        eprintln!("serve_e2e: missing {}; run `make models`", ckpt.display());
+        return Ok(());
+    }
+    let n_reqs: usize = std::env::var("ASARM_E2E_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let conc: usize = std::env::var("ASARM_E2E_CONC")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6);
+
+    // --- full stack, in-process ---
+    let metrics = Metrics::new();
+    let handle = coordinator::start_xla(
+        artifacts,
+        Some(ckpt),
+        SchedulerConfig {
+            max_batch: 4,
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle, metrics.clone(), conc + 2)?;
+    let addr = server.serve_background();
+    println!("coordinator serving on http://{addr}");
+
+    let (code, body) = http_get(&addr, "/healthz")?;
+    anyhow::ensure!(code == 200, "healthz failed: {body}");
+
+    // --- workload: stories with randomly blanked spans, mixed samplers ---
+    let mut rng = Rng::new(2024);
+    let mut requests = vec![];
+    for i in 0..n_reqs {
+        // Keep stories within the model window (drop trailing sentences).
+        let mut story = stories::story_text(&mut rng);
+        while story.len() > 126 {
+            match story[..story.len() - 1].rfind('.') {
+                Some(p) => story.truncate(p + 1),
+                None => story.truncate(126),
+            }
+        }
+        let mut bytes = story.into_bytes();
+        // blank a random ~30% span of the story
+        let span = bytes.len() * 3 / 10;
+        let start = rng.below(bytes.len() - span);
+        for b in &mut bytes[start..start + span] {
+            if *b != b' ' || rng.below(4) > 0 {
+                *b = b'_';
+            }
+        }
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let sampler = ["assd", "assd_ngram", "sequential"][i % 3];
+        let body = Json::obj(vec![
+            ("text", Json::str(text)),
+            ("sampler", Json::str(sampler)),
+            ("k", Json::num(5.0)),
+            ("seed", Json::num(i as f64)),
+        ])
+        .to_string();
+        requests.push((sampler.to_string(), body));
+    }
+
+    // --- concurrent client load over HTTP ---
+    let pool = ThreadPool::new(conc);
+    let results: Arc<Mutex<Vec<(String, f64, Json)>>> = Arc::new(Mutex::new(vec![]));
+    let t0 = Instant::now();
+    let jobs: Vec<_> = requests
+        .into_iter()
+        .map(|(sampler, body)| {
+            let results = Arc::clone(&results);
+            move || {
+                let t = Instant::now();
+                let (code, resp) = http_post(&addr, "/v1/infill", &body).expect("http");
+                assert_eq!(code, 200, "bad response: {resp}");
+                let j = Json::parse(&resp).expect("json");
+                results
+                    .lock()
+                    .unwrap()
+                    .push((sampler, t.elapsed().as_secs_f64(), j));
+            }
+        })
+        .collect();
+    pool.scoped_run(jobs);
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- report ---
+    let results = results.lock().unwrap();
+    let mut total_tokens = 0.0;
+    println!("\n=== end-to-end serving results ===");
+    for sampler in ["assd", "assd_ngram", "sequential"] {
+        let lat: Vec<f64> = results
+            .iter()
+            .filter(|(s, _, _)| s == sampler)
+            .map(|(_, l, _)| *l)
+            .collect();
+        if lat.is_empty() {
+            continue;
+        }
+        let mut nfe = Summary::new();
+        let mut gen = 0.0;
+        for (_, _, j) in results.iter().filter(|(s, _, _)| s == sampler) {
+            nfe.push(j.get("model_nfe").unwrap().as_f64().unwrap());
+            gen += j.get("n_generated").unwrap().as_f64().unwrap();
+        }
+        total_tokens += gen;
+        println!(
+            "{sampler:12} n={:2}  latency p50 {:6.3}s p95 {:6.3}s  model NFE {}",
+            lat.len(),
+            percentile(&lat, 50.0),
+            percentile(&lat, 95.0),
+            nfe.fmt_pm(),
+        );
+    }
+    println!(
+        "\n{} requests in {wall:.2}s  ({:.2} req/s, {:.1} generated tokens/s)",
+        results.len(),
+        results.len() as f64 / wall,
+        total_tokens / wall
+    );
+    let (_, m) = http_get(&addr, "/metrics")?;
+    println!("\n/metrics: {m}");
+    println!("\nE2E OK: all layers composed (Pallas->HLO->PJRT->ASSD->batcher->HTTP).");
+    Ok(())
+}

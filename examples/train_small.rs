@@ -1,0 +1,68 @@
+//! Train a small AS-ARM from scratch through the AOT train_step artifact
+//! and watch the teacher-forced joint loss (Eq. 7) fall.
+//!
+//!     make artifacts
+//!     cargo run --release --example train_small
+//!
+//! This is the training-loop counterpart of serve_e2e: python authored the
+//! optimizer math once; rust owns data, schedules, and the loop.
+
+use asarm::data::{pack_chunks, split_chunks, stories};
+use asarm::runtime::engine::TrainRunner;
+use asarm::runtime::XlaEngine;
+use asarm::train::{train, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(artifacts).join("train_step_b4.hlo.txt").exists() {
+        eprintln!("train_small: run `make artifacts` first");
+        return Ok(());
+    }
+    let steps: usize = std::env::var("ASARM_TRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+
+    let mut runner = TrainRunner::load(artifacts, 4)?;
+    let chunks = pack_chunks(&stories::corpus(7, 2000), runner.meta.seq_len);
+    let (train_chunks, val_chunks) = split_chunks(chunks, 0.05, 3);
+    println!(
+        "training {} params on {} chunks for {steps} steps",
+        runner.meta.n_params,
+        train_chunks.len()
+    );
+
+    let mut val_engine = XlaEngine::load(artifacts, None)?;
+    let cfg = TrainConfig {
+        steps,
+        lr_max: 3e-4,
+        warmup_steps: steps / 10,
+        decay_steps: steps,
+        log_every: (steps / 12).max(1),
+        val_every: (steps / 3).max(1),
+        val_batches: 2,
+        checkpoint: Some(std::path::PathBuf::from("/tmp/asarm_train_small.bin")),
+        ..Default::default()
+    };
+    let logs = train(&mut runner, &train_chunks, &val_chunks, &cfg, Some(&mut val_engine))?;
+
+    println!("\nloss curve:");
+    for l in &logs {
+        let bar_len = ((l.loss as f64) * 8.0) as usize;
+        println!(
+            "  step {:4}  loss {:7.4}  {}{}",
+            l.step,
+            l.loss,
+            "#".repeat(bar_len.min(60)),
+            l.val_nll_per_token
+                .map(|v| format!("   val_nll/tok {v:.4}"))
+                .unwrap_or_default()
+        );
+    }
+    let first = logs.first().unwrap().loss;
+    let last = logs.last().unwrap().loss;
+    println!("\nloss {first:.4} -> {last:.4} ({:+.1}%)", 100.0 * (last - first) / first);
+    anyhow::ensure!(last < first, "loss did not decrease");
+    println!("train_small OK");
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT export: lower the AS-ARM to HLO text artifacts for the rust runtime.
+
+Python runs exactly once (`make artifacts`); afterwards the rust binary is
+self-contained. Interchange is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Exports into artifacts/:
+  fwd_b{B}.hlo.txt        forward(theta, tokens, mask_h, mask_g) -> (logits,)
+  train_step_b{B}.hlo.txt adamw step -> (theta', m', v', loss)
+  model_meta.json         dims + flat-theta layout (config.py)
+  params_init.bin         random-init flat theta, little-endian f32
+  fixtures/masks.json     golden sigma->mask fixtures for rust parity tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT, ModelConfig
+from . import masks as masks_mod
+from .model import adam_train_step, forward, init_params
+
+FWD_BATCH_SIZES = (1, 4)
+TRAIN_BATCH_SIZES = (4,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_forward(cfg: ModelConfig, batch: int, use_pallas: bool = True) -> str:
+    n, v = cfg.seq_len, cfg.vocab
+
+    def fn(theta, tokens, mask_h, mask_g):
+        return (forward(cfg, theta, tokens, mask_h, mask_g, use_pallas=use_pallas),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n, n), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n, n), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def export_train_step(cfg: ModelConfig, batch: int, use_pallas: bool = True) -> str:
+    n = cfg.seq_len
+    p = cfg.n_params
+
+    def fn(theta, m, v, step, tokens, mask_h, mask_g, loss_w, lr):
+        return adam_train_step(
+            cfg, theta, m, v, step, tokens, mask_h, mask_g, loss_w, lr, use_pallas=use_pallas
+        )
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n, n), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n, n), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def export_mask_fixtures(cfg: ModelConfig, path: str) -> None:
+    """Golden fixtures: rust mask builders must match these bit-for-bit."""
+    rng = np.random.default_rng(1234)
+    cases = []
+    for trial in range(8):
+        n = int(rng.integers(4, 17))
+        m = int(rng.integers(1, n))
+        n_known = int(rng.integers(m, n + 1))
+        vis = sorted(rng.choice(n, size=m, replace=False).tolist())
+        sigma = masks_mod.lattice_sigma(vis, n)
+        mh, mg = masks_mod.verify_masks(sigma, m)
+        dh, dg = masks_mod.draft_masks(sigma, m, n_known)
+        cases.append(
+            {
+                "n": n,
+                "m": m,
+                "n_known": n_known,
+                "visible": vis,
+                "sigma": sigma,
+                "verify_h": mh.astype(int).flatten().tolist(),
+                "verify_g": mg.astype(int).flatten().tolist(),
+                "draft_h": dh.astype(int).flatten().tolist(),
+                "draft_g": dg.astype(int).flatten().tolist(),
+            }
+        )
+    # A couple of arbitrary-permutation (non-lattice) cases for the Fig. 3
+    # ablation path.
+    for trial in range(4):
+        n = int(rng.integers(4, 13))
+        m = int(rng.integers(1, n))
+        sigma = rng.permutation(n).tolist()
+        mh, mg = masks_mod.verify_masks(sigma, m)
+        cases.append(
+            {
+                "n": n,
+                "m": m,
+                "visible": sorted(sigma[:m]),
+                "sigma": sigma,
+                "verify_h": mh.astype(int).flatten().tolist(),
+                "verify_g": mg.astype(int).flatten().tolist(),
+            }
+        )
+    with open(path, "w") as f:
+        json.dump(cases, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower with the pure-jnp reference attention/xent instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+    cfg = DEFAULT
+    use_pallas = not args.no_pallas
+    os.makedirs(args.out_dir, exist_ok=True)
+    os.makedirs(os.path.join(args.out_dir, "fixtures"), exist_ok=True)
+
+    for b in FWD_BATCH_SIZES:
+        text = export_forward(cfg, b, use_pallas)
+        path = os.path.join(args.out_dir, f"fwd_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in TRAIN_BATCH_SIZES:
+        text = export_train_step(cfg, b, use_pallas)
+        path = os.path.join(args.out_dir, f"train_step_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(args.out_dir, "model_meta.json")
+    with open(meta_path, "w") as f:
+        f.write(cfg.meta_json())
+    print(f"wrote {meta_path}")
+
+    theta = np.asarray(init_params(cfg, args.seed), dtype="<f4")
+    params_path = os.path.join(args.out_dir, "params_init.bin")
+    theta.tofile(params_path)
+    print(f"wrote {params_path} ({theta.size} f32)")
+
+    fx_path = os.path.join(args.out_dir, "fixtures", "masks.json")
+    export_mask_fixtures(cfg, fx_path)
+    print(f"wrote {fx_path}")
+
+
+if __name__ == "__main__":
+    main()

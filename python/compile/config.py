@@ -1,0 +1,127 @@
+"""Model configuration and flat-parameter layout for the AS-ARM.
+
+The whole parameter tree is packed into ONE flat f32 vector `theta` so that
+the rust side (Layer 3) only ever handles a single contiguous buffer for
+checkpointing and PJRT execution. Offsets are computed here, used by
+`model.py` to unpack, and exported to `artifacts/model_meta.json` so rust can
+introspect the layout (e.g. for parameter-count reporting).
+
+Architecture: XLNet-style two-stream attention transformer (the AS-ARM of
+the paper). Weights are SHARED between the content stream (h) and the query
+stream (g) exactly as in XLNet; the two streams differ only in their inputs
+(h: token+position embedding, g: position embedding + learned query bias)
+and their attention masks (h: may see self; g: strictly preceding order
+indices only — paper Eq. 6 / Appendix C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the AS-ARM transformer."""
+
+    vocab: int = 258  # 256 bytes + MASK(256) + PAD(257)
+    seq_len: int = 128
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+
+    # Token ids for the specials (mirrored in rust/src/tokenizer).
+    MASK: int = 256
+    PAD: int = 257
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list defining the flat theta layout."""
+        V, N, D, L, F = (
+            self.vocab,
+            self.seq_len,
+            self.d_model,
+            self.n_layers,
+            self.d_ff,
+        )
+        return [
+            ("tok_emb", (V, D)),
+            ("pos_emb", (N, D)),
+            ("q_bias", (D,)),  # learned query-stream seed (XLNet's w vector)
+            # Attention projections, stacked over layers, shared by streams.
+            ("wq", (L, D, D)),
+            ("wk", (L, D, D)),
+            ("wv", (L, D, D)),
+            ("wo", (L, D, D)),
+            # Pre-LN layer norms.
+            ("ln1_s", (L, D)),
+            ("ln1_b", (L, D)),
+            ("ln2_s", (L, D)),
+            ("ln2_b", (L, D)),
+            # MLP.
+            ("w1", (L, D, F)),
+            ("b1", (L, F)),
+            ("w2", (L, F, D)),
+            ("b2", (L, D)),
+            # Final norm + output bias (output projection is tied to tok_emb).
+            ("lnf_s", (D,)),
+            ("lnf_b", (D,)),
+            ("out_b", (V,)),
+        ]
+
+    def param_offsets(self) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+        """name -> (flat offset, shape)."""
+        out: Dict[str, Tuple[int, Tuple[int, ...]]] = {}
+        off = 0
+        for name, shape in self.param_spec():
+            size = 1
+            for s in shape:
+                size *= s
+            out[name] = (off, shape)
+            off += size
+        return out
+
+    @property
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in self.param_spec():
+            size = 1
+            for s in shape:
+                size *= s
+            total += size
+        return total
+
+    def meta_json(self) -> str:
+        """Serialize the layout for the rust side."""
+        offs = self.param_offsets()
+        return json.dumps(
+            {
+                "vocab": self.vocab,
+                "seq_len": self.seq_len,
+                "d_model": self.d_model,
+                "n_layers": self.n_layers,
+                "n_heads": self.n_heads,
+                "d_ff": self.d_ff,
+                "mask_id": self.MASK,
+                "pad_id": self.PAD,
+                "n_params": self.n_params,
+                "params": {
+                    name: {"offset": off, "shape": list(shape)}
+                    for name, (off, shape) in offs.items()
+                },
+            },
+            indent=1,
+        )
+
+
+# The default config used for every artifact this repo ships.
+DEFAULT = ModelConfig()
+
+# A tiny config for fast unit tests.
+TINY = ModelConfig(vocab=32, seq_len=16, d_model=16, n_layers=2, n_heads=2, d_ff=32, MASK=30, PAD=31)

@@ -1,0 +1,136 @@
+"""Layer-1 Pallas kernel: tiled masked two-stream attention.
+
+This is the paper's compute hot spot (attention with the arbitrary Eq.-6
+masks of an AS-ARM; FlashAttention for this setting is listed by the paper
+as the key extension). The kernel is a flash-attention-style online-softmax
+over K/V column tiles, with the *arbitrary* per-(batch, row, col) mask
+streamed tile-by-tile alongside K/V.
+
+TPU adaptation (DESIGN.md §6): instead of porting GPU threadblock tiling we
+tile for VMEM — each grid step holds one (BLOCK_Q × Dh) query tile, one
+(BLOCK_K × Dh) K and V tile, and one (BLOCK_Q × BLOCK_K) mask tile in VMEM,
+with 8×128-multiple shapes to keep MXU-systolic-friendly operand tiles. The
+HBM↔VMEM schedule that a GPU kernel would express with threadblocks +
+shared-memory staging is expressed here with the BlockSpec index maps.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO (loops + dynamic slices). Real-TPU efficiency is estimated in
+EXPERIMENTS.md §Perf from the VMEM footprint + MXU utilization of these
+block shapes.
+
+Gradients: the kernel is forward-only. `masked_attention` wraps it in a
+custom_vjp whose backward pass differentiates the mathematically identical
+pure-jnp oracle (kernels/ref.py), so the SAME function is used in the
+serving graph (fwd) and the training graph (fwd + exact bwd).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import masked_attention_ref
+
+NEG_INF = -1e9
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_k: int, n_kv: int, scale: float):
+    """One grid step: queries tile (1, BQ, Dh) against all KV tiles.
+
+    Grid is (B*H, N // BLOCK_Q). K/V/mask come in as full rows for this
+    batch-head / query tile; the kernel streams them in BLOCK_K chunks with a
+    running (max, sum-exp, accumulator) online softmax.
+    """
+    q = q_ref[0].astype(jnp.float32)  # [BQ, Dh]
+    bq = q.shape[0]
+    dh = q.shape[1]
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * block_k
+        k = k_ref[0, pl.dslice(start, block_k), :].astype(jnp.float32)  # [BK, Dh]
+        v = v_ref[0, pl.dslice(start, block_k), :].astype(jnp.float32)  # [BK, Dh]
+        msk = mask_ref[0, :, pl.dslice(start, block_k)].astype(jnp.float32)  # [BQ, BK]
+        s = q @ k.T * scale + (1.0 - msk) * NEG_INF  # [BQ, BK]
+        m_cur = jnp.max(s, axis=-1)  # [BQ]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Keep fully-masked rows stable: exp(NEG_INF - NEG_INF) would be 1,
+        # so gate by the mask tile explicitly.
+        p = jnp.exp(s - m_new[:, None]) * (msk > 0)  # [BQ, BK]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (block shapes must tile N)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def masked_attention_pallas(q, k, v, mask, block_q: int = 32, block_k: int = 64):
+    """Pallas forward: softmax(q k^T * scale + mask_bias) v.
+
+    Shapes: q,k,v [B,H,N,Dh]; mask [B,N,N] with 1=may-attend.
+    """
+    b, h, n, dh = q.shape
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(n, block_k)
+    scale = 1.0 / float(dh) ** 0.5
+    bh = b * h
+
+    qf = q.reshape(bh, n, dh)
+    kf = k.reshape(bh, n, dh)
+    vf = v.reshape(bh, n, dh)
+
+    kernel = functools.partial(_attn_kernel, block_k=bk, n_kv=n // bk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda g, qi: (g, qi, 0)),  # q tile
+            pl.BlockSpec((1, n, dh), lambda g, qi: (g, 0, 0)),  # k rows
+            pl.BlockSpec((1, n, dh), lambda g, qi: (g, 0, 0)),  # v rows
+            # mask is per-batch (shared across heads): index by g // h.
+            pl.BlockSpec((1, bq, n), lambda g, qi, h=h: (g // h, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda g, qi: (g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dh), q.dtype),
+        interpret=True,
+    )(qf, kf, vf, mask)
+    return out.reshape(b, h, n, dh)
+
+
+@jax.custom_vjp
+def masked_attention(q, k, v, mask):
+    """Masked attention: Pallas forward, oracle-derived exact backward."""
+    return masked_attention_pallas(q, k, v, mask)
+
+
+def _fwd(q, k, v, mask):
+    return masked_attention_pallas(q, k, v, mask), (q, k, v, mask)
+
+
+def _bwd(res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(masked_attention_ref, q, k, v, mask)
+    dq, dk, dv, _ = vjp(g)
+    return dq, dk, dv, None
+
+
+masked_attention.defvjp(_fwd, _bwd)

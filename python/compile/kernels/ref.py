@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel must be
+allclose to its oracle over the hypothesis shape/dtype/mask sweeps in
+python/tests/. They are also used as the backward pass of the custom-vjp
+wrappers (the Pallas kernels are forward-only; gradients are taken through
+these mathematically identical functions — see kernels/attention.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def masked_attention_ref(q, k, v, mask):
+    """Masked multi-head attention, reference implementation.
+
+    Args:
+      q: [B, H, N, Dh] queries (one stream).
+      k: [B, H, N, Dh] keys (content stream).
+      v: [B, H, N, Dh] values (content stream).
+      mask: [B, N, N] 1.0 = query row may attend to key col, 0.0 = may not.
+
+    Returns:
+      [B, H, N, Dh] attention outputs. Rows whose mask is all-zero return 0
+      (softmax over an empty set is defined as the zero vector here; such
+      rows are never read by the model because their logits are discarded).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    bias = (1.0 - mask[:, None, :, :]) * NEG_INF
+    logits = logits + bias.astype(logits.dtype)
+    # Numerically stable softmax that yields exact zeros for fully-masked rows.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * (mask[:, None, :, :] > 0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def softmax_xent_ref(logits, targets, weights):
+    """Weighted softmax cross-entropy, reference implementation.
+
+    Args:
+      logits: [B, N, V].
+      targets: [B, N] int32 target token ids.
+      weights: [B, N] per-position loss weights (0 for non-target positions).
+
+    Returns:
+      Scalar: sum_i w_i * (-log p(target_i)) / max(sum_i w_i, 1).
+    """
+    mx = jnp.max(logits, -1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx), -1)) + mx[..., 0]
+    tgt = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - tgt
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.sum(nll * weights) / denom

@@ -1,0 +1,115 @@
+"""Layer-1 Pallas kernel: fused streaming softmax-cross-entropy.
+
+Training-loss hot spot. Computing the teacher-forced joint loss (paper
+Eq. 7) naively materializes softmax probabilities over [B, N, V]; this
+kernel instead streams the vocab dimension in VMEM-sized tiles and keeps
+only a running (max, sum-exp, target-logit) triple per row — the classic
+online-logsumexp trick, fused with the target-gather.
+
+Like kernels/attention.py this is forward-only Pallas (interpret=True for
+CPU PJRT); `softmax_xent` wraps it in a custom_vjp whose backward pass is
+the analytic gradient (softmax(logits) - onehot(target)) * w / denom,
+expressed in jnp. The forward value is bit-compatible with the pure-jnp
+oracle in kernels/ref.py up to float tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _xent_kernel(logits_ref, tgt_ref, w_ref, nll_ref, *, block_v: int, n_v: int, vocab: int):
+    """One grid step: a tile of rows, streaming over vocab tiles.
+
+    logits tile: [R, V]; targets/weights: [R]. Output: weighted nll [R].
+    """
+    rows = logits_ref.shape[0]
+    tgt = tgt_ref[...]  # [R] int32
+    w = w_ref[...]  # [R] f32
+
+    def body(i, carry):
+        m_prev, l_prev, t_prev = carry
+        start = i * block_v
+        lg = logits_ref[:, pl.dslice(start, block_v)].astype(jnp.float32)  # [R, BV]
+        m_cur = jnp.max(lg, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(jnp.exp(lg - m_new[:, None]), -1)
+        # Gather the target logit if it falls in this tile.
+        cols = start + jax.lax.iota(jnp.int32, block_v)[None, :]  # [1, BV]
+        hit = (cols == tgt[:, None]).astype(jnp.float32)  # [R, BV]
+        t_new = t_prev + jnp.sum(lg * hit, axis=-1)
+        return m_new, l_new, t_new
+
+    m0 = jnp.full((rows,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rows,), jnp.float32)
+    t0 = jnp.zeros((rows,), jnp.float32)
+    m, l, t = jax.lax.fori_loop(0, n_v, body, (m0, l0, t0))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    nll_ref[...] = ((lse - t) * w).astype(nll_ref.dtype)
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_v"))
+def softmax_xent_pallas(logits, targets, weights, block_r: int = 32, block_v: int = 128):
+    """Pallas forward for the weighted mean NLL.
+
+    Shapes: logits [B,N,V], targets [B,N] int32, weights [B,N] f32.
+    Returns a scalar f32.
+    """
+    b, n, v = logits.shape
+    rows = b * n
+    br = _pick_block(rows, block_r)
+    bv = _pick_block(v, block_v)
+    lg = logits.reshape(rows, v)
+    tg = targets.reshape(rows).astype(jnp.int32)
+    wt = weights.reshape(rows).astype(jnp.float32)
+
+    kernel = functools.partial(_xent_kernel, block_v=bv, n_v=v // bv, vocab=v)
+    nll = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, v), lambda r: (r, 0)),
+            pl.BlockSpec((br,), lambda r: (r,)),
+            pl.BlockSpec((br,), lambda r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(lg, tg, wt)
+    denom = jnp.maximum(jnp.sum(wt), 1.0)
+    return jnp.sum(nll) / denom
+
+
+@jax.custom_vjp
+def softmax_xent(logits, targets, weights):
+    """Weighted mean softmax cross-entropy with fused Pallas forward."""
+    return softmax_xent_pallas(logits, targets, weights)
+
+
+def _fwd(logits, targets, weights):
+    return softmax_xent_pallas(logits, targets, weights), (logits, targets, weights)
+
+
+def _bwd(res, g):
+    logits, targets, weights = res
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    dlogits = (p - onehot) * weights[..., None] / denom * g
+    return dlogits.astype(logits.dtype), None, None
+
+
+softmax_xent.defvjp(_fwd, _bwd)

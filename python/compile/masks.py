@@ -1,0 +1,98 @@
+"""Attention-mask construction from (sigma, m, n) — python mirror.
+
+The AUTHORITATIVE implementation lives in rust (rust/src/model/mask.rs):
+masks are built on the request path by Layer 3. This python mirror exists
+for (a) L2 tests (chain-rule density consistency needs real masks) and
+(b) golden cross-language parity fixtures consumed by `cargo test`.
+
+State of a generation (paper Sec. 2.4 / Alg. 1 notation):
+
+  * sigma: order -> position bijection. Under the binary-lattice protocol
+    (Eq. 4) sigma = sorted(prompt positions) ++ sorted(target positions).
+  * m: number of prompt tokens (order indices < m are the prompt).
+  * n: number of KNOWN tokens (prompt + already-accepted targets), m <= n.
+
+Mask semantics (Eq. 6 + Appendix C), with order[pos] = sigma^-1(pos):
+
+  verify (Fig. 1b, density estimation; depends on sigma and m only):
+    prompt rows attend the full prompt (we never evaluate its density);
+    target rows attend the prompt plus strictly-earlier targets;
+    the content stream additionally sees itself.
+
+  draft (Fig. 1a, parallel sampling; depends on sigma, m and n):
+    identical to verify for all KNOWN rows — this is what makes Lemma 1
+    hold exactly: the content representations of known tokens are
+    bit-for-bit the same computation in the draft pass and the verify
+    pass, so the draft density of the first speculated token equals the
+    oracle density and it is always accepted;
+    UNKNOWN query rows attend exactly the known set (order < n), giving
+    the conditionally-independent draft p(. | x_sigma(<n));
+    nothing ever attends to an unknown position (they hold MASK tokens).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def order_from_sigma(sigma: Sequence[int]) -> np.ndarray:
+    """sigma maps order->position; returns position->order."""
+    n = len(sigma)
+    order = np.zeros(n, dtype=np.int64)
+    for i, pos in enumerate(sigma):
+        order[pos] = i
+    return order
+
+
+def lattice_sigma(visible: Sequence[int], n: int) -> List[int]:
+    """Binary-lattice sigma (Eq. 4): sorted prompt, then sorted targets."""
+    vis = sorted(visible)
+    vis_set = set(vis)
+    tgt = [p for p in range(n) if p not in vis_set]
+    return vis + tgt
+
+
+def verify_masks(sigma: Sequence[int], m: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Density-estimation masks (Fig. 1b). Returns (mask_h, mask_g), [N,N] f32."""
+    n = len(sigma)
+    order = order_from_sigma(sigma)
+    is_prompt = order < m
+    mask_g = np.zeros((n, n), dtype=np.float32)
+    for a in range(n):
+        for b in range(n):
+            if is_prompt[a]:
+                mask_g[a, b] = 1.0 if is_prompt[b] else 0.0
+            else:
+                if is_prompt[b] or order[b] < order[a]:
+                    mask_g[a, b] = 1.0
+    mask_h = mask_g.copy()
+    for a in range(n):
+        mask_h[a, a] = 1.0
+    return mask_h, mask_g
+
+
+def draft_masks(sigma: Sequence[int], m: int, n_known: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Parallel-sampling masks (Fig. 1a) at decode state n. [N,N] f32 each."""
+    n = len(sigma)
+    order = order_from_sigma(sigma)
+    is_prompt = order < m
+    known = order < n_known
+    mask_g = np.zeros((n, n), dtype=np.float32)
+    for a in range(n):
+        for b in range(n):
+            if known[a]:
+                # Known rows: identical to verify (Lemma 1's requirement).
+                if is_prompt[a]:
+                    mask_g[a, b] = 1.0 if is_prompt[b] else 0.0
+                else:
+                    if is_prompt[b] or (known[b] and order[b] < order[a]):
+                        mask_g[a, b] = 1.0
+            else:
+                # Unknown rows: attend exactly the known set.
+                mask_g[a, b] = 1.0 if known[b] else 0.0
+    mask_h = mask_g.copy()
+    for a in range(n):
+        mask_h[a, a] = 1.0
+    return mask_h, mask_g

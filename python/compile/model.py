@@ -1,0 +1,188 @@
+"""Layer-2: the AS-ARM — an XLNet-style two-stream attention transformer.
+
+All functions are pure over a single flat parameter vector `theta` (layout
+in config.py). Three entry points get AOT-lowered to HLO text by aot.py:
+
+  forward(theta, tokens, mask_h, mask_g)            -> logits       (serving)
+  train_step(theta, m, v, step, tokens, mask_h,
+             mask_g, loss_w, lr)                    -> theta', m', v', loss
+
+The two-stream design is the architectural contribution the paper leans on
+(Sec. 4, Appendix C):
+
+  * content stream h: input = tok_emb[x] + pos_emb. Carries token CONTENT;
+    used only as keys/values (and to propagate content through layers).
+  * query stream g: input = pos_emb + q_bias. Carries POSITION queries; its
+    final hidden state produces the logits for every position, so a single
+    forward pass yields p(x_sigma(i) | x_sigma(<i)) for ALL i simultaneously
+    (one-pass joint density estimation, Fig. 1b) or the conditionally
+    independent draft distributions (Fig. 1a), depending only on the masks.
+  * weights are shared between streams (XLNet); only inputs + masks differ.
+
+The masks mask_h/mask_g are INPUTS: Layer 3 (rust) builds them from sigma /
+the visible set, which is exactly the paper's "the architecture is the same,
+the way we query it is different".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.attention import masked_attention
+from .kernels.ref import masked_attention_ref, softmax_xent_ref
+from .kernels.xent import softmax_xent
+
+
+def unpack(cfg: ModelConfig, theta: jax.Array) -> Dict[str, jax.Array]:
+    """Slice the flat theta vector into named parameter arrays (static)."""
+    out = {}
+    for name, (off, shape) in cfg.param_offsets().items():
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = theta[off : off + size].reshape(shape)
+    return out
+
+
+def _layer_norm(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _heads(x, n_heads):  # [B,N,D] -> [B,H,N,Dh]
+    b, n, d = x.shape
+    return x.reshape(b, n, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):  # [B,H,N,Dh] -> [B,N,D]
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def forward(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    tokens: jax.Array,  # [B, N] int32
+    mask_h: jax.Array,  # [B, N, N] content-stream mask (may include self)
+    mask_g: jax.Array,  # [B, N, N] query-stream mask (strictly precedes)
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Two-stream forward; returns logits [B, N, V] from the query stream."""
+    p = unpack(cfg, theta)
+    attn = masked_attention if use_pallas else masked_attention_ref
+    b, n = tokens.shape
+
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :n, :]
+    g = jnp.broadcast_to(p["pos_emb"][None, :n, :] + p["q_bias"], h.shape)
+
+    for l in range(cfg.n_layers):
+        # --- two-stream attention (shared projections) ---
+        hn = _layer_norm(h, p["ln1_s"][l], p["ln1_b"][l])
+        gn = _layer_norm(g, p["ln1_s"][l], p["ln1_b"][l])
+        k = _heads(hn @ p["wk"][l], cfg.n_heads)
+        v = _heads(hn @ p["wv"][l], cfg.n_heads)
+        qh = _heads(hn @ p["wq"][l], cfg.n_heads)
+        qg = _heads(gn @ p["wq"][l], cfg.n_heads)
+        ah = _unheads(attn(qh, k, v, mask_h)) @ p["wo"][l]
+        ag = _unheads(attn(qg, k, v, mask_g)) @ p["wo"][l]
+        h = h + ah
+        g = g + ag
+        # --- MLP (shared) ---
+        hn2 = _layer_norm(h, p["ln2_s"][l], p["ln2_b"][l])
+        gn2 = _layer_norm(g, p["ln2_s"][l], p["ln2_b"][l])
+        h = h + jax.nn.gelu(hn2 @ p["w1"][l] + p["b1"][l]) @ p["w2"][l] + p["b2"][l]
+        g = g + jax.nn.gelu(gn2 @ p["w1"][l] + p["b1"][l]) @ p["w2"][l] + p["b2"][l]
+
+    gf = _layer_norm(g, p["lnf_s"], p["lnf_b"])
+    # Output projection tied to the token embedding.
+    logits = gf @ p["tok_emb"].T + p["out_b"]
+    return logits
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    tokens: jax.Array,
+    mask_h: jax.Array,
+    mask_g: jax.Array,
+    loss_w: jax.Array,  # [B, N] 1.0 at positions whose density is being taught
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Teacher-forced joint conditional loss (paper Eq. 7).
+
+    With verify-mode masks built from (m, sigma), the summed per-position
+    NLLs factor exactly into log p(x_sigma(>=m) | x_sigma(<m)) — Eq. 9.
+    """
+    logits = forward(cfg, theta, tokens, mask_h, mask_g, use_pallas=use_pallas)
+    xent = softmax_xent if use_pallas else softmax_xent_ref
+    return xent(logits, tokens, loss_w)
+
+
+def adam_train_step(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    step: jax.Array,  # f32 scalar, 1-based
+    tokens: jax.Array,
+    mask_h: jax.Array,
+    mask_g: jax.Array,
+    loss_w: jax.Array,
+    lr: jax.Array,  # f32 scalar
+    *,
+    use_pallas: bool = True,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    clip: float = 1.0,
+    weight_decay: float = 0.01,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One AdamW step on the flat theta; returns (theta', m', v', loss)."""
+    loss, grad = jax.value_and_grad(
+        lambda t: loss_fn(cfg, t, tokens, mask_h, mask_g, loss_w, use_pallas=use_pallas)
+    )(theta)
+    # Global-norm clip.
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grad)))
+    grad = grad * jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+    m = beta1 * m + (1.0 - beta1) * grad
+    v = beta2 * v + (1.0 - beta2) * jnp.square(grad)
+    mhat = m / (1.0 - beta1**step)
+    vhat = v / (1.0 - beta2**step)
+    update = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * theta
+    theta = theta - lr * update
+    return theta, m, v, loss
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jax.Array:
+    """Random init of the flat theta (scaled-normal fan-in init)."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in cfg.param_spec():
+        key, sub = jax.random.split(key)
+        if name.endswith("_s"):  # layer-norm scales
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        elif name.endswith("_b") or name == "q_bias":
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        elif name in ("tok_emb", "pos_emb"):
+            parts.append(0.02 * jax.random.normal(sub, shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = fan_in**-0.5
+            parts.append(std * jax.random.normal(sub, shape, jnp.float32).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def jit_forward(cfg: ModelConfig, use_pallas: bool = True):
+    return jax.jit(functools.partial(forward, cfg, use_pallas=use_pallas))
+
+
+def jit_train_step(cfg: ModelConfig, use_pallas: bool = True):
+    return jax.jit(functools.partial(adam_train_step, cfg, use_pallas=use_pallas))

@@ -1,0 +1,68 @@
+"""AOT export sanity: HLO text parses and has the expected interface."""
+
+import re
+
+import pytest
+
+from compile import aot
+from compile.config import TINY, DEFAULT
+
+
+@pytest.fixture(scope="module")
+def fwd_text():
+    return aot.export_forward(TINY, 1)
+
+
+def test_forward_hlo_has_entry(fwd_text):
+    assert "ENTRY" in fwd_text
+    assert "HloModule" in fwd_text
+
+
+def test_forward_hlo_parameters(fwd_text):
+    # theta, tokens, mask_h, mask_g
+    n, v, p = TINY.seq_len, TINY.vocab, TINY.n_params
+    assert f"f32[{p}]" in fwd_text
+    assert f"s32[1,{n}]" in fwd_text
+    assert f"f32[1,{n},{n}]" in fwd_text
+    # output logits
+    assert f"f32[1,{n},{v}]" in fwd_text
+
+
+def test_train_step_hlo_outputs():
+    text = aot.export_train_step(TINY, 2)
+    p = TINY.n_params
+    assert "ENTRY" in text
+    # tuple of theta', m', v', loss
+    assert re.search(r"f32\[%d\].*f32\[%d\].*f32\[%d\].*f32\[\]" % (p, p, p), text) or (
+        f"f32[{p}]" in text and "f32[]" in text
+    )
+
+
+def test_meta_json_roundtrip(tmp_path):
+    import json
+
+    meta = json.loads(DEFAULT.meta_json())
+    assert meta["n_params"] == DEFAULT.n_params
+    assert meta["params"]["tok_emb"]["offset"] == 0
+    assert meta["params"]["tok_emb"]["shape"] == [DEFAULT.vocab, DEFAULT.d_model]
+    # offsets are contiguous and cover the whole vector
+    spans = sorted(
+        (v["offset"], v["offset"] + int(__import__("numpy").prod(v["shape"])))
+        for v in meta["params"].values()
+    )
+    assert spans[0][0] == 0
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 == b0
+    assert spans[-1][1] == meta["n_params"]
+
+
+def test_mask_fixture_export(tmp_path):
+    path = str(tmp_path / "masks.json")
+    aot.export_mask_fixtures(TINY, path)
+    import json
+
+    cases = json.load(open(path))
+    assert len(cases) >= 10
+    for c in cases:
+        assert sorted(c["sigma"]) == list(range(c["n"]))
+        assert len(c["verify_h"]) == c["n"] * c["n"]

@@ -1,0 +1,91 @@
+"""Mask-builder invariants (python mirror of rust/src/model/mask.rs)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import masks as M
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def _case(seed, nmax=20):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, nmax))
+    m = int(rng.integers(1, n))
+    vis = sorted(rng.choice(n, size=m, replace=False).tolist())
+    sigma = M.lattice_sigma(vis, n)
+    return n, m, vis, sigma
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lattice_sigma_is_bijection_and_sorted(seed):
+    n, m, vis, sigma = _case(seed)
+    assert sorted(sigma) == list(range(n))
+    assert sigma[:m] == sorted(sigma[:m]) == vis
+    assert sigma[m:] == sorted(sigma[m:])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_verify_mask_invariants(seed):
+    n, m, vis, sigma = _case(seed)
+    order = M.order_from_sigma(sigma)
+    mh, mg = M.verify_masks(sigma, m)
+    # 1. content stream sees itself, query stream at target rows does not
+    assert np.all(np.diag(mh) == 1.0)
+    for a in range(n):
+        if order[a] >= m:
+            assert mg[a, a] == 0.0
+    # 2. prompt rows attend the full prompt and nothing else
+    for a in vis:
+        np.testing.assert_array_equal(
+            mg[a], np.array([1.0 if order[b] < m else 0.0 for b in range(n)], np.float32)
+        )
+    # 3. target rows are strictly causal in order
+    for a in range(n):
+        if order[a] >= m:
+            for b in range(n):
+                want = 1.0 if (order[b] < m or order[b] < order[a]) else 0.0
+                assert mg[a, b] == want
+    # 4. h differs from g only on the diagonal
+    off_diag = ~np.eye(n, dtype=bool)
+    np.testing.assert_array_equal(mh[off_diag], mg[off_diag])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), extra=st.integers(0, 10))
+def test_draft_mask_invariants(seed, extra):
+    n, m, vis, sigma = _case(seed)
+    n_known = min(n, m + extra)
+    order = M.order_from_sigma(sigma)
+    mh, mg = M.draft_masks(sigma, m, n_known)
+    known = order < n_known
+    # 1. nothing attends unknown positions (except content self-loop)
+    for b in range(n):
+        if not known[b]:
+            col = mg[:, b]
+            assert np.all(col == 0.0)
+            assert np.all(np.delete(mh[:, b], b) == 0.0)
+    # 2. unknown rows attend exactly the known set
+    for a in range(n):
+        if not known[a]:
+            np.testing.assert_array_equal(mg[a], known.astype(np.float32))
+    # 3. known rows equal the corresponding verify rows (Lemma 1 requirement)
+    vh, vg = M.verify_masks(sigma, m)
+    for a in range(n):
+        if known[a]:
+            # verify rows may attend later-known targets; draft restricts to
+            # known, but for known rows order<order[a]<n_known so equal.
+            np.testing.assert_array_equal(mg[a], vg[a])
+            np.testing.assert_array_equal(mh[a], vh[a])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_draft_at_full_knowledge_equals_verify(seed):
+    n, m, vis, sigma = _case(seed)
+    dh, dg = M.draft_masks(sigma, m, n)
+    vh, vg = M.verify_masks(sigma, m)
+    np.testing.assert_array_equal(dh, vh)
+    np.testing.assert_array_equal(dg, vg)

@@ -1,0 +1,158 @@
+"""L2 semantic tests: the properties ASSD's correctness rests on.
+
+* chain rule: one-pass joint density (verify masks) == product of
+  sequential conditionals (draft passes) — paper Eq. 2/9.
+* Lemma 1 precondition: draft density at order n == verify density at
+  order n given identical known tokens.
+* pallas and reference forward paths agree.
+* train_step reduces the loss on a learnable pattern.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.config import TINY
+from compile.model import adam_train_step, forward, init_params, loss_fn
+from compile import masks as M
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return init_params(CFG, seed=3)
+
+
+def _random_case(seed, m=None):
+    rng = np.random.default_rng(seed)
+    n = CFG.seq_len
+    m = m or int(rng.integers(2, n // 2))
+    toks = rng.integers(0, CFG.MASK, size=(1, n)).astype("int32")
+    vis = sorted(rng.choice(n, size=m, replace=False).tolist())
+    sigma = M.lattice_sigma(vis, n)
+    return rng, n, m, toks, vis, sigma
+
+
+def test_forward_shapes_finite(theta):
+    _, n, m, toks, vis, sigma = _random_case(0)
+    vh, vg = M.verify_masks(sigma, m)
+    out = forward(CFG, theta, jnp.asarray(toks), jnp.asarray(vh[None]), jnp.asarray(vg[None]),
+                  use_pallas=False)
+    assert out.shape == (1, n, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_pallas_and_ref_forward_agree(theta):
+    _, n, m, toks, vis, sigma = _random_case(1)
+    vh, vg = M.verify_masks(sigma, m)
+    args = (jnp.asarray(toks), jnp.asarray(vh[None]), jnp.asarray(vg[None]))
+    a = forward(CFG, theta, *args, use_pallas=True)
+    b = forward(CFG, theta, *args, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chain_rule_one_pass_joint_equals_sequential_product(theta, seed):
+    rng, n, m, toks, vis, sigma = _random_case(seed)
+    vh, vg = M.verify_masks(sigma, m)
+    logits = forward(CFG, theta, jnp.asarray(toks), jnp.asarray(vh[None]), jnp.asarray(vg[None]),
+                     use_pallas=False)
+    logp = jax.nn.log_softmax(logits, -1)
+    joint = sum(float(logp[0, sigma[i], toks[0, sigma[i]]]) for i in range(m, n))
+
+    seq = np.full((1, n), CFG.MASK, dtype="int32")
+    for p in vis:
+        seq[0, p] = toks[0, p]
+    total = 0.0
+    for i in range(m, n):
+        dh, dg = M.draft_masks(sigma, m, i)
+        lg = forward(CFG, theta, jnp.asarray(seq), jnp.asarray(dh[None]), jnp.asarray(dg[None]),
+                     use_pallas=False)
+        lp = jax.nn.log_softmax(lg, -1)
+        pos = sigma[i]
+        total += float(lp[0, pos, toks[0, pos]])
+        seq[0, pos] = toks[0, pos]
+    np.testing.assert_allclose(joint, total, rtol=1e-4, atol=1e-4)
+
+
+def test_lemma1_draft_density_equals_oracle_density(theta):
+    rng, n, m, toks, vis, sigma = _random_case(5)
+    n_known = m + 2
+    vh, vg = M.verify_masks(sigma, m)
+    dh, dg = M.draft_masks(sigma, m, n_known)
+    draft_toks = np.array(toks, copy=True)
+    for i in range(n_known, n):
+        draft_toks[0, sigma[i]] = CFG.MASK
+    lg_d = forward(CFG, theta, jnp.asarray(draft_toks), jnp.asarray(dh[None]),
+                   jnp.asarray(dg[None]), use_pallas=False)
+    lg_v = forward(CFG, theta, jnp.asarray(toks), jnp.asarray(vh[None]), jnp.asarray(vg[None]),
+                   use_pallas=False)
+    pos = sigma[n_known]
+    d = np.asarray(jax.nn.log_softmax(lg_d, -1))[0, pos]
+    v = np.asarray(jax.nn.log_softmax(lg_v, -1))[0, pos]
+    np.testing.assert_allclose(d, v, rtol=1e-4, atol=1e-5)
+
+
+def test_draft_logits_independent_of_unknown_content(theta):
+    """Conditionally-independent drafting: logits at unknown positions must
+    not change when OTHER unknown positions' contents change."""
+    rng, n, m, toks, vis, sigma = _random_case(6)
+    dh, dg = M.draft_masks(sigma, m, m)
+    a = np.full((1, n), CFG.MASK, dtype="int32")
+    b = np.full((1, n), CFG.MASK, dtype="int32")
+    for p in vis:
+        a[0, p] = toks[0, p]
+        b[0, p] = toks[0, p]
+    # scramble unknown contents in b
+    for i in range(m, n):
+        b[0, sigma[i]] = int(rng.integers(0, CFG.MASK))
+    la = forward(CFG, theta, jnp.asarray(a), jnp.asarray(dh[None]), jnp.asarray(dg[None]),
+                 use_pallas=False)
+    lb = forward(CFG, theta, jnp.asarray(b), jnp.asarray(dh[None]), jnp.asarray(dg[None]),
+                 use_pallas=False)
+    for i in range(m, n):
+        pos = sigma[i]
+        np.testing.assert_allclose(
+            np.asarray(la)[0, pos], np.asarray(lb)[0, pos], rtol=1e-5, atol=1e-5
+        )
+
+
+def test_train_step_reduces_loss(theta):
+    rng = np.random.default_rng(11)
+    n = CFG.seq_len
+    b = 2
+    # learnable pattern: alternating pair of tokens
+    toks = np.tile(np.array([5, 9], dtype="int32"), n // 2)[None].repeat(b, 0)
+    m = 2
+    vis = [0, 1]
+    sigma = M.lattice_sigma(vis, n)
+    vh, vg = M.verify_masks(sigma, m)
+    mask_h = jnp.asarray(np.tile(vh[None], (b, 1, 1)))
+    mask_g = jnp.asarray(np.tile(vg[None], (b, 1, 1)))
+    order = M.order_from_sigma(sigma)
+    loss_w = jnp.asarray(np.tile((order >= m).astype("float32")[None], (b, 1)))
+    t = theta
+    mm = jnp.zeros_like(t)
+    vv = jnp.zeros_like(t)
+    losses = []
+    for step in range(1, 41):
+        t, mm, vv, loss = adam_train_step(
+            CFG, t, mm, vv, jnp.float32(step), jnp.asarray(toks), mask_h, mask_g, loss_w,
+            jnp.float32(1e-2), use_pallas=False,
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+    assert np.isfinite(losses).all()
+
+
+def test_loss_pallas_matches_ref(theta):
+    _, n, m, toks, vis, sigma = _random_case(8)
+    vh, vg = M.verify_masks(sigma, m)
+    order = M.order_from_sigma(sigma)
+    lw = jnp.asarray((order >= m).astype("float32")[None])
+    args = (jnp.asarray(toks), jnp.asarray(vh[None]), jnp.asarray(vg[None]), lw)
+    a = float(loss_fn(CFG, theta, *args, use_pallas=True))
+    b = float(loss_fn(CFG, theta, *args, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-4)

@@ -1,0 +1,69 @@
+//! Figure 3 — recursive-binary-lattice vs any-permutation mask
+//! decomposition (training ablation).
+//!
+//! Trains two arms from the same initialization on the same data, differing
+//! only in the ordering protocol sigma ~ s(·|m): the Eq.-4 lattice (2^N
+//! queries) vs unrestricted permutations (N! queries). The paper finds the
+//! lattice trains better (less capacity diluted over factorization paths).
+//! We log teacher-forced validation NLL per token (DESIGN.md §5's stable
+//! stand-in for the paper's generation-metric curves).
+//!
+//! Run: `cargo bench --bench fig3_ablation`   (ASARM_ABL_STEPS to scale)
+
+use asarm::data::{pack_chunks, split_chunks, stories};
+use asarm::train::ablation::{fig3_arms, run_arms};
+use asarm::train::TrainConfig;
+use asarm::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if !artifacts.join("train_step_b4.hlo.txt").exists() {
+        eprintln!("fig3: run `make artifacts` first");
+        return Ok(());
+    }
+    let steps: usize = std::env::var("ASARM_ABL_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    let chunks = pack_chunks(&stories::corpus(555, 3000), 128);
+    let (train_chunks, val_chunks) = split_chunks(chunks, 0.05, 9);
+    let base = TrainConfig {
+        steps,
+        lr_max: 3e-4,
+        warmup_steps: steps / 10,
+        decay_steps: steps,
+        val_every: (steps / 6).max(1),
+        val_batches: 4,
+        log_every: (steps / 6).max(1),
+        seed: 11,
+        ..Default::default()
+    };
+    let results = run_arms(artifacts, 4, &base, &fig3_arms(), &train_chunks, &val_chunks)?;
+
+    println!("\n=== Figure 3: lattice vs any-permutation training ===");
+    let mut table = Table::new(&["Step", "val NLL/tok (lattice)", "val NLL/tok (permutation)"]);
+    let series: Vec<Vec<(usize, f64)>> = results
+        .iter()
+        .map(|(_, logs)| {
+            logs.iter()
+                .filter_map(|l| l.val_nll_per_token.map(|v| (l.step, v)))
+                .collect()
+        })
+        .collect();
+    let rows = series[0].len().min(series[1].len());
+    for r in 0..rows {
+        table.row(&[
+            format!("{}", series[0][r].0),
+            format!("{:.4}", series[0][r].1),
+            format!("{:.4}", series[1][r].1),
+        ]);
+    }
+    table.print();
+    let last_lat = series[0].last().map(|x| x.1).unwrap_or(f64::NAN);
+    let last_perm = series[1].last().map(|x| x.1).unwrap_or(f64::NAN);
+    println!(
+        "final: lattice {last_lat:.4} vs permutation {last_perm:.4}  \
+         (paper Fig. 3: lattice consistently better)"
+    );
+    Ok(())
+}

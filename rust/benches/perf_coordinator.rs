@@ -1,0 +1,73 @@
+//! Perf bench (L3): coordinator throughput under concurrent load on a mock
+//! engine — isolates scheduler/batcher overhead from XLA compute, and
+//! ablates the continuous-batching policy (max_batch). Feeds
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench perf_coordinator`
+
+use std::time::Instant;
+
+use asarm::coordinator::scheduler::{spawn, SchedulerConfig};
+use asarm::coordinator::{InfillRequest, Metrics};
+use asarm::runtime::mock::MockEngine;
+use asarm::runtime::Engine;
+use asarm::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::var("ASARM_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+
+    let mut table = Table::new(&[
+        "max_batch",
+        "req/s",
+        "p50 (ms)",
+        "p99 (ms)",
+        "mean occupancy",
+    ]);
+    for &max_batch in &[1usize, 2, 4, 8] {
+        let metrics = Metrics::new();
+        let m2 = metrics.clone();
+        let handle = spawn(
+            move || Ok(Box::new(MockEngine::new(7, 64, 258, 1.0)) as Box<dyn Engine>),
+            SchedulerConfig {
+                max_batch,
+                idle_poll: std::time::Duration::from_millis(1),
+            },
+            m2,
+        );
+        // Submit all requests up front (closed-loop batch of open-loop work).
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|i| {
+                handle
+                    .submit(InfillRequest {
+                        text: format!("{:02}____________{:02}", i % 100, i % 100),
+                        seed: i as u64,
+                        ..Default::default()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let j = metrics.snapshot_json();
+        let p50 = j.get("latency_p50_s").unwrap().as_f64().unwrap() * 1e3;
+        let p99 = j.get("latency_p99_s").unwrap().as_f64().unwrap() * 1e3;
+        let occ = j.get("mean_batch_occupancy").unwrap().as_f64().unwrap();
+        table.row(&[
+            format!("{max_batch}"),
+            format!("{:.1}", n_requests as f64 / wall),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            format!("{occ:.2}"),
+        ]);
+    }
+    println!("\n=== perf_coordinator: scheduler throughput (mock engine) ===");
+    table.print();
+    println!("(batching amortizes per-iteration scheduling; occupancy ~max_batch when saturated)");
+    Ok(())
+}

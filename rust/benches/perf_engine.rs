@@ -1,0 +1,128 @@
+//! Perf bench (L3/L2 boundary): forward latency vs batch size, mask
+//! construction cost (full rebuild vs incremental update), and literal
+//! upload overhead. Feeds EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench perf_engine`
+
+use asarm::data::masking::lattice_sigma;
+use asarm::model::mask::{advance_draft_masks, draft_masks, draft_masks_into, Ordering};
+use asarm::runtime::{Engine, XlaEngine};
+use asarm::util::bench::{time_it, Table};
+use asarm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(artifacts).join("fwd_b1.hlo.txt").exists() {
+        eprintln!("perf_engine: run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = XlaEngine::load(artifacts, None)?;
+    let n = engine.seq_len();
+    let mut rng = Rng::new(3);
+
+    // --- forward latency vs batch ---
+    let mut table = Table::new(&[
+        "op",
+        "batch",
+        "mean (ms)",
+        "stderr (ms)",
+        "per-seq (ms)",
+    ]);
+    for &b in &[1usize, 2, 4, 8] {
+        let vis = rng.choose_sorted(n, n / 20);
+        let ord = Ordering::new(lattice_sigma(&vis, n), vis.len());
+        let (h1, g1) = draft_masks(&ord, ord.m);
+        let mut toks = vec![0u32; b * n];
+        let mut h = vec![0f32; b * n * n];
+        let mut g = vec![0f32; b * n * n];
+        for s in 0..b {
+            for p in 0..n {
+                toks[s * n + p] = rng.range(97, 123) as u32;
+            }
+            h[s * n * n..(s + 1) * n * n].copy_from_slice(&h1);
+            g[s * n * n..(s + 1) * n * n].copy_from_slice(&g1);
+        }
+        let s = time_it(2, 10, || {
+            engine.forward(b, &toks, &h, &g).unwrap();
+        });
+        table.row(&[
+            "forward".into(),
+            format!("{b}"),
+            format!("{:.2}", s.mean() * 1e3),
+            format!("{:.2}", s.stderr() * 1e3),
+            format!("{:.2}", s.mean() * 1e3 / b as f64),
+        ]);
+    }
+
+    // --- §Perf ablation: per-call theta literal (before) vs resident
+    //     device buffer (after) ---
+    {
+        let vis = rng.choose_sorted(n, n / 20);
+        let ord = Ordering::new(lattice_sigma(&vis, n), vis.len());
+        let (h, g) = draft_masks(&ord, ord.m);
+        let toks: Vec<u32> = (0..n).map(|_| rng.range(97, 123) as u32).collect();
+        let before = time_it(2, 10, || {
+            engine.forward_via_literals(1, &toks, &h, &g).unwrap();
+        });
+        let after = time_it(2, 10, || {
+            engine.forward(1, &toks, &h, &g).unwrap();
+        });
+        table.row(&[
+            "fwd b1 theta-literal (before)".into(),
+            "1".into(),
+            format!("{:.2}", before.mean() * 1e3),
+            format!("{:.2}", before.stderr() * 1e3),
+            "-".into(),
+        ]);
+        table.row(&[
+            "fwd b1 theta-resident (after)".into(),
+            "1".into(),
+            format!("{:.2}", after.mean() * 1e3),
+            format!("{:.2}", after.stderr() * 1e3),
+            format!("{:+.1}%", 100.0 * (after.mean() - before.mean()) / before.mean()),
+        ]);
+    }
+
+    // --- mask construction: full rebuild vs incremental advance ---
+    let vis = rng.choose_sorted(n, n / 20);
+    let ord = Ordering::new(lattice_sigma(&vis, n), vis.len());
+    let m = ord.m;
+    let mut h = vec![0f32; n * n];
+    let mut g = vec![0f32; n * n];
+    let full = time_it(5, 200, || {
+        draft_masks_into(&ord, (m + 5).min(n), &mut h, &mut g);
+    });
+    draft_masks_into(&ord, m, &mut h, &mut g);
+    let mut state = m;
+    let inc = time_it(5, 200, || {
+        let next = if state + 5 <= n { state + 5 } else { m };
+        if next == m {
+            draft_masks_into(&ord, m, &mut h, &mut g);
+        } else {
+            advance_draft_masks(&ord, state, next, &mut h, &mut g);
+        }
+        state = next;
+    });
+    table.row(&[
+        "mask full rebuild".into(),
+        "1".into(),
+        format!("{:.4}", full.mean() * 1e3),
+        format!("{:.4}", full.stderr() * 1e3),
+        "-".into(),
+    ]);
+    table.row(&[
+        "mask incremental(+5)".into(),
+        "1".into(),
+        format!("{:.4}", inc.mean() * 1e3),
+        format!("{:.4}", inc.stderr() * 1e3),
+        "-".into(),
+    ]);
+
+    println!("\n=== perf_engine: forward + mask-construction costs ===");
+    table.print();
+    println!(
+        "NFE is the hardware-independent cost unit (Theorem 1); per-seq \
+         forward cost at batch 4 vs 1 shows the batching win."
+    );
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Table 2 — story infilling (ROCStories substitute): ROUGE-1/2/L + NFE.
+//!
+//! Paper setup: blank the middle 1 (of 5) or middle 3 (of 5) sentences;
+//! models GPT2-S / SEDD / MDLM / DiffuGPT / XLNet-OTS / XLNet-FT.
+//!
+//! Ours (DESIGN.md §5): synthetic 5-sentence stories; baselines
+//! re-implemented as algorithms over our AS-ARM checkpoints —
+//!   AR (left->right)   GPT-style: left context only, sequential decode
+//!   Diffusion-32/64    MDLM-style conditional-independence unmasking
+//!   AS-ARM OTS         the 80-85%-prompt checkpoint, ASSD k=15
+//!   AS-ARM FT          the wide-masking checkpoint, ASSD k=15
+//!
+//! Run: `cargo bench --bench table2_infill`
+
+use asarm::coordinator::SamplerKind;
+use asarm::eval::harness::{
+    masked_span_text, run_ar_left_to_right, run_sampler, story_infill_workload,
+};
+use asarm::eval::rouge::rouge_triple;
+use asarm::runtime::{Engine, XlaEngine};
+use asarm::util::bench::Table;
+use asarm::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let ft = format!("{artifacts}/ckpt_stories_ft.bin");
+    let ots = format!("{artifacts}/ckpt_stories_ots.bin");
+    if !std::path::Path::new(&ft).exists() || !std::path::Path::new(&ots).exists() {
+        eprintln!("table2: missing checkpoints; run `make models` first");
+        return Ok(());
+    }
+    let n_stories: usize = std::env::var("ASARM_BENCH_SEQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6);
+
+    let ft_engine = XlaEngine::load(artifacts, Some(std::path::Path::new(&ft)))?;
+    let ots_engine = XlaEngine::load(artifacts, Some(std::path::Path::new(&ots)))?;
+    let n = ft_engine.seq_len();
+
+    for (task_label, blank3) in [("Infill 1/5", false), ("Infill 3/5", true)] {
+        let work = story_infill_workload(n, n_stories, blank3, 77);
+        let mut table = Table::new(&["Model", "ROUGE 1/2/L", "NFE"]);
+
+        // Row builder: decode every story, ROUGE the blanked span.
+        let mut eval_row =
+            |label: &str,
+             f: &mut dyn FnMut(usize, &asarm::eval::harness::WorkItem)
+                 -> anyhow::Result<asarm::decode::DecodeOutcome>|
+             -> anyhow::Result<()> {
+                let (mut r1, mut r2, mut rl, mut nfe) = (
+                    Summary::new(),
+                    Summary::new(),
+                    Summary::new(),
+                    Summary::new(),
+                );
+                for (i, (item, mid)) in work.iter().enumerate() {
+                    let out = f(i, item)?;
+                    let text = masked_span_text(item, &out.tokens);
+                    let (a, b, c) = rouge_triple(&text, mid);
+                    r1.push(a * 100.0);
+                    r2.push(b * 100.0);
+                    rl.push(c * 100.0);
+                    nfe.push(out.model_nfe as f64);
+                }
+                table.row(&[
+                    label.to_string(),
+                    format!("{:.1}/{:.1}/{:.1}", r1.mean(), r2.mean(), rl.mean()),
+                    format!("{:.1} ± {:.1}", nfe.mean(), nfe.std()),
+                ]);
+                Ok(())
+            };
+
+        eval_row("AR left-to-right (GPT-style)", &mut |i, item| {
+            Ok(run_ar_left_to_right(&ft_engine, item, 0.7, 900 + i as u64)?.0)
+        })?;
+        eval_row("Diffusion-32 (MDLM-style)", &mut |i, item| {
+            Ok(run_sampler(
+                &ft_engine,
+                item,
+                SamplerKind::Diffusion,
+                5,
+                32,
+                0.7,
+                1900 + i as u64,
+            )?
+            .0)
+        })?;
+        eval_row("AS-ARM OTS (ASSD k=15)", &mut |i, item| {
+            Ok(run_sampler(
+                &ots_engine,
+                item,
+                SamplerKind::Assd,
+                15,
+                32,
+                0.7,
+                2900 + i as u64,
+            )?
+            .0)
+        })?;
+        eval_row("AS-ARM FT (ASSD k=15)", &mut |i, item| {
+            Ok(run_sampler(
+                &ft_engine,
+                item,
+                SamplerKind::Assd,
+                15,
+                32,
+                0.7,
+                3900 + i as u64,
+            )?
+            .0)
+        })?;
+
+        println!("\n=== Table 2 ({task_label}), {n_stories} stories ===");
+        table.print();
+    }
+    println!(
+        "(paper: FT surpasses OTS on 3/5 infill; AS-ARMs use far fewer NFEs than \
+         fixed-step diffusion; AR trails on middle-infilling ROUGE)"
+    );
+    Ok(())
+}

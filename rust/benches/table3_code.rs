@@ -1,0 +1,122 @@
+//! Table 3 — single-line code infilling, pass@1.
+//!
+//! Paper setup: HumanEval single-line infilling, XLNet-Code (110M, 15B
+//! code tokens) 38.59 pass@1 vs DiffuLLaMA (6.7B) 40.68.
+//!
+//! Ours (DESIGN.md §5): the expression mini-language — blank one interior
+//! assignment line; a completion passes iff the reassembled program prints
+//! the reference value (functional judging, like HumanEval). Models: the
+//! expr-trained AS-ARM with ASSD (k=15) vs the same checkpoint driven by
+//! the diffusion baseline sampler, plus a random-token floor.
+//!
+//! Run: `cargo bench --bench table3_code`
+
+use asarm::coordinator::SamplerKind;
+use asarm::data::masking::lattice_sigma;
+use asarm::eval::exprlang::make_task;
+use asarm::eval::harness::{masked_span_text, run_sampler, WorkItem};
+use asarm::model::mask::Ordering;
+use asarm::runtime::{Engine, XlaEngine};
+use asarm::tokenizer::{ByteTokenizer, MASK};
+use asarm::util::bench::Table;
+use asarm::util::rng::Rng;
+
+fn task_to_item(seq_len: usize, t: &asarm::eval::exprlang::InfillTask) -> Option<WorkItem> {
+    let tok = ByteTokenizer::new();
+    let full = format!("{}{}{}", t.prefix, t.reference_line, t.suffix);
+    if full.len() > seq_len {
+        return None;
+    }
+    let reference = tok.encode_fixed(&full, seq_len);
+    let blank_from = t.prefix.len();
+    let blank_to = blank_from + t.reference_line.len();
+    let mut tokens = reference.clone();
+    let mut visible = vec![];
+    for p in 0..seq_len {
+        if p >= blank_from && p < blank_to {
+            tokens[p] = MASK;
+        } else {
+            visible.push(p);
+        }
+    }
+    let m = visible.len();
+    Some(WorkItem {
+        ord: Ordering::new(lattice_sigma(&visible, seq_len), m),
+        tokens,
+        reference,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let ckpt = format!("{artifacts}/ckpt_expr.bin");
+    if !std::path::Path::new(&ckpt).exists() {
+        eprintln!("table3: missing {ckpt}; run `make models` first");
+        return Ok(());
+    }
+    let n_tasks: usize = std::env::var("ASARM_BENCH_SEQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    let engine = XlaEngine::load(artifacts, Some(std::path::Path::new(&ckpt)))?;
+    let n = engine.seq_len();
+
+    let mut rng = Rng::new(55);
+    let mut tasks = vec![];
+    while tasks.len() < n_tasks {
+        let t = make_task(&mut rng, 4);
+        if let Some(item) = task_to_item(n, &t) {
+            tasks.push((t, item));
+        }
+    }
+
+    let mut table = Table::new(&["Model", "Pass @ 1", "NFE (mean)"]);
+    // Judge calibration: the reference line must score 100.
+    {
+        let passes = tasks
+            .iter()
+            .filter(|(t, _)| t.passes(&t.reference_line))
+            .count();
+        table.row(&[
+            "Reference line (oracle)".into(),
+            format!("{:.2}", 100.0 * passes as f64 / tasks.len() as f64),
+            "-".into(),
+        ]);
+    }
+    for (label, sampler, k) in [
+        ("AS-ARM expr (ASSD k=15)", Some(SamplerKind::Assd), 15),
+        ("Diffusion-8 (MDLM-style)", Some(SamplerKind::Diffusion), 8),
+        ("Random tokens (floor)", None, 0),
+    ] {
+        let mut passes = 0usize;
+        let mut nfe_total = 0u64;
+        for (i, (task, item)) in tasks.iter().enumerate() {
+            let completion = match sampler {
+                Some(s) => {
+                    let (out, _) =
+                        run_sampler(&engine, item, s, k, 8, 0.5, 7000 + i as u64)?;
+                    nfe_total += out.model_nfe;
+                    masked_span_text(item, &out.tokens)
+                }
+                None => {
+                    let mut r = Rng::new(i as u64);
+                    (0..task.reference_line.len())
+                        .map(|_| (r.range(97, 123) as u8) as char)
+                        .collect()
+                }
+            };
+            if task.passes(&completion) {
+                passes += 1;
+            }
+        }
+        table.row(&[
+            label.to_string(),
+            format!("{:.2}", 100.0 * passes as f64 / tasks.len() as f64),
+            format!("{:.1}", nfe_total as f64 / tasks.len() as f64),
+        ]);
+    }
+    println!("\n=== Table 3: single-line infilling pass@1 ({n_tasks} tasks) ===");
+    table.print();
+    println!("(paper: XLNet-Code 38.59 vs DiffuLLaMA 40.68 — small AS-ARM competitive with a 50x larger diffusion model)");
+    Ok(())
+}

@@ -1,0 +1,205 @@
+//! Minimal HTTP/1.1 server substrate over std::net (no tokio offline).
+//!
+//! Routes:
+//!   POST /v1/infill   — InfillRequest JSON -> InfillResponse JSON
+//!   GET  /metrics     — metrics snapshot JSON
+//!   GET  /healthz     — liveness
+//!
+//! Connections are handled on the thread pool; each request round-trips
+//! through the scheduler handle (the engine itself stays on its own
+//! thread). Connection: close semantics (one request per connection) keeps
+//! the parser simple; the bench client follows suit.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+use super::metrics::Metrics;
+use super::request::InfillRequest;
+use super::scheduler::SchedulerHandle;
+
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    listener: TcpListener,
+    handle: SchedulerHandle,
+    metrics: Metrics,
+    pool: Arc<ThreadPool>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(
+        addr: &str,
+        handle: SchedulerHandle,
+        metrics: Metrics,
+        workers: usize,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        Ok(HttpServer {
+            addr,
+            listener,
+            handle,
+            metrics,
+            pool: Arc::new(ThreadPool::new(workers)),
+        })
+    }
+
+    /// Serve forever (blocks the calling thread).
+    pub fn serve(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let handle = self.handle.clone();
+                    let metrics = self.metrics.clone();
+                    self.pool.execute(move || {
+                        let _ = handle_conn(s, handle, metrics);
+                    });
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve on a background thread; returns the bound address.
+    pub fn serve_background(self) -> std::net::SocketAddr {
+        let addr = self.addr;
+        std::thread::Builder::new()
+            .name("http".into())
+            .spawn(move || {
+                let _ = self.serve();
+            })
+            .expect("spawn http");
+        addr
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("no path"))?.to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > 1 << 20 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> Result<()> {
+    let resp = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics) -> Result<()> {
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let body = Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+            return write_response(&mut stream, 400, "Bad Request", &body);
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => write_response(&mut stream, 200, "OK", r#"{"status":"ok"}"#),
+        ("GET", "/metrics") => {
+            write_response(&mut stream, 200, "OK", &metrics.snapshot_json().to_string())
+        }
+        ("POST", "/v1/infill") => {
+            let run = || -> Result<String> {
+                let text = std::str::from_utf8(&req.body).context("body not utf-8")?;
+                let j = Json::parse(text).map_err(|e| anyhow!("bad json: {e}"))?;
+                let infill = InfillRequest::from_json(&j)?;
+                let resp = handle.infill(infill)?;
+                Ok(resp.to_json().to_string())
+            };
+            match run() {
+                Ok(body) => write_response(&mut stream, 200, "OK", &body),
+                Err(e) => {
+                    let body =
+                        Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+                    write_response(&mut stream, 400, "Bad Request", &body)
+                }
+            }
+        }
+        _ => write_response(&mut stream, 404, "Not Found", r#"{"error":"not found"}"#),
+    }
+}
+
+/// A tiny blocking HTTP client (bench load generator / tests).
+pub fn http_post(addr: &std::net::SocketAddr, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    read_http_response(stream)
+}
+
+pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    read_http_response(stream)
+}
+
+fn read_http_response(stream: TcpStream) -> Result<(u16, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line: {status_line}"))?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}

@@ -1,0 +1,161 @@
+//! Serving metrics: request counts, latency percentiles, NFE totals,
+//! acceptance rates, throughput. Shared between the scheduler thread and
+//! the HTTP workers; exported as JSON at GET /metrics.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+#[derive(Clone)]
+pub struct Metrics {
+    inner: Arc<Mutex<Inner>>,
+}
+
+struct Inner {
+    started: Instant,
+    requests: u64,
+    failures: u64,
+    tokens_generated: u64,
+    model_nfe: u64,
+    aux_nfe: u64,
+    proposed: u64,
+    accepted: u64,
+    latency: Histogram,
+    batch_occupancy_sum: u64,
+    batch_iterations: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Arc::new(Mutex::new(Inner {
+                started: Instant::now(),
+                requests: 0,
+                failures: 0,
+                tokens_generated: 0,
+                model_nfe: 0,
+                aux_nfe: 0,
+                proposed: 0,
+                accepted: 0,
+                latency: Histogram::latency(),
+                batch_occupancy_sum: 0,
+                batch_iterations: 0,
+            })),
+        }
+    }
+
+    pub fn record_request(
+        &self,
+        latency_s: f64,
+        tokens: u64,
+        model_nfe: u64,
+        aux_nfe: u64,
+        proposed: u64,
+        accepted: u64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.tokens_generated += tokens;
+        m.model_nfe += model_nfe;
+        m.aux_nfe += aux_nfe;
+        m.proposed += proposed;
+        m.accepted += accepted;
+        m.latency.record(latency_s);
+    }
+
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().failures += 1;
+    }
+
+    pub fn record_batch_iteration(&self, occupancy: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_occupancy_sum += occupancy as u64;
+        m.batch_iterations += 1;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        let elapsed = m.started.elapsed().as_secs_f64();
+        let accept_rate = if m.proposed > 0 {
+            m.accepted as f64 / m.proposed as f64
+        } else {
+            0.0
+        };
+        let mean_occ = if m.batch_iterations > 0 {
+            m.batch_occupancy_sum as f64 / m.batch_iterations as f64
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("uptime_s", Json::num(elapsed)),
+            ("requests", Json::num(m.requests as f64)),
+            ("failures", Json::num(m.failures as f64)),
+            ("tokens_generated", Json::num(m.tokens_generated as f64)),
+            (
+                "tokens_per_second",
+                Json::num(m.tokens_generated as f64 / elapsed.max(1e-9)),
+            ),
+            ("model_nfe", Json::num(m.model_nfe as f64)),
+            ("aux_nfe", Json::num(m.aux_nfe as f64)),
+            ("acceptance_rate", Json::num(accept_rate)),
+            ("latency_p50_s", Json::num(m.latency.quantile(0.5))),
+            ("latency_p95_s", Json::num(m.latency.quantile(0.95))),
+            ("latency_p99_s", Json::num(m.latency.quantile(0.99))),
+            ("latency_mean_s", Json::num(m.latency.mean())),
+            ("mean_batch_occupancy", Json::num(mean_occ)),
+            ("batch_iterations", Json::num(m.batch_iterations as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(0.010, 100, 50, 0, 80, 60);
+        m.record_request(0.020, 50, 25, 5, 40, 30);
+        m.record_batch_iteration(3);
+        m.record_batch_iteration(1);
+        let j = m.snapshot_json();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("tokens_generated").unwrap().as_f64(), Some(150.0));
+        assert_eq!(j.get("model_nfe").unwrap().as_f64(), Some(75.0));
+        let ar = j.get("acceptance_rate").unwrap().as_f64().unwrap();
+        assert!((ar - 0.75).abs() < 1e-9);
+        assert_eq!(j.get("mean_batch_occupancy").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = Metrics::new();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.record_request(0.001, 1, 1, 0, 1, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.requests(), 800);
+    }
+}

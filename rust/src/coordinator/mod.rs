@@ -1,0 +1,38 @@
+//! Layer-3 coordinator: the serving system around the AS-ARM.
+//!
+//! * [`scheduler`] — continuous-batching decode loop owning the engine
+//! * [`request`] — the infill protocol (JSON codec)
+//! * [`http`] — HTTP/1.1 front end over the threadpool substrate
+//! * [`metrics`] — counters/latency/acceptance, exported at /metrics
+
+pub mod http;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+
+use std::path::Path;
+
+use crate::runtime::{Engine, XlaEngine};
+
+pub use metrics::Metrics;
+pub use request::{InfillRequest, InfillResponse, SamplerKind};
+pub use scheduler::{SchedulerConfig, SchedulerHandle};
+
+/// Convenience: spawn a scheduler backed by the real XLA engine loading
+/// `artifacts_dir` (and optional checkpoint).
+pub fn start_xla(
+    artifacts_dir: impl AsRef<Path>,
+    params_path: Option<std::path::PathBuf>,
+    cfg: SchedulerConfig,
+    metrics: Metrics,
+) -> SchedulerHandle {
+    let dir = artifacts_dir.as_ref().to_path_buf();
+    scheduler::spawn(
+        move || {
+            let e = XlaEngine::load(&dir, params_path.as_deref())?;
+            Ok(Box::new(e) as Box<dyn Engine>)
+        },
+        cfg,
+        metrics,
+    )
+}

@@ -1,0 +1,205 @@
+//! The serving protocol: infill requests/responses and their JSON codec.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Which decoder serves the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// ASSD with self-drafting (Algorithm 1) — the paper's headline.
+    Assd,
+    /// ASSD with context n-gram drafting (Algorithm 2).
+    AssdNgram,
+    /// Sequential factorized decoding (baseline).
+    Sequential,
+    /// Masked-diffusion baseline (conditional-independence unmasking).
+    Diffusion,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<SamplerKind> {
+        Ok(match s {
+            "assd" => SamplerKind::Assd,
+            "assd_ngram" => SamplerKind::AssdNgram,
+            "sequential" => SamplerKind::Sequential,
+            "diffusion" => SamplerKind::Diffusion,
+            other => bail!("unknown sampler '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Assd => "assd",
+            SamplerKind::AssdNgram => "assd_ngram",
+            SamplerKind::Sequential => "sequential",
+            SamplerKind::Diffusion => "diffusion",
+        }
+    }
+}
+
+/// An infilling request: text whose `mask_char` runs are to be generated.
+#[derive(Clone, Debug)]
+pub struct InfillRequest {
+    pub text: String,
+    pub mask_char: char,
+    pub sampler: SamplerKind,
+    /// speculation window (Alg. 1's k)
+    pub k: usize,
+    /// diffusion steps (Diffusion sampler only)
+    pub steps: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for InfillRequest {
+    fn default() -> Self {
+        InfillRequest {
+            text: String::new(),
+            mask_char: '_',
+            sampler: SamplerKind::Assd,
+            k: 5,
+            steps: 32,
+            temperature: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+impl InfillRequest {
+    pub fn from_json(j: &Json) -> Result<InfillRequest> {
+        let mut r = InfillRequest::default();
+        match j.get("text").and_then(|t| t.as_str()) {
+            Some(t) => r.text = t.to_string(),
+            None => bail!("missing 'text'"),
+        }
+        if let Some(mc) = j.get("mask_char").and_then(|t| t.as_str()) {
+            let mut chars = mc.chars();
+            r.mask_char = chars.next().unwrap_or('_');
+            if chars.next().is_some() {
+                bail!("mask_char must be a single character");
+            }
+        }
+        if let Some(s) = j.get("sampler").and_then(|t| t.as_str()) {
+            r.sampler = SamplerKind::parse(s)?;
+        }
+        if let Some(k) = j.get("k").and_then(|t| t.as_usize()) {
+            if k == 0 {
+                bail!("k must be >= 1");
+            }
+            r.k = k;
+        }
+        if let Some(s) = j.get("steps").and_then(|t| t.as_usize()) {
+            r.steps = s.max(1);
+        }
+        if let Some(t) = j.get("temperature").and_then(|t| t.as_f64()) {
+            if t <= 0.0 {
+                bail!("temperature must be > 0");
+            }
+            r.temperature = t as f32;
+        }
+        if let Some(s) = j.get("seed").and_then(|t| t.as_f64()) {
+            r.seed = s as u64;
+        }
+        Ok(r)
+    }
+}
+
+/// The response: completed text plus the accounting the paper reports.
+#[derive(Clone, Debug)]
+pub struct InfillResponse {
+    pub text: String,
+    pub model_nfe: u64,
+    pub aux_nfe: u64,
+    pub iterations: u64,
+    pub acceptance_rate: f64,
+    pub latency_s: f64,
+    pub n_generated: usize,
+}
+
+impl InfillResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("text", Json::str(self.text.clone())),
+            ("model_nfe", Json::num(self.model_nfe as f64)),
+            ("aux_nfe", Json::num(self.aux_nfe as f64)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("acceptance_rate", Json::num(self.acceptance_rate)),
+            ("latency_s", Json::num(self.latency_s)),
+            ("n_generated", Json::num(self.n_generated as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let j = Json::parse(r#"{"text": "Tom went to ___."}"#).unwrap();
+        let r = InfillRequest::from_json(&j).unwrap();
+        assert_eq!(r.text, "Tom went to ___.");
+        assert_eq!(r.sampler, SamplerKind::Assd);
+        assert_eq!(r.k, 5);
+    }
+
+    #[test]
+    fn parse_full() {
+        let j = Json::parse(
+            r#"{"text":"a?b","mask_char":"?","sampler":"assd_ngram","k":8,
+               "steps":16,"temperature":0.8,"seed":42}"#,
+        )
+        .unwrap();
+        let r = InfillRequest::from_json(&j).unwrap();
+        assert_eq!(r.mask_char, '?');
+        assert_eq!(r.sampler, SamplerKind::AssdNgram);
+        assert_eq!(r.k, 8);
+        assert_eq!(r.steps, 16);
+        assert!((r.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(r.seed, 42);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        for bad in [
+            r#"{}"#,
+            r#"{"text":"x","sampler":"bogus"}"#,
+            r#"{"text":"x","k":0}"#,
+            r#"{"text":"x","temperature":0}"#,
+            r#"{"text":"x","mask_char":"ab"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(InfillRequest::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_json() {
+        let r = InfillResponse {
+            text: "done".into(),
+            model_nfe: 10,
+            aux_nfe: 2,
+            iterations: 5,
+            acceptance_rate: 0.8,
+            latency_s: 0.25,
+            n_generated: 40,
+        };
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("model_nfe").unwrap().as_f64(), Some(10.0));
+        assert_eq!(parsed.get("text").unwrap().as_str(), Some("done"));
+    }
+
+    #[test]
+    fn sampler_kind_names_roundtrip() {
+        for k in [
+            SamplerKind::Assd,
+            SamplerKind::AssdNgram,
+            SamplerKind::Sequential,
+            SamplerKind::Diffusion,
+        ] {
+            assert_eq!(SamplerKind::parse(k.name()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,471 @@
+//! The scheduler: continuous (iteration-level) batching of decode state
+//! machines over a single engine thread.
+//!
+//! The PJRT client is single-threaded, so the scheduler OWNS the engine on
+//! a dedicated thread. Requests arrive over a channel; each becomes a
+//! decode state machine occupying a batch slot. Every loop iteration the
+//! scheduler gathers each active machine's pending forward request,
+//! executes ONE batched forward, scatters the logits back, and retires
+//! finished machines — so a slot frees the moment its request completes and
+//! a queued request joins mid-flight (vLLM-style continuous batching).
+//! Draft-phase and verify-phase sequences can share a batch: both phases
+//! use the same fwd executable and differ only in their per-slot masks.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::decode::assd::{AssdMachine, DraftSource};
+use crate::decode::diffusion::DiffusionMachine;
+use crate::decode::sequential::SequentialMachine;
+use crate::decode::{DecodeMachine, DecodeOutcome};
+use crate::data::masking::lattice_sigma;
+use crate::model::mask::Ordering;
+use crate::runtime::Engine;
+use crate::tokenizer::{ByteTokenizer, MASK};
+use crate::util::rng::Rng;
+
+use super::metrics::Metrics;
+use super::request::{InfillRequest, InfillResponse, SamplerKind};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Max sequences decoded concurrently (batch slots).
+    pub max_batch: usize,
+    /// How long to block waiting for work when idle.
+    pub idle_poll: Duration,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 4,
+            idle_poll: Duration::from_millis(50),
+        }
+    }
+}
+
+struct Job {
+    request: InfillRequest,
+    reply: mpsc::Sender<Result<InfillResponse>>,
+}
+
+/// Cloneable handle for submitting requests to the scheduler thread.
+#[derive(Clone)]
+pub struct SchedulerHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl SchedulerHandle {
+    /// Blocking round-trip: submit and await the response.
+    pub fn infill(&self, request: InfillRequest) -> Result<InfillResponse> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job {
+                request,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("scheduler shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("scheduler dropped request"))?
+    }
+
+    /// Async submit: returns the receiver immediately (load generators).
+    pub fn submit(&self, request: InfillRequest) -> Result<mpsc::Receiver<Result<InfillResponse>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job {
+                request,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("scheduler shut down"))?;
+        Ok(reply_rx)
+    }
+}
+
+struct Slot {
+    machine: Box<dyn DecodeMachine>,
+    reply: mpsc::Sender<Result<InfillResponse>>,
+    t0: Instant,
+    text_len: usize,
+    n_targets: usize,
+}
+
+/// Spawn the scheduler thread. `factory` constructs the engine ON the
+/// scheduler thread (the XLA engine is not Send).
+pub fn spawn<F>(factory: F, cfg: SchedulerConfig, metrics: Metrics) -> SchedulerHandle
+where
+    F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Job>();
+    thread::Builder::new()
+        .name("scheduler".into())
+        .spawn(move || {
+            let engine = match factory() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("scheduler: engine init failed: {e:#}");
+                    // Drain and fail all jobs.
+                    while let Ok(job) = rx.recv() {
+                        let _ = job.reply.send(Err(anyhow!("engine init failed")));
+                    }
+                    return;
+                }
+            };
+            run_loop(engine.as_ref(), rx, cfg, metrics);
+        })
+        .expect("spawn scheduler");
+    SchedulerHandle { tx }
+}
+
+fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, metrics: Metrics) {
+    let n = engine.seq_len();
+    let v = engine.vocab();
+    let tok = ByteTokenizer::new();
+    let mut slots: Vec<Slot> = Vec::new();
+    let mut channel_open = true;
+
+    // Reusable batch buffers.
+    let max_b = cfg.max_batch;
+    let mut toks_buf = vec![0u32; max_b * n];
+    let mut mh_buf = vec![0f32; max_b * n * n];
+    let mut mg_buf = vec![0f32; max_b * n * n];
+
+    while channel_open || !slots.is_empty() {
+        // --- admission ---
+        while slots.len() < cfg.max_batch && channel_open {
+            let job = if slots.is_empty() {
+                match rx.recv_timeout(cfg.idle_poll) {
+                    Ok(j) => j,
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        channel_open = false;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        channel_open = false;
+                        break;
+                    }
+                }
+            };
+            match admit(engine, &tok, job.request) {
+                Ok(AdmitResult::Slot(machine, text_len, n_targets)) => slots.push(Slot {
+                    machine,
+                    reply: job.reply,
+                    t0: Instant::now(),
+                    text_len,
+                    n_targets,
+                }),
+                Ok(AdmitResult::Immediate(resp)) => {
+                    let _ = job.reply.send(Ok(resp));
+                }
+                Err(e) => {
+                    metrics.record_failure();
+                    let _ = job.reply.send(Err(e));
+                }
+            }
+        }
+        if slots.is_empty() {
+            continue;
+        }
+
+        // --- one batched forward over all active machines ---
+        let b = slots.len();
+        for (s, slot) in slots.iter_mut().enumerate() {
+            let req = slot
+                .machine
+                .forward_request()
+                .expect("active machine must request a forward");
+            toks_buf[s * n..(s + 1) * n].copy_from_slice(req.tokens);
+            mh_buf[s * n * n..(s + 1) * n * n].copy_from_slice(req.mask_h);
+            mg_buf[s * n * n..(s + 1) * n * n].copy_from_slice(req.mask_g);
+        }
+        metrics.record_batch_iteration(b);
+        let logits = match engine.forward(
+            b,
+            &toks_buf[..b * n],
+            &mh_buf[..b * n * n],
+            &mg_buf[..b * n * n],
+        ) {
+            Ok(l) => l,
+            Err(e) => {
+                // Engine failure: fail all active requests.
+                for slot in slots.drain(..) {
+                    metrics.record_failure();
+                    let _ = slot.reply.send(Err(anyhow!("engine error: {e:#}")));
+                }
+                continue;
+            }
+        };
+        for (s, slot) in slots.iter_mut().enumerate() {
+            slot.machine.absorb(&logits[s * n * v..(s + 1) * n * v]);
+        }
+
+        // --- retire finished machines ---
+        let mut s = 0;
+        while s < slots.len() {
+            if slots[s].machine.done() {
+                let slot = slots.swap_remove(s);
+                let latency = slot.t0.elapsed().as_secs_f64();
+                let outcome = slot.machine.outcome();
+                let resp = outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
+                metrics.record_request(
+                    latency,
+                    resp.n_generated as u64,
+                    resp.model_nfe,
+                    resp.aux_nfe,
+                    0,
+                    0,
+                );
+                let _ = slot.reply.send(Ok(resp));
+            } else {
+                s += 1;
+            }
+        }
+    }
+}
+
+enum AdmitResult {
+    Slot(Box<dyn DecodeMachine>, usize, usize),
+    Immediate(InfillResponse),
+}
+
+/// Turn a request into a decode machine (or an immediate response when
+/// there is nothing to infill).
+fn admit(engine: &dyn Engine, tok: &ByteTokenizer, req: InfillRequest) -> Result<AdmitResult> {
+    let n = engine.seq_len();
+    let v = engine.vocab();
+    if req.text.is_empty() {
+        bail!("empty text");
+    }
+    let bytes = req.text.as_bytes();
+    if bytes.len() > n {
+        bail!("text longer than model window ({} > {n})", bytes.len());
+    }
+    // Token buffer: visible bytes, MASK at mask_char, PAD tail (visible).
+    let mask_byte = {
+        let mut buf = [0u8; 4];
+        let s = req.mask_char.encode_utf8(&mut buf);
+        if s.len() != 1 {
+            bail!("mask_char must be a single byte");
+        }
+        buf[0]
+    };
+    let mut tokens = tok.encode_fixed(&req.text, n);
+    let mut visible: Vec<usize> = Vec::with_capacity(n);
+    let mut n_targets = 0;
+    for (i, t) in tokens.iter_mut().enumerate() {
+        if i < bytes.len() && bytes[i] == mask_byte {
+            *t = MASK;
+            n_targets += 1;
+        } else {
+            visible.push(i);
+        }
+    }
+    if n_targets == 0 {
+        return Ok(AdmitResult::Immediate(InfillResponse {
+            text: req.text,
+            model_nfe: 0,
+            aux_nfe: 0,
+            iterations: 0,
+            acceptance_rate: 1.0,
+            latency_s: 0.0,
+            n_generated: 0,
+        }));
+    }
+    let m = visible.len();
+    let ord = Ordering::new(lattice_sigma(&visible, n), m);
+    let rng = Rng::new(req.seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1));
+    let machine: Box<dyn DecodeMachine> = match req.sampler {
+        SamplerKind::Assd => Box::new(AssdMachine::new(
+            ord,
+            tokens,
+            v,
+            req.k,
+            req.temperature,
+            rng,
+            DraftSource::SelfModel,
+        )),
+        SamplerKind::AssdNgram => Box::new(AssdMachine::new(
+            ord,
+            tokens,
+            v,
+            req.k,
+            req.temperature,
+            rng,
+            DraftSource::NGram,
+        )),
+        SamplerKind::Sequential => Box::new(SequentialMachine::new(
+            ord,
+            tokens,
+            v,
+            req.temperature,
+            rng,
+        )),
+        SamplerKind::Diffusion => Box::new(DiffusionMachine::new(
+            tokens,
+            v,
+            req.steps,
+            req.temperature,
+            rng,
+        )),
+    };
+    Ok(AdmitResult::Slot(machine, bytes.len(), n_targets))
+}
+
+fn outcome_to_response(
+    tok: &ByteTokenizer,
+    outcome: DecodeOutcome,
+    latency_s: f64,
+    text_len: usize,
+    n_targets: usize,
+) -> InfillResponse {
+    // The original text occupied the first `text_len` byte positions; the
+    // rest is PAD. Truncate at the token level (byte-level truncation of
+    // the decoded string could split a multi-byte char).
+    let text = tok.decode(&outcome.tokens[..text_len.min(outcome.tokens.len())]);
+    InfillResponse {
+        text,
+        model_nfe: outcome.model_nfe,
+        aux_nfe: outcome.aux_nfe,
+        iterations: outcome.iterations,
+        acceptance_rate: outcome.acceptance_rate(),
+        latency_s,
+        n_generated: n_targets,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockEngine;
+
+    fn mock_handle(max_batch: usize) -> (SchedulerHandle, Metrics) {
+        let metrics = Metrics::new();
+        let m2 = metrics.clone();
+        let h = spawn(
+            move || Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>),
+            SchedulerConfig {
+                max_batch,
+                idle_poll: Duration::from_millis(5),
+            },
+            m2,
+        );
+        (h, metrics)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let (h, metrics) = mock_handle(2);
+        let resp = h
+            .infill(InfillRequest {
+                text: "ab__cd__".into(),
+                seed: 7,
+                ..Default::default()
+            })
+            .unwrap();
+        // The mock engine emits arbitrary bytes, so the lossy UTF-8 decode
+        // may change byte lengths; assert structure, not exact bytes.
+        assert!(resp.text.starts_with("ab"), "{:?}", resp.text);
+        assert!(!resp.text.contains('_'));
+        assert_eq!(resp.n_generated, 4);
+        assert!(resp.model_nfe >= 1 && resp.model_nfe <= 4);
+        assert_eq!(metrics.requests(), 1);
+    }
+
+    #[test]
+    fn no_mask_is_immediate() {
+        let (h, _) = mock_handle(2);
+        let resp = h
+            .infill(InfillRequest {
+                text: "hello".into(),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.text, "hello");
+        assert_eq!(resp.model_nfe, 0);
+    }
+
+    #[test]
+    fn rejects_oversized_and_empty() {
+        let (h, _) = mock_handle(2);
+        assert!(h
+            .infill(InfillRequest {
+                text: "x".repeat(100),
+                ..Default::default()
+            })
+            .is_err());
+        assert!(h
+            .infill(InfillRequest {
+                text: "".into(),
+                ..Default::default()
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn all_samplers_complete() {
+        let (h, _) = mock_handle(4);
+        for sampler in [
+            SamplerKind::Assd,
+            SamplerKind::AssdNgram,
+            SamplerKind::Sequential,
+            SamplerKind::Diffusion,
+        ] {
+            let resp = h
+                .infill(InfillRequest {
+                    text: "ab____cd".into(),
+                    sampler,
+                    seed: 11,
+                    ..Default::default()
+                })
+                .unwrap();
+            assert!(!resp.text.contains('_'), "{}: {}", sampler.name(), resp.text);
+        }
+    }
+
+    #[test]
+    fn concurrent_requests_batch_together() {
+        let (h, metrics) = mock_handle(4);
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                h.submit(InfillRequest {
+                    text: "ab______".into(),
+                    seed: i,
+                    ..Default::default()
+                })
+                .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.n_generated, 6);
+        }
+        let j = metrics.snapshot_json();
+        let occ = j.get("mean_batch_occupancy").unwrap().as_f64().unwrap();
+        assert!(occ > 1.0, "continuous batching never batched (occ={occ})");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (h, _) = mock_handle(1);
+        let get = |seed| {
+            h.infill(InfillRequest {
+                text: "xy____zw".into(),
+                seed,
+                ..Default::default()
+            })
+            .unwrap()
+            .text
+        };
+        assert_eq!(get(5), get(5));
+    }
+}

@@ -1,0 +1,248 @@
+//! Masking distributions f(·) and ordering samplers s(·|m) (paper §6.2,
+//! App. D.2), plus the binary-lattice decomposition (Eq. 4).
+//!
+//! These drive BOTH training (the rust trainer samples (m, sigma) per
+//! sequence and hands verify-mode masks to the train_step artifact) and
+//! evaluation workload generation (e.g. Table 1's "95% masked").
+
+use crate::util::rng::Rng;
+
+/// Prompt-length distribution f(·): prompt fraction uniform in
+/// [lo_frac, hi_frac] of the sequence. The paper's main model uses
+/// U[0.01, 0.10] ("wide masking", i.e. 90–99% masked); the OTS-style
+/// model uses U[0.80, 0.85] prompts (≈15–20% masked, XLNet pretraining).
+#[derive(Clone, Copy, Debug)]
+pub struct PromptDist {
+    pub lo_frac: f64,
+    pub hi_frac: f64,
+}
+
+impl PromptDist {
+    pub fn new(lo_frac: f64, hi_frac: f64) -> Self {
+        assert!(0.0 <= lo_frac && lo_frac <= hi_frac && hi_frac <= 1.0);
+        PromptDist { lo_frac, hi_frac }
+    }
+
+    /// Paper App. D.2: the finetuned ("FT") model, 1–10% prompt.
+    pub fn narrow() -> Self {
+        PromptDist::new(0.01, 0.10)
+    }
+
+    /// Fig. 4 ablation: 1–85% prompt ("wide").
+    pub fn wide() -> Self {
+        PromptDist::new(0.01, 0.85)
+    }
+
+    /// XLNet-pretraining-like (the "OTS" model): ~80–85% visible.
+    pub fn ots() -> Self {
+        PromptDist::new(0.80, 0.85)
+    }
+
+    /// Sample a prompt length m in [1, n-1] (always at least one prompt
+    /// token and one target).
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> usize {
+        let f = self.lo_frac + rng.f64() * (self.hi_frac - self.lo_frac);
+        ((f * n as f64).round() as usize).clamp(1, n - 1)
+    }
+
+    /// Low-discrepancy in-batch sampling (paper App. D.2 / [Sah+24]):
+    /// stratify the batch across the [lo, hi] range so each batch sees a
+    /// spread of masking rates instead of i.i.d. clumps.
+    pub fn sample_batch(&self, rng: &mut Rng, n: usize, batch: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(batch);
+        let u0 = rng.f64();
+        for i in 0..batch {
+            // shifted stratified samples: (i + u0) / batch covers [0,1)
+            let u = (i as f64 + u0) / batch as f64;
+            let f = self.lo_frac + u * (self.hi_frac - self.lo_frac);
+            out.push(((f * n as f64).round() as usize).clamp(1, n - 1));
+        }
+        // Shuffle so slot index doesn't correlate with masking rate.
+        rng.shuffle(&mut out);
+        out
+    }
+}
+
+/// Ordering protocol s(·|m).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrderProtocol {
+    /// Binary-lattice decomposition (Eq. 4): sorted prompt positions, then
+    /// sorted target positions. 2^N queries instead of N!.
+    Lattice,
+    /// Unrestricted permutation (the Fig. 3 ablation baseline).
+    Permutation,
+}
+
+/// Sample (sigma, m): choose m ~ f, choose the visible set uniformly, then
+/// order per the protocol. Returns sigma (order index -> position).
+pub fn sample_sigma(
+    rng: &mut Rng,
+    n: usize,
+    m: usize,
+    protocol: OrderProtocol,
+) -> Vec<usize> {
+    match protocol {
+        OrderProtocol::Lattice => {
+            let vis = rng.choose_sorted(n, m);
+            lattice_sigma(&vis, n)
+        }
+        OrderProtocol::Permutation => {
+            let mut sigma: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut sigma);
+            sigma
+        }
+    }
+}
+
+/// Binary-lattice sigma from a visible set: sorted(visible) ++ sorted(rest).
+pub fn lattice_sigma(visible: &[usize], n: usize) -> Vec<usize> {
+    debug_assert!(visible.windows(2).all(|w| w[0] < w[1]), "visible must be sorted");
+    let mut in_vis = vec![false; n];
+    for &p in visible {
+        in_vis[p] = true;
+    }
+    let mut sigma = Vec::with_capacity(n);
+    sigma.extend_from_slice(visible);
+    sigma.extend((0..n).filter(|&p| !in_vis[p]));
+    sigma
+}
+
+/// Inverse of sigma: position -> order index.
+pub fn order_of(sigma: &[usize]) -> Vec<usize> {
+    let mut order = vec![0usize; sigma.len()];
+    for (i, &pos) in sigma.iter().enumerate() {
+        order[pos] = i;
+    }
+    order
+}
+
+/// Masking-rate schedule for training (paper App. D.3: "start at 15%
+/// masking, linearly increase the minimum to 90% and the maximum to 99%
+/// over 5000 steps"). Expressed over prompt fractions: start with a high
+/// prompt fraction and anneal down to [1-hi_mask, 1-lo_mask].
+#[derive(Clone, Copy, Debug)]
+pub struct MaskRateSchedule {
+    pub start_prompt: f64,   // initial prompt fraction (e.g. 0.85 = 15% masked)
+    pub final_lo: f64,       // final lo prompt fraction (e.g. 0.01 = 99% masked)
+    pub final_hi: f64,       // final hi prompt fraction (e.g. 0.10 = 90% masked)
+    pub warmup_steps: usize, // anneal duration
+}
+
+impl MaskRateSchedule {
+    pub fn paper_default() -> Self {
+        MaskRateSchedule {
+            start_prompt: 0.85,
+            final_lo: 0.01,
+            final_hi: 0.10,
+            warmup_steps: 500,
+        }
+    }
+
+    /// The PromptDist at a given step.
+    pub fn at(&self, step: usize) -> PromptDist {
+        let t = (step as f64 / self.warmup_steps as f64).min(1.0);
+        let lo = self.start_prompt + t * (self.final_lo - self.start_prompt);
+        let hi = self.start_prompt + t * (self.final_hi - self.start_prompt);
+        PromptDist::new(lo.min(hi), lo.max(hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn prompt_dist_in_range() {
+        let d = PromptDist::narrow();
+        let mut rng = Rng::new(0);
+        for _ in 0..1000 {
+            let m = d.sample(&mut rng, 128);
+            assert!((1..=13).contains(&m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn low_discrepancy_covers_range() {
+        let d = PromptDist::new(0.1, 0.9);
+        let mut rng = Rng::new(1);
+        let ms = d.sample_batch(&mut rng, 100, 8);
+        assert_eq!(ms.len(), 8);
+        let lo = *ms.iter().min().unwrap();
+        let hi = *ms.iter().max().unwrap();
+        // stratification guarantees spread
+        assert!(lo < 30, "lo={lo}");
+        assert!(hi > 70, "hi={hi}");
+    }
+
+    #[test]
+    fn lattice_sigma_structure() {
+        let sigma = lattice_sigma(&[2, 5, 7], 9);
+        assert_eq!(sigma, vec![2, 5, 7, 0, 1, 3, 4, 6, 8]);
+        let order = order_of(&sigma);
+        assert_eq!(order[2], 0);
+        assert_eq!(order[8], 8);
+    }
+
+    #[test]
+    fn prop_sigma_is_bijection_lattice_sorted() {
+        propcheck::check_no_shrink(
+            42,
+            200,
+            |r: &mut Rng| {
+                let n = r.range(2, 40);
+                let m = r.range(1, n);
+                let sigma = sample_sigma(r, n, m, OrderProtocol::Lattice);
+                (n, m, sigma)
+            },
+            |(n, m, sigma)| {
+                let mut sorted = sigma.clone();
+                sorted.sort_unstable();
+                if sorted != (0..*n).collect::<Vec<_>>() {
+                    return Err("not a bijection".into());
+                }
+                if !sigma[..*m].windows(2).all(|w| w[0] < w[1]) {
+                    return Err("prompt not sorted".into());
+                }
+                if !sigma[*m..].windows(2).all(|w| w[0] < w[1]) {
+                    return Err("targets not sorted (Eq. 4 violated)".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_permutation_is_bijection() {
+        propcheck::check_no_shrink(
+            43,
+            200,
+            |r: &mut Rng| {
+                let n = r.range(2, 40);
+                sample_sigma(r, n, 1, OrderProtocol::Permutation)
+            },
+            |sigma| {
+                let mut sorted = sigma.clone();
+                sorted.sort_unstable();
+                if sorted == (0..sigma.len()).collect::<Vec<_>>() {
+                    Ok(())
+                } else {
+                    Err("not a bijection".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn schedule_anneals() {
+        let s = MaskRateSchedule::paper_default();
+        let d0 = s.at(0);
+        assert!((d0.lo_frac - 0.85).abs() < 1e-9);
+        let dend = s.at(10_000);
+        assert!((dend.lo_frac - 0.01).abs() < 1e-9);
+        assert!((dend.hi_frac - 0.10).abs() < 1e-9);
+        // midpoint is between
+        let dm = s.at(250);
+        assert!(dm.lo_frac < 0.85 && dm.hi_frac > 0.10);
+    }
+}

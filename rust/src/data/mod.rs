@@ -1,0 +1,84 @@
+//! Data substrates: corpus generation, sequence packing, masking/ordering
+//! distributions.
+
+pub mod masking;
+pub mod stories;
+
+use crate::tokenizer::{ByteTokenizer, PAD};
+use crate::util::rng::Rng;
+
+/// Pack documents into fixed-length token chunks with a separator byte
+/// ('\n' = 10) delineating document starts (paper App. D.1's packing,
+/// byte-level). Chunks shorter than `len` at the tail are PAD-filled.
+pub fn pack_chunks(docs: &[String], len: usize) -> Vec<Vec<u32>> {
+    let tok = ByteTokenizer::new();
+    let mut stream: Vec<u32> = vec![];
+    for d in docs {
+        stream.extend(tok.encode(d));
+        stream.push(10); // '\n' document separator
+    }
+    let mut out = vec![];
+    for chunk in stream.chunks(len) {
+        let mut c = chunk.to_vec();
+        while c.len() < len {
+            c.push(PAD);
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Train/validation split of packed chunks (deterministic shuffle).
+pub fn split_chunks(
+    mut chunks: Vec<Vec<u32>>,
+    val_frac: f64,
+    seed: u64,
+) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut chunks);
+    let n_val = ((chunks.len() as f64) * val_frac).round() as usize;
+    let val = chunks.split_off(chunks.len() - n_val.min(chunks.len()));
+    (chunks, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_covers_all_bytes() {
+        let docs = vec!["hello".to_string(), "world!".to_string()];
+        let chunks = pack_chunks(&docs, 8);
+        let total: usize = docs.iter().map(|d| d.len() + 1).sum();
+        assert_eq!(chunks.len(), total.div_ceil(8));
+        for c in &chunks {
+            assert_eq!(c.len(), 8);
+        }
+        // First chunk starts with 'h'
+        assert_eq!(chunks[0][0], b'h' as u32);
+    }
+
+    #[test]
+    fn packing_pads_tail() {
+        let chunks = pack_chunks(&["ab".to_string()], 8);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(&chunks[0][..3], &[97, 98, 10]);
+        assert!(chunks[0][3..].iter().all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn split_is_deterministic_and_partitions() {
+        let chunks: Vec<Vec<u32>> = (0..100).map(|i| vec![i as u32; 4]).collect();
+        let (tr1, va1) = split_chunks(chunks.clone(), 0.2, 5);
+        let (tr2, va2) = split_chunks(chunks.clone(), 0.2, 5);
+        assert_eq!(tr1, tr2);
+        assert_eq!(va1, va2);
+        assert_eq!(tr1.len(), 80);
+        assert_eq!(va1.len(), 20);
+        let mut all: Vec<_> = tr1.into_iter().chain(va1).collect();
+        all.sort();
+        let mut orig = chunks;
+        orig.sort();
+        assert_eq!(all, orig);
+    }
+}

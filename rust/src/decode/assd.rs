@@ -1,0 +1,571 @@
+//! Any-Subset Speculative Decoding — the paper's Algorithm 1.
+//!
+//! Each loop iteration:
+//!   1. DRAFT: speculate k tokens in parallel from the conditionally
+//!      independent distribution p(. | x_sigma(<n)) (Fig. 1a masks). With
+//!      self-drafting this is one forward of the AS-ARM; with the n-gram
+//!      variant (Algorithm 2) it is a table lookup (aux NFE).
+//!   2. If only one token remained, accept it outright (Lemma 1 shows its
+//!      draft density equals the oracle density) — 1 NFE for the last token.
+//!   3. VERIFY: one forward with the causal-like Fig. 1b masks yields the
+//!      oracle densities q_i = p(x~_sigma(i) | x_sigma(<n), x~_sigma[n:i))
+//!      for ALL speculated i simultaneously.
+//!   4. Accept x~_i while r < min(1, q_i/p_i); on first rejection resample
+//!      from (q - p)_+ (line 22) and continue from there.
+//!
+//! Theorem 1 (model NFE <= targets decoded) and Theorem 2 (output
+//! distribution == sequential/oracle joint) are enforced by tests against
+//! the analytic mock engine (tests below + rust/tests/).
+
+use crate::model::mask::{advance_draft_masks, draft_masks, verify_masks, Ordering};
+use crate::tokenizer::MASK;
+use crate::util::rng::Rng;
+
+use super::ngram::BigramDraft;
+use super::sampling::{residual, sample_probs, softmax};
+use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
+
+/// Which draft model speculates tokens.
+pub enum DraftSource {
+    /// The AS-ARM drafts for itself (Alg. 1; Lemma 1 applies).
+    SelfModel,
+    /// Context bigram table (Alg. 2; cheap but Lemma 1 does NOT apply, so
+    /// even the last token is verified).
+    NGram,
+}
+
+enum Phase {
+    Draft,
+    Verify,
+    Done,
+}
+
+pub struct AssdMachine {
+    ord: Ordering,
+    vocab: usize,
+    k: usize,
+    temp: f32,
+    rng: Rng,
+    tokens: Vec<u32>,
+    // draft-mode masks at state n (incrementally advanced)
+    draft_h: Vec<f32>,
+    draft_g: Vec<f32>,
+    // verify-mode masks (fixed for the whole decode)
+    ver_h: Vec<f32>,
+    ver_g: Vec<f32>,
+    n: usize,
+    t: usize,
+    phase: Phase,
+    draft_source: DraftSource,
+    ngram: Option<BigramDraft>,
+    // scratch for the current iteration
+    drafted: Vec<u32>,        // tokens for orders n..t
+    draft_probs: Vec<Vec<f32>>, // full p(.|x_sigma(<n)) rows for orders n..t
+    // stats
+    model_nfe: u64,
+    aux_nfe: u64,
+    iterations: u64,
+    accepted: u64,
+    proposed: u64,
+    /// Lemma 1 instrumentation: rejections of the FIRST speculated token
+    /// (must stay 0 for SelfModel drafting).
+    pub first_token_rejections: u64,
+}
+
+impl AssdMachine {
+    pub fn new(
+        ord: Ordering,
+        tokens: Vec<u32>,
+        vocab: usize,
+        k: usize,
+        temp: f32,
+        rng: Rng,
+        draft_source: DraftSource,
+    ) -> Self {
+        assert!(k >= 1);
+        assert_eq!(tokens.len(), ord.n());
+        for (pos, &t) in tokens.iter().enumerate() {
+            if ord.is_prompt_pos(pos) {
+                assert_ne!(t, MASK, "prompt position {pos} is MASK");
+            } else {
+                assert_eq!(t, MASK, "target position {pos} must start as MASK");
+            }
+        }
+        let n = ord.m;
+        let (draft_h, draft_g) = draft_masks(&ord, n);
+        let (ver_h, ver_g) = verify_masks(&ord);
+        let ngram = match draft_source {
+            DraftSource::NGram => Some(BigramDraft::from_sequence(&tokens, vocab)),
+            DraftSource::SelfModel => None,
+        };
+        let phase = if n >= ord.n() { Phase::Done } else { Phase::Draft };
+        AssdMachine {
+            ord,
+            vocab,
+            k,
+            temp,
+            rng,
+            tokens,
+            draft_h,
+            draft_g,
+            ver_h,
+            ver_g,
+            n,
+            t: n,
+            phase,
+            draft_source,
+            ngram,
+            drafted: vec![],
+            draft_probs: vec![],
+            model_nfe: 0,
+            aux_nfe: 0,
+            iterations: 0,
+            accepted: 0,
+            proposed: 0,
+            first_token_rejections: 0,
+        }
+    }
+
+    /// N-gram drafting happens synchronously (no forward needed): fill the
+    /// window, record p-rows from the bigram table, move to Verify.
+    fn ngram_draft(&mut self) {
+        let nseq = self.ord.n();
+        self.t = (self.n + self.k).min(nseq);
+        self.drafted.clear();
+        self.draft_probs.clear();
+        let ng = self.ngram.as_ref().expect("ngram table");
+        let mut dists = Vec::with_capacity(self.t - self.n);
+        {
+            // Theorem 3: left neighbour of sigma(i) is known or drafted
+            // earlier in this window (lattice keeps targets sorted).
+            for i in self.n..self.t {
+                let pos = self.ord.sigma[i];
+                let prev = if pos == 0 {
+                    None
+                } else {
+                    let left = self.tokens[pos - 1];
+                    if left != MASK {
+                        Some(left)
+                    } else {
+                        // drafted earlier in this window
+                        debug_assert!(self.drafted.iter().len() > 0 || true);
+                        let oi = self.ord.order[pos - 1];
+                        if oi >= self.n && oi < i {
+                            Some(self.drafted[oi - self.n])
+                        } else {
+                            None
+                        }
+                    }
+                };
+                let dist = ng.dist(prev);
+                let tok = sample_probs(&mut self.rng, &dist) as u32;
+                self.drafted.push(tok);
+                dists.push(dist);
+            }
+        }
+        self.draft_probs = dists;
+        self.aux_nfe += 1;
+        // fill drafts into the sequence for the verify pass
+        for i in self.n..self.t {
+            self.tokens[self.ord.sigma[i]] = self.drafted[i - self.n];
+        }
+        self.phase = Phase::Verify;
+    }
+
+    fn finish_iteration(&mut self, n_new: usize) {
+        advance_draft_masks(&self.ord, self.n, n_new, &mut self.draft_h, &mut self.draft_g);
+        // update the n-gram table with newly fixed tokens
+        if self.ngram.is_some() {
+            let mut obs: Vec<(Option<u32>, u32, Option<u32>)> = vec![];
+            for i in self.n..n_new {
+                let pos = self.ord.sigma[i];
+                let tok = self.tokens[pos];
+                let left = if pos > 0 { Some(self.tokens[pos - 1]) } else { None };
+                let right = if pos + 1 < self.tokens.len() {
+                    Some(self.tokens[pos + 1])
+                } else {
+                    None
+                };
+                obs.push((left, tok, right));
+            }
+            let ng = self.ngram.as_mut().unwrap();
+            for (left, tok, right) in obs {
+                ng.observe_unigram(tok);
+                if let Some(l) = left {
+                    if l != MASK {
+                        ng.observe(l, tok);
+                    }
+                }
+                if let Some(r) = right {
+                    if r != MASK {
+                        ng.observe(tok, r);
+                    }
+                }
+            }
+        }
+        self.n = n_new;
+        self.iterations += 1;
+        self.phase = if self.n >= self.ord.n() {
+            Phase::Done
+        } else {
+            Phase::Draft
+        };
+    }
+}
+
+impl DecodeMachine for AssdMachine {
+    fn done(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    fn forward_request(&mut self) -> Option<ForwardRequest<'_>> {
+        loop {
+            match self.phase {
+                Phase::Done => return None,
+                Phase::Draft => match self.draft_source {
+                    DraftSource::SelfModel => {
+                        return Some(ForwardRequest {
+                            tokens: &self.tokens,
+                            mask_h: &self.draft_h,
+                            mask_g: &self.draft_g,
+                        })
+                    }
+                    DraftSource::NGram => {
+                        self.ngram_draft();
+                        continue; // now in Verify; fall through
+                    }
+                },
+                Phase::Verify => {
+                    return Some(ForwardRequest {
+                        tokens: &self.tokens,
+                        mask_h: &self.ver_h,
+                        mask_g: &self.ver_g,
+                    })
+                }
+            }
+        }
+    }
+
+    fn absorb(&mut self, logits: &[f32]) {
+        let v = self.vocab;
+        debug_assert_eq!(logits.len(), self.ord.n() * v);
+        match self.phase {
+            Phase::Done => panic!("absorb on finished machine"),
+            Phase::Draft => {
+                // Self-draft forward: sample the window in parallel.
+                self.model_nfe += 1;
+                let nseq = self.ord.n();
+                self.t = (self.n + self.k).min(nseq);
+                self.drafted.clear();
+                self.draft_probs.clear();
+                for i in self.n..self.t {
+                    let pos = self.ord.sigma[i];
+                    let mut row = logits[pos * v..(pos + 1) * v].to_vec();
+                    super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
+                    let probs = softmax(&row, self.temp);
+                    let tok = sample_probs(&mut self.rng, &probs) as u32;
+                    self.drafted.push(tok);
+                    self.draft_probs.push(probs);
+                }
+                // Alg. 1 lines 9-12: if this was the final token, accept it
+                // without verification (Lemma 1). Self-draft only.
+                if self.n == nseq - 1 {
+                    self.tokens[self.ord.sigma[self.n]] = self.drafted[0];
+                    let n_new = self.n + 1;
+                    self.finish_iteration(n_new);
+                    return;
+                }
+                for i in self.n..self.t {
+                    self.tokens[self.ord.sigma[i]] = self.drafted[i - self.n];
+                }
+                self.phase = Phase::Verify;
+            }
+            Phase::Verify => {
+                self.model_nfe += 1;
+                let mut n_new = self.t;
+                for i in self.n..self.t {
+                    let pos = self.ord.sigma[i];
+                    // Same ban as the draft rows: p and q must share support.
+                    let mut row = logits[pos * v..(pos + 1) * v].to_vec();
+                    super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
+                    let q_probs = softmax(&row, self.temp);
+                    let drafted = self.drafted[i - self.n] as usize;
+                    let p_probs = &self.draft_probs[i - self.n];
+                    let q_i = q_probs[drafted] as f64;
+                    let p_i = (p_probs[drafted] as f64).max(1e-30);
+                    let r = self.rng.f64();
+                    self.proposed += 1;
+                    if r < (q_i / p_i).min(1.0) {
+                        self.accepted += 1;
+                        continue;
+                    }
+                    // rejection: resample from (q - p)_+, clear later drafts
+                    if i == self.n {
+                        self.first_token_rejections += 1;
+                    }
+                    let new_tok = match residual(&q_probs, p_probs) {
+                        Some(res) => sample_probs(&mut self.rng, &res) as u32,
+                        // Residual numerically empty => q == p; sampling q
+                        // is then distributionally identical.
+                        None => sample_probs(&mut self.rng, &q_probs) as u32,
+                    };
+                    self.tokens[pos] = new_tok;
+                    for j in (i + 1)..self.t {
+                        self.tokens[self.ord.sigma[j]] = MASK;
+                    }
+                    n_new = i + 1;
+                    break;
+                }
+                self.finish_iteration(n_new);
+            }
+        }
+    }
+
+    fn outcome(self: Box<Self>) -> DecodeOutcome {
+        assert!(self.done());
+        DecodeOutcome {
+            tokens: self.tokens,
+            model_nfe: self.model_nfe,
+            aux_nfe: self.aux_nfe,
+            iterations: self.iterations,
+            accepted: self.accepted,
+            proposed: self.proposed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::masking::{lattice_sigma, sample_sigma, OrderProtocol};
+    use crate::decode::{init_tokens, run_machine};
+    use crate::runtime::mock::MockEngine;
+    use crate::runtime::Engine;
+    use crate::util::propcheck;
+
+    fn decode_assd(
+        e: &MockEngine,
+        ord: &Ordering,
+        toks: &[u32],
+        k: usize,
+        seed: u64,
+        src: DraftSource,
+    ) -> (DecodeOutcome, u64) {
+        let m = AssdMachine::new(
+            ord.clone(),
+            toks.to_vec(),
+            e.vocab(),
+            k,
+            1.0,
+            Rng::new(seed),
+            src,
+        );
+        let first_rej = std::cell::Cell::new(0u64);
+        // run manually to read instrumentation before consuming
+        let mut mach = Box::new(m);
+        while !mach.done() {
+            let (t, h, g) = {
+                let r = mach.forward_request().unwrap();
+                (r.tokens.to_vec(), r.mask_h.to_vec(), r.mask_g.to_vec())
+            };
+            let logits = e.forward(1, &t, &h, &g).unwrap();
+            mach.absorb(&logits);
+        }
+        first_rej.set(mach.first_token_rejections);
+        (mach.outcome(), first_rej.get())
+    }
+
+    #[test]
+    fn completes_and_respects_prompt() {
+        let e = MockEngine::new(1, 10, 6, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[2, 7], 10), 2);
+        let toks = init_tokens(&ord, &[(2, 3), (7, 1)]);
+        let (out, _) = decode_assd(&e, &ord, &toks, 5, 9, DraftSource::SelfModel);
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+        assert_eq!(out.tokens[2], 3);
+        assert_eq!(out.tokens[7], 1);
+    }
+
+    /// Theorem 1: model NFE never exceeds the number of target tokens.
+    #[test]
+    fn prop_theorem1_nfe_bound() {
+        propcheck::check_no_shrink(
+            21,
+            60,
+            |r: &mut Rng| {
+                let n = r.range(2, 14);
+                let m = r.range(1, n);
+                let k = r.range(2, 7);
+                let seed = r.next_u64();
+                (n, m, k, seed)
+            },
+            |&(n, m, k, seed)| {
+                let e = MockEngine::new(seed ^ 1, n, 4, 1.0);
+                let mut r = Rng::new(seed);
+                let sigma = sample_sigma(&mut r, n, m, OrderProtocol::Lattice);
+                let ord = Ordering::new(sigma, m);
+                let prompt: Vec<(usize, u32)> = (0..n)
+                    .filter(|&p| ord.is_prompt_pos(p))
+                    .map(|p| (p, r.below(4) as u32))
+                    .collect();
+                let toks = init_tokens(&ord, &prompt);
+                let (out, _) = decode_assd(&e, &ord, &toks, k, seed ^ 2, DraftSource::SelfModel);
+                let targets = (n - m) as u64;
+                if out.model_nfe > targets {
+                    return Err(format!(
+                        "NFE {} > targets {targets} (n={n} m={m} k={k})",
+                        out.model_nfe
+                    ));
+                }
+                if out.tokens.iter().any(|&t| t == MASK) {
+                    return Err("MASK left in output".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Lemma 1: the first speculated token in each iteration is always
+    /// accepted under self-drafting.
+    #[test]
+    fn prop_lemma1_first_token_always_accepted() {
+        propcheck::check_no_shrink(
+            22,
+            60,
+            |r: &mut Rng| (r.range(3, 14), r.range(2, 6), r.next_u64()),
+            |&(n, k, seed)| {
+                let m = 1 + (seed as usize % (n - 1));
+                let e = MockEngine::new(seed ^ 3, n, 5, 1.5);
+                let mut r = Rng::new(seed);
+                let sigma = sample_sigma(&mut r, n, m, OrderProtocol::Lattice);
+                let ord = Ordering::new(sigma, m);
+                let prompt: Vec<(usize, u32)> = (0..n)
+                    .filter(|&p| ord.is_prompt_pos(p))
+                    .map(|p| (p, r.below(5) as u32))
+                    .collect();
+                let toks = init_tokens(&ord, &prompt);
+                let (_, first_rej) = decode_assd(&e, &ord, &toks, k, seed ^ 4, DraftSource::SelfModel);
+                if first_rej > 0 {
+                    return Err(format!("{first_rej} first-token rejections"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ngram_variant_completes() {
+        let e = MockEngine::new(5, 12, 5, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[0, 5, 11], 12), 3);
+        let toks = init_tokens(&ord, &[(0, 2), (5, 4), (11, 0)]);
+        let (out, _) = decode_assd(&e, &ord, &toks, 4, 17, DraftSource::NGram);
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+        assert!(out.aux_nfe > 0);
+        // model NFE for ngram = verify passes only
+        assert!(out.model_nfe <= 12);
+    }
+
+    /// Theorem 2 (statistical): ASSD's output distribution equals
+    /// sequential decoding's, measured by total-variation distance over the
+    /// full support of a small case.
+    #[test]
+    fn theorem2_assd_matches_sequential_distribution() {
+        let n = 4;
+        let v = 3;
+        let e = MockEngine::new(77, n, v, 1.2);
+        let ord = Ordering::new(lattice_sigma(&[1], n), 1);
+        let toks = init_tokens(&ord, &[(1, 2)]);
+        let samples = 20_000;
+
+        let enc = |t: &[u32]| -> usize {
+            (t[0] as usize) * v * v + (t[2] as usize) * v + (t[3] as usize)
+        };
+        let mut seq_counts = vec![0f64; v * v * v];
+        let mut assd_counts = vec![0f64; v * v * v];
+        for s in 0..samples {
+            let m = crate::decode::sequential::SequentialMachine::new(
+                ord.clone(),
+                toks.clone(),
+                v,
+                1.0,
+                Rng::new(1000 + s),
+            );
+            let out = run_machine(&e, Box::new(m)).unwrap();
+            seq_counts[enc(&out.tokens)] += 1.0;
+
+            let (out2, _) = decode_assd(&e, &ord, &toks, 3, 500_000 + s, DraftSource::SelfModel);
+            assd_counts[enc(&out2.tokens)] += 1.0;
+        }
+        let tv: f64 = seq_counts
+            .iter()
+            .zip(&assd_counts)
+            .map(|(a, b)| (a / samples as f64 - b / samples as f64).abs())
+            .sum::<f64>()
+            / 2.0;
+        // MC noise for 27 cells at 20k samples is well under 0.02.
+        assert!(tv < 0.025, "TV distance {tv} too large — Theorem 2 violated?");
+    }
+
+    /// Theorem 2 holds for the n-gram draft too (speculative decoding is
+    /// draft-agnostic).
+    #[test]
+    fn theorem2_ngram_matches_sequential_distribution() {
+        let n = 4;
+        let v = 3;
+        let e = MockEngine::new(78, n, v, 1.2);
+        let ord = Ordering::new(lattice_sigma(&[0], n), 1);
+        let toks = init_tokens(&ord, &[(0, 1)]);
+        let samples = 20_000;
+        let enc = |t: &[u32]| -> usize {
+            (t[1] as usize) * v * v + (t[2] as usize) * v + (t[3] as usize)
+        };
+        let mut seq_counts = vec![0f64; v * v * v];
+        let mut ng_counts = vec![0f64; v * v * v];
+        for s in 0..samples {
+            let m = crate::decode::sequential::SequentialMachine::new(
+                ord.clone(),
+                toks.clone(),
+                v,
+                1.0,
+                Rng::new(2000 + s),
+            );
+            let out = run_machine(&e, Box::new(m)).unwrap();
+            seq_counts[enc(&out.tokens)] += 1.0;
+            let (out2, _) = decode_assd(&e, &ord, &toks, 3, 700_000 + s, DraftSource::NGram);
+            ng_counts[enc(&out2.tokens)] += 1.0;
+        }
+        let tv: f64 = seq_counts
+            .iter()
+            .zip(&ng_counts)
+            .map(|(a, b)| (a / samples as f64 - b / samples as f64).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv < 0.025, "TV distance {tv} too large for n-gram ASSD");
+    }
+
+    #[test]
+    fn k1_completes_but_violates_theorem1_bound() {
+        // The paper instructs k >= 2: with k = 1 each iteration decodes ONE
+        // token with TWO forwards, so the NFE bound of Theorem 1 does not
+        // apply (its proof needs two tokens per iteration). Completion and
+        // distribution correctness still hold.
+        let e = MockEngine::new(9, 8, 4, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[3], 8), 1);
+        let toks = init_tokens(&ord, &[(3, 2)]);
+        let (out, _) = decode_assd(&e, &ord, &toks, 1, 13, DraftSource::SelfModel);
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+        let targets = 7u64;
+        assert!(out.model_nfe <= 2 * targets);
+        assert!(out.model_nfe >= targets, "k=1 cannot beat sequential");
+    }
+
+    #[test]
+    fn single_target_needs_one_nfe() {
+        let e = MockEngine::new(10, 5, 4, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[0, 1, 2, 3], 5), 4);
+        let toks = init_tokens(&ord, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let (out, _) = decode_assd(&e, &ord, &toks, 5, 3, DraftSource::SelfModel);
+        assert_eq!(out.model_nfe, 1, "final-token shortcut (Lemma 1) not taken");
+        assert!(out.tokens[4] != MASK);
+    }
+}

@@ -1,0 +1,186 @@
+//! Masked-diffusion baseline sampler (MDLM/SEDD-style, paper Table 2's
+//! discrete-diffusion comparators).
+//!
+//! Absorbing-state reverse process discretized into `steps` steps: at each
+//! step a scheduled number of still-masked positions is unmasked by
+//! sampling INDEPENDENTLY from p(. | currently known tokens) — the
+//! conditional-independence approximation the paper criticizes (Eq. 5).
+//! NFE = `steps`, fixed, regardless of how many tokens are produced; the
+//! output distribution only matches the true joint as steps -> #targets.
+
+use crate::data::masking::lattice_sigma;
+use crate::model::mask::{draft_masks, Ordering};
+use crate::tokenizer::MASK;
+use crate::util::rng::Rng;
+
+use super::sampling::sample_logits;
+use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
+
+pub struct DiffusionMachine {
+    n: usize,
+    vocab: usize,
+    temp: f32,
+    rng: Rng,
+    tokens: Vec<u32>,
+    /// positions still masked, in randomized unmasking order
+    remaining: Vec<usize>,
+    steps_left: usize,
+    mask_h: Vec<f32>,
+    mask_g: Vec<f32>,
+    model_nfe: u64,
+    iterations: u64,
+}
+
+impl DiffusionMachine {
+    /// `tokens`: full sequence with MASK at target positions. `steps`: the
+    /// discretization (paper's baselines use 32/64 for 1/3-sentence infill).
+    pub fn new(tokens: Vec<u32>, vocab: usize, steps: usize, temp: f32, mut rng: Rng) -> Self {
+        let n = tokens.len();
+        assert!(steps >= 1);
+        let mut remaining: Vec<usize> =
+            (0..n).filter(|&p| tokens[p] == MASK).collect();
+        // Random unmasking order (time-reversal of random absorption).
+        rng.shuffle(&mut remaining);
+        let steps_left = steps.min(remaining.len()).max(1);
+        let mut m = DiffusionMachine {
+            n,
+            vocab,
+            temp,
+            rng,
+            tokens,
+            remaining,
+            steps_left,
+            mask_h: vec![0.0; n * n],
+            mask_g: vec![0.0; n * n],
+            model_nfe: 0,
+            iterations: 0,
+        };
+        m.rebuild_masks();
+        m
+    }
+
+    fn rebuild_masks(&mut self) {
+        // Known set = all non-MASK positions; draft-mode masks over the
+        // lattice ordering of that set give "attend exactly the known set"
+        // rows for every unknown position.
+        let known: Vec<usize> = (0..self.n).filter(|&p| self.tokens[p] != MASK).collect();
+        let m = known.len();
+        let ord = Ordering::new(lattice_sigma(&known, self.n), m);
+        draft_masks(&ord, m)
+            .0
+            .iter()
+            .zip(self.mask_h.iter_mut())
+            .for_each(|(&a, b)| *b = a);
+        let (_, g) = draft_masks(&ord, m);
+        self.mask_g.copy_from_slice(&g);
+    }
+}
+
+impl DecodeMachine for DiffusionMachine {
+    fn done(&self) -> bool {
+        self.remaining.is_empty()
+    }
+
+    fn forward_request(&mut self) -> Option<ForwardRequest<'_>> {
+        if self.done() {
+            return None;
+        }
+        Some(ForwardRequest {
+            tokens: &self.tokens,
+            mask_h: &self.mask_h,
+            mask_g: &self.mask_g,
+        })
+    }
+
+    fn absorb(&mut self, logits: &[f32]) {
+        debug_assert_eq!(logits.len(), self.n * self.vocab);
+        self.model_nfe += 1;
+        self.iterations += 1;
+        // Unmask ceil(remaining / steps_left) positions this step.
+        let count = self.remaining.len().div_ceil(self.steps_left);
+        for _ in 0..count {
+            let pos = self.remaining.remove(0);
+            let mut row = logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec();
+            super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
+            let (tok, _) = sample_logits(&mut self.rng, &row, self.temp);
+            self.tokens[pos] = tok as u32;
+        }
+        self.steps_left = self.steps_left.saturating_sub(1).max(1);
+        if !self.done() {
+            self.rebuild_masks();
+        }
+    }
+
+    fn outcome(self: Box<Self>) -> DecodeOutcome {
+        assert!(self.done());
+        DecodeOutcome {
+            tokens: self.tokens,
+            model_nfe: self.model_nfe,
+            aux_nfe: 0,
+            iterations: self.iterations,
+            accepted: 0,
+            proposed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::run_machine;
+    use crate::runtime::mock::MockEngine;
+    use crate::runtime::Engine;
+
+    fn masked_input(n: usize, visible: &[(usize, u32)]) -> Vec<u32> {
+        let mut t = vec![MASK; n];
+        for &(p, v) in visible {
+            t[p] = v;
+        }
+        t
+    }
+
+    #[test]
+    fn nfe_equals_steps() {
+        let e = MockEngine::new(1, 12, 5, 1.0);
+        let toks = masked_input(12, &[(0, 1), (6, 2)]);
+        let m = DiffusionMachine::new(toks, e.vocab(), 4, 1.0, Rng::new(3));
+        let out = run_machine(&e, Box::new(m)).unwrap();
+        assert_eq!(out.model_nfe, 4);
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+        assert_eq!(out.tokens[0], 1);
+        assert_eq!(out.tokens[6], 2);
+    }
+
+    #[test]
+    fn steps_capped_by_targets() {
+        let e = MockEngine::new(2, 6, 4, 1.0);
+        let toks = masked_input(6, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        // 2 targets but 64 steps requested -> at most 2 forwards
+        let m = DiffusionMachine::new(toks, e.vocab(), 64, 1.0, Rng::new(4));
+        let out = run_machine(&e, Box::new(m)).unwrap();
+        assert!(out.model_nfe <= 2);
+    }
+
+    #[test]
+    fn one_step_is_fully_parallel() {
+        let e = MockEngine::new(3, 8, 4, 1.0);
+        let toks = masked_input(8, &[(0, 1)]);
+        let m = DiffusionMachine::new(toks, e.vocab(), 1, 1.0, Rng::new(5));
+        let out = run_machine(&e, Box::new(m)).unwrap();
+        assert_eq!(out.model_nfe, 1);
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+    }
+
+    #[test]
+    fn later_steps_condition_on_earlier_tokens() {
+        // With 2+ steps, the masks must grow: run twice with same seed but
+        // different engine sharpness to sanity-check determinism of flow.
+        let e = MockEngine::new(4, 8, 4, 1.0);
+        let toks = masked_input(8, &[(2, 3)]);
+        let run = |seed| {
+            let m = DiffusionMachine::new(toks.clone(), e.vocab(), 3, 1.0, Rng::new(seed));
+            run_machine(&e, Box::new(m)).unwrap().tokens
+        };
+        assert_eq!(run(9), run(9));
+    }
+}

@@ -1,0 +1,126 @@
+//! The decoder family: sequential (baseline), ASSD (Algorithm 1) with
+//! self-drafting or context n-gram drafting (Algorithm 2), a masked-
+//! diffusion baseline, and a left-to-right AR mode.
+//!
+//! Decoders are implemented as per-sequence STATE MACHINES that expose the
+//! forward request they need next and absorb the resulting logits. A
+//! single-sequence driver ([`run_machine`]) serves the simple API; the
+//! coordinator drives many machines through shared batched forwards
+//! (continuous batching) — the machines are agnostic to how their forwards
+//! are satisfied.
+
+pub mod assd;
+pub mod diffusion;
+pub mod ngram;
+pub mod sampling;
+pub mod sequential;
+
+use anyhow::Result;
+
+use crate::model::mask::Ordering;
+use crate::runtime::Engine;
+use crate::tokenizer::MASK;
+
+/// Statistics + result of one decode.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeOutcome {
+    pub tokens: Vec<u32>,
+    /// forward passes of the AS-ARM (paper "Model NFE")
+    pub model_nfe: u64,
+    /// draft-model calls that are NOT the AS-ARM (paper "Aux NFE")
+    pub aux_nfe: u64,
+    /// ASSD while-loop iterations
+    pub iterations: u64,
+    /// accepted / proposed speculative tokens
+    pub accepted: u64,
+    pub proposed: u64,
+}
+
+impl DecodeOutcome {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// Tokens generated per loop iteration (paper reports 2.24 for ASSD-self).
+    pub fn tokens_per_iteration(&self, n_targets: usize) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            n_targets as f64 / self.iterations as f64
+        }
+    }
+}
+
+/// A decoder state machine. Drive with:
+/// `while !done() { if let Some(req)=forward_request() { absorb(logits) } }`
+pub trait DecodeMachine {
+    /// True when the sequence is fully decoded.
+    fn done(&self) -> bool;
+
+    /// The forward the machine needs next: (tokens, mask_h, mask_g), all
+    /// full-sequence views. Returns None iff `done()`.
+    fn forward_request(&mut self) -> Option<ForwardRequest<'_>>;
+
+    /// Feed the logits ([N, V] row-major) for the last request.
+    fn absorb(&mut self, logits: &[f32]);
+
+    /// Consume the machine and return the outcome (panics if !done()).
+    fn outcome(self: Box<Self>) -> DecodeOutcome;
+}
+
+/// Borrowed forward inputs for one sequence.
+pub struct ForwardRequest<'a> {
+    pub tokens: &'a [u32],
+    pub mask_h: &'a [f32],
+    pub mask_g: &'a [f32],
+}
+
+/// Drive a machine to completion against an engine (batch = 1).
+pub fn run_machine(engine: &dyn Engine, mut machine: Box<dyn DecodeMachine>) -> Result<DecodeOutcome> {
+    while !machine.done() {
+        let (toks, mh, mg) = {
+            let req = machine
+                .forward_request()
+                .expect("machine not done but no request");
+            (req.tokens.to_vec(), req.mask_h.to_vec(), req.mask_g.to_vec())
+        };
+        let logits = engine.forward(1, &toks, &mh, &mg)?;
+        machine.absorb(&logits);
+    }
+    Ok(machine.outcome())
+}
+
+/// Build the initial full-sequence token buffer: prompt values at visible
+/// positions, MASK elsewhere.
+pub fn init_tokens(ord: &Ordering, prompt_values: &[(usize, u32)]) -> Vec<u32> {
+    let mut toks = vec![MASK; ord.n()];
+    for &(pos, val) in prompt_values {
+        assert!(ord.is_prompt_pos(pos), "value at non-prompt position {pos}");
+        toks[pos] = val;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::masking::lattice_sigma;
+
+    #[test]
+    fn init_tokens_masks_targets() {
+        let ord = Ordering::new(lattice_sigma(&[1, 3], 5), 2);
+        let toks = init_tokens(&ord, &[(1, 42), (3, 7)]);
+        assert_eq!(toks, vec![MASK, 42, MASK, 7, MASK]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-prompt position")]
+    fn init_tokens_rejects_target_value() {
+        let ord = Ordering::new(lattice_sigma(&[1], 3), 1);
+        init_tokens(&ord, &[(0, 5)]);
+    }
+}

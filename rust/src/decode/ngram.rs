@@ -1,0 +1,152 @@
+//! Context-derived n-gram draft model (paper Algorithm 2 / Eq. 23,
+//! following [Ste+24]).
+//!
+//! A bigram table c(a | b) counted over the adjacent non-MASK pairs of the
+//! partially decoded sequence, initialized from the prompt and updated as
+//! tokens are accepted. Laplace-smoothed so proposals always have support.
+//! Theorem 3 (paper App. D.5): under the Eq. 4 lattice ordering the left
+//! neighbour of any drafted position is always available (either known or
+//! drafted earlier in the same window).
+
+use std::collections::HashMap;
+
+use crate::tokenizer::MASK;
+
+#[derive(Clone, Debug)]
+pub struct BigramDraft {
+    /// counts[(prev, next)]
+    counts: HashMap<(u32, u32), u32>,
+    /// row totals per prev
+    totals: HashMap<u32, u32>,
+    /// unigram counts (fallback for position 0 / unseen rows)
+    unigram: HashMap<u32, u32>,
+    uni_total: u32,
+    vocab: usize,
+    alpha: f32,
+}
+
+impl BigramDraft {
+    /// Initialize by sweeping the current sequence (prompt tokens known,
+    /// targets MASK).
+    pub fn from_sequence(tokens: &[u32], vocab: usize) -> Self {
+        let mut d = BigramDraft {
+            counts: HashMap::new(),
+            totals: HashMap::new(),
+            unigram: HashMap::new(),
+            uni_total: 0,
+            vocab,
+            alpha: 0.1,
+        };
+        for w in tokens.windows(2) {
+            if w[0] != MASK && w[1] != MASK {
+                d.observe(w[0], w[1]);
+            }
+        }
+        for &t in tokens {
+            if t != MASK {
+                *d.unigram.entry(t).or_insert(0) += 1;
+                d.uni_total += 1;
+            }
+        }
+        d
+    }
+
+    /// Record a decoded bigram (prev -> next).
+    pub fn observe(&mut self, prev: u32, next: u32) {
+        *self.counts.entry((prev, next)).or_insert(0) += 1;
+        *self.totals.entry(prev).or_insert(0) += 1;
+    }
+
+    pub fn observe_unigram(&mut self, t: u32) {
+        *self.unigram.entry(t).or_insert(0) += 1;
+        self.uni_total += 1;
+    }
+
+    /// Smoothed conditional distribution c(. | prev) as a dense vector.
+    /// MASK/PAD specials carry no draft mass (they can never be verified).
+    pub fn dist(&self, prev: Option<u32>) -> Vec<f32> {
+        let v = self.vocab;
+        let mut probs = vec![self.alpha; v];
+        match prev {
+            Some(p) if self.totals.get(&p).copied().unwrap_or(0) > 0 => {
+                for ((a, b), &c) in self.counts.iter().map(|(k, v)| (k, v)) {
+                    if *a == p {
+                        probs[*b as usize] += c as f32;
+                    }
+                }
+            }
+            _ => {
+                for (&t, &c) in &self.unigram {
+                    probs[t as usize] += c as f32;
+                }
+            }
+        }
+        // Zero the specials AFTER counting (PAD pairs can occur in packed
+        // prompts) and renormalize over the remaining support.
+        for &sp in &[MASK, crate::tokenizer::PAD] {
+            if (sp as usize) < v {
+                probs[sp as usize] = 0.0;
+            }
+        }
+        let total: f32 = probs.iter().sum();
+        probs.iter_mut().for_each(|x| *x /= total.max(1e-30));
+        probs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_prompt_bigrams() {
+        // "abab" -> c(b|a) high
+        let toks = vec![0u32, 1, 0, 1, MASK, MASK];
+        let d = BigramDraft::from_sequence(&toks, 4);
+        let dist = d.dist(Some(0));
+        assert!(dist[1] > dist[0]);
+        assert!(dist[1] > 0.5);
+        let s: f32 = dist.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mask_pairs_ignored() {
+        let toks = vec![0u32, MASK, 1, MASK];
+        let d = BigramDraft::from_sequence(&toks, 4);
+        // no bigram was observable -> row 0 empty -> unigram fallback,
+        // which saw tokens 0 and 1 once each.
+        let dist = d.dist(Some(0));
+        assert!((dist[0] - dist[1]).abs() < 1e-6);
+        assert!(dist[0] > dist[2]);
+        assert!(dist[2] > 0.0);
+    }
+
+    #[test]
+    fn unigram_fallback_for_no_prev() {
+        let toks = vec![2u32, 2, 2, 3, MASK];
+        let d = BigramDraft::from_sequence(&toks, 5);
+        let dist = d.dist(None);
+        assert!(dist[2] > dist[3]);
+        assert!(dist[3] > dist[0]);
+    }
+
+    #[test]
+    fn observe_updates() {
+        let mut d = BigramDraft::from_sequence(&[MASK, MASK], 3);
+        for _ in 0..50 {
+            d.observe(1, 2);
+        }
+        let dist = d.dist(Some(1));
+        assert!(dist[2] > 0.9);
+    }
+
+    #[test]
+    fn dist_always_positive_everywhere() {
+        let d = BigramDraft::from_sequence(&[0, 1], 6);
+        for prev in [None, Some(0), Some(5)] {
+            let dist = d.dist(prev);
+            assert!(dist.iter().all(|&x| x > 0.0));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Probability utilities for the decoders: stable softmax, categorical
+//! sampling, and the speculative-decoding residual distribution
+//! (q - p)_+ / sum (paper Alg. 1 line 22).
+
+use crate::util::rng::Rng;
+
+/// Numerically stable softmax with temperature, into a fresh Vec.
+pub fn softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+    assert!(temp > 0.0);
+    let inv = 1.0 / temp;
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - mx) * inv).exp()).collect();
+    let sum: f32 = out.iter().sum();
+    if sum > 0.0 {
+        out.iter_mut().for_each(|x| *x /= sum);
+    } else {
+        let u = 1.0 / out.len() as f32;
+        out.iter_mut().for_each(|x| *x = u);
+    }
+    out
+}
+
+/// Log-softmax (for density evaluation / perplexity).
+pub fn log_softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+    let inv = 1.0 / temp;
+    let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f32 = logits
+        .iter()
+        .map(|&l| ((l - mx) * inv).exp())
+        .sum::<f32>()
+        .ln();
+    logits.iter().map(|&l| (l - mx) * inv - lse).collect()
+}
+
+/// Sample from a probability vector.
+pub fn sample_probs(rng: &mut Rng, probs: &[f32]) -> usize {
+    rng.categorical(probs)
+}
+
+/// Ban token ids from a logits row (in place). Decoders ban the MASK/PAD
+/// specials: a generator must never emit its own absorbing token. Applied
+/// identically to draft and verify rows, so the restricted distribution is
+/// the (well-defined) target distribution of every sampler.
+pub fn ban_ids(logits: &mut [f32], ids: &[u32]) {
+    for &id in ids {
+        if (id as usize) < logits.len() {
+            logits[id as usize] = NEG_INF;
+        }
+    }
+}
+
+/// The standard ban list.
+pub const BANNED: [u32; 2] = [crate::tokenizer::MASK, crate::tokenizer::PAD];
+
+const NEG_INF: f32 = -1e9;
+
+/// Sample a token from logits at temperature; returns (token, prob).
+pub fn sample_logits(rng: &mut Rng, logits: &[f32], temp: f32) -> (usize, f32) {
+    let probs = softmax(logits, temp);
+    let tok = sample_probs(rng, &probs);
+    (tok, probs[tok])
+}
+
+/// The speculative-decoding residual distribution (q - p)_+, normalized.
+/// Returns None if the residual has (numerically) zero mass — callers fall
+/// back to sampling from q (only reachable when q == p, in which case the
+/// proposal would have been accepted anyway).
+pub fn residual(q: &[f32], p: &[f32]) -> Option<Vec<f32>> {
+    debug_assert_eq!(q.len(), p.len());
+    let mut r: Vec<f32> = q.iter().zip(p).map(|(&a, &b)| (a - b).max(0.0)).collect();
+    let sum: f32 = r.iter().sum();
+    if sum <= 1e-12 {
+        return None;
+    }
+    r.iter_mut().for_each(|x| *x /= sum);
+    Some(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_extreme_logits() {
+        let p = softmax(&[1e9, -1e9, 0.0], 1.0);
+        assert!((p[0] - 1.0).abs() < 1e-6);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let logits = [0.3f32, -1.2, 2.0, 0.0];
+        let p = softmax(&logits, 1.0);
+        let lp = log_softmax(&logits, 1.0);
+        for (a, b) in p.iter().zip(&lp) {
+            assert!((a.ln() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let logits = [1.0f32, 2.0];
+        let hot = softmax(&logits, 2.0);
+        let cold = softmax(&logits, 0.5);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn residual_correctness() {
+        let q = [0.5f32, 0.3, 0.2];
+        let p = [0.2f32, 0.5, 0.3];
+        let r = residual(&q, &p).unwrap();
+        // only index 0 has positive residual 0.3
+        assert!((r[0] - 1.0).abs() < 1e-6);
+        assert_eq!(r[1], 0.0);
+        assert_eq!(r[2], 0.0);
+    }
+
+    #[test]
+    fn residual_none_when_equal() {
+        let q = [0.25f32; 4];
+        assert!(residual(&q, &q).is_none());
+    }
+
+    /// Property: the speculative accept/resample rule reproduces q exactly.
+    /// For random discrete (p, q), compute the output distribution
+    /// analytically: P(x) = min(p_x, q_x) + P(reject) * residual(x) == q_x.
+    #[test]
+    fn prop_speculative_rule_recovers_target() {
+        propcheck::check_no_shrink(
+            11,
+            300,
+            |r| {
+                let v = r.range(2, 8);
+                let mut p: Vec<f32> = (0..v).map(|_| r.f32() + 1e-3).collect();
+                let mut q: Vec<f32> = (0..v).map(|_| r.f32() + 1e-3).collect();
+                let sp: f32 = p.iter().sum();
+                let sq: f32 = q.iter().sum();
+                p.iter_mut().for_each(|x| *x /= sp);
+                q.iter_mut().for_each(|x| *x /= sq);
+                (p, q)
+            },
+            |(p, q)| {
+                let v = p.len();
+                let accept_mass: f32 = (0..v).map(|x| p[x].min(q[x])).sum();
+                let reject_prob = 1.0 - accept_mass;
+                let out: Vec<f32> = match residual(q, p) {
+                    Some(r) => (0..v)
+                        .map(|x| p[x].min(q[x]) + reject_prob * r[x])
+                        .collect(),
+                    None => q.clone(),
+                };
+                for x in 0..v {
+                    if (out[x] - q[x]).abs() > 1e-4 {
+                        return Err(format!("P({x})={} != q={}", out[x], q[x]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sample_logits_statistics() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let logits = [0.0f32, 1.0, 2.0];
+        let probs = softmax(&logits, 1.0);
+        let mut counts = [0usize; 3];
+        let n = 50_000;
+        for _ in 0..n {
+            let (t, p) = sample_logits(&mut rng, &logits, 1.0);
+            assert!((p - probs[t]).abs() < 1e-6);
+            counts[t] += 1;
+        }
+        for t in 0..3 {
+            let emp = counts[t] as f32 / n as f32;
+            assert!((emp - probs[t]).abs() < 0.01, "t={t} emp={emp} want={}", probs[t]);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Sequential decoding baseline: one forward per token, following the
+//! factorization chain (paper "Sequential Sampling via Factorization").
+//!
+//! Each step uses the DRAFT-mode masks at state n, whose row for order n
+//! is exactly the oracle conditional p(x_sigma(n) | x_sigma(<n)) (the same
+//! fact that powers Lemma 1), so sequential decoding samples the true
+//! joint. NFE = number of target tokens.
+
+use crate::model::mask::{advance_draft_masks, draft_masks, Ordering};
+use crate::tokenizer::MASK;
+use crate::util::rng::Rng;
+
+use super::sampling::sample_logits;
+use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
+
+pub struct SequentialMachine {
+    ord: Ordering,
+    vocab: usize,
+    temp: f32,
+    rng: Rng,
+    tokens: Vec<u32>,
+    mask_h: Vec<f32>,
+    mask_g: Vec<f32>,
+    n: usize,
+    model_nfe: u64,
+}
+
+impl SequentialMachine {
+    pub fn new(ord: Ordering, tokens: Vec<u32>, vocab: usize, temp: f32, rng: Rng) -> Self {
+        assert_eq!(tokens.len(), ord.n());
+        for (pos, &t) in tokens.iter().enumerate() {
+            if ord.is_prompt_pos(pos) {
+                assert_ne!(t, MASK, "prompt position {pos} is MASK");
+            }
+        }
+        let n = ord.m;
+        let (mask_h, mask_g) = draft_masks(&ord, n);
+        SequentialMachine {
+            ord,
+            vocab,
+            temp,
+            rng,
+            tokens,
+            mask_h,
+            mask_g,
+            n,
+            model_nfe: 0,
+        }
+    }
+}
+
+impl DecodeMachine for SequentialMachine {
+    fn done(&self) -> bool {
+        self.n >= self.ord.n()
+    }
+
+    fn forward_request(&mut self) -> Option<ForwardRequest<'_>> {
+        if self.done() {
+            return None;
+        }
+        Some(ForwardRequest {
+            tokens: &self.tokens,
+            mask_h: &self.mask_h,
+            mask_g: &self.mask_g,
+        })
+    }
+
+    fn absorb(&mut self, logits: &[f32]) {
+        debug_assert_eq!(logits.len(), self.ord.n() * self.vocab);
+        self.model_nfe += 1;
+        let pos = self.ord.sigma[self.n];
+        let mut row = logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec();
+        super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
+        let (tok, _p) = sample_logits(&mut self.rng, &row, self.temp);
+        self.tokens[pos] = tok as u32;
+        let n_new = self.n + 1;
+        advance_draft_masks(&self.ord, self.n, n_new, &mut self.mask_h, &mut self.mask_g);
+        self.n = n_new;
+    }
+
+    fn outcome(self: Box<Self>) -> DecodeOutcome {
+        assert!(self.done());
+        DecodeOutcome {
+            tokens: self.tokens,
+            model_nfe: self.model_nfe,
+            aux_nfe: 0,
+            iterations: self.model_nfe,
+            accepted: 0,
+            proposed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::masking::lattice_sigma;
+    use crate::decode::{init_tokens, run_machine};
+    use crate::runtime::mock::MockEngine;
+    use crate::runtime::Engine;
+
+    #[test]
+    fn decodes_all_targets_with_one_nfe_each() {
+        let e = MockEngine::new(1, 8, 5, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[0, 4], 8), 2);
+        let toks = init_tokens(&ord, &[(0, 1), (4, 2)]);
+        let m = SequentialMachine::new(ord.clone(), toks, e.vocab(), 1.0, Rng::new(7));
+        let out = run_machine(&e, Box::new(m)).unwrap();
+        assert_eq!(out.model_nfe, 6);
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+        assert_eq!(out.tokens[0], 1);
+        assert_eq!(out.tokens[4], 2);
+    }
+
+    #[test]
+    fn fully_known_sequence_needs_no_forwards() {
+        let e = MockEngine::new(1, 4, 3, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[0, 1, 2, 3], 4), 4);
+        let toks = vec![0, 1, 2, 0];
+        let m = SequentialMachine::new(ord, toks.clone(), e.vocab(), 1.0, Rng::new(1));
+        let out = run_machine(&e, Box::new(m)).unwrap();
+        assert_eq!(out.model_nfe, 0);
+        assert_eq!(out.tokens, toks);
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let e = MockEngine::new(2, 8, 5, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[3], 8), 1);
+        let toks = init_tokens(&ord, &[(3, 4)]);
+        let run = |seed| {
+            let m = SequentialMachine::new(ord.clone(), toks.clone(), e.vocab(), 1.0, Rng::new(seed));
+            run_machine(&e, Box::new(m)).unwrap().tokens
+        };
+        assert_eq!(run(5), run(5));
+    }
+}

@@ -1,0 +1,241 @@
+//! Mini expression language — the HumanEval-infilling substitute
+//! (DESIGN.md §5, Table 3).
+//!
+//! Programs are short straight-line integer programs:
+//!
+//! ```text
+//! a = 3
+//! b = a + 4
+//! c = b * 2
+//! print c
+//! ```
+//!
+//! The benchmark blanks one interior line; a completion PASSES (pass@1) if
+//! the completed program still parses, evaluates without error, and prints
+//! the same value as the reference program — functional correctness, like
+//! HumanEval's test-based judging, checkable entirely in-repo.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+/// Evaluate a program; returns the printed value or an error string.
+pub fn eval_program(src: &str) -> Result<i64, String> {
+    let mut env: HashMap<String, i64> = HashMap::new();
+    let mut printed: Option<i64> = None;
+    for (lineno, line) in src.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("print ") {
+            let v = eval_expr(rest.trim(), &env).map_err(|e| format!("line {lineno}: {e}"))?;
+            printed = Some(v);
+        } else if let Some((lhs, rhs)) = line.split_once('=') {
+            let var = lhs.trim();
+            if var.is_empty() || !var.chars().all(|c| c.is_ascii_lowercase()) {
+                return Err(format!("line {lineno}: bad lhs '{var}'"));
+            }
+            let v = eval_expr(rhs.trim(), &env).map_err(|e| format!("line {lineno}: {e}"))?;
+            env.insert(var.to_string(), v);
+        } else {
+            return Err(format!("line {lineno}: unparseable '{line}'"));
+        }
+    }
+    printed.ok_or_else(|| "no print".to_string())
+}
+
+fn eval_atom(tok: &str, env: &HashMap<String, i64>) -> Result<i64, String> {
+    if let Ok(n) = tok.parse::<i64>() {
+        return Ok(n);
+    }
+    env.get(tok)
+        .copied()
+        .ok_or_else(|| format!("undefined var '{tok}'"))
+}
+
+fn eval_expr(expr: &str, env: &HashMap<String, i64>) -> Result<i64, String> {
+    let toks: Vec<&str> = expr.split_whitespace().collect();
+    match toks.as_slice() {
+        [a] => eval_atom(a, env),
+        [a, op, b] => {
+            let x = eval_atom(a, env)?;
+            let y = eval_atom(b, env)?;
+            match *op {
+                "+" => Ok(x.wrapping_add(y)),
+                "-" => Ok(x.wrapping_sub(y)),
+                "*" => Ok(x.wrapping_mul(y)),
+                _ => Err(format!("bad op '{op}'")),
+            }
+        }
+        _ => Err(format!("bad expr '{expr}'")),
+    }
+}
+
+/// Generate a random program with `n_lines` assignment lines + print.
+pub fn gen_program(rng: &mut Rng, n_lines: usize) -> String {
+    assert!(n_lines >= 1);
+    let ops = ["+", "-", "*"];
+    let mut vars: Vec<String> = vec![];
+    let mut lines: Vec<String> = vec![];
+    for i in 0..n_lines {
+        let var = ((b'a' + (i % 26) as u8) as char).to_string();
+        let rhs = if vars.is_empty() || rng.below(4) == 0 {
+            format!("{}", rng.range(1, 10))
+        } else {
+            let a = &vars[rng.below(vars.len())];
+            let op = ops[rng.below(ops.len())];
+            if rng.below(2) == 0 {
+                format!("{a} {op} {}", rng.range(1, 10))
+            } else {
+                let b = &vars[rng.below(vars.len())];
+                format!("{a} {op} {b}")
+            }
+        };
+        lines.push(format!("{var} = {rhs}"));
+        vars.push(var);
+    }
+    lines.push(format!("print {}", vars[rng.below(vars.len())]));
+    lines.join("\n")
+}
+
+/// An infilling task: the program with line `blank_line` removed.
+pub struct InfillTask {
+    pub program: String,
+    pub blank_line: usize,
+    pub prefix: String,
+    pub suffix: String,
+    pub reference_line: String,
+    pub expected: i64,
+}
+
+/// Build a single-line infilling task from a generated program (blanks a
+/// random interior assignment, never the first line or the print).
+pub fn make_task(rng: &mut Rng, n_lines: usize) -> InfillTask {
+    loop {
+        let program = gen_program(rng, n_lines);
+        let expected = match eval_program(&program) {
+            Ok(v) => v,
+            Err(_) => continue,
+        };
+        let lines: Vec<&str> = program.lines().collect();
+        if lines.len() < 3 {
+            continue;
+        }
+        let blank_line = rng.range(1, lines.len() - 1);
+        let prefix = lines[..blank_line].join("\n") + "\n";
+        let suffix = "\n".to_string() + &lines[blank_line + 1..].join("\n");
+        let task = InfillTask {
+            reference_line: lines[blank_line].to_string(),
+            program,
+            blank_line,
+            prefix,
+            suffix,
+            expected,
+        };
+        // Only keep tasks whose blanked line is semantically load-bearing:
+        // substituting a wrong constant must change the printed value
+        // (otherwise any syntactically valid completion would "pass").
+        let var = task
+            .reference_line
+            .split('=')
+            .next()
+            .unwrap_or("")
+            .trim()
+            .to_string();
+        let matters = [101, 107]
+            .iter()
+            .any(|c| !task.passes(&format!("{var} = {c}")));
+        if matters {
+            return task;
+        }
+    }
+}
+
+impl InfillTask {
+    /// Judge a completion line: pass iff the reassembled program prints the
+    /// expected value.
+    pub fn passes(&self, completion_line: &str) -> bool {
+        let candidate = format!("{}{}{}", self.prefix, completion_line.trim(), self.suffix);
+        matches!(eval_program(&candidate), Ok(v) if v == self.expected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_known_program() {
+        let p = "a = 3\nb = a + 4\nc = b * 2\nprint c";
+        assert_eq!(eval_program(p), Ok(14));
+    }
+
+    #[test]
+    fn eval_rejects_undefined_var() {
+        assert!(eval_program("a = b + 1\nprint a").is_err());
+    }
+
+    #[test]
+    fn eval_rejects_garbage() {
+        assert!(eval_program("a = 1\nblah blah\nprint a").is_err());
+        assert!(eval_program("a = 1").is_err()); // no print
+        assert!(eval_program("a = 1 / 2\nprint a").is_err()); // bad op
+    }
+
+    #[test]
+    fn negative_numbers_and_wrapping() {
+        assert_eq!(eval_program("a = 5\nb = a - 9\nprint b"), Ok(-4));
+    }
+
+    #[test]
+    fn generated_programs_always_evaluate() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let n = rng.range(2, 7);
+            let p = gen_program(&mut rng, n);
+            assert!(eval_program(&p).is_ok(), "unevaluable: {p}");
+            assert!(p.len() < 120, "too long for model window: {p}");
+        }
+    }
+
+    #[test]
+    fn task_reference_line_passes() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let t = make_task(&mut rng, 4);
+            assert!(
+                t.passes(&t.reference_line),
+                "reference fails its own task: {}",
+                t.program
+            );
+        }
+    }
+
+    #[test]
+    fn task_wrong_line_usually_fails() {
+        let mut rng = Rng::new(3);
+        let mut fails = 0;
+        let total = 100;
+        for _ in 0..total {
+            let t = make_task(&mut rng, 4);
+            // a syntactically valid but (usually) semantically wrong line
+            let wrong = format!(
+                "{} = 7",
+                t.reference_line.split('=').next().unwrap().trim()
+            );
+            if !t.passes(&wrong) {
+                fails += 1;
+            }
+        }
+        assert!(fails > 50, "wrong lines passed too often ({fails}/{total})");
+    }
+
+    #[test]
+    fn garbage_completion_fails() {
+        let mut rng = Rng::new(4);
+        let t = make_task(&mut rng, 4);
+        assert!(!t.passes("@@@ nonsense"));
+        assert!(!t.passes(""));
+    }
+}

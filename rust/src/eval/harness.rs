@@ -1,0 +1,298 @@
+//! Shared experiment harness used by the bench binaries (rust/benches/*)
+//! and examples: workload builders and sampler runners that mirror the
+//! paper's evaluation setups.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::SamplerKind;
+use crate::data::masking::lattice_sigma;
+use crate::data::{pack_chunks, stories};
+use crate::decode::assd::{AssdMachine, DraftSource};
+use crate::decode::diffusion::DiffusionMachine;
+use crate::decode::sequential::SequentialMachine;
+use crate::decode::{run_machine, DecodeOutcome};
+use crate::model::mask::Ordering;
+use crate::runtime::Engine;
+use crate::tokenizer::{ByteTokenizer, MASK, PAD};
+use crate::util::rng::Rng;
+
+/// One evaluation item: the ordering, the masked input tokens, and the
+/// ground-truth sequence.
+#[derive(Clone)]
+pub struct WorkItem {
+    pub ord: Ordering,
+    pub tokens: Vec<u32>,
+    pub reference: Vec<u32>,
+}
+
+/// Table 1/4 workload: packed prose chunks with `mask_frac` of positions
+/// masked, uniformly scattered (the paper masks 95% of WikiText chunks).
+pub fn masked_prose_workload(
+    seq_len: usize,
+    n_seqs: usize,
+    mask_frac: f64,
+    seed: u64,
+) -> Vec<WorkItem> {
+    let mut rng = Rng::new(seed);
+    let docs = stories::corpus(seed ^ 0x5151, n_seqs * 3 + 8);
+    let chunks = pack_chunks(&docs, seq_len);
+    let mut items = vec![];
+    for chunk in chunks.into_iter().take(n_seqs) {
+        let n = chunk.len();
+        let n_masked = ((n as f64) * mask_frac).round() as usize;
+        let masked = rng.choose_sorted(n, n_masked.clamp(1, n - 1));
+        let is_masked: Vec<bool> = {
+            let mut v = vec![false; n];
+            for &p in &masked {
+                v[p] = true;
+            }
+            v
+        };
+        let visible: Vec<usize> = (0..n).filter(|&p| !is_masked[p]).collect();
+        let m = visible.len();
+        let ord = Ordering::new(lattice_sigma(&visible, n), m);
+        let mut tokens = chunk.clone();
+        for &p in &masked {
+            tokens[p] = MASK;
+        }
+        items.push(WorkItem {
+            ord,
+            tokens,
+            reference: chunk,
+        });
+    }
+    items
+}
+
+/// Table 2 workload: five-sentence stories with the middle 1 or 3
+/// sentences blanked. Returns (item, reference middle text).
+pub fn story_infill_workload(
+    seq_len: usize,
+    n_stories: usize,
+    blank_middle_three: bool,
+    seed: u64,
+) -> Vec<(WorkItem, String)> {
+    let mut rng = Rng::new(seed);
+    let tok = ByteTokenizer::new();
+    let mut out = vec![];
+    let mut rejected = 0usize;
+    while out.len() < n_stories {
+        let sents = stories::story(&mut rng);
+        let full = sents.join(" ");
+        if full.len() > seq_len {
+            rejected += 1;
+            assert!(
+                rejected < 10_000,
+                "seq_len {seq_len} too small for the story corpus"
+            );
+            continue;
+        }
+        // byte ranges of each sentence within `full`
+        let mut ranges = vec![];
+        let mut start = 0usize;
+        for s in &sents {
+            ranges.push((start, start + s.len()));
+            start += s.len() + 1; // the joining space
+        }
+        let (blank_from, blank_to) = if blank_middle_three {
+            (ranges[1].0, ranges[3].1)
+        } else {
+            (ranges[2].0, ranges[2].1)
+        };
+        let reference_middle = full[blank_from..blank_to].to_string();
+        let full_tokens = tok.encode_fixed(&full, seq_len);
+        let mut tokens = full_tokens.clone();
+        let mut visible = vec![];
+        for p in 0..seq_len {
+            if p >= blank_from && p < blank_to {
+                tokens[p] = MASK;
+            } else {
+                visible.push(p);
+            }
+        }
+        let m = visible.len();
+        let ord = Ordering::new(lattice_sigma(&visible, seq_len), m);
+        out.push((
+            WorkItem {
+                ord,
+                tokens,
+                reference: full_tokens,
+            },
+            reference_middle,
+        ));
+    }
+    out
+}
+
+/// Decode one work item with the given sampler; returns outcome + seconds.
+pub fn run_sampler(
+    engine: &dyn Engine,
+    item: &WorkItem,
+    sampler: SamplerKind,
+    k: usize,
+    steps: usize,
+    temp: f32,
+    seed: u64,
+) -> Result<(DecodeOutcome, f64)> {
+    let rng = Rng::new(seed);
+    let v = engine.vocab();
+    let t0 = Instant::now();
+    let machine: Box<dyn crate::decode::DecodeMachine> = match sampler {
+        SamplerKind::Assd => Box::new(AssdMachine::new(
+            item.ord.clone(),
+            item.tokens.clone(),
+            v,
+            k,
+            temp,
+            rng,
+            DraftSource::SelfModel,
+        )),
+        SamplerKind::AssdNgram => Box::new(AssdMachine::new(
+            item.ord.clone(),
+            item.tokens.clone(),
+            v,
+            k,
+            temp,
+            rng,
+            DraftSource::NGram,
+        )),
+        SamplerKind::Sequential => Box::new(SequentialMachine::new(
+            item.ord.clone(),
+            item.tokens.clone(),
+            v,
+            temp,
+            rng,
+        )),
+        SamplerKind::Diffusion => Box::new(DiffusionMachine::new(
+            item.tokens.clone(),
+            v,
+            steps,
+            temp,
+            rng,
+        )),
+    };
+    let outcome = run_machine(engine, machine)?;
+    Ok((outcome, t0.elapsed().as_secs_f64()))
+}
+
+/// Left-to-right AR baseline for infilling (Table 2's GPT row): the model
+/// only receives the LEFT context (paper D.6 gives GPT only the left
+/// conditioning) and decodes the blanked span sequentially left-to-right.
+/// Implemented as sequential decoding where positions right of the blank
+/// are also treated as targets (the model regenerates them, but only the
+/// blank span is evaluated).
+pub fn run_ar_left_to_right(
+    engine: &dyn Engine,
+    item: &WorkItem,
+    temp: f32,
+    seed: u64,
+) -> Result<(DecodeOutcome, f64)> {
+    let n = item.tokens.len();
+    // first masked position
+    let first_blank = (0..n).find(|&p| item.tokens[p] == MASK).unwrap_or(n);
+    let visible: Vec<usize> = (0..first_blank).collect();
+    let m = visible.len().max(1);
+    let visible: Vec<usize> = (0..m).collect();
+    let ord = Ordering::new(lattice_sigma(&visible, n), m);
+    let mut tokens = item.tokens.clone();
+    for p in m..n {
+        tokens[p] = MASK;
+    }
+    // ensure prompt has no MASK (if the text starts masked, seed with PAD)
+    let mut toks = tokens;
+    for (pos, t) in toks.iter_mut().enumerate().take(m) {
+        if *t == MASK {
+            *t = PAD;
+            let _ = pos;
+        }
+    }
+    let t0 = Instant::now();
+    let machine = SequentialMachine::new(ord, toks, engine.vocab(), temp, Rng::new(seed));
+    let outcome = run_machine(engine, Box::new(machine))?;
+    Ok((outcome, t0.elapsed().as_secs_f64()))
+}
+
+/// Extract the text at the positions that were masked in `item` from a
+/// completed token buffer (for ROUGE against the reference middle).
+pub fn masked_span_text(item: &WorkItem, completed: &[u32]) -> String {
+    let tok = ByteTokenizer::new();
+    let span: Vec<u32> = (0..item.tokens.len())
+        .filter(|&p| item.tokens[p] == MASK)
+        .map(|p| completed[p])
+        .collect();
+    tok.decode(&span)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockEngine;
+
+    #[test]
+    fn masked_prose_workload_shapes() {
+        let items = masked_prose_workload(64, 4, 0.95, 1);
+        assert_eq!(items.len(), 4);
+        for it in &items {
+            let masked = it.tokens.iter().filter(|&&t| t == MASK).count();
+            assert!((55..=63).contains(&masked), "masked={masked}");
+            assert_eq!(it.reference.len(), 64);
+            // reference agrees with tokens at visible positions
+            for p in 0..64 {
+                if it.tokens[p] != MASK {
+                    assert_eq!(it.tokens[p], it.reference[p]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn story_workload_blanks_middle() {
+        let w1 = story_infill_workload(128, 3, false, 2);
+        let w3 = story_infill_workload(128, 3, true, 2);
+        for (it, mid) in &w1 {
+            assert!(!mid.is_empty());
+            let masked = it.tokens.iter().filter(|&&t| t == MASK).count();
+            assert_eq!(masked, mid.len());
+        }
+        // 3-sentence blanks are bigger
+        let m1 = w1[0].0.tokens.iter().filter(|&&t| t == MASK).count();
+        let m3 = w3[0].0.tokens.iter().filter(|&&t| t == MASK).count();
+        assert!(m3 > m1);
+    }
+
+    #[test]
+    fn all_samplers_run_on_workload() {
+        let e = MockEngine::new(1, 32, 258, 1.0);
+        let items = masked_prose_workload(32, 1, 0.9, 3);
+        for s in [
+            SamplerKind::Sequential,
+            SamplerKind::Assd,
+            SamplerKind::AssdNgram,
+            SamplerKind::Diffusion,
+        ] {
+            let (out, secs) = run_sampler(&e, &items[0], s, 5, 8, 1.0, 7).unwrap();
+            assert!(out.tokens.iter().all(|&t| t != MASK), "{s:?}");
+            assert!(secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn ar_baseline_runs() {
+        // Stories need a >=128-byte window; use a modest vocab so the AR
+        // chain (~100 sequential forwards) stays fast on the mock.
+        let e = MockEngine::new(2, 160, 64, 1.0);
+        let items = story_infill_workload(160, 1, false, 4);
+        let (out, _) = run_ar_left_to_right(&e, &items[0].0, 1.0, 9).unwrap();
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+    }
+
+    #[test]
+    fn masked_span_text_extracts_blank() {
+        let items = story_infill_workload(128, 1, false, 5);
+        let (it, mid) = &items[0];
+        let text = masked_span_text(it, &it.reference);
+        assert_eq!(&text, mid);
+    }
+}

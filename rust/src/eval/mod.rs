@@ -1,0 +1,8 @@
+//! Evaluation substrates: ROUGE (Table 2), generative perplexity + entropy
+//! (Tables 1/4, Figs. 3/4), the expression mini-language judge (Table 3),
+//! and the shared experiment harness for the bench binaries.
+
+pub mod exprlang;
+pub mod harness;
+pub mod ppl;
+pub mod rouge;

@@ -1,0 +1,145 @@
+//! ROUGE-1/2/L (Table 2's metric), implemented from the original
+//! definitions: n-gram recall/precision F1 and longest-common-subsequence
+//! F1 over whitespace tokens.
+
+use std::collections::HashMap;
+
+fn tokens(s: &str) -> Vec<&str> {
+    s.split_whitespace().collect()
+}
+
+fn ngram_counts<'a>(toks: &[&'a str], n: usize) -> HashMap<Vec<&'a str>, usize> {
+    let mut m = HashMap::new();
+    if toks.len() < n {
+        return m;
+    }
+    for w in toks.windows(n) {
+        *m.entry(w.to_vec()).or_insert(0) += 1;
+    }
+    m
+}
+
+fn f1(matches: usize, cand_total: usize, ref_total: usize) -> f64 {
+    if cand_total == 0 || ref_total == 0 {
+        return 0.0;
+    }
+    let p = matches as f64 / cand_total as f64;
+    let r = matches as f64 / ref_total as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// ROUGE-N F1.
+pub fn rouge_n(candidate: &str, reference: &str, n: usize) -> f64 {
+    let c = tokens(candidate);
+    let r = tokens(reference);
+    let cc = ngram_counts(&c, n);
+    let rc = ngram_counts(&r, n);
+    let matches: usize = cc
+        .iter()
+        .map(|(g, &cnt)| cnt.min(rc.get(g).copied().unwrap_or(0)))
+        .sum();
+    let cand_total = c.len().saturating_sub(n - 1);
+    let ref_total = r.len().saturating_sub(n - 1);
+    f1(matches, cand_total, ref_total)
+}
+
+/// Length of the longest common subsequence (O(|a|*|b|) DP).
+fn lcs_len(a: &[&str], b: &[&str]) -> usize {
+    let (la, lb) = (a.len(), b.len());
+    if la == 0 || lb == 0 {
+        return 0;
+    }
+    let mut prev = vec![0usize; lb + 1];
+    let mut cur = vec![0usize; lb + 1];
+    for i in 1..=la {
+        for j in 1..=lb {
+            cur[j] = if a[i - 1] == b[j - 1] {
+                prev[j - 1] + 1
+            } else {
+                prev[j].max(cur[j - 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[lb]
+}
+
+/// ROUGE-L F1.
+pub fn rouge_l(candidate: &str, reference: &str) -> f64 {
+    let c = tokens(candidate);
+    let r = tokens(reference);
+    let l = lcs_len(&c, &r);
+    f1(l, c.len(), r.len())
+}
+
+/// The (ROUGE-1, ROUGE-2, ROUGE-L) triple the paper tables report.
+pub fn rouge_triple(candidate: &str, reference: &str) -> (f64, f64, f64) {
+    (
+        rouge_n(candidate, reference, 1),
+        rouge_n(candidate, reference, 2),
+        rouge_l(candidate, reference),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_strings_score_one() {
+        let s = "the cat sat on the mat";
+        assert!((rouge_n(s, s, 1) - 1.0).abs() < 1e-12);
+        assert!((rouge_n(s, s, 2) - 1.0).abs() < 1e-12);
+        assert!((rouge_l(s, s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_strings_score_zero() {
+        assert_eq!(rouge_n("a b c", "x y z", 1), 0.0);
+        assert_eq!(rouge_n("a b c", "x y z", 2), 0.0);
+        assert_eq!(rouge_l("a b c", "x y z"), 0.0);
+    }
+
+    #[test]
+    fn rouge1_known_value() {
+        // cand: "the cat" ref: "the cat sat": matches=2, P=1, R=2/3 -> F1=0.8
+        let f = rouge_n("the cat", "the cat sat", 1);
+        assert!((f - 0.8).abs() < 1e-12, "{f}");
+    }
+
+    #[test]
+    fn rouge2_counts_bigrams() {
+        // cand bigrams: {the cat, cat sat}; ref: {the cat, cat ate}
+        // matches=1, P=1/2, R=1/2 -> F1=1/2
+        let f = rouge_n("the cat sat", "the cat ate", 2);
+        assert!((f - 0.5).abs() < 1e-12, "{f}");
+    }
+
+    #[test]
+    fn rouge_l_subsequence_not_substring() {
+        // LCS("a b c d", "a x b y d") = a b d = 3; P=3/4, R=3/5 -> F1=2*…
+        let f = rouge_l("a b c d", "a x b y d");
+        let p: f64 = 3.0 / 4.0;
+        let r: f64 = 3.0 / 5.0;
+        let want = 2.0 * p * r / (p + r);
+        assert!((f - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_candidate_is_zero() {
+        assert_eq!(rouge_n("", "a b", 1), 0.0);
+        assert_eq!(rouge_l("", "a b"), 0.0);
+    }
+
+    #[test]
+    fn repeated_ngrams_clipped() {
+        // cand "the the the" vs ref "the cat": matches clipped to 1
+        let f = rouge_n("the the the", "the cat", 1);
+        let want = 2.0 * (1.0 / 3.0) * (1.0 / 2.0) / (1.0 / 3.0 + 1.0 / 2.0);
+        assert!((f - want).abs() < 1e-12);
+    }
+}

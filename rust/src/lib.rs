@@ -1,0 +1,26 @@
+//! # asarm — Any-Subset Autoregressive Models with ASSD
+//!
+//! Reproduction of *"Reviving Any-Subset Autoregressive Models with
+//! Principled Parallel Sampling and Speculative Decoding"* (Guo & Ermon,
+//! 2025) as a three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * **Layer 1/2 (build-time python)** — `python/compile/`: Pallas masked
+//!   two-stream attention + fused xent kernels, the XLNet-style AS-ARM
+//!   model, AOT-lowered once to HLO text artifacts.
+//! * **Layer 3 (this crate)** — the serving system: PJRT runtime, mask
+//!   construction, the ASSD decoder family, a continuous-batching
+//!   coordinator with an HTTP front end, the rust training loop, and the
+//!   evaluation/benchmark harness reproducing every table and figure of
+//!   the paper.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+
+pub mod coordinator;
+pub mod data;
+pub mod decode;
+pub mod eval;
+pub mod model;
+pub mod runtime;
+pub mod tokenizer;
+pub mod train;
+pub mod util;

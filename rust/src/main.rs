@@ -1,0 +1,192 @@
+//! asarm — the leader binary.
+//!
+//! Subcommands:
+//!   serve    — start the HTTP serving coordinator (continuous batching)
+//!   train    — train the AS-ARM via the AOT train_step artifact
+//!   infill   — one-shot infilling from the CLI
+//!   corpus   — emit the synthetic corpora (stories / prose / exprlang)
+//!   smoke    — PJRT liveness check
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use asarm::coordinator::{self, InfillRequest, Metrics, SamplerKind, SchedulerConfig};
+use asarm::data::masking::{MaskRateSchedule, OrderProtocol, PromptDist};
+use asarm::data::{pack_chunks, split_chunks, stories};
+use asarm::runtime::engine::TrainRunner;
+use asarm::runtime::XlaEngine;
+use asarm::train::TrainConfig;
+use asarm::util::args::Args;
+use asarm::util::rng::Rng;
+
+const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
+  serve  --artifacts DIR --params FILE --addr 127.0.0.1:8080 --max-batch 4
+  train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
+         --protocol lattice|permutation --prompt-lo F --prompt-hi F
+         --out CKPT.bin --seed S
+  infill --artifacts DIR --params FILE --text 'Tom went to ____.'
+         --sampler assd|assd_ngram|sequential|diffusion --k 5 --seed 0
+  corpus --kind stories|prose|expr --n 10
+  smoke";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("train") => cmd_train(&args),
+        Some("infill") => cmd_infill(&args),
+        Some("corpus") => cmd_corpus(&args),
+        Some("smoke") | None => {
+            let client = asarm::runtime::cpu_client()?;
+            println!("platform = {}", client.platform_name());
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("{USAGE}");
+            bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let metrics = Metrics::new();
+    let params = args.opt("params").map(PathBuf::from);
+    let handle = coordinator::start_xla(
+        artifacts_dir(args),
+        params,
+        SchedulerConfig {
+            max_batch: args.usize("max-batch", 4),
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let addr = args.str("addr", "127.0.0.1:8080");
+    let server =
+        coordinator::http::HttpServer::bind(&addr, handle, metrics, args.usize("workers", 8))?;
+    println!("serving on http://{}", server.addr);
+    println!("  POST /v1/infill   GET /metrics   GET /healthz");
+    server.serve()
+}
+
+/// Build a packed training corpus of the requested kind.
+pub fn corpus_chunks(kind: &str, n_docs: usize, seq_len: usize, seed: u64) -> Vec<Vec<u32>> {
+    match kind {
+        "stories" => pack_chunks(&stories::corpus(seed, n_docs), seq_len),
+        "expr" => {
+            let mut rng = Rng::new(seed);
+            let docs: Vec<String> = (0..n_docs)
+                .map(|_| {
+                    let lines = rng.range(3, 7);
+                    asarm::eval::exprlang::gen_program(&mut rng, lines)
+                })
+                .collect();
+            pack_chunks(&docs, seq_len)
+        }
+        other => panic!("unknown corpus kind '{other}'"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let batch = args.usize("batch", 4);
+    let mut runner = TrainRunner::load(&dir, batch)?;
+    if let Some(init) = args.opt("init") {
+        // Resume from a checkpoint (fresh optimizer state).
+        let theta = asarm::model::load_params(init, runner.meta.n_params)?;
+        runner.reset(theta);
+        eprintln!("resumed parameters from {init}");
+    }
+    let n = runner.meta.seq_len;
+
+    let kind = args.str("corpus", "stories");
+    let n_docs = args.usize("docs", 4000);
+    let chunks = corpus_chunks(&kind, n_docs, n, args.u64("data-seed", 1234));
+    let (train_chunks, val_chunks) = split_chunks(chunks, 0.05, 7);
+    eprintln!(
+        "corpus '{kind}': {} train chunks, {} val chunks of {n} tokens",
+        train_chunks.len(),
+        val_chunks.len()
+    );
+
+    let protocol = match args.str("protocol", "lattice").as_str() {
+        "lattice" => OrderProtocol::Lattice,
+        "permutation" => OrderProtocol::Permutation,
+        other => bail!("unknown protocol '{other}'"),
+    };
+    let prompt_dist = match (args.opt("prompt-lo"), args.opt("prompt-hi")) {
+        (Some(lo), Some(hi)) => Some(PromptDist::new(lo.parse()?, hi.parse()?)),
+        _ => None,
+    };
+    let steps = args.usize("steps", 400);
+    let cfg = TrainConfig {
+        steps,
+        lr_max: args.f64("lr", 3e-4) as f32,
+        warmup_steps: args.usize("warmup", (steps / 10).max(1)),
+        decay_steps: args.usize("decay", steps),
+        mask_schedule: MaskRateSchedule::paper_default(),
+        prompt_dist,
+        protocol,
+        seed: args.u64("seed", 0),
+        log_every: args.usize("log-every", 20),
+        val_every: args.usize("val-every", 100),
+        val_batches: args.usize("val-batches", 2),
+        checkpoint: Some(PathBuf::from(
+            args.str("out", &format!("artifacts/ckpt_{kind}.bin")),
+        )),
+    };
+    let mut val_engine = XlaEngine::load(&dir, None)?;
+    let logs = asarm::train::train(
+        &mut runner,
+        &train_chunks,
+        &val_chunks,
+        &cfg,
+        Some(&mut val_engine),
+    )?;
+    if let Some(last) = logs.last() {
+        println!("final loss {:.4}", last.loss);
+    }
+    Ok(())
+}
+
+fn cmd_infill(args: &Args) -> Result<()> {
+    let metrics = Metrics::new();
+    let params = args.opt("params").map(PathBuf::from);
+    let handle = coordinator::start_xla(
+        artifacts_dir(args),
+        params,
+        SchedulerConfig::default(),
+        metrics,
+    );
+    let req = InfillRequest {
+        text: args.str("text", "Tom went to the ____."),
+        mask_char: '_',
+        sampler: SamplerKind::parse(&args.str("sampler", "assd"))?,
+        k: args.usize("k", 5),
+        steps: args.usize("steps", 32),
+        temperature: args.f64("temperature", 1.0) as f32,
+        seed: args.u64("seed", 0),
+    };
+    let resp = handle.infill(req)?;
+    println!("{}", resp.to_json());
+    Ok(())
+}
+
+fn cmd_corpus(args: &Args) -> Result<()> {
+    let kind = args.str("kind", "stories");
+    let n = args.usize("n", 10);
+    let mut rng = Rng::new(args.u64("seed", 0));
+    for _ in 0..n {
+        match kind.as_str() {
+            "stories" => println!("{}", stories::story_text(&mut rng)),
+            "prose" => println!("{}", stories::prose(&mut rng, 400)),
+            "expr" => println!("{}\n", asarm::eval::exprlang::gen_program(&mut rng, 5)),
+            other => bail!("unknown corpus kind '{other}'"),
+        }
+    }
+    Ok(())
+}

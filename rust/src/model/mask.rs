@@ -1,0 +1,344 @@
+//! Attention-mask construction (AUTHORITATIVE; python/compile/masks.py is
+//! the mirror used for golden fixtures).
+//!
+//! See python/compile/masks.py for the full semantics discussion. In short,
+//! for a generation state (sigma, m, n):
+//!
+//!  * verify masks (Fig. 1b) depend on (sigma, m) only: prompt rows attend
+//!    the full prompt; target rows attend prompt + strictly-earlier
+//!    targets; content stream (h) additionally sees itself.
+//!  * draft masks (Fig. 1a) at state n: KNOWN rows identical to verify
+//!    (this is what makes Lemma 1 exact); UNKNOWN query rows attend
+//!    exactly the known set (order < n); nothing attends unknown columns.
+//!
+//! Masks are row-major [N*N] f32 with 1.0 = may-attend, matching the HLO
+//! artifact inputs.
+
+/// A generation ordering: sigma (order -> position) with prompt size m.
+#[derive(Clone, Debug)]
+pub struct Ordering {
+    pub sigma: Vec<usize>,
+    /// position -> order index
+    pub order: Vec<usize>,
+    pub m: usize,
+}
+
+impl Ordering {
+    pub fn new(sigma: Vec<usize>, m: usize) -> Self {
+        let n = sigma.len();
+        assert!(m <= n, "prompt larger than sequence");
+        let mut order = vec![usize::MAX; n];
+        for (i, &pos) in sigma.iter().enumerate() {
+            assert!(pos < n, "sigma out of range");
+            assert_eq!(order[pos], usize::MAX, "sigma not a bijection");
+            order[pos] = i;
+        }
+        Ordering { sigma, order, m }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sigma.len()
+    }
+
+    /// Number of target tokens.
+    pub fn n_targets(&self) -> usize {
+        self.n() - self.m
+    }
+
+    pub fn is_prompt_pos(&self, pos: usize) -> bool {
+        self.order[pos] < self.m
+    }
+}
+
+/// Write the verify-mode (mask_h, mask_g) into row-major buffers.
+pub fn verify_masks_into(ord: &Ordering, mask_h: &mut [f32], mask_g: &mut [f32]) {
+    let n = ord.n();
+    assert_eq!(mask_h.len(), n * n);
+    assert_eq!(mask_g.len(), n * n);
+    for a in 0..n {
+        let oa = ord.order[a];
+        let row_g = &mut mask_g[a * n..(a + 1) * n];
+        if oa < ord.m {
+            for b in 0..n {
+                row_g[b] = if ord.order[b] < ord.m { 1.0 } else { 0.0 };
+            }
+        } else {
+            for b in 0..n {
+                let ob = ord.order[b];
+                row_g[b] = if ob < ord.m || ob < oa { 1.0 } else { 0.0 };
+            }
+        }
+    }
+    mask_h.copy_from_slice(mask_g);
+    for a in 0..n {
+        mask_h[a * n + a] = 1.0;
+    }
+}
+
+/// Write the draft-mode (mask_h, mask_g) at decode state `n_known`.
+pub fn draft_masks_into(ord: &Ordering, n_known: usize, mask_h: &mut [f32], mask_g: &mut [f32]) {
+    let n = ord.n();
+    assert!(n_known >= ord.m && n_known <= n);
+    assert_eq!(mask_h.len(), n * n);
+    assert_eq!(mask_g.len(), n * n);
+    for a in 0..n {
+        let oa = ord.order[a];
+        let row_g = &mut mask_g[a * n..(a + 1) * n];
+        if oa < ord.m {
+            // prompt row: full prompt attention (same as verify)
+            for b in 0..n {
+                row_g[b] = if ord.order[b] < ord.m { 1.0 } else { 0.0 };
+            }
+        } else if oa < n_known {
+            // known target row: causal (same as verify restricted to known)
+            for b in 0..n {
+                let ob = ord.order[b];
+                row_g[b] = if ob < ord.m || (ob < n_known && ob < oa) {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+        } else {
+            // unknown row: attend exactly the known set
+            for b in 0..n {
+                row_g[b] = if ord.order[b] < n_known { 1.0 } else { 0.0 };
+            }
+        }
+    }
+    mask_h.copy_from_slice(mask_g);
+    for a in 0..n {
+        mask_h[a * n + a] = 1.0;
+    }
+}
+
+/// Allocating conveniences (tests / non-hot paths).
+pub fn verify_masks(ord: &Ordering) -> (Vec<f32>, Vec<f32>) {
+    let n = ord.n();
+    let mut h = vec![0.0; n * n];
+    let mut g = vec![0.0; n * n];
+    verify_masks_into(ord, &mut h, &mut g);
+    (h, g)
+}
+
+pub fn draft_masks(ord: &Ordering, n_known: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = ord.n();
+    let mut h = vec![0.0; n * n];
+    let mut g = vec![0.0; n * n];
+    draft_masks_into(ord, n_known, &mut h, &mut g);
+    (h, g)
+}
+
+/// Incremental draft-mask update: advance the decode state from `n_prev` to
+/// `n_new` in-place. Only rows/columns involving the newly-known orders
+/// change, so this is O((n_new - n_prev) * N) instead of O(N^2).
+pub fn advance_draft_masks(
+    ord: &Ordering,
+    n_prev: usize,
+    n_new: usize,
+    mask_h: &mut [f32],
+    mask_g: &mut [f32],
+) {
+    let n = ord.n();
+    debug_assert!(ord.m <= n_prev && n_prev <= n_new && n_new <= n);
+    if n_prev == n_new {
+        return;
+    }
+    // 1. newly-known rows become causal rows
+    for i in n_prev..n_new {
+        let a = ord.sigma[i];
+        let row_g = &mut mask_g[a * n..(a + 1) * n];
+        for b in 0..n {
+            let ob = ord.order[b];
+            row_g[b] = if ob < ord.m || (ob < n_new && ob < i) { 1.0 } else { 0.0 };
+        }
+    }
+    // 2. unknown rows gain the newly-known columns
+    for i in n_new..n {
+        let a = ord.sigma[i];
+        let row_g = &mut mask_g[a * n..(a + 1) * n];
+        for j in n_prev..n_new {
+            row_g[ord.sigma[j]] = 1.0;
+        }
+    }
+    // 3. mirror to content stream (h = g + self)
+    for i in n_prev..n_new.max(n_prev) {
+        let a = ord.sigma[i];
+        mask_h[a * n..(a + 1) * n].copy_from_slice(&mask_g[a * n..(a + 1) * n]);
+        mask_h[a * n + a] = 1.0;
+    }
+    for i in n_new..n {
+        let a = ord.sigma[i];
+        mask_h[a * n..(a + 1) * n].copy_from_slice(&mask_g[a * n..(a + 1) * n]);
+        mask_h[a * n + a] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::masking::{lattice_sigma, sample_sigma, OrderProtocol};
+    use crate::util::{propcheck, rng::Rng};
+
+    fn random_ordering(rng: &mut Rng, nmax: usize) -> Ordering {
+        let n = rng.range(2, nmax);
+        let m = rng.range(1, n);
+        let sigma = sample_sigma(rng, n, m, OrderProtocol::Lattice);
+        Ordering::new(sigma, m)
+    }
+
+    #[test]
+    fn ordering_rejects_non_bijection() {
+        let r = std::panic::catch_unwind(|| Ordering::new(vec![0, 0, 1], 1));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn verify_known_case() {
+        // n=4, visible {1,3}: sigma = [1,3,0,2], m=2
+        let ord = Ordering::new(lattice_sigma(&[1, 3], 4), 2);
+        let (h, g) = verify_masks(&ord);
+        // prompt rows (pos 1,3) attend prompt only
+        assert_eq!(&g[4..8], &[0.0, 1.0, 0.0, 1.0]); // row 1
+        assert_eq!(&g[12..16], &[0.0, 1.0, 0.0, 1.0]); // row 3
+        // first target (pos 0, order 2) attends prompt only
+        assert_eq!(&g[0..4], &[0.0, 1.0, 0.0, 1.0]);
+        // second target (pos 2, order 3) attends prompt + pos 0
+        assert_eq!(&g[8..12], &[1.0, 1.0, 0.0, 1.0]);
+        // h = g + diagonal
+        for a in 0..4 {
+            assert_eq!(h[a * 4 + a], 1.0);
+        }
+    }
+
+    #[test]
+    fn draft_equals_verify_at_full_knowledge() {
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let ord = random_ordering(&mut rng, 24);
+            let (vh, vg) = verify_masks(&ord);
+            let (dh, dg) = draft_masks(&ord, ord.n());
+            assert_eq!(vh, dh);
+            assert_eq!(vg, dg);
+        }
+    }
+
+    #[test]
+    fn prop_draft_invariants() {
+        propcheck::check_no_shrink(
+            7,
+            150,
+            |r: &mut Rng| {
+                let ord = random_ordering(r, 24);
+                let nk = r.range(ord.m, ord.n() + 1);
+                (ord, nk)
+            },
+            |(ord, nk)| {
+                let n = ord.n();
+                let (dh, dg) = draft_masks(ord, *nk);
+                let (vh, vg) = verify_masks(ord);
+                for a in 0..n {
+                    let oa = ord.order[a];
+                    for b in 0..n {
+                        let ob = ord.order[b];
+                        let g = dg[a * n + b];
+                        let h = dh[a * n + b];
+                        // nothing attends unknown columns (except self in h)
+                        if ob >= *nk && g != 0.0 {
+                            return Err(format!("g[{a}][{b}] attends unknown"));
+                        }
+                        if ob >= *nk && a != b && h != 0.0 {
+                            return Err(format!("h[{a}][{b}] attends unknown"));
+                        }
+                        // known rows match verify
+                        if oa < *nk && (g != vg[a * n + b] || h != vh[a * n + b]) {
+                            return Err(format!("known row {a} differs from verify"));
+                        }
+                        // unknown rows attend exactly the known set
+                        if oa >= *nk {
+                            let want = if ob < *nk { 1.0 } else { 0.0 };
+                            if g != want {
+                                return Err(format!("unknown row {a} col {b}"));
+                            }
+                        }
+                    }
+                    if dh[a * n + a] != 1.0 {
+                        return Err(format!("h diagonal missing at {a}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_incremental_update_matches_full_build() {
+        propcheck::check_no_shrink(
+            8,
+            150,
+            |r: &mut Rng| {
+                let ord = random_ordering(r, 24);
+                let n0 = r.range(ord.m, ord.n() + 1);
+                let n1 = r.range(n0, ord.n() + 1);
+                (ord, n0, n1)
+            },
+            |(ord, n0, n1)| {
+                let (mut h, mut g) = draft_masks(ord, *n0);
+                advance_draft_masks(ord, *n0, *n1, &mut h, &mut g);
+                let (wh, wg) = draft_masks(ord, *n1);
+                if h != wh {
+                    return Err("h mismatch after incremental update".into());
+                }
+                if g != wg {
+                    return Err("g mismatch after incremental update".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Golden parity with the python mirror (artifacts/fixtures/masks.json).
+    #[test]
+    fn golden_fixtures_match_python() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/fixtures/masks.json");
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => {
+                eprintln!("skipping golden fixture test: run `make artifacts` first");
+                return;
+            }
+        };
+        let cases = crate::util::json::Json::parse(&text).unwrap();
+        for case in cases.as_arr().unwrap() {
+            let n = case.get("n").unwrap().as_usize().unwrap();
+            let m = case.get("m").unwrap().as_usize().unwrap();
+            let sigma: Vec<usize> = case
+                .get("sigma")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect();
+            let ord = Ordering::new(sigma, m);
+            let to_vec = |key: &str| -> Option<Vec<f32>> {
+                case.get(key).map(|v| {
+                    v.as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_f64().unwrap() as f32)
+                        .collect()
+                })
+            };
+            let (vh, vg) = verify_masks(&ord);
+            assert_eq!(vh, to_vec("verify_h").unwrap(), "verify_h n={n} m={m}");
+            assert_eq!(vg, to_vec("verify_g").unwrap(), "verify_g n={n} m={m}");
+            if let Some(dh_want) = to_vec("draft_h") {
+                let nk = case.get("n_known").unwrap().as_usize().unwrap();
+                let (dh, dg) = draft_masks(&ord, nk);
+                assert_eq!(dh, dh_want, "draft_h n={n} m={m} nk={nk}");
+                assert_eq!(dg, to_vec("draft_g").unwrap(), "draft_g n={n} m={m} nk={nk}");
+            }
+        }
+    }
+}

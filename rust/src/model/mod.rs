@@ -1,0 +1,171 @@
+//! Model-side substrates: metadata introspection, parameter I/O, and the
+//! attention-mask builders (the rust half of the paper's "query the
+//! architecture differently" design).
+
+pub mod mask;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of python/compile/config.py's ModelConfig + flat-theta layout,
+/// parsed from artifacts/model_meta.json.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub mask_id: u32,
+    pub pad_id: u32,
+    pub n_params: usize,
+    pub params: Vec<(String, usize, Vec<usize>)>, // (name, offset, shape)
+}
+
+impl ModelMeta {
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = Json::parse(text).context("parsing model_meta.json")?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("missing field {k}"))
+        };
+        let mut params = vec![];
+        if let Some(Json::Obj(m)) = j.get("params") {
+            for (name, spec) in m {
+                let offset = spec.get("offset").and_then(|v| v.as_usize()).unwrap_or(0);
+                let shape: Vec<usize> = spec
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default();
+                params.push((name.clone(), offset, shape));
+            }
+        } else {
+            bail!("model_meta.json missing params object");
+        }
+        params.sort_by_key(|(_, off, _)| *off);
+        Ok(ModelMeta {
+            vocab: get("vocab")?,
+            seq_len: get("seq_len")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            mask_id: get("mask_id")? as u32,
+            pad_id: get("pad_id")? as u32,
+            n_params: get("n_params")?,
+            params,
+        })
+    }
+
+    /// Validate the layout is contiguous and totals n_params.
+    pub fn validate(&self) -> Result<()> {
+        let mut expect = 0usize;
+        for (name, off, shape) in &self.params {
+            if *off != expect {
+                bail!("param {name} offset {off}, expected {expect}");
+            }
+            expect += shape.iter().product::<usize>();
+        }
+        if expect != self.n_params {
+            bail!("layout totals {expect}, meta says {}", self.n_params);
+        }
+        Ok(())
+    }
+}
+
+/// Load a flat little-endian f32 parameter file (params_init.bin or a
+/// trainer checkpoint).
+pub fn load_params(path: impl AsRef<Path>, expect_len: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() != expect_len * 4 {
+        bail!(
+            "param file {} has {} bytes, expected {}",
+            path.as_ref().display(),
+            bytes.len(),
+            expect_len * 4
+        );
+    }
+    let mut out = Vec::with_capacity(expect_len);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out)
+}
+
+/// Save a flat f32 parameter vector (checkpoints).
+pub fn save_params(path: impl AsRef<Path>, theta: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(theta.len() * 4);
+    for x in theta {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("writing {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+      "vocab": 258, "seq_len": 128, "d_model": 128, "n_layers": 4,
+      "n_heads": 4, "d_ff": 512, "mask_id": 256, "pad_id": 257,
+      "n_params": 20,
+      "params": {
+        "a": {"offset": 0, "shape": [2, 5]},
+        "b": {"offset": 10, "shape": [10]}
+      }
+    }"#;
+
+    #[test]
+    fn parse_and_validate() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.vocab, 258);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].0, "a");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_gap() {
+        let bad = META.replace("\"offset\": 10", "\"offset\": 11");
+        let m = ModelMeta::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn params_roundtrip(){
+        let dir = std::env::temp_dir().join("asarm_test_params");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let theta: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 3.0).collect();
+        save_params(&path, &theta).unwrap();
+        let got = load_params(&path, 100).unwrap();
+        assert_eq!(theta, got);
+        assert!(load_params(&path, 99).is_err());
+    }
+
+    #[test]
+    fn real_meta_artifact_parses_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/model_meta.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = ModelMeta::parse(&text).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.vocab, 258);
+            assert_eq!(m.params[0].0, "tok_emb");
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! XLA-backed engine: the production forward/train path.
+//!
+//! One compiled executable per (program, batch size). `forward` picks the
+//! smallest compiled batch variant that fits and pads the remainder with
+//! PAD-token rows + zero masks (padding rows cost compute but not
+//! correctness; the batcher sizes batches to the variants).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::{compile_artifact, Engine};
+use crate::model::ModelMeta;
+use crate::tokenizer::PAD;
+
+pub struct XlaEngine {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    /// batch size -> compiled forward executable
+    fwd: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// current parameters (flat theta), host copy
+    theta: Vec<f32>,
+    /// device-resident theta — uploaded ONCE per set_params instead of per
+    /// forward (§Perf: saves a 3.4 MB host->device literal per call)
+    theta_buf: xla::PjRtBuffer,
+    nfe: AtomicU64,
+}
+
+impl XlaEngine {
+    /// Load the standard artifact set from a directory:
+    /// model_meta.json, params file, fwd_b{B}.hlo.txt for each available B.
+    pub fn load(artifacts_dir: impl AsRef<Path>, params_path: Option<&Path>) -> Result<XlaEngine> {
+        let dir = artifacts_dir.as_ref();
+        let meta = ModelMeta::load(dir.join("model_meta.json"))?;
+        meta.validate()?;
+        let client = super::cpu_client()?;
+        let mut fwd = BTreeMap::new();
+        for b in [1usize, 2, 4, 8, 16] {
+            let p = dir.join(format!("fwd_b{b}.hlo.txt"));
+            if p.exists() {
+                fwd.insert(b, compile_artifact(&client, &p)?);
+            }
+        }
+        if fwd.is_empty() {
+            bail!("no fwd_b*.hlo.txt artifacts in {}", dir.display());
+        }
+        let params_path: PathBuf = params_path
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| dir.join("params_init.bin"));
+        let theta = crate::model::load_params(&params_path, meta.n_params)
+            .with_context(|| format!("loading params {}", params_path.display()))?;
+        let theta_buf = client
+            .buffer_from_host_buffer::<f32>(&theta, &[theta.len()], None)
+            .context("uploading theta")?;
+        Ok(XlaEngine {
+            meta,
+            client,
+            fwd,
+            theta,
+            theta_buf,
+            nfe: AtomicU64::new(0),
+        })
+    }
+
+    pub fn set_params(&mut self, theta: Vec<f32>) -> Result<()> {
+        if theta.len() != self.meta.n_params {
+            bail!(
+                "theta has {} params, expected {}",
+                theta.len(),
+                self.meta.n_params
+            );
+        }
+        self.theta_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&theta, &[theta.len()], None)
+            .context("uploading theta")?;
+        self.theta = theta;
+        Ok(())
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    fn pick_batch(&self, want: usize) -> usize {
+        for (&b, _) in self.fwd.iter() {
+            if b >= want {
+                return b;
+            }
+        }
+        *self.fwd.keys().last().unwrap()
+    }
+
+    /// The pre-optimization forward path (per-call theta LITERAL upload).
+    /// Kept for the §Perf before/after ablation in `perf_engine`.
+    pub fn forward_via_literals(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = self.meta.seq_len;
+        let v = self.meta.vocab;
+        let b_exec = self.pick_batch(batch);
+        let exe = &self.fwd[&b_exec];
+        let mut toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        toks_i32.resize(b_exec * n, PAD as i32);
+        let mut mh = mask_h.to_vec();
+        mh.resize(b_exec * n * n, 0.0);
+        let mut mg = mask_g.to_vec();
+        mg.resize(b_exec * n * n, 0.0);
+        let lit_theta = xla::Literal::vec1(&self.theta);
+        let lit_tokens = xla::Literal::vec1(&toks_i32).reshape(&[b_exec as i64, n as i64])?;
+        let lit_mh = xla::Literal::vec1(&mh).reshape(&[b_exec as i64, n as i64, n as i64])?;
+        let lit_mg = xla::Literal::vec1(&mg).reshape(&[b_exec as i64, n as i64, n as i64])?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit_theta, lit_tokens, lit_mh, lit_mg])
+            .context("executing forward (literal path)")?[0][0]
+            .to_literal_sync()?;
+        let mut logits = result.to_tuple1()?.to_vec::<f32>()?;
+        logits.truncate(batch * n * v);
+        self.nfe.fetch_add(1, Ordering::Relaxed);
+        Ok(logits)
+    }
+}
+
+impl Engine for XlaEngine {
+    fn seq_len(&self) -> usize {
+        self.meta.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.meta.vocab
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.fwd.keys().copied().collect()
+    }
+
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = self.meta.seq_len;
+        let v = self.meta.vocab;
+        assert_eq!(tokens.len(), batch * n, "tokens shape");
+        assert_eq!(mask_h.len(), batch * n * n, "mask_h shape");
+        assert_eq!(mask_g.len(), batch * n * n, "mask_g shape");
+
+        // Batches larger than the largest variant are split into chunks.
+        let max_b = *self.fwd.keys().last().unwrap();
+        if batch > max_b {
+            let mut logits = Vec::with_capacity(batch * n * v);
+            let mut off = 0;
+            while off < batch {
+                let take = (batch - off).min(max_b);
+                let part = self.forward(
+                    take,
+                    &tokens[off * n..(off + take) * n],
+                    &mask_h[off * n * n..(off + take) * n * n],
+                    &mask_g[off * n * n..(off + take) * n * n],
+                )?;
+                logits.extend_from_slice(&part);
+                off += take;
+            }
+            return Ok(logits);
+        }
+
+        let b_exec = self.pick_batch(batch);
+        let exe = &self.fwd[&b_exec];
+
+        // Pad to the executable's batch size.
+        let mut toks_i32: Vec<i32> = Vec::with_capacity(b_exec * n);
+        toks_i32.extend(tokens.iter().map(|&t| t as i32));
+        toks_i32.resize(b_exec * n, PAD as i32);
+        let mut mh = Vec::with_capacity(b_exec * n * n);
+        mh.extend_from_slice(mask_h);
+        mh.resize(b_exec * n * n, 0.0);
+        let mut mg = Vec::with_capacity(b_exec * n * n);
+        mg.extend_from_slice(mask_g);
+        mg.resize(b_exec * n * n, 0.0);
+
+        // Device-buffer path: theta stays resident; only the (much
+        // smaller) per-call inputs cross the host boundary.
+        let buf_tokens = self
+            .client
+            .buffer_from_host_buffer::<i32>(&toks_i32, &[b_exec, n], None)?;
+        let buf_mh = self
+            .client
+            .buffer_from_host_buffer::<f32>(&mh, &[b_exec, n, n], None)?;
+        let buf_mg = self
+            .client
+            .buffer_from_host_buffer::<f32>(&mg, &[b_exec, n, n], None)?;
+        let result = exe
+            .execute_b(&[&self.theta_buf, &buf_tokens, &buf_mh, &buf_mg])
+            .context("executing forward")?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let mut logits = out.to_vec::<f32>()?;
+        logits.truncate(batch * n * v);
+        self.nfe.fetch_add(1, Ordering::Relaxed);
+        Ok(logits)
+    }
+
+    fn nfe(&self) -> u64 {
+        self.nfe.load(Ordering::Relaxed)
+    }
+}
+
+/// Output of one train step.
+#[derive(Debug)]
+pub struct TrainOutput {
+    pub loss: f32,
+}
+
+/// Trainer-side executable wrapper: holds (theta, m, v) on the host and
+/// steps them through the train_step artifact.
+pub struct TrainRunner {
+    pub meta: ModelMeta,
+    /// kept alive for the executable's lifetime
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub theta: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub step: u64,
+}
+
+impl TrainRunner {
+    pub fn load(artifacts_dir: impl AsRef<Path>, batch: usize) -> Result<TrainRunner> {
+        let dir = artifacts_dir.as_ref();
+        let meta = ModelMeta::load(dir.join("model_meta.json"))?;
+        meta.validate()?;
+        let client = super::cpu_client()?;
+        let exe = compile_artifact(&client, dir.join(format!("train_step_b{batch}.hlo.txt")))?;
+        let theta = crate::model::load_params(dir.join("params_init.bin"), meta.n_params)?;
+        let p = meta.n_params;
+        Ok(TrainRunner {
+            meta,
+            _client: client,
+            exe,
+            batch,
+            theta,
+            adam_m: vec![0.0; p],
+            adam_v: vec![0.0; p],
+            step: 0,
+        })
+    }
+
+    /// Reset optimizer state + parameters (ablation runs reuse the runner).
+    pub fn reset(&mut self, theta: Vec<f32>) {
+        assert_eq!(theta.len(), self.meta.n_params);
+        self.theta = theta;
+        self.adam_m.iter_mut().for_each(|x| *x = 0.0);
+        self.adam_v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+    }
+
+    /// One optimizer step on a [batch, N] token batch with verify-mode
+    /// masks and loss weights.
+    pub fn step(
+        &mut self,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+        loss_w: &[f32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        let n = self.meta.seq_len;
+        let b = self.batch;
+        assert_eq!(tokens.len(), b * n);
+        assert_eq!(mask_h.len(), b * n * n);
+        assert_eq!(mask_g.len(), b * n * n);
+        assert_eq!(loss_w.len(), b * n);
+        self.step += 1;
+
+        let toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let args = [
+            xla::Literal::vec1(&self.theta),
+            xla::Literal::vec1(&self.adam_m),
+            xla::Literal::vec1(&self.adam_v),
+            xla::Literal::scalar(self.step as f32),
+            xla::Literal::vec1(&toks_i32).reshape(&[b as i64, n as i64])?,
+            xla::Literal::vec1(mask_h).reshape(&[b as i64, n as i64, n as i64])?,
+            xla::Literal::vec1(mask_g).reshape(&[b as i64, n as i64, n as i64])?,
+            xla::Literal::vec1(loss_w).reshape(&[b as i64, n as i64])?,
+            xla::Literal::scalar(lr),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .context("executing train_step")?[0][0]
+            .to_literal_sync()?;
+        let (t, m, v, loss) = result.to_tuple4()?;
+        self.theta = t.to_vec::<f32>()?;
+        self.adam_m = m.to_vec::<f32>()?;
+        self.adam_v = v.to_vec::<f32>()?;
+        let loss = loss.to_vec::<f32>()?[0];
+        Ok(TrainOutput { loss })
+    }
+}

@@ -1,0 +1,65 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path. Wraps the `xla` crate (PJRT C API, CPU plugin).
+//!
+//! Everything the decoders and the trainer need is behind the [`Engine`]
+//! trait so that the coordinator and the decode algorithms can be tested
+//! hermetically against [`mock::MockEngine`] (an analytic log-linear model
+//! with exact conditionals) without compiled artifacts.
+
+pub mod engine;
+pub mod mock;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use engine::{TrainOutput, XlaEngine};
+
+/// The forward interface the decoders run against.
+///
+/// `tokens` is row-major [batch, N] (u32 ids); `mask_h` / `mask_g` are
+/// row-major [batch, N, N] (1.0 = may-attend). Returns logits, row-major
+/// [batch, N, V].
+///
+/// NOTE: deliberately NOT `Send` — the PJRT client is single-threaded
+/// (`Rc` internally). The coordinator owns the engine on one scheduler
+/// thread and serves concurrent requests through channels (see
+/// coordinator/).
+pub trait Engine {
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Number of forward calls so far (NFE accounting — Theorem 1).
+    fn nfe(&self) -> u64;
+
+    /// Supported batch sizes, ascending (artifact variants).
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+}
+
+/// Shared PJRT CPU client (one per process).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("creating PJRT CPU client")
+}
+
+/// Load + compile an HLO text artifact on the given client.
+pub fn compile_artifact(
+    client: &xla::PjRtClient,
+    path: impl AsRef<Path>,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = path.as_ref();
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}

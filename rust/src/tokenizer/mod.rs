@@ -1,0 +1,124 @@
+//! Byte-level tokenizer with MASK/PAD specials.
+//!
+//! The paper finetunes XLNet with a 32k SentencePiece vocab; we substitute a
+//! byte-level vocabulary (256 bytes + MASK + PAD = 258) so the tokenizer is
+//! trivially identical between the python compile path and the rust request
+//! path (DESIGN.md §5). The ids mirror python/compile/config.py.
+
+pub const VOCAB: usize = 258;
+pub const MASK: u32 = 256;
+pub const PAD: u32 = 257;
+
+#[derive(Clone, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    /// Encode into a fixed-length window, truncating or PAD-filling.
+    pub fn encode_fixed(&self, text: &str, len: usize) -> Vec<u32> {
+        let mut ids = self.encode(text);
+        ids.truncate(len);
+        while ids.len() < len {
+            ids.push(PAD);
+        }
+        ids
+    }
+
+    /// Decode ids to text. MASK renders as `\u{FFFD}`-style placeholder '_',
+    /// PAD is dropped; invalid UTF-8 is replaced lossily.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter_map(|&id| match id {
+                PAD => None,
+                MASK => Some(b'_'),
+                b if b < 256 => Some(b as u8),
+                _ => None,
+            })
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, id: u32) -> bool {
+        id >= 256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let s = "Hello, AS-ARM world! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "héllo — 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn fixed_pads_and_truncates() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode_fixed("abc", 5);
+        assert_eq!(ids, vec![97, 98, 99, PAD, PAD]);
+        let ids = t.encode_fixed("abcdef", 4);
+        assert_eq!(ids.len(), 4);
+        assert_eq!(t.decode(&ids), "abcd");
+    }
+
+    #[test]
+    fn mask_renders_placeholder_pad_dropped() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[104, MASK, 105, PAD]), "h_i");
+    }
+
+    #[test]
+    fn specials() {
+        let t = ByteTokenizer::new();
+        assert!(t.is_special(MASK));
+        assert!(t.is_special(PAD));
+        assert!(!t.is_special(255));
+        assert_eq!(t.vocab_size(), 258);
+    }
+
+    /// Property: encode/decode round-trips for arbitrary valid UTF-8.
+    #[test]
+    fn prop_roundtrip() {
+        use crate::util::{propcheck, rng::Rng};
+        propcheck::check_no_shrink(
+            99,
+            100,
+            |r: &mut Rng| {
+                let n = r.below(64);
+                (0..n)
+                    .map(|_| char::from_u32(r.range(32, 0x2000) as u32).unwrap_or('x'))
+                    .collect::<String>()
+            },
+            |s| {
+                let t = ByteTokenizer::new();
+                if t.decode(&t.encode(s)) == *s {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,109 @@
+//! Ablation runners for the paper's training figures.
+//!
+//! * Fig. 3 — binary-lattice sigma vs unrestricted-permutation sigma
+//!   training (§2.4's 2^N-vs-N! argument).
+//! * Fig. 4 — narrow (1–10%) vs wide (1–85%) prompt-rate training
+//!   (App. D.2 / F.2).
+//!
+//! Each arm trains from the same init on the same data, logging validation
+//! NLL curves; the fig3/fig4 bench binaries print the paper-style series.
+
+use anyhow::Result;
+
+use crate::data::masking::{OrderProtocol, PromptDist};
+use crate::runtime::engine::TrainRunner;
+use crate::runtime::XlaEngine;
+
+use super::{train, TrainConfig, TrainLog};
+
+/// One ablation arm: a label + config deltas applied to a base config.
+pub struct Arm {
+    pub label: String,
+    pub protocol: OrderProtocol,
+    pub prompt_dist: Option<PromptDist>,
+}
+
+/// Train every arm from the same initialization; returns (label, logs).
+pub fn run_arms(
+    artifacts_dir: &std::path::Path,
+    batch: usize,
+    base: &TrainConfig,
+    arms: &[Arm],
+    train_chunks: &[Vec<u32>],
+    val_chunks: &[Vec<u32>],
+) -> Result<Vec<(String, Vec<TrainLog>)>> {
+    let mut runner = TrainRunner::load(artifacts_dir, batch)?;
+    let mut val_engine = XlaEngine::load(artifacts_dir, None)?;
+    let theta0 = runner.theta.clone();
+    let mut out = vec![];
+    for arm in arms {
+        eprintln!("=== ablation arm: {} ===", arm.label);
+        runner.reset(theta0.clone());
+        let cfg = TrainConfig {
+            protocol: arm.protocol,
+            prompt_dist: arm.prompt_dist,
+            checkpoint: None,
+            ..base.clone()
+        };
+        let logs = train(
+            &mut runner,
+            train_chunks,
+            val_chunks,
+            &cfg,
+            Some(&mut val_engine),
+        )?;
+        out.push((arm.label.clone(), logs));
+    }
+    Ok(out)
+}
+
+/// Fig. 3 arms: lattice vs permutation, same prompt distribution.
+pub fn fig3_arms() -> Vec<Arm> {
+    vec![
+        Arm {
+            label: "lattice (Eq. 4)".into(),
+            protocol: OrderProtocol::Lattice,
+            prompt_dist: Some(PromptDist::narrow()),
+        },
+        Arm {
+            label: "any permutation".into(),
+            protocol: OrderProtocol::Permutation,
+            prompt_dist: Some(PromptDist::narrow()),
+        },
+    ]
+}
+
+/// Fig. 4 arms: narrow vs wide prompt rates, both lattice.
+pub fn fig4_arms() -> Vec<Arm> {
+    vec![
+        Arm {
+            label: "narrow prompts (1-10%)".into(),
+            protocol: OrderProtocol::Lattice,
+            prompt_dist: Some(PromptDist::narrow()),
+        },
+        Arm {
+            label: "wide prompts (1-85%)".into(),
+            protocol: OrderProtocol::Lattice,
+            prompt_dist: Some(PromptDist::wide()),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_definitions_differ_along_one_axis() {
+        let f3 = fig3_arms();
+        assert_eq!(f3.len(), 2);
+        assert_ne!(f3[0].protocol, f3[1].protocol);
+
+        let f4 = fig4_arms();
+        assert_eq!(f4.len(), 2);
+        assert_eq!(f4[0].protocol, f4[1].protocol);
+        let a = f4[0].prompt_dist.unwrap();
+        let b = f4[1].prompt_dist.unwrap();
+        assert!(a.hi_frac < b.hi_frac);
+    }
+}

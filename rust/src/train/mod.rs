@@ -1,0 +1,335 @@
+//! The rust training loop (paper §6.2 + App. D.2/D.3).
+//!
+//! The train-step MATH lives in Layer 2 (python/compile/model.py,
+//! AdamW + the teacher-forced joint loss of Eq. 7) and was AOT-lowered to
+//! `train_step_b{B}.hlo.txt`. This module owns everything around it:
+//! batch assembly (sampling m ~ f(·) with the low-discrepancy in-batch
+//! scheme, sigma ~ s(·|m) under the lattice or permutation protocol,
+//! verify-mask construction, loss weights), the LR/mask-rate schedules,
+//! validation, and checkpointing. Python never runs here.
+
+pub mod ablation;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::masking::{sample_sigma, MaskRateSchedule, OrderProtocol, PromptDist};
+use crate::model::mask::{verify_masks_into, Ordering};
+use crate::runtime::engine::TrainRunner;
+use crate::tokenizer::PAD;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr_max: f32,
+    pub warmup_steps: usize,
+    /// total steps for linear decay after warmup (>= steps - warmup_steps)
+    pub decay_steps: usize,
+    pub mask_schedule: MaskRateSchedule,
+    /// Fixed prompt distribution override (ablations); when None the
+    /// mask-rate schedule drives f(·).
+    pub prompt_dist: Option<PromptDist>,
+    pub protocol: OrderProtocol,
+    pub seed: u64,
+    pub log_every: usize,
+    pub val_every: usize,
+    pub val_batches: usize,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 400,
+            lr_max: 3e-4,
+            warmup_steps: 40,
+            decay_steps: 400,
+            mask_schedule: MaskRateSchedule::paper_default(),
+            prompt_dist: None,
+            protocol: OrderProtocol::Lattice,
+            seed: 0,
+            log_every: 20,
+            val_every: 100,
+            val_batches: 2,
+            checkpoint: None,
+        }
+    }
+}
+
+/// One log record (the Fig. 3/4 curves are series of these).
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub val_nll_per_token: Option<f64>,
+}
+
+/// Linear warmup then linear decay (paper App. D.3).
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    if step < cfg.warmup_steps {
+        cfg.lr_max * (step as f32 + 1.0) / cfg.warmup_steps as f32
+    } else {
+        let t = (step - cfg.warmup_steps) as f32 / cfg.decay_steps.max(1) as f32;
+        (cfg.lr_max * (1.0 - t)).max(0.0)
+    }
+}
+
+/// Assemble one training batch: tokens + verify masks + loss weights.
+///
+/// Loss weights are 1.0 exactly at target positions (order >= m) that are
+/// not PAD — Eq. 7's joint conditional covers the masked set; PAD tails
+/// carry no signal.
+pub fn build_batch(
+    rng: &mut Rng,
+    chunks: &[Vec<u32>],
+    batch: usize,
+    n: usize,
+    dist: &PromptDist,
+    protocol: OrderProtocol,
+    tokens: &mut [u32],
+    mask_h: &mut [f32],
+    mask_g: &mut [f32],
+    loss_w: &mut [f32],
+) {
+    assert_eq!(tokens.len(), batch * n);
+    let ms = dist.sample_batch(rng, n, batch);
+    for (s, &m) in ms.iter().enumerate() {
+        let chunk = &chunks[rng.below(chunks.len())];
+        assert_eq!(chunk.len(), n);
+        tokens[s * n..(s + 1) * n].copy_from_slice(chunk);
+        let sigma = sample_sigma(rng, n, m, protocol);
+        let ord = Ordering::new(sigma, m);
+        verify_masks_into(
+            &ord,
+            &mut mask_h[s * n * n..(s + 1) * n * n],
+            &mut mask_g[s * n * n..(s + 1) * n * n],
+        );
+        for pos in 0..n {
+            let is_target = !ord.is_prompt_pos(pos);
+            let not_pad = chunk[pos] != PAD;
+            loss_w[s * n + pos] = if is_target && not_pad { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+/// Teacher-forced validation NLL per target token over held-out chunks.
+pub fn validation_nll(
+    engine: &dyn crate::runtime::Engine,
+    rng: &mut Rng,
+    val_chunks: &[Vec<u32>],
+    batches: usize,
+    dist: &PromptDist,
+    protocol: OrderProtocol,
+) -> Result<f64> {
+    let n = engine.seq_len();
+    let v = engine.vocab();
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    for _ in 0..batches {
+        let chunk = &val_chunks[rng.below(val_chunks.len())];
+        let m = dist.sample(rng, n);
+        let sigma = sample_sigma(rng, n, m, protocol);
+        let ord = Ordering::new(sigma, m);
+        let (h, g) = crate::model::mask::verify_masks(&ord);
+        let logits = engine.forward(1, chunk, &h, &g)?;
+        for i in m..n {
+            let pos = ord.sigma[i];
+            if chunk[pos] == PAD {
+                continue;
+            }
+            let lp =
+                crate::decode::sampling::log_softmax(&logits[pos * v..(pos + 1) * v], 1.0);
+            total_nll -= lp[chunk[pos] as usize] as f64;
+            total_tokens += 1;
+        }
+    }
+    Ok(total_nll / total_tokens.max(1) as f64)
+}
+
+/// Run the training loop. When `val_engine` is provided it receives the
+/// current weights before each validation pass.
+pub fn train(
+    runner: &mut TrainRunner,
+    train_chunks: &[Vec<u32>],
+    val_chunks: &[Vec<u32>],
+    cfg: &TrainConfig,
+    mut val_engine: Option<&mut crate::runtime::XlaEngine>,
+) -> Result<Vec<TrainLog>> {
+    let n = runner.meta.seq_len;
+    let b = runner.batch;
+    let mut rng = Rng::new(cfg.seed);
+    let mut tokens = vec![0u32; b * n];
+    let mut mask_h = vec![0f32; b * n * n];
+    let mut mask_g = vec![0f32; b * n * n];
+    let mut loss_w = vec![0f32; b * n];
+    let mut logs = vec![];
+
+    for step in 0..cfg.steps {
+        let dist = cfg.prompt_dist.unwrap_or_else(|| cfg.mask_schedule.at(step));
+        build_batch(
+            &mut rng,
+            train_chunks,
+            b,
+            n,
+            &dist,
+            cfg.protocol,
+            &mut tokens,
+            &mut mask_h,
+            &mut mask_g,
+            &mut loss_w,
+        );
+        let lr = lr_at(cfg, step);
+        let out = runner.step(&tokens, &mask_h, &mask_g, &loss_w, lr)?;
+
+        let mut val = None;
+        let is_log_step = step % cfg.log_every == 0 || step + 1 == cfg.steps;
+        let is_val_step =
+            cfg.val_every > 0 && (step % cfg.val_every == 0 || step + 1 == cfg.steps);
+        if is_val_step && !val_chunks.is_empty() {
+            if let Some(ve) = val_engine.as_deref_mut() {
+                ve.set_params(runner.theta.clone())?;
+                let final_dist = cfg.prompt_dist.unwrap_or(PromptDist::narrow());
+                let mut vrng = Rng::new(cfg.seed ^ 0xabcdef);
+                val = Some(validation_nll(
+                    ve,
+                    &mut vrng,
+                    val_chunks,
+                    cfg.val_batches,
+                    &final_dist,
+                    OrderProtocol::Lattice,
+                )?);
+            }
+        }
+        if is_log_step || val.is_some() {
+            logs.push(TrainLog {
+                step,
+                loss: out.loss,
+                lr,
+                val_nll_per_token: val,
+            });
+            eprintln!(
+                "step {step:5}  loss {:.4}  lr {:.2e}{}",
+                out.loss,
+                lr,
+                val.map(|v| format!("  val_nll/tok {v:.4}"))
+                    .unwrap_or_default()
+            );
+        }
+    }
+    if let Some(path) = &cfg.checkpoint {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        crate::model::save_params(path, &runner.theta)?;
+        eprintln!("checkpoint -> {}", path.display());
+    }
+    Ok(logs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            steps: 10,
+            warmup_steps: 4,
+            decay_steps: 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = cfg();
+        assert!(lr_at(&c, 0) > 0.0);
+        assert!(lr_at(&c, 3) < c.lr_max + 1e-9);
+        assert!((lr_at(&c, 4) - c.lr_max).abs() < c.lr_max * 0.3);
+        assert!(lr_at(&c, 9) < lr_at(&c, 5));
+        assert!(lr_at(&c, 10_000) == 0.0);
+    }
+
+    #[test]
+    fn build_batch_invariants() {
+        let mut rng = Rng::new(1);
+        let n = 16;
+        let b = 4;
+        let chunks: Vec<Vec<u32>> = (0..8)
+            .map(|i| (0..n).map(|j| ((i * 7 + j) % 250) as u32).collect())
+            .collect();
+        let mut tokens = vec![0u32; b * n];
+        let mut mh = vec![0f32; b * n * n];
+        let mut mg = vec![0f32; b * n * n];
+        let mut lw = vec![0f32; b * n];
+        build_batch(
+            &mut rng,
+            &chunks,
+            b,
+            n,
+            &PromptDist::new(0.2, 0.5),
+            OrderProtocol::Lattice,
+            &mut tokens,
+            &mut mh,
+            &mut mg,
+            &mut lw,
+        );
+        for s in 0..b {
+            let w: f32 = lw[s * n..(s + 1) * n].iter().sum();
+            assert!(w >= 1.0, "slot {s} has no loss targets");
+            assert!(w < n as f32, "slot {s} has no prompt");
+            for a in 0..n {
+                assert_eq!(mh[s * n * n + a * n + a], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn build_batch_pads_carry_no_loss() {
+        let mut rng = Rng::new(2);
+        let n = 8;
+        let chunks = vec![vec![65u32, 66, 67, PAD, PAD, PAD, PAD, PAD]];
+        let mut tokens = vec![0u32; n];
+        let mut mh = vec![0f32; n * n];
+        let mut mg = vec![0f32; n * n];
+        let mut lw = vec![0f32; n];
+        build_batch(
+            &mut rng,
+            &chunks,
+            1,
+            n,
+            &PromptDist::new(0.2, 0.3),
+            OrderProtocol::Lattice,
+            &mut tokens,
+            &mut mh,
+            &mut mg,
+            &mut lw,
+        );
+        for pos in 3..8 {
+            assert_eq!(lw[pos], 0.0, "PAD at {pos} got loss weight");
+        }
+    }
+
+    #[test]
+    fn validation_nll_on_mock_is_finite() {
+        use crate::runtime::mock::MockEngine;
+        let e = MockEngine::new(1, 16, 258, 1.0);
+        let mut rng = Rng::new(3);
+        let chunks: Vec<Vec<u32>> = (0..4)
+            .map(|i| (0..16).map(|j| ((i + j) % 250) as u32).collect())
+            .collect();
+        let nll = validation_nll(
+            &e,
+            &mut rng,
+            &chunks,
+            3,
+            &PromptDist::new(0.1, 0.3),
+            OrderProtocol::Lattice,
+        )
+        .unwrap();
+        assert!(nll.is_finite());
+        assert!(nll > 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built in-repo (the image is offline; no rand /
+//! serde / clap / tokio / criterion / proptest — see DESIGN.md §4).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,119 @@
+//! Thread-pool substrate (no `tokio` offline).
+//!
+//! A fixed-size worker pool over an mpsc channel. The HTTP server uses it
+//! to handle connections; the bench harness uses it for client load
+//! generation. Jobs are boxed `FnOnce`s; shutdown drains the queue.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            workers,
+            tx: Some(tx),
+        }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Run a batch of jobs and block until all complete. Panics (rather
+    /// than deadlocking) if any job panicked: the panicking worker drops
+    /// its completion sender without sending, and `done_tx` is dropped
+    /// here after dispatch so `recv` can observe the hang-up.
+    pub fn scoped_run<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        let (done_tx, done_rx) = mpsc::channel();
+        let n = jobs.len();
+        for job in jobs {
+            let done = done_tx.clone();
+            self.execute(move || {
+                job();
+                let _ = done.send(());
+            });
+        }
+        drop(done_tx);
+        for i in 0..n {
+            done_rx
+                .recv()
+                .unwrap_or_else(|_| panic!("a pooled job panicked ({i}/{n} completed)"));
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit after drain
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.scoped_run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_drains_queue() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits for workers
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: the full coordinator stack (scheduler + HTTP server) over
+//! the mock engine — hermetic, no artifacts needed — plus one real-engine
+//! smoke when artifacts exist.
+
+use std::time::Duration;
+
+use asarm::coordinator::http::{http_get, http_post, HttpServer};
+use asarm::coordinator::scheduler::{spawn, SchedulerConfig};
+use asarm::coordinator::Metrics;
+use asarm::runtime::mock::MockEngine;
+use asarm::runtime::Engine;
+use asarm::util::json::Json;
+
+fn mock_server(max_batch: usize) -> (std::net::SocketAddr, Metrics) {
+    let metrics = Metrics::new();
+    let m2 = metrics.clone();
+    let handle = spawn(
+        move || Ok(Box::new(MockEngine::new(5, 32, 258, 1.0)) as Box<dyn Engine>),
+        SchedulerConfig {
+            max_batch,
+            idle_poll: Duration::from_millis(2),
+        },
+        m2,
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle, metrics.clone(), 4).unwrap();
+    (server.serve_background(), metrics)
+}
+
+#[test]
+fn healthz_and_metrics_endpoints() {
+    let (addr, _) = mock_server(2);
+    let (code, body) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("ok"));
+    let (code, body) = http_get(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("requests").is_some());
+}
+
+#[test]
+fn infill_roundtrip_over_http() {
+    let (addr, metrics) = mock_server(2);
+    let body = r#"{"text":"ab____cd","sampler":"assd","k":4,"seed":3}"#;
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert!(!j.get("text").unwrap().as_str().unwrap().contains('_'));
+    assert!(j.get("model_nfe").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(metrics.requests(), 1);
+}
+
+#[test]
+fn bad_requests_get_400() {
+    let (addr, _) = mock_server(1);
+    for body in [
+        "not json",
+        r#"{"no_text": 1}"#,
+        r#"{"text":"x","sampler":"nope"}"#,
+    ] {
+        let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+        assert_eq!(code, 400, "{body} -> {resp}");
+        assert!(resp.contains("error"));
+    }
+    let (code, _) = http_get(&addr, "/nothing-here").unwrap();
+    assert_eq!(code, 404);
+}
+
+#[test]
+fn concurrent_http_load_is_consistent() {
+    let (addr, metrics) = mock_server(4);
+    let pool = asarm::util::threadpool::ThreadPool::new(6);
+    let jobs: Vec<_> = (0..12)
+        .map(|i| {
+            move || {
+                let body = format!(r#"{{"text":"xy______z","seed":{i}}}"#);
+                let (code, resp) = http_post(&addr, "/v1/infill", &body).unwrap();
+                assert_eq!(code, 200, "{resp}");
+                let j = Json::parse(&resp).unwrap();
+                assert_eq!(j.get("n_generated").unwrap().as_f64(), Some(6.0));
+            }
+        })
+        .collect();
+    pool.scoped_run(jobs);
+    assert_eq!(metrics.requests(), 12);
+    // Theorem 1 at the fleet level: total model NFE <= total tokens
+    // (every request here uses the self-drafting ASSD default).
+    let j = metrics.snapshot_json();
+    let nfe = j.get("model_nfe").unwrap().as_f64().unwrap();
+    let toks = j.get("tokens_generated").unwrap().as_f64().unwrap();
+    assert!(nfe <= toks, "fleet NFE {nfe} > tokens {toks}");
+}
+
+#[test]
+fn sequential_vs_assd_nfe_over_http() {
+    let (addr, _) = mock_server(2);
+    let get_nfe = |sampler: &str| -> f64 {
+        let body = format!(
+            r#"{{"text":"ab{}cd","sampler":"{sampler}","k":5,"seed":9}}"#,
+            "_".repeat(20)
+        );
+        let (code, resp) = http_post(&addr, "/v1/infill", &body).unwrap();
+        assert_eq!(code, 200, "{resp}");
+        Json::parse(&resp)
+            .unwrap()
+            .get("model_nfe")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let seq = get_nfe("sequential");
+    let assd = get_nfe("assd");
+    assert_eq!(seq, 20.0);
+    assert!(assd <= 20.0, "ASSD used {assd} NFE > sequential {seq}");
+}
+
+/// Real-engine smoke: full HTTP round trip through the XLA engine.
+#[test]
+fn real_engine_http_smoke() {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(artifacts).join("fwd_b1.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let metrics = Metrics::new();
+    let handle = asarm::coordinator::start_xla(
+        artifacts,
+        None,
+        SchedulerConfig::default(),
+        metrics.clone(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle, metrics, 2).unwrap();
+    let addr = server.serve_background();
+    let (code, resp) =
+        http_post(&addr, "/v1/infill", r#"{"text":"Tom went to the ____.","seed":1}"#).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    let nfe = j.get("model_nfe").unwrap().as_f64().unwrap();
+    assert!((1.0..=4.0).contains(&nfe), "nfe={nfe}");
+}

@@ -1,0 +1,90 @@
+//! Integration: the rust training loop through the AOT train_step artifact
+//! (requires `make artifacts`; skipped otherwise). Verifies the loss falls,
+//! checkpoints round-trip, and trained weights flow into the serving
+//! engine.
+
+use asarm::data::{pack_chunks, split_chunks, stories};
+use asarm::runtime::engine::TrainRunner;
+use asarm::runtime::XlaEngine;
+use asarm::train::{train, TrainConfig};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .join("train_step_b4.hlo.txt")
+        .exists()
+}
+
+#[test]
+fn train_step_reduces_loss_and_checkpoints() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let mut runner = TrainRunner::load(artifacts, 4).unwrap();
+    let chunks = pack_chunks(&stories::corpus(99, 600), runner.meta.seq_len);
+    let (train_chunks, val_chunks) = split_chunks(chunks, 0.1, 1);
+
+    let ckpt = std::env::temp_dir().join("asarm_itest_ckpt.bin");
+    let cfg = TrainConfig {
+        steps: 25,
+        lr_max: 5e-4,
+        warmup_steps: 3,
+        decay_steps: 25,
+        log_every: 5,
+        val_every: 0,
+        checkpoint: Some(ckpt.clone()),
+        ..Default::default()
+    };
+    let logs = train(&mut runner, &train_chunks, &val_chunks, &cfg, None).unwrap();
+    let first = logs.first().unwrap().loss;
+    let last = logs.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last} did not fall");
+    assert!(last.is_finite());
+
+    // Checkpoint round-trips and loads into the serving engine.
+    let theta = asarm::model::load_params(&ckpt, runner.meta.n_params).unwrap();
+    assert_eq!(theta.len(), runner.meta.n_params);
+    assert_eq!(theta, runner.theta);
+    let engine = XlaEngine::load(artifacts, Some(&ckpt)).unwrap();
+    assert_eq!(engine.params(), &theta[..]);
+}
+
+#[test]
+fn validation_nll_drops_with_training() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let mut runner = TrainRunner::load(artifacts, 4).unwrap();
+    let chunks = pack_chunks(&stories::corpus(98, 600), runner.meta.seq_len);
+    let (train_chunks, val_chunks) = split_chunks(chunks, 0.1, 2);
+    let mut val_engine = XlaEngine::load(artifacts, None).unwrap();
+
+    let cfg = TrainConfig {
+        steps: 21,
+        lr_max: 5e-4,
+        warmup_steps: 3,
+        decay_steps: 21,
+        log_every: 10,
+        val_every: 20,
+        val_batches: 3,
+        checkpoint: None,
+        ..Default::default()
+    };
+    let logs = train(
+        &mut runner,
+        &train_chunks,
+        &val_chunks,
+        &cfg,
+        Some(&mut val_engine),
+    )
+    .unwrap();
+    let vals: Vec<f64> = logs.iter().filter_map(|l| l.val_nll_per_token).collect();
+    assert!(vals.len() >= 2, "need at least two validation points");
+    assert!(
+        vals.last().unwrap() < vals.first().unwrap(),
+        "val NLL did not improve: {vals:?}"
+    );
+}
