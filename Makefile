@@ -1,0 +1,39 @@
+# asarm build/verify entry points.
+#
+# `make verify` is the gate every PR must pass: the tier-1 build + tests
+# (ROADMAP.md) plus the documentation surface — rustdoc with warnings
+# denied and rustfmt in check mode — so docs and formatting cannot rot.
+
+.PHONY: all build test doc fmt verify artifacts models bench
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Docs are part of the verify path: broken intra-doc links or malformed
+# rustdoc fail the build.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+fmt:
+	cargo fmt --check
+
+verify: build test doc fmt
+
+# Python runs exactly once: AOT-lower the AS-ARM (Pallas kernels) to HLO
+# text artifacts consumed by the rust runtime.
+artifacts:
+	python3 python/compile/aot.py --out-dir artifacts
+
+# Train the stories checkpoint the examples and serve_e2e load.
+models:
+	cargo run --release -- train --artifacts artifacts --corpus stories \
+		--out artifacts/ckpt_stories_ft.bin
+
+bench:
+	cargo bench --bench perf_coordinator
+	cargo bench --bench perf_engine

@@ -1,4 +1,4 @@
-//! END-TO-END serving driver (the DESIGN.md deliverable): start the full
+//! END-TO-END serving driver (see docs/ARCHITECTURE.md): start the full
 //! coordinator (XLA engine + continuous batcher + HTTP server) in-process,
 //! fire a concurrent batched workload of real infilling requests over HTTP,
 //! and report latency/throughput/NFE — the paper's serving claim exercised
@@ -8,13 +8,16 @@
 //!     make artifacts && make models
 //!     cargo run --release --example serve_e2e
 //!
-//! Env: ASARM_E2E_REQS (default 24), ASARM_E2E_CONC (default 6).
+//! Env: ASARM_E2E_REQS (default 24), ASARM_E2E_CONC (default 6),
+//!      ASARM_E2E_REPLICAS (default 2 — engine replicas behind the shared
+//!      admission queue; each replica loads its own copy of the model).
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use asarm::coordinator::http::{http_get, http_post, HttpServer};
 use asarm::coordinator::{self, Metrics, SchedulerConfig};
+use asarm::runtime::PoolConfig;
 use asarm::data::stories;
 use asarm::util::json::Json;
 use asarm::util::rng::Rng;
@@ -36,12 +39,17 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(6);
+    let replicas: usize = std::env::var("ASARM_E2E_REPLICAS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
 
     // --- full stack, in-process ---
     let metrics = Metrics::new();
     let handle = coordinator::start_xla(
         artifacts,
         Some(ckpt),
+        PoolConfig { replicas },
         SchedulerConfig {
             max_batch: 4,
             ..Default::default()
@@ -50,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     );
     let server = HttpServer::bind("127.0.0.1:0", handle, metrics.clone(), conc + 2)?;
     let addr = server.serve_background();
-    println!("coordinator serving on http://{addr}");
+    println!("coordinator serving on http://{addr} ({replicas} engine replicas)");
 
     let (code, body) = http_get(&addr, "/healthz")?;
     anyhow::ensure!(code == 200, "healthz failed: {body}");
@@ -147,6 +155,8 @@ fn main() -> anyhow::Result<()> {
     );
     let (_, m) = http_get(&addr, "/metrics")?;
     println!("\n/metrics: {m}");
+    let (_, r) = http_get(&addr, "/replicas")?;
+    println!("/replicas: {r}");
     println!("\nE2E OK: all layers composed (Pallas->HLO->PJRT->ASSD->batcher->HTTP).");
     Ok(())
 }

@@ -5,7 +5,7 @@
 //! only in the ordering protocol sigma ~ s(·|m): the Eq.-4 lattice (2^N
 //! queries) vs unrestricted permutations (N! queries). The paper finds the
 //! lattice trains better (less capacity diluted over factorization paths).
-//! We log teacher-forced validation NLL per token (DESIGN.md §5's stable
+//! We log teacher-forced validation NLL per token (docs/ARCHITECTURE.md's stable
 //! stand-in for the paper's generation-metric curves).
 //!
 //! Run: `cargo bench --bench fig3_ablation`   (ASARM_ABL_STEPS to scale)

@@ -1,17 +1,52 @@
-//! Perf bench (L3): coordinator throughput under concurrent load on a mock
-//! engine — isolates scheduler/batcher overhead from XLA compute, and
-//! ablates the continuous-batching policy (max_batch). Feeds
-//! EXPERIMENTS.md §Perf.
+//! Perf bench (L3): coordinator throughput under concurrent load on mock
+//! engines — isolates scheduler/batcher overhead from XLA compute, and
+//! ablates the two scaling axes: the continuous-batching policy
+//! (max_batch, per worker) and the engine-pool width (replicas). Feeds
+//! the perf notes in docs/ARCHITECTURE.md.
 //!
 //! Run: `cargo bench --bench perf_coordinator`
 
 use std::time::Instant;
 
-use asarm::coordinator::scheduler::{spawn, SchedulerConfig};
+use asarm::coordinator::scheduler::{spawn_pool, SchedulerConfig};
 use asarm::coordinator::{InfillRequest, Metrics};
 use asarm::runtime::mock::MockEngine;
-use asarm::runtime::Engine;
+use asarm::runtime::{Engine, EnginePool, PoolConfig};
 use asarm::util::bench::Table;
+
+/// Drive `n_requests` through a fresh pool; returns (wall seconds, metrics).
+fn run_load(replicas: usize, max_batch: usize, n_requests: usize) -> (f64, Metrics) {
+    let metrics = Metrics::new();
+    // Same seed per replica: share-nothing copies of one model.
+    let pool = EnginePool::from_fn(PoolConfig { replicas }, |_id| {
+        Ok(Box::new(MockEngine::new(7, 64, 258, 1.0)) as Box<dyn Engine>)
+    });
+    let handle = spawn_pool(
+        pool,
+        SchedulerConfig {
+            max_batch,
+            idle_poll: std::time::Duration::from_millis(1),
+        },
+        metrics.clone(),
+    );
+    // Submit all requests up front (closed-loop batch of open-loop work).
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            handle
+                .submit(InfillRequest {
+                    text: format!("{:02}____________{:02}", i % 100, i % 100),
+                    seed: i as u64,
+                    ..Default::default()
+                })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    (t0.elapsed().as_secs_f64(), metrics)
+}
 
 fn main() -> anyhow::Result<()> {
     let n_requests: usize = std::env::var("ASARM_BENCH_REQS")
@@ -19,7 +54,8 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(64);
 
-    let mut table = Table::new(&[
+    // --- axis 1: batching policy, single replica ---
+    let mut batch_table = Table::new(&[
         "max_batch",
         "req/s",
         "p50 (ms)",
@@ -27,38 +63,12 @@ fn main() -> anyhow::Result<()> {
         "mean occupancy",
     ]);
     for &max_batch in &[1usize, 2, 4, 8] {
-        let metrics = Metrics::new();
-        let m2 = metrics.clone();
-        let handle = spawn(
-            move || Ok(Box::new(MockEngine::new(7, 64, 258, 1.0)) as Box<dyn Engine>),
-            SchedulerConfig {
-                max_batch,
-                idle_poll: std::time::Duration::from_millis(1),
-            },
-            m2,
-        );
-        // Submit all requests up front (closed-loop batch of open-loop work).
-        let t0 = Instant::now();
-        let rxs: Vec<_> = (0..n_requests)
-            .map(|i| {
-                handle
-                    .submit(InfillRequest {
-                        text: format!("{:02}____________{:02}", i % 100, i % 100),
-                        seed: i as u64,
-                        ..Default::default()
-                    })
-                    .unwrap()
-            })
-            .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
+        let (wall, metrics) = run_load(1, max_batch, n_requests);
         let j = metrics.snapshot_json();
         let p50 = j.get("latency_p50_s").unwrap().as_f64().unwrap() * 1e3;
         let p99 = j.get("latency_p99_s").unwrap().as_f64().unwrap() * 1e3;
         let occ = j.get("mean_batch_occupancy").unwrap().as_f64().unwrap();
-        table.row(&[
+        batch_table.row(&[
             format!("{max_batch}"),
             format!("{:.1}", n_requests as f64 / wall),
             format!("{p50:.2}"),
@@ -67,7 +77,29 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("\n=== perf_coordinator: scheduler throughput (mock engine) ===");
-    table.print();
+    batch_table.print();
     println!("(batching amortizes per-iteration scheduling; occupancy ~max_batch when saturated)");
+
+    // --- axis 2: engine-pool width, fixed per-worker batching ---
+    let mut pool_table = Table::new(&["replicas", "req/s", "speedup", "p99 (ms)"]);
+    let mut base_rps = 0.0;
+    for &replicas in &[1usize, 4] {
+        let (wall, metrics) = run_load(replicas, 4, n_requests);
+        let rps = n_requests as f64 / wall;
+        if replicas == 1 {
+            base_rps = rps;
+        }
+        let j = metrics.snapshot_json();
+        let p99 = j.get("latency_p99_s").unwrap().as_f64().unwrap() * 1e3;
+        pool_table.row(&[
+            format!("{replicas}"),
+            format!("{rps:.1}"),
+            format!("{:.2}x", rps / base_rps),
+            format!("{p99:.2}"),
+        ]);
+    }
+    println!("\n=== perf_coordinator: engine-pool sweep (max_batch=4) ===");
+    pool_table.print();
+    println!("(replicas scale the forward compute across cores; shared admission queue keeps them fed)");
     Ok(())
 }

@@ -1,6 +1,6 @@
 //! Perf bench (L3/L2 boundary): forward latency vs batch size, mask
 //! construction cost (full rebuild vs incremental update), and literal
-//! upload overhead. Feeds EXPERIMENTS.md §Perf.
+//! upload overhead. Feeds the perf notes in docs/ARCHITECTURE.md.
 //!
 //! Run: `cargo bench --bench perf_engine`
 

@@ -4,7 +4,7 @@
 //! samplers Sequential / ASSD(N-Gram) / ASSD(Self); columns Gen PPL,
 //! Entropy, Model NFE, Aux NFE, Time.
 //!
-//! Our setup (DESIGN.md §5): packed synthetic-prose chunks of 128 tokens,
+//! Our setup (docs/ARCHITECTURE.md): packed synthetic-prose chunks of 128 tokens,
 //! 95% masked, k = 5, FT checkpoint; the judge is the same FT model's
 //! one-pass joint density (fixed across samplers). Scale with
 //! ASARM_BENCH_SEQS (default 8).

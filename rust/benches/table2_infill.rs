@@ -3,7 +3,7 @@
 //! Paper setup: blank the middle 1 (of 5) or middle 3 (of 5) sentences;
 //! models GPT2-S / SEDD / MDLM / DiffuGPT / XLNet-OTS / XLNet-FT.
 //!
-//! Ours (DESIGN.md §5): synthetic 5-sentence stories; baselines
+//! Ours (docs/ARCHITECTURE.md): synthetic 5-sentence stories; baselines
 //! re-implemented as algorithms over our AS-ARM checkpoints —
 //!   AR (left->right)   GPT-style: left context only, sequential decode
 //!   Diffusion-32/64    MDLM-style conditional-independence unmasking

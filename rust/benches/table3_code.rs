@@ -3,7 +3,7 @@
 //! Paper setup: HumanEval single-line infilling, XLNet-Code (110M, 15B
 //! code tokens) 38.59 pass@1 vs DiffuLLaMA (6.7B) 40.68.
 //!
-//! Ours (DESIGN.md §5): the expression mini-language — blank one interior
+//! Ours (docs/ARCHITECTURE.md): the expression mini-language — blank one interior
 //! assignment line; a completion passes iff the reassembled program prints
 //! the reference value (functional judging, like HumanEval). Models: the
 //! expr-trained AS-ARM with ASSD (k=15) vs the same checkpoint driven by

@@ -2,13 +2,14 @@
 //!
 //! Routes:
 //!   POST /v1/infill   — InfillRequest JSON -> InfillResponse JSON
-//!   GET  /metrics     — metrics snapshot JSON
+//!   GET  /metrics     — pool-aggregate metrics snapshot JSON
+//!   GET  /replicas    — per-replica stats JSON array (id, state, counters)
 //!   GET  /healthz     — liveness
 //!
 //! Connections are handled on the thread pool; each request round-trips
-//! through the scheduler handle (the engine itself stays on its own
-//! thread). Connection: close semantics (one request per connection) keeps
-//! the parser simple; the bench client follows suit.
+//! through the scheduler handle (the engines themselves stay on their
+//! worker threads). Connection: close semantics (one request per
+//! connection) keeps the parser simple; the bench client follows suit.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -137,6 +138,9 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
         ("GET", "/healthz") => write_response(&mut stream, 200, "OK", r#"{"status":"ok"}"#),
         ("GET", "/metrics") => {
             write_response(&mut stream, 200, "OK", &metrics.snapshot_json().to_string())
+        }
+        ("GET", "/replicas") => {
+            write_response(&mut stream, 200, "OK", &handle.replicas_json().to_string())
         }
         ("POST", "/v1/infill") => {
             let run = || -> Result<String> {

@@ -1,7 +1,18 @@
 //! Serving metrics: request counts, latency percentiles, NFE totals,
-//! acceptance rates, throughput. Shared between the scheduler thread and
+//! acceptance rates, throughput. Shared between the scheduler workers and
 //! the HTTP workers; exported as JSON at GET /metrics.
+//!
+//! Two granularities:
+//!
+//! * [`Metrics`] — the POOL-LEVEL aggregate. Every scheduler worker records
+//!   into the same shared instance, so totals and the latency histogram
+//!   are exact across the whole pool (no post-hoc histogram merging).
+//! * [`ReplicaStats`] — lock-free per-replica counters (one per scheduler
+//!   worker), exported at GET /replicas. Counter invariant, asserted by
+//!   the pool integration tests: the sum of every `ReplicaStats` counter
+//!   equals the corresponding aggregate `Metrics` counter.
 
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -120,6 +131,130 @@ impl Metrics {
     }
 }
 
+/// Lifecycle of one scheduler worker / engine replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Worker spawned; engine not yet provisioned.
+    Starting,
+    /// Engine loaded; draining the admission queue.
+    Running,
+    /// Engine provisioning failed; worker exited without serving.
+    Failed,
+    /// Worker drained its slots and exited cleanly.
+    Stopped,
+}
+
+impl ReplicaState {
+    fn as_str(self) -> &'static str {
+        match self {
+            ReplicaState::Starting => "starting",
+            ReplicaState::Running => "running",
+            ReplicaState::Failed => "failed",
+            ReplicaState::Stopped => "stopped",
+        }
+    }
+}
+
+/// Per-replica serving counters (lock-free; one instance per scheduler
+/// worker, shared with every [`super::scheduler::SchedulerHandle`] clone).
+pub struct ReplicaStats {
+    /// Replica id (= worker index, = factory argument).
+    pub id: usize,
+    state: AtomicU8,
+    requests: AtomicU64,
+    failures: AtomicU64,
+    tokens_generated: AtomicU64,
+    model_nfe: AtomicU64,
+    batch_iterations: AtomicU64,
+    batch_occupancy_sum: AtomicU64,
+}
+
+impl ReplicaStats {
+    pub fn new(id: usize) -> ReplicaStats {
+        ReplicaStats {
+            id,
+            state: AtomicU8::new(ReplicaState::Starting as u8),
+            requests: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            model_nfe: AtomicU64::new(0),
+            batch_iterations: AtomicU64::new(0),
+            batch_occupancy_sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn set_state(&self, s: ReplicaState) {
+        self.state.store(s as u8, Ordering::Release);
+    }
+
+    pub fn state(&self) -> ReplicaState {
+        match self.state.load(Ordering::Acquire) {
+            x if x == ReplicaState::Starting as u8 => ReplicaState::Starting,
+            x if x == ReplicaState::Running as u8 => ReplicaState::Running,
+            x if x == ReplicaState::Failed as u8 => ReplicaState::Failed,
+            _ => ReplicaState::Stopped,
+        }
+    }
+
+    pub fn record_request(&self, tokens: u64, model_nfe: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
+        self.model_nfe.fetch_add(model_nfe, Ordering::Relaxed);
+    }
+
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch_iteration(&self, occupancy: usize) {
+        self.batch_iterations.fetch_add(1, Ordering::Relaxed);
+        self.batch_occupancy_sum
+            .fetch_add(occupancy as u64, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn failures(&self) -> u64 {
+        self.failures.load(Ordering::Relaxed)
+    }
+
+    pub fn tokens_generated(&self) -> u64 {
+        self.tokens_generated.load(Ordering::Relaxed)
+    }
+
+    pub fn model_nfe(&self) -> u64 {
+        self.model_nfe.load(Ordering::Relaxed)
+    }
+
+    pub fn batch_iterations(&self) -> u64 {
+        self.batch_iterations.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        let iters = self.batch_iterations.load(Ordering::Relaxed);
+        let occ = if iters > 0 {
+            self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / iters as f64
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("replica", Json::num(self.id as f64)),
+            ("state", Json::str(self.state().as_str())),
+            ("requests", Json::num(self.requests() as f64)),
+            ("failures", Json::num(self.failures() as f64)),
+            (
+                "tokens_generated",
+                Json::num(self.tokens_generated() as f64),
+            ),
+            ("model_nfe", Json::num(self.model_nfe() as f64)),
+            ("batch_iterations", Json::num(iters as f64)),
+            ("mean_batch_occupancy", Json::num(occ)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +272,26 @@ mod tests {
         assert_eq!(j.get("model_nfe").unwrap().as_f64(), Some(75.0));
         let ar = j.get("acceptance_rate").unwrap().as_f64().unwrap();
         assert!((ar - 0.75).abs() < 1e-9);
+        assert_eq!(j.get("mean_batch_occupancy").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn replica_stats_counts_and_states() {
+        let r = ReplicaStats::new(2);
+        assert_eq!(r.state(), ReplicaState::Starting);
+        r.set_state(ReplicaState::Running);
+        r.record_request(10, 4);
+        r.record_request(6, 3);
+        r.record_failure();
+        r.record_batch_iteration(3);
+        r.record_batch_iteration(1);
+        let j = r.snapshot_json();
+        assert_eq!(j.get("replica").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("state").unwrap().as_str(), Some("running"));
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("failures").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("tokens_generated").unwrap().as_f64(), Some(16.0));
+        assert_eq!(j.get("model_nfe").unwrap().as_f64(), Some(7.0));
         assert_eq!(j.get("mean_batch_occupancy").unwrap().as_f64(), Some(2.0));
     }
 

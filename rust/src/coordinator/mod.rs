@@ -1,9 +1,16 @@
 //! Layer-3 coordinator: the serving system around the AS-ARM.
 //!
-//! * [`scheduler`] — continuous-batching decode loop owning the engine
+//! * [`scheduler`] — engine-pool front: one shared MPMC admission queue
+//!   drained by N continuous-batching workers, each owning one replica
 //! * [`request`] — the infill protocol (JSON codec)
 //! * [`http`] — HTTP/1.1 front end over the threadpool substrate
-//! * [`metrics`] — counters/latency/acceptance, exported at /metrics
+//! * [`metrics`] — aggregate counters/latency/acceptance (GET /metrics)
+//!   and per-replica stats (GET /replicas)
+//!
+//! Request lifecycle (full diagram in docs/ARCHITECTURE.md): HTTP
+//! connection -> JSON decode -> admission queue -> first free scheduler
+//! worker -> decode state machine batched on that worker's engine ->
+//! response back over the per-request reply channel.
 
 pub mod http;
 pub mod metrics;
@@ -12,27 +19,21 @@ pub mod scheduler;
 
 use std::path::Path;
 
-use crate::runtime::{Engine, XlaEngine};
+use crate::runtime::{EnginePool, PoolConfig};
 
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ReplicaState, ReplicaStats};
 pub use request::{InfillRequest, InfillResponse, SamplerKind};
 pub use scheduler::{SchedulerConfig, SchedulerHandle};
 
-/// Convenience: spawn a scheduler backed by the real XLA engine loading
-/// `artifacts_dir` (and optional checkpoint).
+/// Convenience: spawn a scheduler pool backed by real XLA engines, each
+/// replica independently loading `artifacts_dir` (and optional checkpoint).
 pub fn start_xla(
     artifacts_dir: impl AsRef<Path>,
     params_path: Option<std::path::PathBuf>,
+    pool: PoolConfig,
     cfg: SchedulerConfig,
     metrics: Metrics,
 ) -> SchedulerHandle {
     let dir = artifacts_dir.as_ref().to_path_buf();
-    scheduler::spawn(
-        move || {
-            let e = XlaEngine::load(&dir, params_path.as_deref())?;
-            Ok(Box::new(e) as Box<dyn Engine>)
-        },
-        cfg,
-        metrics,
-    )
+    scheduler::spawn_pool(EnginePool::xla(pool, dir, params_path), cfg, metrics)
 }

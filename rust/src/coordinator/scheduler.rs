@@ -1,40 +1,59 @@
 //! The scheduler: continuous (iteration-level) batching of decode state
-//! machines over a single engine thread.
+//! machines over a POOL of engine worker threads.
 //!
-//! The PJRT client is single-threaded, so the scheduler OWNS the engine on
-//! a dedicated thread. Requests arrive over a channel; each becomes a
-//! decode state machine occupying a batch slot. Every loop iteration the
-//! scheduler gathers each active machine's pending forward request,
-//! executes ONE batched forward, scatters the logits back, and retires
-//! finished machines — so a slot frees the moment its request completes and
-//! a queued request joins mid-flight (vLLM-style continuous batching).
-//! Draft-phase and verify-phase sequences can share a batch: both phases
-//! use the same fwd executable and differ only in their per-slot masks.
+//! The PJRT client is single-threaded, so each engine is OWNED by one
+//! dedicated scheduler worker (constructed on that thread via
+//! [`EnginePool`]). Requests arrive on one shared MPMC admission queue
+//! ([`crate::util::mpmc`]) drained by all workers: whichever worker has a
+//! free batch slot first picks up the next job, so a slow or dead replica
+//! never stalls admission. Within a worker the loop is unchanged vLLM-style
+//! continuous batching: each request becomes a decode state machine
+//! occupying a batch slot; every iteration the worker gathers each active
+//! machine's pending forward, executes ONE batched forward on its own
+//! replica, scatters the logits back, and retires finished machines — a
+//! slot frees the moment its request completes and a queued request joins
+//! mid-flight. Draft-phase and verify-phase ASSD sequences still share a
+//! batch (both phases use the same fwd executable and differ only in their
+//! per-slot masks), so the paper's NFE accounting is preserved per worker.
+//!
+//! Aggregate serving metrics ([`Metrics`]) are shared by all workers;
+//! per-replica counters ([`ReplicaStats`]) are exported per worker (GET
+//! /replicas). Shutdown: dropping every [`SchedulerHandle`] closes the
+//! queue and workers drain their remaining slots; conversely, if every
+//! worker dies (e.g. all replicas fail to provision), the LAST one out
+//! closes the queue and fails any still-queued jobs so clients get an
+//! error instead of a hang.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::data::masking::lattice_sigma;
 use crate::decode::assd::{AssdMachine, DraftSource};
 use crate::decode::diffusion::DiffusionMachine;
 use crate::decode::sequential::SequentialMachine;
 use crate::decode::{DecodeMachine, DecodeOutcome};
-use crate::data::masking::lattice_sigma;
 use crate::model::mask::Ordering;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EnginePool, PoolConfig};
 use crate::tokenizer::{ByteTokenizer, MASK};
+use crate::util::json::Json;
+use crate::util::mpmc;
 use crate::util::rng::Rng;
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ReplicaState, ReplicaStats};
 use super::request::{InfillRequest, InfillResponse, SamplerKind};
 
+/// Per-worker batching knobs (each pool worker runs its own copy).
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
-    /// Max sequences decoded concurrently (batch slots).
+    /// Max sequences decoded concurrently PER WORKER (batch slots). The
+    /// pool's total in-flight capacity is `replicas * max_batch`.
     pub max_batch: usize,
-    /// How long to block waiting for work when idle.
+    /// How long an idle worker blocks on the admission queue before
+    /// re-polling (bounds shutdown latency, not throughput).
     pub idle_poll: Duration,
 }
 
@@ -52,24 +71,18 @@ struct Job {
     reply: mpsc::Sender<Result<InfillResponse>>,
 }
 
-/// Cloneable handle for submitting requests to the scheduler thread.
+/// Cloneable handle for submitting requests to the worker pool.
 #[derive(Clone)]
 pub struct SchedulerHandle {
-    tx: mpsc::Sender<Job>,
+    tx: mpmc::Sender<Job>,
+    replicas: Arc<Vec<ReplicaStats>>,
 }
 
 impl SchedulerHandle {
     /// Blocking round-trip: submit and await the response.
     pub fn infill(&self, request: InfillRequest) -> Result<InfillResponse> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Job {
-                request,
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("scheduler shut down"))?;
-        reply_rx
-            .recv()
+        let rx = self.submit(request)?;
+        rx.recv()
             .map_err(|_| anyhow!("scheduler dropped request"))?
     }
 
@@ -84,6 +97,16 @@ impl SchedulerHandle {
             .map_err(|_| anyhow!("scheduler shut down"))?;
         Ok(reply_rx)
     }
+
+    /// Per-replica serving counters, indexed by replica id.
+    pub fn replica_stats(&self) -> &[ReplicaStats] {
+        &self.replicas
+    }
+
+    /// JSON array of per-replica snapshots (the GET /replicas payload).
+    pub fn replicas_json(&self) -> Json {
+        Json::Arr(self.replicas.iter().map(|r| r.snapshot_json()).collect())
+    }
 }
 
 struct Slot {
@@ -94,39 +117,106 @@ struct Slot {
     n_targets: usize,
 }
 
-/// Spawn the scheduler thread. `factory` constructs the engine ON the
-/// scheduler thread (the XLA engine is not Send).
+/// Spawn a single-replica scheduler. `factory` constructs the engine ON
+/// the worker thread (the XLA engine is not Send). Kept as the simple API
+/// for tests and one-shot CLI use; [`spawn_pool`] is the general form.
 pub fn spawn<F>(factory: F, cfg: SchedulerConfig, metrics: Metrics) -> SchedulerHandle
 where
     F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
 {
-    let (tx, rx) = mpsc::channel::<Job>();
-    thread::Builder::new()
-        .name("scheduler".into())
-        .spawn(move || {
-            let engine = match factory() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("scheduler: engine init failed: {e:#}");
-                    // Drain and fail all jobs.
-                    while let Ok(job) = rx.recv() {
-                        let _ = job.reply.send(Err(anyhow!("engine init failed")));
-                    }
-                    return;
-                }
-            };
-            run_loop(engine.as_ref(), rx, cfg, metrics);
-        })
-        .expect("spawn scheduler");
-    SchedulerHandle { tx }
+    let cell = Mutex::new(Some(factory));
+    spawn_pool(
+        EnginePool::from_fn(PoolConfig { replicas: 1 }, move |_| {
+            let f = cell
+                .lock()
+                .unwrap()
+                .take()
+                .expect("single-replica factory invoked twice");
+            f()
+        }),
+        cfg,
+        metrics,
+    )
 }
 
-fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, metrics: Metrics) {
+/// Spawn one scheduler worker per pool replica, all draining one shared
+/// admission queue. Each worker provisions its engine on its own thread
+/// and runs the continuous-batching loop against that replica alone.
+pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> SchedulerHandle {
+    let n_workers = pool.replicas();
+    let (tx, rx) = mpmc::channel::<Job>();
+    let replicas: Arc<Vec<ReplicaStats>> =
+        Arc::new((0..n_workers).map(ReplicaStats::new).collect());
+    let live = Arc::new(AtomicUsize::new(n_workers));
+    let pool = Arc::new(pool);
+    for id in 0..n_workers {
+        let rx = rx.clone();
+        let metrics = metrics.clone();
+        let replicas = Arc::clone(&replicas);
+        let live = Arc::clone(&live);
+        let pool = Arc::clone(&pool);
+        thread::Builder::new()
+            .name(format!("scheduler-{id}"))
+            .spawn(move || {
+                // The guard must cover panics too (a panicking worker that
+                // skipped the last-one-out bookkeeping would leave queued
+                // clients blocked forever), hence Drop rather than a
+                // trailing call.
+                let _exit = WorkerExitGuard {
+                    live,
+                    rx: rx.clone(),
+                };
+                let stats = &replicas[id];
+                match pool.provision(id) {
+                    Ok(engine) => {
+                        stats.set_state(ReplicaState::Running);
+                        run_worker(engine.as_ref(), &rx, cfg, &metrics, stats);
+                        stats.set_state(ReplicaState::Stopped);
+                    }
+                    Err(e) => {
+                        eprintln!("scheduler-{id}: engine init failed: {e:#}");
+                        stats.set_state(ReplicaState::Failed);
+                    }
+                }
+            })
+            .expect("spawn scheduler worker");
+    }
+    SchedulerHandle { tx, replicas }
+}
+
+/// Last-worker-out bookkeeping, panic-safe via Drop: when the final worker
+/// exits (cleanly or by unwinding), close the admission queue and fail
+/// whatever is still queued — otherwise those clients would block forever
+/// on replies that can never come.
+struct WorkerExitGuard {
+    live: Arc<AtomicUsize>,
+    rx: mpmc::Receiver<Job>,
+}
+
+impl Drop for WorkerExitGuard {
+    fn drop(&mut self) {
+        if self.live.fetch_sub(1, AtomicOrdering::AcqRel) == 1 {
+            self.rx.close();
+            while let Ok(job) = self.rx.try_recv() {
+                let _ = job.reply.send(Err(anyhow!("engine pool shut down")));
+            }
+        }
+    }
+}
+
+/// One worker's continuous-batching loop over its private engine replica.
+fn run_worker(
+    engine: &dyn Engine,
+    rx: &mpmc::Receiver<Job>,
+    cfg: SchedulerConfig,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+) {
     let n = engine.seq_len();
     let v = engine.vocab();
     let tok = ByteTokenizer::new();
     let mut slots: Vec<Slot> = Vec::new();
-    let mut channel_open = true;
+    let mut queue_open = true;
 
     // Reusable batch buffers.
     let max_b = cfg.max_batch;
@@ -134,24 +224,24 @@ fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, 
     let mut mh_buf = vec![0f32; max_b * n * n];
     let mut mg_buf = vec![0f32; max_b * n * n];
 
-    while channel_open || !slots.is_empty() {
-        // --- admission ---
-        while slots.len() < cfg.max_batch && channel_open {
+    while queue_open || !slots.is_empty() {
+        // --- admission: top up free slots from the shared queue ---
+        while slots.len() < cfg.max_batch && queue_open {
             let job = if slots.is_empty() {
                 match rx.recv_timeout(cfg.idle_poll) {
                     Ok(j) => j,
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        channel_open = false;
+                    Err(mpmc::RecvTimeoutError::Timeout) => break,
+                    Err(mpmc::RecvTimeoutError::Disconnected) => {
+                        queue_open = false;
                         break;
                     }
                 }
             } else {
                 match rx.try_recv() {
                     Ok(j) => j,
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        channel_open = false;
+                    Err(mpmc::TryRecvError::Empty) => break,
+                    Err(mpmc::TryRecvError::Disconnected) => {
+                        queue_open = false;
                         break;
                     }
                 }
@@ -169,6 +259,7 @@ fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, 
                 }
                 Err(e) => {
                     metrics.record_failure();
+                    stats.record_failure();
                     let _ = job.reply.send(Err(e));
                 }
             }
@@ -189,6 +280,7 @@ fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, 
             mg_buf[s * n * n..(s + 1) * n * n].copy_from_slice(req.mask_g);
         }
         metrics.record_batch_iteration(b);
+        stats.record_batch_iteration(b);
         let logits = match engine.forward(
             b,
             &toks_buf[..b * n],
@@ -197,9 +289,11 @@ fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, 
         ) {
             Ok(l) => l,
             Err(e) => {
-                // Engine failure: fail all active requests.
+                // Engine failure: fail this worker's active requests; the
+                // queue (and other replicas) keep serving.
                 for slot in slots.drain(..) {
                     metrics.record_failure();
+                    stats.record_failure();
                     let _ = slot.reply.send(Err(anyhow!("engine error: {e:#}")));
                 }
                 continue;
@@ -216,7 +310,8 @@ fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, 
                 let slot = slots.swap_remove(s);
                 let latency = slot.t0.elapsed().as_secs_f64();
                 let outcome = slot.machine.outcome();
-                let resp = outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
+                let resp =
+                    outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
                 metrics.record_request(
                     latency,
                     resp.n_generated as u64,
@@ -225,6 +320,7 @@ fn run_loop(engine: &dyn Engine, rx: mpsc::Receiver<Job>, cfg: SchedulerConfig, 
                     0,
                     0,
                 );
+                stats.record_request(resp.n_generated as u64, resp.model_nfe);
                 let _ = slot.reply.send(Ok(resp));
             } else {
                 s += 1;
@@ -362,6 +458,25 @@ mod tests {
         (h, metrics)
     }
 
+    fn mock_pool_handle(replicas: usize, max_batch: usize) -> (SchedulerHandle, Metrics) {
+        let metrics = Metrics::new();
+        // Every replica gets the SAME seed: replicas are share-nothing
+        // copies of one model, so outputs must not depend on which worker
+        // serves a request.
+        let pool = EnginePool::from_fn(PoolConfig { replicas }, |_id| {
+            Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>)
+        });
+        let h = spawn_pool(
+            pool,
+            SchedulerConfig {
+                max_batch,
+                idle_poll: Duration::from_millis(5),
+            },
+            metrics.clone(),
+        );
+        (h, metrics)
+    }
+
     #[test]
     fn serves_single_request() {
         let (h, metrics) = mock_handle(2);
@@ -467,5 +582,64 @@ mod tests {
             .text
         };
         assert_eq!(get(5), get(5));
+    }
+
+    #[test]
+    fn pool_output_matches_single_replica_given_seed() {
+        // Replicas are share-nothing copies of the same model, so WHICH
+        // worker serves a request must not change the sampled text.
+        let (single, _) = mock_pool_handle(1, 1);
+        let (pooled, _) = mock_pool_handle(3, 1);
+        let req = |seed| InfillRequest {
+            text: "xy____zw".into(),
+            seed,
+            ..Default::default()
+        };
+        for seed in [1u64, 9, 42] {
+            assert_eq!(
+                single.infill(req(seed)).unwrap().text,
+                pooled.infill(req(seed)).unwrap().text
+            );
+        }
+    }
+
+    #[test]
+    fn pool_serves_concurrent_load() {
+        let (h, metrics) = mock_pool_handle(2, 2);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                h.submit(InfillRequest {
+                    text: "ab______".into(),
+                    seed: i,
+                    ..Default::default()
+                })
+                .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.n_generated, 6);
+        }
+        assert_eq!(metrics.requests(), 16);
+        assert_eq!(h.replica_stats().len(), 2);
+        let by_replica: u64 = h.replica_stats().iter().map(|r| r.requests()).sum();
+        assert_eq!(by_replica, 16);
+    }
+
+    #[test]
+    fn all_replicas_failing_errors_instead_of_hanging() {
+        let metrics = Metrics::new();
+        let pool = EnginePool::from_fn(PoolConfig { replicas: 2 }, |id| {
+            bail!("replica {id} down")
+        });
+        let h = spawn_pool(pool, SchedulerConfig::default(), metrics);
+        // Regardless of whether the workers have already exited (send
+        // fails) or exit after we queue (drain-and-fail), we get an error.
+        assert!(h
+            .infill(InfillRequest {
+                text: "ab__".into(),
+                ..Default::default()
+            })
+            .is_err());
     }
 }

@@ -1,5 +1,14 @@
 //! Data substrates: corpus generation, sequence packing, masking/ordering
 //! distributions.
+//!
+//! * [`stories`] — deterministic synthetic story/prose corpora (the
+//!   offline ROCStories substitute)
+//! * [`masking`] — the training-time distributions of the paper: mask
+//!   rate m ~ f(·), generation order sigma ~ s(·|m) under the lattice or
+//!   permutation protocol, and prompt-length sampling
+//!
+//! Plus [`pack_chunks`]/[`split_chunks`]: document packing into
+//! fixed-length token chunks and the deterministic train/val split.
 
 pub mod masking;
 pub mod stories;

@@ -1,4 +1,4 @@
-//! Synthetic story corpus (ROCStories substitute — DESIGN.md §5).
+//! Synthetic story corpus (ROCStories substitute — docs/ARCHITECTURE.md).
 //!
 //! A templated probabilistic grammar that emits five-sentence stories with
 //! consistent protagonists and a simple narrative arc (setup, goal, action,

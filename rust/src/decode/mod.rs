@@ -7,7 +7,8 @@
 //! single-sequence driver ([`run_machine`]) serves the simple API; the
 //! coordinator drives many machines through shared batched forwards
 //! (continuous batching) — the machines are agnostic to how their forwards
-//! are satisfied.
+//! are satisfied, or on which engine replica they run (see
+//! docs/ARCHITECTURE.md §Continuous-batching invariants).
 
 pub mod assd;
 pub mod diffusion;

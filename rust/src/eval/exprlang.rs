@@ -1,5 +1,5 @@
 //! Mini expression language — the HumanEval-infilling substitute
-//! (DESIGN.md §5, Table 3).
+//! (docs/ARCHITECTURE.md, Table 3).
 //!
 //! Programs are short straight-line integer programs:
 //!

@@ -1,6 +1,15 @@
-//! Evaluation substrates: ROUGE (Table 2), generative perplexity + entropy
-//! (Tables 1/4, Figs. 3/4), the expression mini-language judge (Table 3),
-//! and the shared experiment harness for the bench binaries.
+//! Evaluation substrates for the paper's tables and figures.
+//!
+//! * [`rouge`] — ROUGE-1/2/L f-measures for the infilling task (Table 2)
+//! * [`ppl`] — generative perplexity + entropy under a fixed density
+//!   model (Tables 1/4, Figs. 3/4)
+//! * [`exprlang`] — the expression mini-language generator + exact judge,
+//!   our offline stand-in for the code-generation benchmark (Table 3)
+//! * [`harness`] — shared workload construction and sampler drivers so
+//!   every bench binary scores decoders on identical inputs
+//!
+//! Everything here is engine-agnostic: benches run hermetically against
+//! [`crate::runtime::mock::MockEngine`] or against real artifacts.
 
 pub mod exprlang;
 pub mod harness;

@@ -3,7 +3,7 @@
 //!
 //! The paper judges generations with GPT-2 Large; offline we substitute the
 //! AS-ARM's own one-pass joint density under the left-to-right ordering as
-//! the judge (DESIGN.md §5) — any fixed density model supports the
+//! the judge (docs/ARCHITECTURE.md) — any fixed density model supports the
 //! sampler-vs-sampler comparisons of Tables 1/4, and the AS-ARM evaluates
 //! exact joints in a single forward (the paper's Sec. 4.2 capability, used
 //! here for evaluation as well as verification).

@@ -7,13 +7,16 @@
 //! * **Layer 1/2 (build-time python)** — `python/compile/`: Pallas masked
 //!   two-stream attention + fused xent kernels, the XLNet-style AS-ARM
 //!   model, AOT-lowered once to HLO text artifacts.
-//! * **Layer 3 (this crate)** — the serving system: PJRT runtime, mask
-//!   construction, the ASSD decoder family, a continuous-batching
-//!   coordinator with an HTTP front end, the rust training loop, and the
-//!   evaluation/benchmark harness reproducing every table and figure of
-//!   the paper.
+//! * **Layer 3 (this crate)** — the serving system: PJRT runtime with a
+//!   multi-replica engine pool, mask construction, the ASSD decoder
+//!   family, a continuous-batching coordinator (shared admission queue,
+//!   one worker per replica) with an HTTP front end, the rust training
+//!   loop, and the evaluation/benchmark harness reproducing every table
+//!   and figure of the paper.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+//! See README.md for how to run everything and docs/ARCHITECTURE.md for
+//! the serving architecture (request lifecycle, engine pool, batching
+//! invariants, NFE accounting).
 
 pub mod coordinator;
 pub mod data;

@@ -15,13 +15,14 @@ use asarm::coordinator::{self, InfillRequest, Metrics, SamplerKind, SchedulerCon
 use asarm::data::masking::{MaskRateSchedule, OrderProtocol, PromptDist};
 use asarm::data::{pack_chunks, split_chunks, stories};
 use asarm::runtime::engine::TrainRunner;
-use asarm::runtime::XlaEngine;
+use asarm::runtime::{PoolConfig, XlaEngine};
 use asarm::train::TrainConfig;
 use asarm::util::args::Args;
 use asarm::util::rng::Rng;
 
 const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
   serve  --artifacts DIR --params FILE --addr 127.0.0.1:8080 --max-batch 4
+         --replicas 1   (engine replicas, one scheduler worker each)
   train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
          --protocol lattice|permutation --prompt-lo F --prompt-hi F
          --out CKPT.bin --seed S
@@ -56,9 +57,11 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 fn cmd_serve(args: &Args) -> Result<()> {
     let metrics = Metrics::new();
     let params = args.opt("params").map(PathBuf::from);
+    let replicas = args.usize("replicas", 1);
     let handle = coordinator::start_xla(
         artifacts_dir(args),
         params,
+        PoolConfig { replicas },
         SchedulerConfig {
             max_batch: args.usize("max-batch", 4),
             ..Default::default()
@@ -68,8 +71,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str("addr", "127.0.0.1:8080");
     let server =
         coordinator::http::HttpServer::bind(&addr, handle, metrics, args.usize("workers", 8))?;
-    println!("serving on http://{}", server.addr);
-    println!("  POST /v1/infill   GET /metrics   GET /healthz");
+    println!(
+        "serving on http://{} ({replicas} engine replica{})",
+        server.addr,
+        if replicas == 1 { "" } else { "s" }
+    );
+    println!("  POST /v1/infill   GET /metrics   GET /replicas   GET /healthz");
     server.serve()
 }
 
@@ -159,6 +166,7 @@ fn cmd_infill(args: &Args) -> Result<()> {
     let handle = coordinator::start_xla(
         artifacts_dir(args),
         params,
+        PoolConfig::default(),
         SchedulerConfig::default(),
         metrics,
     );

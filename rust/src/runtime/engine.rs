@@ -31,17 +31,42 @@ pub struct XlaEngine {
 impl XlaEngine {
     /// Load the standard artifact set from a directory:
     /// model_meta.json, params file, fwd_b{B}.hlo.txt for each available B.
+    ///
+    /// Batch variants are DISCOVERED by scanning the directory for files
+    /// matching the `fwd_b{B}.hlo.txt` naming contract (B a positive
+    /// decimal integer; see docs/ARCHITECTURE.md §Artifact naming) rather
+    /// than probing a hard-coded variant set, so the compile pipeline can
+    /// emit any batch ladder without a rust-side change.
     pub fn load(artifacts_dir: impl AsRef<Path>, params_path: Option<&Path>) -> Result<XlaEngine> {
         let dir = artifacts_dir.as_ref();
         let meta = ModelMeta::load(dir.join("model_meta.json"))?;
         meta.validate()?;
         let client = super::cpu_client()?;
         let mut fwd = BTreeMap::new();
-        for b in [1usize, 2, 4, 8, 16] {
-            let p = dir.join(format!("fwd_b{b}.hlo.txt"));
-            if p.exists() {
-                fwd.insert(b, compile_artifact(&client, &p)?);
-            }
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifacts dir {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(b) = name
+                .strip_prefix("fwd_b")
+                .and_then(|rest| rest.strip_suffix(".hlo.txt"))
+            else {
+                continue;
+            };
+            let b: usize = match b.parse() {
+                Ok(b) if b > 0 => b,
+                // A stray near-miss (fwd_b4_old.hlo.txt, fwd_b4.copy.hlo.txt)
+                // must not take down the load — warn and move on.
+                _ => {
+                    eprintln!(
+                        "XlaEngine::load: ignoring '{name}' (batch variant is not a positive integer)"
+                    );
+                    continue;
+                }
+            };
+            fwd.insert(b, compile_artifact(&client, entry.path())?);
         }
         if fwd.is_empty() {
             bail!("no fwd_b*.hlo.txt artifacts in {}", dir.display());

@@ -8,12 +8,14 @@
 
 pub mod engine;
 pub mod mock;
+pub mod pool;
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
 pub use engine::{TrainOutput, XlaEngine};
+pub use pool::{EnginePool, PoolConfig};
 
 /// The forward interface the decoders run against.
 ///
@@ -22,9 +24,12 @@ pub use engine::{TrainOutput, XlaEngine};
 /// [batch, N, V].
 ///
 /// NOTE: deliberately NOT `Send` — the PJRT client is single-threaded
-/// (`Rc` internally). The coordinator owns the engine on one scheduler
-/// thread and serves concurrent requests through channels (see
-/// coordinator/).
+/// (`Rc` internally). Ownership transfer to a worker thread happens at
+/// CONSTRUCTION time instead: a scheduler worker invokes an
+/// [`pool::EnginePool`] factory (`Send + Sync`) on its own thread and owns
+/// the resulting engine for its lifetime. The coordinator serves
+/// concurrent requests to the worker(s) through the shared admission
+/// queue (see coordinator/).
 pub trait Engine {
     fn seq_len(&self) -> usize;
     fn vocab(&self) -> usize;

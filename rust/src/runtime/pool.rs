@@ -1,0 +1,137 @@
+//! Engine pool: N share-nothing model replicas behind one factory.
+//!
+//! The PJRT client is single-threaded (`Rc` internally), so an engine can
+//! never be *moved* between threads — replication instead transfers
+//! *construction*: the pool holds a thread-safe factory, and each scheduler
+//! worker invokes it ON its own thread, yielding a private engine whose
+//! PJRT client, compiled executables, and device-resident theta are all
+//! owned by that worker alone (share-nothing, mistral.rs-pipeline style).
+//! Scaling the pool therefore multiplies device memory: every replica keeps
+//! its own copy of theta resident.
+//!
+//! The pool itself performs no routing — that is the coordinator's job
+//! (one shared MPMC admission queue drained by all workers, see
+//! [`crate::coordinator::scheduler::spawn_pool`]). Keeping provisioning
+//! (here) separate from scheduling (coordinator) lets the decode and train
+//! layers reuse replica provisioning without pulling in the serving stack.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::{Engine, XlaEngine};
+
+/// Sizing knobs for an engine pool.
+///
+/// Documented invariants: replicas are fully independent (no weight
+/// sharing, no cross-replica batching); a request is served end-to-end by
+/// the single replica whose worker dequeued it.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Number of engine replicas (= scheduler worker threads). Each
+    /// replica loads its own copy of the model, so memory scales linearly;
+    /// values above the physical core count waste memory without adding
+    /// throughput. Clamped to >= 1.
+    pub replicas: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { replicas: 1 }
+    }
+}
+
+/// A pool of lazily constructed engine replicas.
+///
+/// `EnginePool` is `Send + Sync` even though the engines it produces are
+/// not: it stores only the factory. [`EnginePool::provision`] must be
+/// called on the thread that will own the resulting engine.
+pub struct EnginePool {
+    cfg: PoolConfig,
+    factory: Box<dyn Fn(usize) -> Result<Box<dyn Engine>> + Send + Sync>,
+}
+
+impl EnginePool {
+    /// Build a pool from an arbitrary replica factory. The factory is
+    /// called once per replica with the replica id (0..replicas), on the
+    /// worker thread that will own the engine.
+    pub fn from_fn<F>(cfg: PoolConfig, factory: F) -> EnginePool
+    where
+        F: Fn(usize) -> Result<Box<dyn Engine>> + Send + Sync + 'static,
+    {
+        EnginePool {
+            cfg,
+            factory: Box::new(factory),
+        }
+    }
+
+    /// A pool of XLA engines, each independently loading the AOT artifact
+    /// set from `artifacts_dir` (and optional checkpoint). Every replica
+    /// compiles its own executables and uploads its own theta.
+    pub fn xla(cfg: PoolConfig, artifacts_dir: PathBuf, params_path: Option<PathBuf>) -> EnginePool {
+        EnginePool::from_fn(cfg, move |_replica| {
+            let e = XlaEngine::load(&artifacts_dir, params_path.as_deref())?;
+            Ok(Box::new(e) as Box<dyn Engine>)
+        })
+    }
+
+    /// The pool's sizing config.
+    pub fn config(&self) -> PoolConfig {
+        self.cfg
+    }
+
+    /// Number of replicas this pool provisions (>= 1).
+    pub fn replicas(&self) -> usize {
+        self.cfg.replicas.max(1)
+    }
+
+    /// Construct replica `id`'s engine. Must run on the owning thread.
+    pub fn provision(&self, id: usize) -> Result<Box<dyn Engine>> {
+        (self.factory)(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockEngine;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn mock_pool(replicas: usize) -> (EnginePool, Arc<AtomicUsize>) {
+        let built = Arc::new(AtomicUsize::new(0));
+        let b2 = Arc::clone(&built);
+        let pool = EnginePool::from_fn(PoolConfig { replicas }, move |id| {
+            b2.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(MockEngine::new(id as u64, 8, 16, 1.0)) as Box<dyn Engine>)
+        });
+        (pool, built)
+    }
+
+    #[test]
+    fn provisions_independent_replicas() {
+        let (pool, built) = mock_pool(3);
+        assert_eq!(pool.replicas(), 3);
+        let a = pool.provision(0).unwrap();
+        let b = pool.provision(1).unwrap();
+        assert_eq!(built.load(Ordering::SeqCst), 2);
+        // Replicas are share-nothing: NFE counters do not alias.
+        let toks = vec![0u32; 8];
+        let mask = vec![0f32; 64];
+        a.forward(1, &toks, &mask, &mask).unwrap();
+        assert_eq!(a.nfe(), 1);
+        assert_eq!(b.nfe(), 0);
+    }
+
+    #[test]
+    fn zero_replicas_clamps_to_one() {
+        let (pool, _) = mock_pool(0);
+        assert_eq!(pool.replicas(), 1);
+    }
+
+    #[test]
+    fn pool_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<EnginePool>();
+    }
+}

@@ -3,7 +3,7 @@
 //! The paper finetunes XLNet with a 32k SentencePiece vocab; we substitute a
 //! byte-level vocabulary (256 bytes + MASK + PAD = 258) so the tokenizer is
 //! trivially identical between the python compile path and the rust request
-//! path (DESIGN.md §5). The ids mirror python/compile/config.py.
+//! path (docs/ARCHITECTURE.md). The ids mirror python/compile/config.py.
 
 pub const VOCAB: usize = 258;
 pub const MASK: u32 = 256;

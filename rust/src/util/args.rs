@@ -7,8 +7,11 @@ use std::collections::BTreeMap;
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First non-flag token (e.g. `serve` in `asarm serve --replicas 4`).
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
     pub flags: BTreeMap<String, String>,
+    /// Remaining non-flag tokens, in order.
     pub positional: Vec<String>,
 }
 

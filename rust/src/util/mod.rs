@@ -1,9 +1,19 @@
 //! Substrate utilities built in-repo (the image is offline; no rand /
-//! serde / clap / tokio / criterion / proptest — see DESIGN.md §4).
+//! serde / clap / tokio / criterion / proptest / crossbeam).
+//!
+//! * [`args`] — CLI parsing (subcommands + `--key value` flags)
+//! * [`bench`] — fixed-width result tables for the bench binaries
+//! * [`json`] — RFC 8259 parser/serializer (protocol + metrics + artifacts)
+//! * [`mpmc`] — multi-consumer channel (the pool's admission queue)
+//! * [`propcheck`] — tiny property-testing harness
+//! * [`rng`] — splitmix64/xoshiro-style deterministic RNG
+//! * [`stats`] — histograms, percentiles, summaries
+//! * [`threadpool`] — fixed worker pool (HTTP connections, load gen)
 
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod mpmc;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,271 @@
+//! MPMC channel substrate (no `crossbeam` offline).
+//!
+//! `std::sync::mpsc` is multi-producer/**single**-consumer: its `Receiver`
+//! cannot be shared, so a pool of scheduler workers cannot drain one queue
+//! with it (short of serializing every `recv` behind a mutex held across
+//! the blocking wait). This is a minimal multi-producer/multi-consumer
+//! queue built on `Mutex<VecDeque>` + `Condvar`: the lock is held only to
+//! push/pop, never while blocked waiting, so any worker can pick up the
+//! next job the moment it is enqueued.
+//!
+//! Close semantics mirror `mpsc` plus one addition the engine pool needs:
+//!
+//! * dropping the last [`Sender`] closes the channel — receivers drain the
+//!   remaining items and then see `Disconnected`;
+//! * [`Receiver::close`] closes it from the consumer side — subsequent
+//!   `send`s fail and the closer can drain what is left (used by the last
+//!   scheduler worker on the way out so queued jobs fail fast instead of
+//!   waiting forever).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// The send half. Cloneable; the channel closes when the last clone drops.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// The receive half. Cloneable — every clone drains the SAME queue (each
+/// item is delivered to exactly one receiver).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    closed: bool,
+}
+
+/// Error returned by [`Sender::send`] on a closed channel; carries the
+/// undelivered value back to the caller.
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+/// Error returned by [`Receiver::try_recv`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    /// The queue is momentarily empty (the channel is still open).
+    Empty,
+    /// The channel is closed and fully drained.
+    Disconnected,
+}
+
+/// Error returned by [`Receiver::recv_timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// No item arrived within the timeout (the channel is still open).
+    Timeout,
+    /// The channel is closed and fully drained.
+    Disconnected,
+}
+
+/// Create an unbounded MPMC channel.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            senders: 1,
+            closed: false,
+        }),
+        cv: Condvar::new(),
+    });
+    (
+        Sender {
+            shared: Arc::clone(&shared),
+        },
+        Receiver { shared },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Enqueue `value`, waking one waiting receiver. Fails (returning the
+    /// value) iff the channel is closed.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(SendError(value));
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        Sender {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            drop(st);
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Pop the next item without blocking.
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let mut st = self.shared.state.lock().unwrap();
+        match st.queue.pop_front() {
+            Some(v) => Ok(v),
+            None if st.closed => Err(TryRecvError::Disconnected),
+            None => Err(TryRecvError::Empty),
+        }
+    }
+
+    /// Block up to `timeout` for the next item. Items still queued on a
+    /// closed channel are delivered before `Disconnected` is reported.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                return Ok(v);
+            }
+            if st.closed {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self.shared.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close the channel from the receiving side: all subsequent `send`s
+    /// fail and all blocked receivers wake. Queued items remain available
+    /// via [`Receiver::try_recv`] so the closer can drain-and-fail them.
+    pub fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+
+    /// Number of items currently queued (racy; diagnostics only).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// True when no items are queued (racy; diagnostics only).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+
+    #[test]
+    fn delivers_each_item_exactly_once_across_consumers() {
+        let (tx, rx) = channel::<usize>();
+        let total = Arc::new(AtomicUsize::new(0));
+        let count = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let rx = rx.clone();
+                let total = Arc::clone(&total);
+                let count = Arc::clone(&count);
+                thread::spawn(move || loop {
+                    match rx.recv_timeout(Duration::from_secs(5)) {
+                        Ok(v) => {
+                            total.fetch_add(v, Ordering::SeqCst);
+                            count.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break,
+                        Err(RecvTimeoutError::Timeout) => panic!("starved"),
+                    }
+                })
+            })
+            .collect();
+        for i in 0..1000 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 1000);
+        assert_eq!(total.load(Ordering::SeqCst), 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn sender_drop_disconnects_after_drain() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.try_recv(), Ok(1));
+        assert_eq!(rx.recv_timeout(Duration::from_millis(1)), Ok(2));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(1)),
+            Err(RecvTimeoutError::Disconnected)
+        );
+    }
+
+    #[test]
+    fn receiver_close_fails_senders_and_leaves_queue_drainable() {
+        let (tx, rx) = channel::<u32>();
+        tx.send(7).unwrap();
+        rx.close();
+        assert!(tx.send(8).is_err());
+        assert_eq!(rx.try_recv(), Ok(7));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn recv_times_out_while_open() {
+        let (tx, rx) = channel::<u32>();
+        let t0 = Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        drop(tx);
+    }
+
+    #[test]
+    fn clone_keeps_channel_open() {
+        let (tx, rx) = channel::<u32>();
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(5).unwrap();
+        assert_eq!(rx.try_recv(), Ok(5));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        drop(tx2);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+}
