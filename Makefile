@@ -4,7 +4,7 @@
 # (ROADMAP.md) plus the documentation surface — rustdoc with warnings
 # denied and rustfmt in check mode — so docs and formatting cannot rot.
 
-.PHONY: all build test doc fmt verify artifacts models bench
+.PHONY: all build test doc fmt verify artifacts models bench bench-smoke
 
 all: build
 
@@ -37,3 +37,8 @@ models:
 bench:
 	cargo bench --bench perf_coordinator
 	cargo bench --bench perf_engine
+
+# Tiny Table-1 run (drafter sweep included) on the analytic mock engine:
+# no artifacts or checkpoint needed, finishes in seconds. CI smoke.
+bench-smoke:
+	ASARM_BENCH_MOCK=1 ASARM_BENCH_SEQS=2 cargo bench --bench table1_assd

@@ -8,8 +8,9 @@
 //! -> completed text, with the NFE accounting that Theorem 1 bounds.
 
 use asarm::data::masking::lattice_sigma;
-use asarm::decode::assd::{AssdMachine, DraftSource};
+use asarm::decode::assd::AssdMachine;
 use asarm::decode::{init_tokens, run_machine};
+use asarm::draft::DraftKind;
 use asarm::model::mask::Ordering;
 use asarm::runtime::{Engine, XlaEngine};
 use asarm::tokenizer::{ByteTokenizer, MASK};
@@ -45,14 +46,14 @@ fn main() -> anyhow::Result<()> {
     let prompt: Vec<(usize, u32)> = visible.iter().map(|&p| (p, tokens[p])).collect();
     let toks = init_tokens(&ord, &prompt);
 
-    let machine = AssdMachine::new(
+    let machine = AssdMachine::with_kind(
         ord.clone(),
         toks,
         engine.vocab(),
         /*k=*/ 5,
         /*temperature=*/ 1.0,
         Rng::new(42),
-        DraftSource::SelfModel,
+        DraftKind::SelfModel,
     );
     let out = run_machine(&engine, Box::new(machine))?;
 

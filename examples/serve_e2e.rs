@@ -17,8 +17,8 @@ use std::time::Instant;
 
 use asarm::coordinator::http::{http_get, http_post, HttpServer};
 use asarm::coordinator::{self, Metrics, SchedulerConfig};
-use asarm::runtime::PoolConfig;
 use asarm::data::stories;
+use asarm::runtime::PoolConfig;
 use asarm::util::json::Json;
 use asarm::util::rng::Rng;
 use asarm::util::stats::{percentile, Summary};
@@ -85,15 +85,29 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let text = String::from_utf8_lossy(&bytes).into_owned();
-        let sampler = ["assd", "assd_ngram", "sequential"][i % 3];
+        // Rotate through the drafter sweep: label = sampler/draft combo.
+        let (label, sampler, draft_kind, adaptive) = [
+            ("assd", "assd", "self", false),
+            ("assd_adaptive", "assd", "self", true),
+            ("assd_ngram", "assd_ngram", "bigram", false),
+            ("assd_lookup", "assd", "lookup", false),
+            ("sequential", "sequential", "self", false),
+        ][i % 5];
         let body = Json::obj(vec![
             ("text", Json::str(text)),
             ("sampler", Json::str(sampler)),
-            ("k", Json::num(5.0)),
+            (
+                "draft",
+                Json::obj(vec![
+                    ("kind", Json::str(draft_kind)),
+                    ("max_len", Json::num(5.0)),
+                    ("adaptive", Json::Bool(adaptive)),
+                ]),
+            ),
             ("seed", Json::num(i as f64)),
         ])
         .to_string();
-        requests.push((sampler.to_string(), body));
+        requests.push((label.to_string(), body));
     }
 
     // --- concurrent client load over HTTP ---
@@ -123,28 +137,37 @@ fn main() -> anyhow::Result<()> {
     let results = results.lock().unwrap();
     let mut total_tokens = 0.0;
     println!("\n=== end-to-end serving results ===");
-    for sampler in ["assd", "assd_ngram", "sequential"] {
+    for label in [
+        "assd",
+        "assd_adaptive",
+        "assd_ngram",
+        "assd_lookup",
+        "sequential",
+    ] {
         let lat: Vec<f64> = results
             .iter()
-            .filter(|(s, _, _)| s == sampler)
+            .filter(|(s, _, _)| s == label)
             .map(|(_, l, _)| *l)
             .collect();
         if lat.is_empty() {
             continue;
         }
         let mut nfe = Summary::new();
+        let mut accept = Summary::new();
         let mut gen = 0.0;
-        for (_, _, j) in results.iter().filter(|(s, _, _)| s == sampler) {
+        for (_, _, j) in results.iter().filter(|(s, _, _)| s == label) {
             nfe.push(j.get("model_nfe").unwrap().as_f64().unwrap());
+            accept.push(j.get("acceptance_rate").unwrap().as_f64().unwrap());
             gen += j.get("n_generated").unwrap().as_f64().unwrap();
         }
         total_tokens += gen;
         println!(
-            "{sampler:12} n={:2}  latency p50 {:6.3}s p95 {:6.3}s  model NFE {}",
+            "{label:14} n={:2}  latency p50 {:6.3}s p95 {:6.3}s  model NFE {}  accept {:.3}",
             lat.len(),
             percentile(&lat, 50.0),
             percentile(&lat, 95.0),
             nfe.fmt_pm(),
+            accept.mean(),
         );
     }
     println!(

@@ -1,21 +1,28 @@
 //! Perf bench (L3): coordinator throughput under concurrent load on mock
 //! engines — isolates scheduler/batcher overhead from XLA compute, and
-//! ablates the two scaling axes: the continuous-batching policy
-//! (max_batch, per worker) and the engine-pool width (replicas). Feeds
-//! the perf notes in docs/ARCHITECTURE.md.
+//! ablates the three scaling axes: the continuous-batching policy
+//! (max_batch, per worker), the engine-pool width (replicas), and the
+//! draft subsystem (drafter kind × adaptive speculation). Feeds the perf
+//! notes in docs/ARCHITECTURE.md.
 //!
 //! Run: `cargo bench --bench perf_coordinator`
 
 use std::time::Instant;
 
 use asarm::coordinator::scheduler::{spawn_pool, SchedulerConfig};
-use asarm::coordinator::{InfillRequest, Metrics};
+use asarm::coordinator::{DraftSpec, InfillRequest, Metrics};
+use asarm::draft::{DraftKind, DraftOptions};
 use asarm::runtime::mock::MockEngine;
 use asarm::runtime::{Engine, EnginePool, PoolConfig};
 use asarm::util::bench::Table;
 
 /// Drive `n_requests` through a fresh pool; returns (wall seconds, metrics).
-fn run_load(replicas: usize, max_batch: usize, n_requests: usize) -> (f64, Metrics) {
+fn run_load(
+    replicas: usize,
+    max_batch: usize,
+    n_requests: usize,
+    draft: Option<DraftOptions>,
+) -> (f64, Metrics) {
     let metrics = Metrics::new();
     // Same seed per replica: share-nothing copies of one model.
     let pool = EnginePool::from_fn(PoolConfig { replicas }, |_id| {
@@ -26,10 +33,12 @@ fn run_load(replicas: usize, max_batch: usize, n_requests: usize) -> (f64, Metri
         SchedulerConfig {
             max_batch,
             idle_poll: std::time::Duration::from_millis(1),
+            ..Default::default()
         },
         metrics.clone(),
     );
     // Submit all requests up front (closed-loop batch of open-loop work).
+    let spec = draft.map(DraftSpec::from_options).unwrap_or_default();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n_requests)
         .map(|i| {
@@ -37,6 +46,7 @@ fn run_load(replicas: usize, max_batch: usize, n_requests: usize) -> (f64, Metri
                 .submit(InfillRequest {
                     text: format!("{:02}____________{:02}", i % 100, i % 100),
                     seed: i as u64,
+                    draft: spec,
                     ..Default::default()
                 })
                 .unwrap()
@@ -63,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         "mean occupancy",
     ]);
     for &max_batch in &[1usize, 2, 4, 8] {
-        let (wall, metrics) = run_load(1, max_batch, n_requests);
+        let (wall, metrics) = run_load(1, max_batch, n_requests, None);
         let j = metrics.snapshot_json();
         let p50 = j.get("latency_p50_s").unwrap().as_f64().unwrap() * 1e3;
         let p99 = j.get("latency_p99_s").unwrap().as_f64().unwrap() * 1e3;
@@ -84,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     let mut pool_table = Table::new(&["replicas", "req/s", "speedup", "p99 (ms)"]);
     let mut base_rps = 0.0;
     for &replicas in &[1usize, 4] {
-        let (wall, metrics) = run_load(replicas, 4, n_requests);
+        let (wall, metrics) = run_load(replicas, 4, n_requests, None);
         let rps = n_requests as f64 / wall;
         if replicas == 1 {
             base_rps = rps;
@@ -101,5 +111,40 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== perf_coordinator: engine-pool sweep (max_batch=4) ===");
     pool_table.print();
     println!("(replicas scale the forward compute across cores; shared admission queue keeps them fed)");
+
+    // --- axis 3: drafter sweep (2 replicas, max_batch=4) ---
+    let mut draft_table = Table::new(&["drafter", "req/s", "accept rate", "NFE/token"]);
+    let configs = [
+        ("self", DraftKind::SelfModel, false),
+        ("self adaptive", DraftKind::SelfModel, true),
+        ("bigram", DraftKind::Bigram, false),
+        ("bigram adaptive", DraftKind::Bigram, true),
+        ("lookup", DraftKind::Lookup, false),
+        ("lookup adaptive", DraftKind::Lookup, true),
+    ];
+    for (label, kind, adaptive) in configs {
+        let draft = DraftOptions {
+            kind,
+            max_len: 5,
+            adaptive,
+        };
+        let (wall, metrics) = run_load(2, 4, n_requests, Some(draft));
+        let j = metrics.snapshot_json();
+        let accept = j.get("acceptance_rate").unwrap().as_f64().unwrap();
+        let nfe = j.get("model_nfe").unwrap().as_f64().unwrap();
+        let toks = j.get("tokens_generated").unwrap().as_f64().unwrap();
+        draft_table.row(&[
+            label.to_string(),
+            format!("{:.1}", n_requests as f64 / wall),
+            format!("{accept:.3}"),
+            format!("{:.3}", nfe / toks.max(1.0)),
+        ]);
+    }
+    println!("\n=== perf_coordinator: drafter sweep (replicas=2, max_batch=4) ===");
+    draft_table.print();
+    println!(
+        "(external drafters trade model NFE for aux lookups; adaptive speculation grows the \
+         window while acceptance stays high)"
+    );
     Ok(())
 }

@@ -1,36 +1,55 @@
-//! Table 1 — Comparison of Speculative and Sequential Decoding.
+//! Table 1 — Comparison of Speculative and Sequential Decoding, extended
+//! with the drafter sweep (the draft subsystem's ablation axis).
 //!
 //! Paper setup: 640 WikiText chunks of 512 tokens, 95% masked, k = 5;
 //! samplers Sequential / ASSD(N-Gram) / ASSD(Self); columns Gen PPL,
 //! Entropy, Model NFE, Aux NFE, Time.
 //!
-//! Our setup (docs/ARCHITECTURE.md): packed synthetic-prose chunks of 128 tokens,
-//! 95% masked, k = 5, FT checkpoint; the judge is the same FT model's
-//! one-pass joint density (fixed across samplers). Scale with
-//! ASARM_BENCH_SEQS (default 8).
+//! Our setup (docs/ARCHITECTURE.md): packed synthetic-prose chunks of 128
+//! tokens, 95% masked, k = 5, FT checkpoint; the judge is the same FT
+//! model's one-pass joint density (fixed across samplers). On top of the
+//! paper's three rows we sweep the draft subsystem: every drafter kind
+//! (self / bigram / lookup), fixed vs adaptive window, with NFE/token and
+//! acceptance-rate columns. Scale with ASARM_BENCH_SEQS (default 8).
 //!
 //! Run: `cargo bench --bench table1_assd`
+//! Smoke (no artifacts; analytic mock engine): `make bench-smoke`
+//! (ASARM_BENCH_MOCK=1).
 
 use asarm::coordinator::SamplerKind;
-use asarm::eval::harness::{masked_prose_workload, run_sampler};
+use asarm::draft::{DraftKind, DraftOptions};
+use asarm::eval::harness::{masked_prose_workload, run_sampler_with};
 use asarm::eval::ppl::{generative_perplexity, shannon_entropy};
+use asarm::runtime::mock::MockEngine;
 use asarm::runtime::{Engine, XlaEngine};
 use asarm::util::bench::Table;
 use asarm::util::stats::Summary;
 
-fn main() -> anyhow::Result<()> {
+fn load_engine() -> anyhow::Result<Option<Box<dyn Engine>>> {
+    if std::env::var("ASARM_BENCH_MOCK").is_ok() {
+        eprintln!("table1: ASARM_BENCH_MOCK set — using the analytic mock engine");
+        return Ok(Some(Box::new(MockEngine::new(7, 64, 258, 1.0))));
+    }
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     let ckpt = format!("{artifacts}/ckpt_stories_ft.bin");
     if !std::path::Path::new(&ckpt).exists() {
-        eprintln!("table1: missing {ckpt}; run `make models` first");
-        return Ok(());
+        eprintln!("table1: missing {ckpt}; run `make models` first (or ASARM_BENCH_MOCK=1)");
+        return Ok(None);
     }
+    let engine = XlaEngine::load(artifacts, Some(std::path::Path::new(&ckpt)))?;
+    Ok(Some(Box::new(engine)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let Some(engine) = load_engine()? else {
+        return Ok(());
+    };
+    let engine: &dyn Engine = engine.as_ref();
     let n_seqs: usize = std::env::var("ASARM_BENCH_SEQS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(8);
     let k = 5;
-    let engine = XlaEngine::load(artifacts, Some(std::path::Path::new(&ckpt)))?;
     let items = masked_prose_workload(engine.seq_len(), n_seqs, 0.95, 42);
     eprintln!(
         "table1: {} sequences of {} tokens, 95% masked, k={k}",
@@ -38,10 +57,25 @@ fn main() -> anyhow::Result<()> {
         engine.seq_len()
     );
 
-    let samplers = [
-        ("Sequential", SamplerKind::Sequential),
-        ("ASSD (N-Gram)", SamplerKind::AssdNgram),
-        ("ASSD (Self)", SamplerKind::Assd),
+    // The paper's three rows, then the drafter sweep.
+    let fixed = |kind| DraftOptions {
+        kind,
+        max_len: k,
+        adaptive: false,
+    };
+    let adaptive = |kind| DraftOptions {
+        kind,
+        max_len: k,
+        adaptive: true,
+    };
+    let rows: [(&str, SamplerKind, DraftOptions); 7] = [
+        ("Sequential", SamplerKind::Sequential, fixed(DraftKind::SelfModel)),
+        ("ASSD (N-Gram)", SamplerKind::Assd, fixed(DraftKind::Bigram)),
+        ("ASSD (Self)", SamplerKind::Assd, fixed(DraftKind::SelfModel)),
+        ("ASSD (Lookup)", SamplerKind::Assd, fixed(DraftKind::Lookup)),
+        ("ASSD (N-Gram, adaptive)", SamplerKind::Assd, adaptive(DraftKind::Bigram)),
+        ("ASSD (Self, adaptive)", SamplerKind::Assd, adaptive(DraftKind::SelfModel)),
+        ("ASSD (Lookup, adaptive)", SamplerKind::Assd, adaptive(DraftKind::Lookup)),
     ];
     let mut table = Table::new(&[
         "Sampler",
@@ -49,44 +83,76 @@ fn main() -> anyhow::Result<()> {
         "Entropy",
         "Model NFE",
         "Aux NFE",
+        "NFE/tok",
+        "Accept",
         "Time (s)",
         "Tok/iter",
     ]);
-    for (label, sampler) in samplers {
+    let mut nfe_per_tok: Vec<(String, f64)> = vec![];
+    for (label, sampler, draft) in rows {
         let mut ppl = Summary::new();
         let mut ent = Summary::new();
         let mut nfe = Summary::new();
         let mut aux = Summary::new();
+        let mut npt = Summary::new();
+        let mut acc = Summary::new();
         let mut time = Summary::new();
         let mut tpi = Summary::new();
         for (i, item) in items.iter().enumerate() {
-            let (out, secs) = run_sampler(&engine, item, sampler, k, 32, 1.0, 1000 + i as u64)?;
-            let gp = generative_perplexity(&engine, &out.tokens, 1)?;
+            let (out, secs) =
+                run_sampler_with(engine, item, sampler, draft, 32, 1.0, 1000 + i as u64)?;
+            let gp = generative_perplexity(engine, &out.tokens, 1)?;
             ppl.push(gp);
             ent.push(shannon_entropy(&out.tokens));
             nfe.push(out.model_nfe as f64);
             aux.push(out.aux_nfe as f64);
-            time.push(secs);
             let n_targets = item.ord.n_targets();
+            npt.push(out.model_nfe as f64 / n_targets.max(1) as f64);
+            acc.push(out.acceptance_rate());
+            time.push(secs);
             if out.iterations > 0 {
                 tpi.push(out.tokens_per_iteration(n_targets));
             }
         }
+        nfe_per_tok.push((label.to_string(), npt.mean()));
         table.row(&[
             label.to_string(),
             ppl.fmt_pm(),
             ent.fmt_pm(),
             nfe.fmt_pm(),
             aux.fmt_pm(),
+            format!("{:.3}", npt.mean()),
+            format!("{:.3}", acc.mean()),
             time.fmt_pm(),
             format!("{:.2}", tpi.mean()),
         ]);
     }
-    println!("\n=== Table 1: Speculative vs Sequential Decoding (FT model) ===");
+    println!("\n=== Table 1: Speculative vs Sequential Decoding + drafter sweep ===");
     table.print();
     println!(
         "(paper, 110M/512tok: Sequential 486 NFE/18.2s; ASSD(N-Gram) 422+422 aux/16.8s; \
          ASSD(Self) 434/16.5s; PPL & entropy statistically equal across samplers)"
+    );
+    // Acceptance check for the adaptive controller: growing windows must
+    // convert verify forwards into more tokens than the fixed bigram
+    // baseline does.
+    let get = |label: &str| {
+        nfe_per_tok
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    };
+    let fixed_bigram = get("ASSD (N-Gram)");
+    let adaptive_bigram = get("ASSD (N-Gram, adaptive)");
+    println!(
+        "adaptive check: bigram NFE/token fixed {fixed_bigram:.3} vs adaptive \
+         {adaptive_bigram:.3} -> {}",
+        if adaptive_bigram <= fixed_bigram + 1e-9 {
+            "OK (adaptive <= fixed)"
+        } else {
+            "REGRESSION (adaptive > fixed)"
+        }
     );
     Ok(())
 }

@@ -120,6 +120,8 @@ impl Metrics {
             ),
             ("model_nfe", Json::num(m.model_nfe as f64)),
             ("aux_nfe", Json::num(m.aux_nfe as f64)),
+            ("proposed", Json::num(m.proposed as f64)),
+            ("accepted", Json::num(m.accepted as f64)),
             ("acceptance_rate", Json::num(accept_rate)),
             ("latency_p50_s", Json::num(m.latency.quantile(0.5))),
             ("latency_p95_s", Json::num(m.latency.quantile(0.95))),
@@ -165,6 +167,8 @@ pub struct ReplicaStats {
     failures: AtomicU64,
     tokens_generated: AtomicU64,
     model_nfe: AtomicU64,
+    proposed: AtomicU64,
+    accepted: AtomicU64,
     batch_iterations: AtomicU64,
     batch_occupancy_sum: AtomicU64,
 }
@@ -178,6 +182,8 @@ impl ReplicaStats {
             failures: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             model_nfe: AtomicU64::new(0),
+            proposed: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
             batch_iterations: AtomicU64::new(0),
             batch_occupancy_sum: AtomicU64::new(0),
         }
@@ -196,10 +202,12 @@ impl ReplicaStats {
         }
     }
 
-    pub fn record_request(&self, tokens: u64, model_nfe: u64) {
+    pub fn record_request(&self, tokens: u64, model_nfe: u64, proposed: u64, accepted: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
         self.model_nfe.fetch_add(model_nfe, Ordering::Relaxed);
+        self.proposed.fetch_add(proposed, Ordering::Relaxed);
+        self.accepted.fetch_add(accepted, Ordering::Relaxed);
     }
 
     pub fn record_failure(&self) {
@@ -228,6 +236,14 @@ impl ReplicaStats {
         self.model_nfe.load(Ordering::Relaxed)
     }
 
+    pub fn proposed(&self) -> u64 {
+        self.proposed.load(Ordering::Relaxed)
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
     pub fn batch_iterations(&self) -> u64 {
         self.batch_iterations.load(Ordering::Relaxed)
     }
@@ -236,6 +252,12 @@ impl ReplicaStats {
         let iters = self.batch_iterations.load(Ordering::Relaxed);
         let occ = if iters > 0 {
             self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / iters as f64
+        } else {
+            0.0
+        };
+        let proposed = self.proposed();
+        let accept_rate = if proposed > 0 {
+            self.accepted() as f64 / proposed as f64
         } else {
             0.0
         };
@@ -249,6 +271,9 @@ impl ReplicaStats {
                 Json::num(self.tokens_generated() as f64),
             ),
             ("model_nfe", Json::num(self.model_nfe() as f64)),
+            ("proposed", Json::num(proposed as f64)),
+            ("accepted", Json::num(self.accepted() as f64)),
+            ("acceptance_rate", Json::num(accept_rate)),
             ("batch_iterations", Json::num(iters as f64)),
             ("mean_batch_occupancy", Json::num(occ)),
         ])
@@ -270,6 +295,8 @@ mod tests {
         assert_eq!(j.get("requests").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("tokens_generated").unwrap().as_f64(), Some(150.0));
         assert_eq!(j.get("model_nfe").unwrap().as_f64(), Some(75.0));
+        assert_eq!(j.get("proposed").unwrap().as_f64(), Some(120.0));
+        assert_eq!(j.get("accepted").unwrap().as_f64(), Some(90.0));
         let ar = j.get("acceptance_rate").unwrap().as_f64().unwrap();
         assert!((ar - 0.75).abs() < 1e-9);
         assert_eq!(j.get("mean_batch_occupancy").unwrap().as_f64(), Some(2.0));
@@ -280,8 +307,8 @@ mod tests {
         let r = ReplicaStats::new(2);
         assert_eq!(r.state(), ReplicaState::Starting);
         r.set_state(ReplicaState::Running);
-        r.record_request(10, 4);
-        r.record_request(6, 3);
+        r.record_request(10, 4, 12, 9);
+        r.record_request(6, 3, 8, 6);
         r.record_failure();
         r.record_batch_iteration(3);
         r.record_batch_iteration(1);
@@ -292,6 +319,9 @@ mod tests {
         assert_eq!(j.get("failures").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("tokens_generated").unwrap().as_f64(), Some(16.0));
         assert_eq!(j.get("model_nfe").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("proposed").unwrap().as_f64(), Some(20.0));
+        assert_eq!(j.get("accepted").unwrap().as_f64(), Some(15.0));
+        assert_eq!(j.get("acceptance_rate").unwrap().as_f64(), Some(0.75));
         assert_eq!(j.get("mean_batch_occupancy").unwrap().as_f64(), Some(2.0));
     }
 

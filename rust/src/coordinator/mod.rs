@@ -22,7 +22,7 @@ use std::path::Path;
 use crate::runtime::{EnginePool, PoolConfig};
 
 pub use metrics::{Metrics, ReplicaState, ReplicaStats};
-pub use request::{InfillRequest, InfillResponse, SamplerKind};
+pub use request::{DraftSpec, InfillRequest, InfillResponse, SamplerKind};
 pub use scheduler::{SchedulerConfig, SchedulerHandle};
 
 /// Convenience: spawn a scheduler pool backed by real XLA engines, each

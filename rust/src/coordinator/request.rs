@@ -2,14 +2,17 @@
 
 use anyhow::{bail, Result};
 
+use crate::draft::{DraftKind, DraftOptions};
 use crate::util::json::Json;
 
 /// Which decoder serves the request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SamplerKind {
-    /// ASSD with self-drafting (Algorithm 1) — the paper's headline.
+    /// ASSD (Algorithm 1) over the configured draft source — the paper's
+    /// headline. The `draft` request field picks the drafter.
     Assd,
-    /// ASSD with context n-gram drafting (Algorithm 2).
+    /// Legacy alias: ASSD with the context bigram drafter (Algorithm 2).
+    /// Equivalent to `assd` with `"draft": {"kind": "bigram"}`.
     AssdNgram,
     /// Sequential factorized decoding (baseline).
     Sequential,
@@ -18,14 +21,25 @@ pub enum SamplerKind {
 }
 
 impl SamplerKind {
+    pub const ALL: [SamplerKind; 4] = [
+        SamplerKind::Assd,
+        SamplerKind::AssdNgram,
+        SamplerKind::Sequential,
+        SamplerKind::Diffusion,
+    ];
+
+    /// Case-insensitive parse; the error lists the valid kinds.
     pub fn parse(s: &str) -> Result<SamplerKind> {
-        Ok(match s {
-            "assd" => SamplerKind::Assd,
-            "assd_ngram" => SamplerKind::AssdNgram,
-            "sequential" => SamplerKind::Sequential,
-            "diffusion" => SamplerKind::Diffusion,
-            other => bail!("unknown sampler '{other}'"),
-        })
+        let lower = s.to_ascii_lowercase();
+        for k in SamplerKind::ALL {
+            if k.name() == lower {
+                return Ok(k);
+            }
+        }
+        bail!(
+            "unknown sampler '{s}' (valid kinds: {})",
+            SamplerKind::ALL.map(|k| k.name()).join(", ")
+        )
     }
 
     pub fn name(&self) -> &'static str {
@@ -36,6 +50,53 @@ impl SamplerKind {
             SamplerKind::Diffusion => "diffusion",
         }
     }
+
+    /// Resolve the effective draft configuration for this sampler: the
+    /// `assd_ngram` legacy alias forces the Algorithm-2 bigram drafter.
+    /// Shared by the scheduler's admission path and the eval harness so
+    /// serving and bench behavior cannot diverge.
+    pub fn effective_draft(&self, draft: DraftOptions) -> DraftOptions {
+        match self {
+            SamplerKind::AssdNgram => DraftOptions {
+                kind: DraftKind::Bigram,
+                ..draft
+            },
+            _ => draft,
+        }
+    }
+}
+
+/// Partially-specified draft configuration, as it arrives on the wire:
+/// every field a request leaves out inherits the scheduler's
+/// [`super::scheduler::SchedulerConfig::default_draft`] at admission
+/// (so `asarm serve --draft bigram --adaptive` applies to legacy
+/// `{"k": 5}` requests and partial `{"draft": {...}}` objects alike).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DraftSpec {
+    pub kind: Option<DraftKind>,
+    pub max_len: Option<usize>,
+    pub adaptive: Option<bool>,
+}
+
+impl DraftSpec {
+    /// Fully-specified spec (CLI / programmatic callers that want no
+    /// inheritance).
+    pub fn from_options(opts: DraftOptions) -> DraftSpec {
+        DraftSpec {
+            kind: Some(opts.kind),
+            max_len: Some(opts.max_len),
+            adaptive: Some(opts.adaptive),
+        }
+    }
+
+    /// Overlay this spec onto the pool default.
+    pub fn resolve(&self, base: DraftOptions) -> DraftOptions {
+        DraftOptions {
+            kind: self.kind.unwrap_or(base.kind),
+            max_len: self.max_len.unwrap_or(base.max_len),
+            adaptive: self.adaptive.unwrap_or(base.adaptive),
+        }
+    }
 }
 
 /// An infilling request: text whose `mask_char` runs are to be generated.
@@ -44,8 +105,9 @@ pub struct InfillRequest {
     pub text: String,
     pub mask_char: char,
     pub sampler: SamplerKind,
-    /// speculation window (Alg. 1's k)
-    pub k: usize,
+    /// Draft configuration for the ASSD samplers; unspecified fields
+    /// inherit the scheduler's default at admission.
+    pub draft: DraftSpec,
     /// diffusion steps (Diffusion sampler only)
     pub steps: usize,
     pub temperature: f32,
@@ -58,7 +120,7 @@ impl Default for InfillRequest {
             text: String::new(),
             mask_char: '_',
             sampler: SamplerKind::Assd,
-            k: 5,
+            draft: DraftSpec::default(),
             steps: 32,
             temperature: 1.0,
             seed: 0,
@@ -83,11 +145,33 @@ impl InfillRequest {
         if let Some(s) = j.get("sampler").and_then(|t| t.as_str()) {
             r.sampler = SamplerKind::parse(s)?;
         }
+        // Legacy scalar speculation window: "k" sets the draft length only
+        // (kind/adaptivity still inherit the pool default).
         if let Some(k) = j.get("k").and_then(|t| t.as_usize()) {
             if k == 0 {
                 bail!("k must be >= 1");
             }
-            r.k = k;
+            r.draft.max_len = Some(k);
+        }
+        // Draft configuration: {"kind": "self|bigram|lookup",
+        // "max_len": N, "adaptive": bool}. Fields present override "k"
+        // and the pool default; absent fields stay inherited.
+        if let Some(dj) = j.get("draft") {
+            if !matches!(dj, Json::Obj(_)) {
+                bail!("'draft' must be an object");
+            }
+            if let Some(kind) = dj.get("kind").and_then(|t| t.as_str()) {
+                r.draft.kind = Some(DraftKind::parse(kind)?);
+            }
+            if let Some(ml) = dj.get("max_len").and_then(|t| t.as_usize()) {
+                if ml == 0 {
+                    bail!("draft.max_len must be >= 1");
+                }
+                r.draft.max_len = Some(ml);
+            }
+            if let Some(a) = dj.get("adaptive").and_then(|t| t.as_bool()) {
+                r.draft.adaptive = Some(a);
+            }
         }
         if let Some(s) = j.get("steps").and_then(|t| t.as_usize()) {
             r.steps = s.max(1);
@@ -105,14 +189,22 @@ impl InfillRequest {
     }
 }
 
-/// The response: completed text plus the accounting the paper reports.
+/// The response: completed text plus the accounting the paper reports and
+/// the per-request speculation telemetry.
 #[derive(Clone, Debug)]
 pub struct InfillResponse {
     pub text: String,
     pub model_nfe: u64,
     pub aux_nfe: u64,
     pub iterations: u64,
+    /// speculative tokens examined / kept by verification
+    pub proposed: u64,
+    pub accepted: u64,
     pub acceptance_rate: f64,
+    /// drafter that served the request ("" for non-speculative samplers)
+    pub draft_kind: String,
+    /// draft window length when the decode finished
+    pub draft_len: usize,
     pub latency_s: f64,
     pub n_generated: usize,
 }
@@ -124,7 +216,11 @@ impl InfillResponse {
             ("model_nfe", Json::num(self.model_nfe as f64)),
             ("aux_nfe", Json::num(self.aux_nfe as f64)),
             ("iterations", Json::num(self.iterations as f64)),
+            ("proposed", Json::num(self.proposed as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
             ("acceptance_rate", Json::num(self.acceptance_rate)),
+            ("draft", Json::str(self.draft_kind.clone())),
+            ("draft_len", Json::num(self.draft_len as f64)),
             ("latency_s", Json::num(self.latency_s)),
             ("n_generated", Json::num(self.n_generated as f64)),
         ])
@@ -141,7 +237,11 @@ mod tests {
         let r = InfillRequest::from_json(&j).unwrap();
         assert_eq!(r.text, "Tom went to ___.");
         assert_eq!(r.sampler, SamplerKind::Assd);
-        assert_eq!(r.k, 5);
+        assert_eq!(
+            r.draft,
+            DraftSpec::default(),
+            "unspecified draft inherits the scheduler default"
+        );
     }
 
     #[test]
@@ -154,10 +254,68 @@ mod tests {
         let r = InfillRequest::from_json(&j).unwrap();
         assert_eq!(r.mask_char, '?');
         assert_eq!(r.sampler, SamplerKind::AssdNgram);
-        assert_eq!(r.k, 8);
+        assert_eq!(r.draft.max_len, Some(8));
+        assert_eq!(r.draft.kind, None, "legacy k leaves the kind inherited");
         assert_eq!(r.steps, 16);
         assert!((r.temperature - 0.8).abs() < 1e-6);
         assert_eq!(r.seed, 42);
+    }
+
+    #[test]
+    fn parse_draft_object() {
+        let j = Json::parse(
+            r#"{"text":"a__b","draft":{"kind":"lookup","max_len":12,"adaptive":true}}"#,
+        )
+        .unwrap();
+        let d = InfillRequest::from_json(&j).unwrap().draft;
+        assert_eq!(d.kind, Some(DraftKind::Lookup));
+        assert_eq!(d.max_len, Some(12));
+        assert_eq!(d.adaptive, Some(true));
+        // partial object: unspecified fields stay inherited
+        let j = Json::parse(r#"{"text":"a__b","draft":{"kind":"BIGRAM"}}"#).unwrap();
+        let d = InfillRequest::from_json(&j).unwrap().draft;
+        assert_eq!(
+            d.kind,
+            Some(DraftKind::Bigram),
+            "draft kind parse is case-insensitive"
+        );
+        assert_eq!(d.max_len, None);
+        assert_eq!(d.adaptive, None);
+    }
+
+    #[test]
+    fn draft_object_overrides_legacy_k() {
+        let j = Json::parse(r#"{"text":"a__b","k":3,"draft":{"max_len":9}}"#).unwrap();
+        assert_eq!(InfillRequest::from_json(&j).unwrap().draft.max_len, Some(9));
+        // "k" alone still works
+        let j = Json::parse(r#"{"text":"a__b","k":3}"#).unwrap();
+        assert_eq!(InfillRequest::from_json(&j).unwrap().draft.max_len, Some(3));
+    }
+
+    #[test]
+    fn draft_spec_resolves_over_base() {
+        let base = DraftOptions {
+            kind: DraftKind::Bigram,
+            max_len: 7,
+            adaptive: true,
+        };
+        assert_eq!(DraftSpec::default().resolve(base), base);
+        let partial = DraftSpec {
+            max_len: Some(3),
+            ..Default::default()
+        };
+        assert_eq!(
+            partial.resolve(base),
+            DraftOptions {
+                kind: DraftKind::Bigram,
+                max_len: 3,
+                adaptive: true,
+            }
+        );
+        assert_eq!(
+            DraftSpec::from_options(DraftOptions::default()).resolve(base),
+            DraftOptions::default()
+        );
     }
 
     #[test]
@@ -168,9 +326,25 @@ mod tests {
             r#"{"text":"x","k":0}"#,
             r#"{"text":"x","temperature":0}"#,
             r#"{"text":"x","mask_char":"ab"}"#,
+            r#"{"text":"x","draft":"self"}"#,
+            r#"{"text":"x","draft":{"kind":"nope"}}"#,
+            r#"{"text":"x","draft":{"max_len":0}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(InfillRequest::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn sampler_parse_is_case_insensitive_and_lists_kinds() {
+        assert_eq!(SamplerKind::parse("ASSD").unwrap(), SamplerKind::Assd);
+        assert_eq!(
+            SamplerKind::parse("Assd_Ngram").unwrap(),
+            SamplerKind::AssdNgram
+        );
+        let err = SamplerKind::parse("bogus").unwrap_err().to_string();
+        for k in SamplerKind::ALL {
+            assert!(err.contains(k.name()), "missing {} in: {err}", k.name());
         }
     }
 
@@ -181,7 +355,11 @@ mod tests {
             model_nfe: 10,
             aux_nfe: 2,
             iterations: 5,
+            proposed: 50,
+            accepted: 40,
             acceptance_rate: 0.8,
+            draft_kind: "lookup".into(),
+            draft_len: 7,
             latency_s: 0.25,
             n_generated: 40,
         };
@@ -189,16 +367,15 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("model_nfe").unwrap().as_f64(), Some(10.0));
         assert_eq!(parsed.get("text").unwrap().as_str(), Some("done"));
+        assert_eq!(parsed.get("proposed").unwrap().as_f64(), Some(50.0));
+        assert_eq!(parsed.get("accepted").unwrap().as_f64(), Some(40.0));
+        assert_eq!(parsed.get("draft").unwrap().as_str(), Some("lookup"));
+        assert_eq!(parsed.get("draft_len").unwrap().as_f64(), Some(7.0));
     }
 
     #[test]
     fn sampler_kind_names_roundtrip() {
-        for k in [
-            SamplerKind::Assd,
-            SamplerKind::AssdNgram,
-            SamplerKind::Sequential,
-            SamplerKind::Diffusion,
-        ] {
+        for k in SamplerKind::ALL {
             assert_eq!(SamplerKind::parse(k.name()).unwrap(), k);
         }
     }

@@ -32,10 +32,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::masking::lattice_sigma;
-use crate::decode::assd::{AssdMachine, DraftSource};
+use crate::decode::assd::AssdMachine;
 use crate::decode::diffusion::DiffusionMachine;
 use crate::decode::sequential::SequentialMachine;
 use crate::decode::{DecodeMachine, DecodeOutcome};
+use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
 use crate::runtime::{Engine, EnginePool, PoolConfig};
 use crate::tokenizer::{ByteTokenizer, MASK};
@@ -55,6 +56,10 @@ pub struct SchedulerConfig {
     /// How long an idle worker blocks on the admission queue before
     /// re-polling (bounds shutdown latency, not throughput).
     pub idle_poll: Duration,
+    /// Draft configuration applied to ASSD requests that do not carry
+    /// their own `draft` field (`asarm serve --draft/--draft-max-len/
+    /// --adaptive`).
+    pub default_draft: DraftOptions,
 }
 
 impl Default for SchedulerConfig {
@@ -62,6 +67,7 @@ impl Default for SchedulerConfig {
         SchedulerConfig {
             max_batch: 4,
             idle_poll: Duration::from_millis(50),
+            default_draft: DraftOptions::default(),
         }
     }
 }
@@ -246,7 +252,7 @@ fn run_worker(
                     }
                 }
             };
-            match admit(engine, &tok, job.request) {
+            match admit(engine, &tok, job.request, cfg.default_draft) {
                 Ok(AdmitResult::Slot(machine, text_len, n_targets)) => slots.push(Slot {
                     machine,
                     reply: job.reply,
@@ -317,10 +323,15 @@ fn run_worker(
                     resp.n_generated as u64,
                     resp.model_nfe,
                     resp.aux_nfe,
-                    0,
-                    0,
+                    resp.proposed,
+                    resp.accepted,
                 );
-                stats.record_request(resp.n_generated as u64, resp.model_nfe);
+                stats.record_request(
+                    resp.n_generated as u64,
+                    resp.model_nfe,
+                    resp.proposed,
+                    resp.accepted,
+                );
                 let _ = slot.reply.send(Ok(resp));
             } else {
                 s += 1;
@@ -336,7 +347,12 @@ enum AdmitResult {
 
 /// Turn a request into a decode machine (or an immediate response when
 /// there is nothing to infill).
-fn admit(engine: &dyn Engine, tok: &ByteTokenizer, req: InfillRequest) -> Result<AdmitResult> {
+fn admit(
+    engine: &dyn Engine,
+    tok: &ByteTokenizer,
+    req: InfillRequest,
+    default_draft: DraftOptions,
+) -> Result<AdmitResult> {
     let n = engine.seq_len();
     let v = engine.vocab();
     if req.text.is_empty() {
@@ -372,7 +388,11 @@ fn admit(engine: &dyn Engine, tok: &ByteTokenizer, req: InfillRequest) -> Result
             model_nfe: 0,
             aux_nfe: 0,
             iterations: 0,
-            acceptance_rate: 1.0,
+            proposed: 0,
+            accepted: 0,
+            acceptance_rate: 0.0,
+            draft_kind: String::new(),
+            draft_len: 0,
             latency_s: 0.0,
             n_generated: 0,
         }));
@@ -381,24 +401,18 @@ fn admit(engine: &dyn Engine, tok: &ByteTokenizer, req: InfillRequest) -> Result
     let ord = Ordering::new(lattice_sigma(&visible, n), m);
     let rng = Rng::new(req.seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1));
     let machine: Box<dyn DecodeMachine> = match req.sampler {
-        SamplerKind::Assd => Box::new(AssdMachine::new(
-            ord,
-            tokens,
-            v,
-            req.k,
-            req.temperature,
-            rng,
-            DraftSource::SelfModel,
-        )),
-        SamplerKind::AssdNgram => Box::new(AssdMachine::new(
-            ord,
-            tokens,
-            v,
-            req.k,
-            req.temperature,
-            rng,
-            DraftSource::NGram,
-        )),
+        SamplerKind::Assd | SamplerKind::AssdNgram => {
+            let opts = req.sampler.effective_draft(req.draft.resolve(default_draft));
+            Box::new(AssdMachine::from_options(
+                ord,
+                tokens,
+                v,
+                opts,
+                n,
+                req.temperature,
+                rng,
+            ))
+        }
         SamplerKind::Sequential => Box::new(SequentialMachine::new(
             ord,
             tokens,
@@ -433,7 +447,11 @@ fn outcome_to_response(
         model_nfe: outcome.model_nfe,
         aux_nfe: outcome.aux_nfe,
         iterations: outcome.iterations,
+        proposed: outcome.proposed,
+        accepted: outcome.accepted,
         acceptance_rate: outcome.acceptance_rate(),
+        draft_kind: outcome.draft_kind,
+        draft_len: outcome.final_draft_len,
         latency_s,
         n_generated: n_targets,
     }
@@ -442,6 +460,8 @@ fn outcome_to_response(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::DraftSpec;
+    use crate::draft::DraftKind;
     use crate::runtime::mock::MockEngine;
 
     fn mock_handle(max_batch: usize) -> (SchedulerHandle, Metrics) {
@@ -452,6 +472,7 @@ mod tests {
             SchedulerConfig {
                 max_batch,
                 idle_poll: Duration::from_millis(5),
+                ..Default::default()
             },
             m2,
         );
@@ -471,6 +492,7 @@ mod tests {
             SchedulerConfig {
                 max_batch,
                 idle_poll: Duration::from_millis(5),
+                ..Default::default()
             },
             metrics.clone(),
         );
@@ -529,12 +551,7 @@ mod tests {
     #[test]
     fn all_samplers_complete() {
         let (h, _) = mock_handle(4);
-        for sampler in [
-            SamplerKind::Assd,
-            SamplerKind::AssdNgram,
-            SamplerKind::Sequential,
-            SamplerKind::Diffusion,
-        ] {
+        for sampler in SamplerKind::ALL {
             let resp = h
                 .infill(InfillRequest {
                     text: "ab____cd".into(),
@@ -545,6 +562,94 @@ mod tests {
                 .unwrap();
             assert!(!resp.text.contains('_'), "{}: {}", sampler.name(), resp.text);
         }
+    }
+
+    /// Every drafter kind (fixed and adaptive) serves requests end to end,
+    /// reports its identity and telemetry in the response, and feeds the
+    /// aggregate speculation counters.
+    #[test]
+    fn all_drafters_serve_with_telemetry() {
+        let (h, metrics) = mock_handle(2);
+        for kind in DraftKind::ALL {
+            for adaptive in [false, true] {
+                let resp = h
+                    .infill(InfillRequest {
+                        text: "ab______cd".into(),
+                        draft: DraftSpec::from_options(DraftOptions {
+                            kind,
+                            max_len: 4,
+                            adaptive,
+                        }),
+                        seed: 21,
+                        ..Default::default()
+                    })
+                    .unwrap();
+                assert!(!resp.text.contains('_'), "{}: {}", kind.name(), resp.text);
+                assert_eq!(resp.draft_kind, kind.name());
+                assert!(resp.proposed > 0, "{}: no speculation", kind.name());
+                assert!(resp.accepted <= resp.proposed);
+                assert!(resp.draft_len >= 1);
+                if kind == DraftKind::SelfModel {
+                    assert!(resp.model_nfe <= 8, "Theorem 1: {}", resp.model_nfe);
+                } else {
+                    assert!(resp.aux_nfe > 0, "external drafter books aux NFE");
+                }
+            }
+        }
+        let j = metrics.snapshot_json();
+        assert!(j.get("proposed").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("acceptance_rate").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// The scheduler's default draft config applies when a request carries
+    /// no draft field (and per-request draft fields override it).
+    #[test]
+    fn default_draft_config_applies() {
+        let metrics = Metrics::new();
+        let h = spawn(
+            move || Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>),
+            SchedulerConfig {
+                max_batch: 2,
+                idle_poll: Duration::from_millis(5),
+                default_draft: DraftOptions {
+                    kind: DraftKind::Lookup,
+                    max_len: 3,
+                    adaptive: false,
+                },
+            },
+            metrics,
+        );
+        let resp = h
+            .infill(InfillRequest {
+                text: "ab____cd".into(),
+                seed: 5,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.draft_kind, "lookup");
+        let resp = h
+            .infill(InfillRequest {
+                text: "ab____cd".into(),
+                draft: DraftSpec::from_options(DraftOptions::default()),
+                seed: 5,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.draft_kind, "self", "per-request draft overrides default");
+        // partial spec: only the specified field overrides, the rest
+        // (kind = lookup) still inherits the pool default
+        let resp = h
+            .infill(InfillRequest {
+                text: "ab____cd".into(),
+                draft: DraftSpec {
+                    max_len: Some(2),
+                    ..Default::default()
+                },
+                seed: 5,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.draft_kind, "lookup", "partial spec must inherit kind");
     }
 
     #[test]

@@ -1,38 +1,35 @@
-//! Any-Subset Speculative Decoding — the paper's Algorithm 1.
+//! Any-Subset Speculative Decoding — the paper's Algorithm 1, generalized
+//! over pluggable draft sources ([`crate::draft`]).
 //!
 //! Each loop iteration:
-//!   1. DRAFT: speculate k tokens in parallel from the conditionally
-//!      independent distribution p(. | x_sigma(<n)) (Fig. 1a masks). With
-//!      self-drafting this is one forward of the AS-ARM; with the n-gram
-//!      variant (Algorithm 2) it is a table lookup (aux NFE).
-//!   2. If only one token remained, accept it outright (Lemma 1 shows its
-//!      draft density equals the oracle density) — 1 NFE for the last token.
+//!   1. DRAFT: speculate up to k tokens for the window of orders n..t. With
+//!      [`SelfDrafter`](crate::draft::SelfDrafter) this is one forward of
+//!      the AS-ARM under the Fig. 1a draft masks (model NFE; Lemma 1
+//!      applies); external drafters (bigram — Algorithm 2 —, prompt
+//!      lookup) propose synchronously from the live sequence (aux NFE).
+//!   2. If only one token remained and the drafter is Lemma-1 exact,
+//!      accept it outright — 1 NFE for the last token.
 //!   3. VERIFY: one forward with the causal-like Fig. 1b masks yields the
 //!      oracle densities q_i = p(x~_sigma(i) | x_sigma(<n), x~_sigma[n:i))
 //!      for ALL speculated i simultaneously.
 //!   4. Accept x~_i while r < min(1, q_i/p_i); on first rejection resample
-//!      from (q - p)_+ (line 22) and continue from there.
+//!      from (q - p)_+ (line 22) and continue from there. The outcome is
+//!      fed back to the drafter and to the [`AdaptiveSpeculation`]
+//!      controller, which retunes the window length k.
 //!
-//! Theorem 1 (model NFE <= targets decoded) and Theorem 2 (output
-//! distribution == sequential/oracle joint) are enforced by tests against
-//! the analytic mock engine (tests below + rust/tests/).
+//! Theorem 1 (model NFE <= targets decoded, self-drafting with k >= 2) and
+//! Theorem 2 (output distribution == sequential/oracle joint, for EVERY
+//! drafter — speculative accept/resample is proposal-agnostic) are
+//! enforced by tests against the analytic mock engine (tests below +
+//! rust/tests/).
 
+use crate::draft::{AdaptiveSpeculation, DraftContext, DraftKind, DraftOptions, Drafter};
 use crate::model::mask::{advance_draft_masks, draft_masks, verify_masks, Ordering};
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
-use super::ngram::BigramDraft;
 use super::sampling::{residual, sample_probs, softmax};
 use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
-
-/// Which draft model speculates tokens.
-pub enum DraftSource {
-    /// The AS-ARM drafts for itself (Alg. 1; Lemma 1 applies).
-    SelfModel,
-    /// Context bigram table (Alg. 2; cheap but Lemma 1 does NOT apply, so
-    /// even the last token is verified).
-    NGram,
-}
 
 enum Phase {
     Draft,
@@ -43,7 +40,6 @@ enum Phase {
 pub struct AssdMachine {
     ord: Ordering,
     vocab: usize,
-    k: usize,
     temp: f32,
     rng: Rng,
     tokens: Vec<u32>,
@@ -56,10 +52,10 @@ pub struct AssdMachine {
     n: usize,
     t: usize,
     phase: Phase,
-    draft_source: DraftSource,
-    ngram: Option<BigramDraft>,
+    drafter: Box<dyn Drafter>,
+    spec: AdaptiveSpeculation,
     // scratch for the current iteration
-    drafted: Vec<u32>,        // tokens for orders n..t
+    drafted: Vec<u32>,          // tokens for orders n..t
     draft_probs: Vec<Vec<f32>>, // full p(.|x_sigma(<n)) rows for orders n..t
     // stats
     model_nfe: u64,
@@ -68,21 +64,24 @@ pub struct AssdMachine {
     accepted: u64,
     proposed: u64,
     /// Lemma 1 instrumentation: rejections of the FIRST speculated token
-    /// (must stay 0 for SelfModel drafting).
+    /// (must stay 0 for self-drafting).
     pub first_token_rejections: u64,
 }
 
 impl AssdMachine {
+    /// Build a machine around an explicit drafter + speculation controller
+    /// (the general form; the scheduler and benches construct these from a
+    /// [`DraftOptions`]).
     pub fn new(
         ord: Ordering,
         tokens: Vec<u32>,
         vocab: usize,
-        k: usize,
+        spec: AdaptiveSpeculation,
         temp: f32,
         rng: Rng,
-        draft_source: DraftSource,
+        drafter: Box<dyn Drafter>,
     ) -> Self {
-        assert!(k >= 1);
+        assert!(spec.current() >= 1);
         assert_eq!(tokens.len(), ord.n());
         for (pos, &t) in tokens.iter().enumerate() {
             if ord.is_prompt_pos(pos) {
@@ -91,18 +90,17 @@ impl AssdMachine {
                 assert_eq!(t, MASK, "target position {pos} must start as MASK");
             }
         }
+        let mut spec = spec;
+        // Shape clamp: a window can never exceed the target count (and the
+        // scheduler additionally clamps to the engine's artifact window).
+        spec.clamp_max(ord.n_targets().max(1));
         let n = ord.m;
         let (draft_h, draft_g) = draft_masks(&ord, n);
         let (ver_h, ver_g) = verify_masks(&ord);
-        let ngram = match draft_source {
-            DraftSource::NGram => Some(BigramDraft::from_sequence(&tokens, vocab)),
-            DraftSource::SelfModel => None,
-        };
         let phase = if n >= ord.n() { Phase::Done } else { Phase::Draft };
         AssdMachine {
             ord,
             vocab,
-            k,
             temp,
             rng,
             tokens,
@@ -113,8 +111,8 @@ impl AssdMachine {
             n,
             t: n,
             phase,
-            draft_source,
-            ngram,
+            drafter,
+            spec,
             drafted: vec![],
             draft_probs: vec![],
             model_nfe: 0,
@@ -126,44 +124,63 @@ impl AssdMachine {
         }
     }
 
-    /// N-gram drafting happens synchronously (no forward needed): fill the
-    /// window, record p-rows from the bigram table, move to Verify.
-    fn ngram_draft(&mut self) {
+    /// Build drafter + controller from a [`DraftOptions`] — the single
+    /// construction path the scheduler and the eval harness share.
+    /// `window_cap` is the engine's shape limit (its artifact sequence
+    /// length); pass `usize::MAX` when no engine bound applies.
+    pub fn from_options(
+        ord: Ordering,
+        tokens: Vec<u32>,
+        vocab: usize,
+        opts: DraftOptions,
+        window_cap: usize,
+        temp: f32,
+        rng: Rng,
+    ) -> Self {
+        let mut spec = opts.speculation();
+        // Shape clamp: the draft/verify passes reuse the engine's compiled
+        // fwd_b{B} [B, N] executables, so a window can never exceed the
+        // artifact sequence length.
+        spec.clamp_max(window_cap);
+        let drafter = opts.build(&tokens, vocab);
+        AssdMachine::new(ord, tokens, vocab, spec, temp, rng, drafter)
+    }
+
+    /// Convenience: fixed draft length `k` with the named drafter kind.
+    pub fn with_kind(
+        ord: Ordering,
+        tokens: Vec<u32>,
+        vocab: usize,
+        k: usize,
+        temp: f32,
+        rng: Rng,
+        kind: DraftKind,
+    ) -> Self {
+        let opts = DraftOptions {
+            kind,
+            max_len: k,
+            adaptive: false,
+        };
+        AssdMachine::from_options(ord, tokens, vocab, opts, usize::MAX, temp, rng)
+    }
+
+    /// External (aux-NFE) drafting: fill the window synchronously from the
+    /// drafter and move to Verify. No engine forward involved.
+    fn external_draft(&mut self) {
         let nseq = self.ord.n();
-        self.t = (self.n + self.k).min(nseq);
-        self.drafted.clear();
-        self.draft_probs.clear();
-        let ng = self.ngram.as_ref().expect("ngram table");
-        let mut dists = Vec::with_capacity(self.t - self.n);
-        {
-            // Theorem 3: left neighbour of sigma(i) is known or drafted
-            // earlier in this window (lattice keeps targets sorted).
-            for i in self.n..self.t {
-                let pos = self.ord.sigma[i];
-                let prev = if pos == 0 {
-                    None
-                } else {
-                    let left = self.tokens[pos - 1];
-                    if left != MASK {
-                        Some(left)
-                    } else {
-                        // drafted earlier in this window
-                        debug_assert!(self.drafted.iter().len() > 0 || true);
-                        let oi = self.ord.order[pos - 1];
-                        if oi >= self.n && oi < i {
-                            Some(self.drafted[oi - self.n])
-                        } else {
-                            None
-                        }
-                    }
-                };
-                let dist = ng.dist(prev);
-                let tok = sample_probs(&mut self.rng, &dist) as u32;
-                self.drafted.push(tok);
-                dists.push(dist);
-            }
-        }
-        self.draft_probs = dists;
+        self.t = (self.n + self.spec.current()).min(nseq);
+        let ctx = DraftContext {
+            tokens: &self.tokens,
+            ord: &self.ord,
+            n: self.n,
+            t: self.t,
+            temp: self.temp,
+            vocab: self.vocab,
+        };
+        let prop = self.drafter.propose(&ctx, None, &mut self.rng);
+        debug_assert_eq!(prop.tokens.len(), self.t - self.n);
+        self.drafted = prop.tokens;
+        self.draft_probs = prop.dists;
         self.aux_nfe += 1;
         // fill drafts into the sequence for the verify pass
         for i in self.n..self.t {
@@ -174,35 +191,10 @@ impl AssdMachine {
 
     fn finish_iteration(&mut self, n_new: usize) {
         advance_draft_masks(&self.ord, self.n, n_new, &mut self.draft_h, &mut self.draft_g);
-        // update the n-gram table with newly fixed tokens
-        if self.ngram.is_some() {
-            let mut obs: Vec<(Option<u32>, u32, Option<u32>)> = vec![];
-            for i in self.n..n_new {
-                let pos = self.ord.sigma[i];
-                let tok = self.tokens[pos];
-                let left = if pos > 0 { Some(self.tokens[pos - 1]) } else { None };
-                let right = if pos + 1 < self.tokens.len() {
-                    Some(self.tokens[pos + 1])
-                } else {
-                    None
-                };
-                obs.push((left, tok, right));
-            }
-            let ng = self.ngram.as_mut().unwrap();
-            for (left, tok, right) in obs {
-                ng.observe_unigram(tok);
-                if let Some(l) = left {
-                    if l != MASK {
-                        ng.observe(l, tok);
-                    }
-                }
-                if let Some(r) = right {
-                    if r != MASK {
-                        ng.observe(tok, r);
-                    }
-                }
-            }
-        }
+        // committed-token feedback (e.g. the bigram table learns from the
+        // generated text)
+        self.drafter
+            .observe_commit(&self.tokens, &self.ord, self.n, n_new);
         self.n = n_new;
         self.iterations += 1;
         self.phase = if self.n >= self.ord.n() {
@@ -222,19 +214,17 @@ impl DecodeMachine for AssdMachine {
         loop {
             match self.phase {
                 Phase::Done => return None,
-                Phase::Draft => match self.draft_source {
-                    DraftSource::SelfModel => {
+                Phase::Draft => {
+                    if self.drafter.needs_model_forward() {
                         return Some(ForwardRequest {
                             tokens: &self.tokens,
                             mask_h: &self.draft_h,
                             mask_g: &self.draft_g,
-                        })
+                        });
                     }
-                    DraftSource::NGram => {
-                        self.ngram_draft();
-                        continue; // now in Verify; fall through
-                    }
-                },
+                    self.external_draft();
+                    continue; // now in Verify; fall through
+                }
                 Phase::Verify => {
                     return Some(ForwardRequest {
                         tokens: &self.tokens,
@@ -252,24 +242,26 @@ impl DecodeMachine for AssdMachine {
         match self.phase {
             Phase::Done => panic!("absorb on finished machine"),
             Phase::Draft => {
-                // Self-draft forward: sample the window in parallel.
+                // Model-forward drafting: sample the window in parallel
+                // from the draft-phase logits.
                 self.model_nfe += 1;
                 let nseq = self.ord.n();
-                self.t = (self.n + self.k).min(nseq);
-                self.drafted.clear();
-                self.draft_probs.clear();
-                for i in self.n..self.t {
-                    let pos = self.ord.sigma[i];
-                    let mut row = logits[pos * v..(pos + 1) * v].to_vec();
-                    super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
-                    let probs = softmax(&row, self.temp);
-                    let tok = sample_probs(&mut self.rng, &probs) as u32;
-                    self.drafted.push(tok);
-                    self.draft_probs.push(probs);
-                }
+                self.t = (self.n + self.spec.current()).min(nseq);
+                let ctx = DraftContext {
+                    tokens: &self.tokens,
+                    ord: &self.ord,
+                    n: self.n,
+                    t: self.t,
+                    temp: self.temp,
+                    vocab: self.vocab,
+                };
+                let prop = self.drafter.propose(&ctx, Some(logits), &mut self.rng);
+                debug_assert_eq!(prop.tokens.len(), self.t - self.n);
+                self.drafted = prop.tokens;
+                self.draft_probs = prop.dists;
                 // Alg. 1 lines 9-12: if this was the final token, accept it
                 // without verification (Lemma 1). Self-draft only.
-                if self.n == nseq - 1 {
+                if self.drafter.lemma1_exact() && self.n == nseq - 1 {
                     self.tokens[self.ord.sigma[self.n]] = self.drafted[0];
                     let n_new = self.n + 1;
                     self.finish_iteration(n_new);
@@ -283,6 +275,8 @@ impl DecodeMachine for AssdMachine {
             Phase::Verify => {
                 self.model_nfe += 1;
                 let mut n_new = self.t;
+                let mut acc_iter = 0usize;
+                let mut prop_iter = 0usize;
                 for i in self.n..self.t {
                     let pos = self.ord.sigma[i];
                     // Same ban as the draft rows: p and q must share support.
@@ -294,9 +288,9 @@ impl DecodeMachine for AssdMachine {
                     let q_i = q_probs[drafted] as f64;
                     let p_i = (p_probs[drafted] as f64).max(1e-30);
                     let r = self.rng.f64();
-                    self.proposed += 1;
+                    prop_iter += 1;
                     if r < (q_i / p_i).min(1.0) {
-                        self.accepted += 1;
+                        acc_iter += 1;
                         continue;
                     }
                     // rejection: resample from (q - p)_+, clear later drafts
@@ -316,6 +310,12 @@ impl DecodeMachine for AssdMachine {
                     n_new = i + 1;
                     break;
                 }
+                self.proposed += prop_iter as u64;
+                self.accepted += acc_iter as u64;
+                // acceptance feedback: the controller retunes the window,
+                // the drafter may adapt internally
+                self.spec.record(acc_iter, prop_iter);
+                self.drafter.observe_outcome(acc_iter, prop_iter);
                 self.finish_iteration(n_new);
             }
         }
@@ -330,6 +330,8 @@ impl DecodeMachine for AssdMachine {
             iterations: self.iterations,
             accepted: self.accepted,
             proposed: self.proposed,
+            draft_kind: self.drafter.name().to_string(),
+            final_draft_len: self.spec.current(),
         }
     }
 }
@@ -349,18 +351,38 @@ mod tests {
         toks: &[u32],
         k: usize,
         seed: u64,
-        src: DraftSource,
+        kind: DraftKind,
     ) -> (DecodeOutcome, u64) {
+        decode_assd_opts(
+            e,
+            ord,
+            toks,
+            DraftOptions {
+                kind,
+                max_len: k,
+                adaptive: false,
+            },
+            seed,
+        )
+    }
+
+    fn decode_assd_opts(
+        e: &MockEngine,
+        ord: &Ordering,
+        toks: &[u32],
+        opts: DraftOptions,
+        seed: u64,
+    ) -> (DecodeOutcome, u64) {
+        let drafter = opts.build(toks, e.vocab());
         let m = AssdMachine::new(
             ord.clone(),
             toks.to_vec(),
             e.vocab(),
-            k,
+            opts.speculation(),
             1.0,
             Rng::new(seed),
-            src,
+            drafter,
         );
-        let first_rej = std::cell::Cell::new(0u64);
         // run manually to read instrumentation before consuming
         let mut mach = Box::new(m);
         while !mach.done() {
@@ -371,8 +393,8 @@ mod tests {
             let logits = e.forward(1, &t, &h, &g).unwrap();
             mach.absorb(&logits);
         }
-        first_rej.set(mach.first_token_rejections);
-        (mach.outcome(), first_rej.get())
+        let first_rej = mach.first_token_rejections;
+        (mach.outcome(), first_rej)
     }
 
     #[test]
@@ -380,10 +402,11 @@ mod tests {
         let e = MockEngine::new(1, 10, 6, 1.0);
         let ord = Ordering::new(lattice_sigma(&[2, 7], 10), 2);
         let toks = init_tokens(&ord, &[(2, 3), (7, 1)]);
-        let (out, _) = decode_assd(&e, &ord, &toks, 5, 9, DraftSource::SelfModel);
+        let (out, _) = decode_assd(&e, &ord, &toks, 5, 9, DraftKind::SelfModel);
         assert!(out.tokens.iter().all(|&t| t != MASK));
         assert_eq!(out.tokens[2], 3);
         assert_eq!(out.tokens[7], 1);
+        assert_eq!(out.draft_kind, "self");
     }
 
     /// Theorem 1: model NFE never exceeds the number of target tokens.
@@ -409,7 +432,7 @@ mod tests {
                     .map(|p| (p, r.below(4) as u32))
                     .collect();
                 let toks = init_tokens(&ord, &prompt);
-                let (out, _) = decode_assd(&e, &ord, &toks, k, seed ^ 2, DraftSource::SelfModel);
+                let (out, _) = decode_assd(&e, &ord, &toks, k, seed ^ 2, DraftKind::SelfModel);
                 let targets = (n - m) as u64;
                 if out.model_nfe > targets {
                     return Err(format!(
@@ -419,6 +442,53 @@ mod tests {
                 }
                 if out.tokens.iter().any(|&t| t == MASK) {
                     return Err("MASK left in output".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Theorem 1 survives adaptive speculation: the controller's floor of 2
+    /// keeps every draft+verify iteration committing at least two tokens.
+    #[test]
+    fn prop_theorem1_nfe_bound_adaptive() {
+        propcheck::check_no_shrink(
+            23,
+            60,
+            |r: &mut Rng| {
+                let n = r.range(3, 14);
+                let m = r.range(1, n - 1);
+                let seed = r.next_u64();
+                (n, m, seed)
+            },
+            |&(n, m, seed)| {
+                let e = MockEngine::new(seed ^ 5, n, 4, 1.0);
+                let mut r = Rng::new(seed);
+                let sigma = sample_sigma(&mut r, n, m, OrderProtocol::Lattice);
+                let ord = Ordering::new(sigma, m);
+                let prompt: Vec<(usize, u32)> = (0..n)
+                    .filter(|&p| ord.is_prompt_pos(p))
+                    .map(|p| (p, r.below(4) as u32))
+                    .collect();
+                let toks = init_tokens(&ord, &prompt);
+                let opts = DraftOptions {
+                    kind: DraftKind::SelfModel,
+                    max_len: 3,
+                    adaptive: true,
+                };
+                let (out, _) = decode_assd_opts(&e, &ord, &toks, opts, seed ^ 6);
+                let targets = (n - m) as u64;
+                if out.model_nfe > targets {
+                    return Err(format!(
+                        "adaptive NFE {} > targets {targets} (n={n} m={m})",
+                        out.model_nfe
+                    ));
+                }
+                if out.tokens.iter().any(|&t| t == MASK) {
+                    return Err("MASK left in output".into());
+                }
+                if out.final_draft_len < 2 {
+                    return Err(format!("window shrank below 2: {}", out.final_draft_len));
                 }
                 Ok(())
             },
@@ -444,7 +514,8 @@ mod tests {
                     .map(|p| (p, r.below(5) as u32))
                     .collect();
                 let toks = init_tokens(&ord, &prompt);
-                let (_, first_rej) = decode_assd(&e, &ord, &toks, k, seed ^ 4, DraftSource::SelfModel);
+                let (_, first_rej) =
+                    decode_assd(&e, &ord, &toks, k, seed ^ 4, DraftKind::SelfModel);
                 if first_rej > 0 {
                     return Err(format!("{first_rej} first-token rejections"));
                 }
@@ -454,15 +525,28 @@ mod tests {
     }
 
     #[test]
-    fn ngram_variant_completes() {
+    fn bigram_variant_completes() {
         let e = MockEngine::new(5, 12, 5, 1.0);
         let ord = Ordering::new(lattice_sigma(&[0, 5, 11], 12), 3);
         let toks = init_tokens(&ord, &[(0, 2), (5, 4), (11, 0)]);
-        let (out, _) = decode_assd(&e, &ord, &toks, 4, 17, DraftSource::NGram);
+        let (out, _) = decode_assd(&e, &ord, &toks, 4, 17, DraftKind::Bigram);
         assert!(out.tokens.iter().all(|&t| t != MASK));
         assert!(out.aux_nfe > 0);
-        // model NFE for ngram = verify passes only
+        // model NFE for external drafting = verify passes only
         assert!(out.model_nfe <= 12);
+        assert_eq!(out.draft_kind, "bigram");
+    }
+
+    #[test]
+    fn lookup_variant_completes() {
+        let e = MockEngine::new(6, 12, 5, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[0, 5, 11], 12), 3);
+        let toks = init_tokens(&ord, &[(0, 2), (5, 4), (11, 0)]);
+        let (out, _) = decode_assd(&e, &ord, &toks, 4, 19, DraftKind::Lookup);
+        assert!(out.tokens.iter().all(|&t| t != MASK));
+        assert!(out.aux_nfe > 0);
+        assert!(out.model_nfe <= 12);
+        assert_eq!(out.draft_kind, "lookup");
     }
 
     /// Theorem 2 (statistical): ASSD's output distribution equals
@@ -493,7 +577,7 @@ mod tests {
             let out = run_machine(&e, Box::new(m)).unwrap();
             seq_counts[enc(&out.tokens)] += 1.0;
 
-            let (out2, _) = decode_assd(&e, &ord, &toks, 3, 500_000 + s, DraftSource::SelfModel);
+            let (out2, _) = decode_assd(&e, &ord, &toks, 3, 500_000 + s, DraftKind::SelfModel);
             assd_counts[enc(&out2.tokens)] += 1.0;
         }
         let tv: f64 = seq_counts
@@ -506,21 +590,21 @@ mod tests {
         assert!(tv < 0.025, "TV distance {tv} too large — Theorem 2 violated?");
     }
 
-    /// Theorem 2 holds for the n-gram draft too (speculative decoding is
-    /// draft-agnostic).
+    /// Theorem 2 holds for EVERY drafter, fixed or adaptive: speculative
+    /// accept/resample is proposal-agnostic, so swapping the draft source
+    /// may change NFE but never the output law.
     #[test]
-    fn theorem2_ngram_matches_sequential_distribution() {
+    fn theorem2_every_drafter_matches_sequential_distribution() {
         let n = 4;
         let v = 3;
         let e = MockEngine::new(78, n, v, 1.2);
         let ord = Ordering::new(lattice_sigma(&[0], n), 1);
         let toks = init_tokens(&ord, &[(0, 1)]);
-        let samples = 20_000;
+        let samples = 12_000u64;
         let enc = |t: &[u32]| -> usize {
             (t[1] as usize) * v * v + (t[2] as usize) * v + (t[3] as usize)
         };
         let mut seq_counts = vec![0f64; v * v * v];
-        let mut ng_counts = vec![0f64; v * v * v];
         for s in 0..samples {
             let m = crate::decode::sequential::SequentialMachine::new(
                 ord.clone(),
@@ -531,16 +615,36 @@ mod tests {
             );
             let out = run_machine(&e, Box::new(m)).unwrap();
             seq_counts[enc(&out.tokens)] += 1.0;
-            let (out2, _) = decode_assd(&e, &ord, &toks, 3, 700_000 + s, DraftSource::NGram);
-            ng_counts[enc(&out2.tokens)] += 1.0;
         }
-        let tv: f64 = seq_counts
-            .iter()
-            .zip(&ng_counts)
-            .map(|(a, b)| (a / samples as f64 - b / samples as f64).abs())
-            .sum::<f64>()
-            / 2.0;
-        assert!(tv < 0.025, "TV distance {tv} too large for n-gram ASSD");
+        let configs = [
+            (DraftKind::SelfModel, true),
+            (DraftKind::Bigram, false),
+            (DraftKind::Bigram, true),
+            (DraftKind::Lookup, false),
+        ];
+        for (kind, adaptive) in configs {
+            let opts = DraftOptions {
+                kind,
+                max_len: 3,
+                adaptive,
+            };
+            let mut counts = vec![0f64; v * v * v];
+            for s in 0..samples {
+                let (out, _) = decode_assd_opts(&e, &ord, &toks, opts, 700_000 + s);
+                counts[enc(&out.tokens)] += 1.0;
+            }
+            let tv: f64 = seq_counts
+                .iter()
+                .zip(&counts)
+                .map(|(a, b)| (a / samples as f64 - b / samples as f64).abs())
+                .sum::<f64>()
+                / 2.0;
+            assert!(
+                tv < 0.035,
+                "TV distance {tv} too large for drafter {:?} (adaptive={adaptive})",
+                kind
+            );
+        }
     }
 
     #[test]
@@ -552,7 +656,7 @@ mod tests {
         let e = MockEngine::new(9, 8, 4, 1.0);
         let ord = Ordering::new(lattice_sigma(&[3], 8), 1);
         let toks = init_tokens(&ord, &[(3, 2)]);
-        let (out, _) = decode_assd(&e, &ord, &toks, 1, 13, DraftSource::SelfModel);
+        let (out, _) = decode_assd(&e, &ord, &toks, 1, 13, DraftKind::SelfModel);
         assert!(out.tokens.iter().all(|&t| t != MASK));
         let targets = 7u64;
         assert!(out.model_nfe <= 2 * targets);
@@ -564,8 +668,42 @@ mod tests {
         let e = MockEngine::new(10, 5, 4, 1.0);
         let ord = Ordering::new(lattice_sigma(&[0, 1, 2, 3], 5), 4);
         let toks = init_tokens(&ord, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
-        let (out, _) = decode_assd(&e, &ord, &toks, 5, 3, DraftSource::SelfModel);
+        let (out, _) = decode_assd(&e, &ord, &toks, 5, 3, DraftKind::SelfModel);
         assert_eq!(out.model_nfe, 1, "final-token shortcut (Lemma 1) not taken");
         assert!(out.tokens[4] != MASK);
+    }
+
+    /// Adaptive speculation grows the window under high acceptance and
+    /// then needs far fewer forwards than a short fixed window. A
+    /// near-zero sharpness makes every conditional near-uniform, so draft
+    /// and verify densities agree and acceptance is near-certain.
+    #[test]
+    fn adaptive_grows_windows_on_predictable_text() {
+        let e = MockEngine::new(11, 24, 5, 0.001); // near-uniform conditionals
+        let ord = Ordering::new(lattice_sigma(&[0], 24), 1);
+        let toks = init_tokens(&ord, &[(0, 2)]);
+        let fixed = DraftOptions {
+            kind: DraftKind::SelfModel,
+            max_len: 2,
+            adaptive: false,
+        };
+        let adaptive = DraftOptions {
+            kind: DraftKind::SelfModel,
+            max_len: 2,
+            adaptive: true,
+        };
+        let (out_f, _) = decode_assd_opts(&e, &ord, &toks, fixed, 99);
+        let (out_a, _) = decode_assd_opts(&e, &ord, &toks, adaptive, 99);
+        assert!(
+            out_a.final_draft_len > 2,
+            "adaptive window never grew: {}",
+            out_a.final_draft_len
+        );
+        assert!(
+            out_a.model_nfe <= out_f.model_nfe,
+            "adaptive {} NFE > fixed {} NFE on predictable text",
+            out_a.model_nfe,
+            out_f.model_nfe
+        );
     }
 }

@@ -116,10 +116,8 @@ impl DecodeMachine for DiffusionMachine {
         DecodeOutcome {
             tokens: self.tokens,
             model_nfe: self.model_nfe,
-            aux_nfe: 0,
             iterations: self.iterations,
-            accepted: 0,
-            proposed: 0,
+            ..Default::default()
         }
     }
 }

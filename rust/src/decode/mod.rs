@@ -1,6 +1,7 @@
-//! The decoder family: sequential (baseline), ASSD (Algorithm 1) with
-//! self-drafting or context n-gram drafting (Algorithm 2), a masked-
-//! diffusion baseline, and a left-to-right AR mode.
+//! The decoder family: sequential (baseline), ASSD (Algorithm 1) over the
+//! pluggable draft subsystem ([`crate::draft`]: self-drafting, context
+//! bigram — Algorithm 2 —, prompt lookup, adaptive speculation control), a
+//! masked-diffusion baseline, and a left-to-right AR mode.
 //!
 //! Decoders are implemented as per-sequence STATE MACHINES that expose the
 //! forward request they need next and absorb the resulting logits. A
@@ -12,7 +13,6 @@
 
 pub mod assd;
 pub mod diffusion;
-pub mod ngram;
 pub mod sampling;
 pub mod sequential;
 
@@ -35,12 +35,22 @@ pub struct DecodeOutcome {
     /// accepted / proposed speculative tokens
     pub accepted: u64,
     pub proposed: u64,
+    /// Draft implementation that served this decode ("" for samplers that
+    /// do not speculate).
+    pub draft_kind: String,
+    /// Speculation window length when the decode finished (moves under
+    /// adaptive control; equals the configured k otherwise).
+    pub final_draft_len: usize,
 }
 
 impl DecodeOutcome {
+    /// Accepted / proposed speculative tokens. 0.0 when nothing was
+    /// proposed (non-speculative samplers) — the same convention the
+    /// metrics endpoints use, so the per-request and pool-level rates
+    /// agree for identical traffic.
     pub fn acceptance_rate(&self) -> f64 {
         if self.proposed == 0 {
-            1.0
+            0.0
         } else {
             self.accepted as f64 / self.proposed as f64
         }

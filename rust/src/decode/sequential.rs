@@ -83,10 +83,8 @@ impl DecodeMachine for SequentialMachine {
         DecodeOutcome {
             tokens: self.tokens,
             model_nfe: self.model_nfe,
-            aux_nfe: 0,
             iterations: self.model_nfe,
-            accepted: 0,
-            proposed: 0,
+            ..Default::default()
         }
     }
 }

@@ -1,0 +1,190 @@
+//! Adaptive speculation control: tune the draft window length per request
+//! from an EWMA of observed acceptance rates.
+//!
+//! Draft length is the main free knob in ASSD's NFE accounting: one verify
+//! forward is spent per while-loop iteration regardless of window length,
+//! so when drafts keep being accepted a longer window converts the same
+//! forward into more tokens, and when rejections are frequent a long
+//! window only wastes draft work (aux NFE for table drafters). The
+//! controller is deliberately TCP-like: multiplicative growth under
+//! sustained full acceptance, halving on rejection streaks, additive
+//! shrink while the EWMA is poor — simple, monotone, and clamped.
+//!
+//! Clamping: the upper bound is a *shape* limit, not a tuning choice — the
+//! draft and verify passes reuse the engine's compiled `fwd_b{B}` [B, N]
+//! executables, so a window can never exceed the artifact sequence length
+//! (and never usefully exceeds the remaining target count). The scheduler
+//! clamps to the engine window at admission; the decode machine clamps to
+//! the remaining targets every iteration.
+
+/// EWMA smoothing factor for the per-iteration acceptance rate.
+const EWMA_ALPHA: f64 = 0.3;
+/// Grow the window when the EWMA is at least this (and the last iteration
+/// was fully accepted).
+const GROW_THRESHOLD: f64 = 0.75;
+/// Shrink (additively) while the EWMA is below this.
+const SHRINK_THRESHOLD: f64 = 0.35;
+/// Halve the window after this many consecutive iterations with a
+/// rejection.
+const REJECT_STREAK_LIMIT: u32 = 2;
+
+/// Per-request draft-length controller. Copy-able plain state; one
+/// instance lives inside each ASSD decode machine.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveSpeculation {
+    k: usize,
+    k_min: usize,
+    k_max: usize,
+    adaptive: bool,
+    /// EWMA of per-iteration acceptance rates, optimistic start.
+    ewma: f64,
+    reject_streak: u32,
+}
+
+impl AdaptiveSpeculation {
+    /// Fixed-length speculation: `current()` is always `k`.
+    pub fn fixed(k: usize) -> AdaptiveSpeculation {
+        assert!(k >= 1, "draft length must be >= 1");
+        AdaptiveSpeculation {
+            k,
+            k_min: k,
+            k_max: k,
+            adaptive: false,
+            ewma: 1.0,
+            reject_streak: 0,
+        }
+    }
+
+    /// Adaptive speculation starting at `init`. The floor is 2 (the
+    /// Theorem-1 bound needs windows of at least two; see
+    /// decode/assd.rs's `k1_completes_but_violates_theorem1_bound`); the
+    /// ceiling is unbounded until [`AdaptiveSpeculation::clamp_max`] is
+    /// applied with the engine's shape limit.
+    pub fn adaptive(init: usize) -> AdaptiveSpeculation {
+        let k_min = 2;
+        AdaptiveSpeculation {
+            k: init.max(k_min),
+            k_min,
+            k_max: usize::MAX,
+            adaptive: true,
+            ewma: 1.0,
+            reject_streak: 0,
+        }
+    }
+
+    /// Apply a shape limit (engine sequence window / remaining targets):
+    /// the window may never exceed `cap` from here on.
+    pub fn clamp_max(&mut self, cap: usize) {
+        let cap = cap.max(1);
+        self.k_max = self.k_max.min(cap);
+        self.k_min = self.k_min.min(self.k_max);
+        self.k = self.k.clamp(self.k_min, self.k_max);
+    }
+
+    /// The draft length to use for the next iteration.
+    pub fn current(&self) -> usize {
+        self.k
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    /// Smoothed acceptance rate observed so far.
+    pub fn accept_ewma(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Feed one iteration's verification outcome: `accepted` of the
+    /// `proposed` examined tokens were kept. No-op for fixed mode.
+    pub fn record(&mut self, accepted: usize, proposed: usize) {
+        if !self.adaptive || proposed == 0 {
+            return;
+        }
+        let rate = accepted as f64 / proposed as f64;
+        self.ewma = EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * self.ewma;
+        if accepted < proposed {
+            self.reject_streak += 1;
+        } else {
+            self.reject_streak = 0;
+        }
+        if self.reject_streak >= REJECT_STREAK_LIMIT {
+            self.k = (self.k / 2).max(self.k_min);
+            self.reject_streak = 0;
+        } else if self.ewma >= GROW_THRESHOLD && accepted == proposed {
+            self.k = self.k.saturating_mul(2).min(self.k_max);
+        } else if self.ewma < SHRINK_THRESHOLD {
+            self.k = (self.k - 1).max(self.k_min);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut s = AdaptiveSpeculation::fixed(5);
+        for _ in 0..10 {
+            s.record(0, 5);
+        }
+        assert_eq!(s.current(), 5);
+        assert!(!s.is_adaptive());
+    }
+
+    #[test]
+    fn grows_under_full_acceptance_up_to_cap() {
+        let mut s = AdaptiveSpeculation::adaptive(4);
+        s.clamp_max(64);
+        for _ in 0..10 {
+            let k = s.current();
+            s.record(k, k);
+        }
+        assert_eq!(s.current(), 64, "should have grown to the cap");
+    }
+
+    #[test]
+    fn rejection_streak_halves() {
+        let mut s = AdaptiveSpeculation::adaptive(16);
+        s.clamp_max(16);
+        // Two consecutive iterations with a rejection halve the window.
+        s.record(15, 16);
+        s.record(15, 16);
+        assert_eq!(s.current(), 8);
+    }
+
+    #[test]
+    fn poor_ewma_shrinks_to_floor_not_below() {
+        let mut s = AdaptiveSpeculation::adaptive(6);
+        s.clamp_max(6);
+        for _ in 0..50 {
+            s.record(0, s.current());
+        }
+        assert_eq!(s.current(), 2, "floor is 2 (Theorem 1 needs windows >= 2)");
+    }
+
+    #[test]
+    fn stays_within_bounds_under_random_feedback() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut s = AdaptiveSpeculation::adaptive(5);
+        s.clamp_max(32);
+        for _ in 0..500 {
+            let proposed = rng.range(1, 33);
+            let accepted = rng.below(proposed + 1);
+            s.record(accepted, proposed);
+            assert!((2..=32).contains(&s.current()), "k={}", s.current());
+        }
+    }
+
+    #[test]
+    fn clamp_tightens_current() {
+        let mut s = AdaptiveSpeculation::adaptive(20);
+        s.clamp_max(8);
+        assert_eq!(s.current(), 8);
+        // fixed mode clamps too (window larger than the model's target set)
+        let mut f = AdaptiveSpeculation::fixed(50);
+        f.clamp_max(10);
+        assert_eq!(f.current(), 10);
+    }
+}

@@ -1,0 +1,342 @@
+//! Context-derived bigram draft model (paper Algorithm 2 / Eq. 23,
+//! following [Ste+24]), behind the [`Drafter`] trait.
+//!
+//! [`BigramDraft`] is the table: c(a | b) counted over the adjacent
+//! non-MASK pairs of the partially decoded sequence, initialized from the
+//! prompt and updated as tokens are accepted. Laplace-smoothed so
+//! proposals always have support. [`BigramDrafter`] wraps it as a
+//! [`Drafter`]: Theorem 3 (paper App. D.5) guarantees that under the
+//! Eq. 4 lattice ordering the left neighbour of any drafted position is
+//! always available (either known or drafted earlier in the same window).
+
+use std::collections::HashMap;
+
+use crate::decode::sampling::sample_probs;
+use crate::model::mask::Ordering;
+use crate::tokenizer::{MASK, PAD};
+use crate::util::rng::Rng;
+
+use super::{DraftContext, DraftProposal, Drafter};
+
+#[derive(Clone, Debug)]
+pub struct BigramDraft {
+    /// counts[(prev, next)]
+    counts: HashMap<(u32, u32), u32>,
+    /// row totals per prev
+    totals: HashMap<u32, u32>,
+    /// unigram counts (fallback for position 0 / unseen rows)
+    unigram: HashMap<u32, u32>,
+    uni_total: u32,
+    vocab: usize,
+    alpha: f32,
+}
+
+impl BigramDraft {
+    /// Initialize by sweeping the current sequence (prompt tokens known,
+    /// targets MASK).
+    pub fn from_sequence(tokens: &[u32], vocab: usize) -> Self {
+        let mut d = BigramDraft {
+            counts: HashMap::new(),
+            totals: HashMap::new(),
+            unigram: HashMap::new(),
+            uni_total: 0,
+            vocab,
+            alpha: 0.1,
+        };
+        for w in tokens.windows(2) {
+            if w[0] != MASK && w[1] != MASK {
+                d.observe(w[0], w[1]);
+            }
+        }
+        for &t in tokens {
+            if t != MASK {
+                *d.unigram.entry(t).or_insert(0) += 1;
+                d.uni_total += 1;
+            }
+        }
+        d
+    }
+
+    /// Record a decoded bigram (prev -> next).
+    pub fn observe(&mut self, prev: u32, next: u32) {
+        *self.counts.entry((prev, next)).or_insert(0) += 1;
+        *self.totals.entry(prev).or_insert(0) += 1;
+    }
+
+    pub fn observe_unigram(&mut self, t: u32) {
+        *self.unigram.entry(t).or_insert(0) += 1;
+        self.uni_total += 1;
+    }
+
+    /// Smoothed conditional distribution c(. | prev) as a dense vector.
+    /// MASK/PAD specials carry no draft mass (they can never be verified).
+    pub fn dist(&self, prev: Option<u32>) -> Vec<f32> {
+        let v = self.vocab;
+        let mut probs = vec![self.alpha; v];
+        match prev {
+            Some(p) if self.totals.get(&p).copied().unwrap_or(0) > 0 => {
+                for ((a, b), &c) in self.counts.iter().map(|(k, v)| (k, v)) {
+                    if *a == p {
+                        probs[*b as usize] += c as f32;
+                    }
+                }
+            }
+            _ => {
+                for (&t, &c) in &self.unigram {
+                    probs[t as usize] += c as f32;
+                }
+            }
+        }
+        // Zero the specials AFTER counting (PAD pairs can occur in packed
+        // prompts) and renormalize over the remaining support.
+        for &sp in &[MASK, PAD] {
+            if (sp as usize) < v {
+                probs[sp as usize] = 0.0;
+            }
+        }
+        let total: f32 = probs.iter().sum();
+        probs.iter_mut().for_each(|x| *x /= total.max(1e-30));
+        probs
+    }
+}
+
+/// [`BigramDraft`] as a pluggable [`Drafter`] (aux NFE; Lemma 1 does not
+/// apply, so even the final token is verified).
+pub struct BigramDrafter {
+    table: BigramDraft,
+}
+
+impl BigramDrafter {
+    pub fn from_sequence(tokens: &[u32], vocab: usize) -> BigramDrafter {
+        BigramDrafter {
+            table: BigramDraft::from_sequence(tokens, vocab),
+        }
+    }
+}
+
+impl Drafter for BigramDrafter {
+    fn name(&self) -> &'static str {
+        "bigram"
+    }
+
+    fn propose(
+        &mut self,
+        ctx: &DraftContext<'_>,
+        _logits: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> DraftProposal {
+        let mut tokens = Vec::with_capacity(ctx.t - ctx.n);
+        let mut dists = Vec::with_capacity(ctx.t - ctx.n);
+        for i in ctx.n..ctx.t {
+            let pos = ctx.ord.sigma[i];
+            // Theorem 3: the left neighbour of sigma(i) is known or drafted
+            // earlier in this window (the lattice keeps targets sorted).
+            let prev = if pos == 0 {
+                None
+            } else {
+                let left = ctx.tokens[pos - 1];
+                if left != MASK {
+                    Some(left)
+                } else {
+                    let oi = ctx.ord.order[pos - 1];
+                    if oi >= ctx.n && oi < i {
+                        Some(tokens[oi - ctx.n])
+                    } else {
+                        None
+                    }
+                }
+            };
+            let dist = self.table.dist(prev);
+            let tok = sample_probs(rng, &dist) as u32;
+            tokens.push(tok);
+            dists.push(dist);
+        }
+        DraftProposal { tokens, dists }
+    }
+
+    fn observe_commit(&mut self, tokens: &[u32], ord: &Ordering, n_old: usize, n_new: usize) {
+        for i in n_old..n_new {
+            let pos = ord.sigma[i];
+            let tok = tokens[pos];
+            self.table.observe_unigram(tok);
+            if pos > 0 {
+                let left = tokens[pos - 1];
+                if left != MASK {
+                    self.table.observe(left, tok);
+                }
+            }
+            if pos + 1 < tokens.len() {
+                let right = tokens[pos + 1];
+                if right != MASK {
+                    self.table.observe(tok, right);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn counts_prompt_bigrams() {
+        // "abab" -> c(b|a) high
+        let toks = vec![0u32, 1, 0, 1, MASK, MASK];
+        let d = BigramDraft::from_sequence(&toks, 4);
+        let dist = d.dist(Some(0));
+        assert!(dist[1] > dist[0]);
+        assert!(dist[1] > 0.5);
+        let s: f32 = dist.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mask_pairs_ignored() {
+        let toks = vec![0u32, MASK, 1, MASK];
+        let d = BigramDraft::from_sequence(&toks, 4);
+        // no bigram was observable -> row 0 empty -> unigram fallback,
+        // which saw tokens 0 and 1 once each.
+        let dist = d.dist(Some(0));
+        assert!((dist[0] - dist[1]).abs() < 1e-6);
+        assert!(dist[0] > dist[2]);
+        assert!(dist[2] > 0.0);
+    }
+
+    #[test]
+    fn unigram_fallback_for_no_prev() {
+        let toks = vec![2u32, 2, 2, 3, MASK];
+        let d = BigramDraft::from_sequence(&toks, 5);
+        let dist = d.dist(None);
+        assert!(dist[2] > dist[3]);
+        assert!(dist[3] > dist[0]);
+    }
+
+    #[test]
+    fn observe_updates() {
+        let mut d = BigramDraft::from_sequence(&[MASK, MASK], 3);
+        for _ in 0..50 {
+            d.observe(1, 2);
+        }
+        let dist = d.dist(Some(1));
+        assert!(dist[2] > 0.9);
+    }
+
+    #[test]
+    fn dist_always_positive_everywhere() {
+        let d = BigramDraft::from_sequence(&[0, 1], 6);
+        for prev in [None, Some(0), Some(5)] {
+            let dist = d.dist(prev);
+            assert!(dist.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    /// Property: after ANY mix of from_sequence / observe / observe_unigram
+    /// updates, every dist row is a probability vector — sums to 1, zero
+    /// exactly on in-range specials, and the Laplace smoothing never leaves
+    /// a zero at a regular token.
+    #[test]
+    fn prop_dist_is_normalized_with_full_support() {
+        propcheck::check_no_shrink(
+            31,
+            150,
+            |r: &mut Rng| {
+                let vocab = r.range(3, 300);
+                let tok_max = vocab.min(256);
+                let len = r.below(12);
+                let seq: Vec<u32> = (0..len)
+                    .map(|_| {
+                        if r.below(4) == 0 {
+                            MASK
+                        } else {
+                            r.below(tok_max) as u32
+                        }
+                    })
+                    .collect();
+                let obs: Vec<(u32, u32)> = (0..r.below(20))
+                    .map(|_| (r.below(tok_max) as u32, r.below(tok_max) as u32))
+                    .collect();
+                let queries: Vec<Option<u32>> = (0..4)
+                    .map(|q| {
+                        if q == 0 {
+                            None
+                        } else {
+                            Some(r.below(tok_max) as u32)
+                        }
+                    })
+                    .collect();
+                (vocab, seq, obs, queries)
+            },
+            |(vocab, seq, obs, queries)| {
+                let v = *vocab;
+                let mut d = BigramDraft::from_sequence(seq, v);
+                for &(a, b) in obs {
+                    d.observe(a, b);
+                    d.observe_unigram(b);
+                }
+                for &prev in queries {
+                    let dist = d.dist(prev);
+                    if dist.len() != v {
+                        return Err(format!("dist len {} != vocab {v}", dist.len()));
+                    }
+                    let sum: f32 = dist.iter().sum();
+                    if (sum - 1.0).abs() > 1e-4 {
+                        return Err(format!("dist sums to {sum}"));
+                    }
+                    for (t, &p) in dist.iter().enumerate() {
+                        let special = t as u32 == MASK || t as u32 == PAD;
+                        if special && p != 0.0 {
+                            return Err(format!("special {t} has mass {p}"));
+                        }
+                        if !special && p <= 0.0 {
+                            return Err(format!("smoothing left zero mass at token {t}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: observe(prev, next) strictly raises next's conditional
+    /// mass given prev relative to every other token's.
+    #[test]
+    fn prop_observe_concentrates_mass() {
+        propcheck::check_no_shrink(
+            32,
+            100,
+            |r: &mut Rng| {
+                let vocab = r.range(4, 40);
+                let prev = r.below(vocab) as u32;
+                let next = r.below(vocab) as u32;
+                let reps = r.range(5, 60);
+                (vocab, prev, next, reps)
+            },
+            |&(vocab, prev, next, reps)| {
+                let mut d = BigramDraft::from_sequence(&[], vocab);
+                for _ in 0..reps {
+                    d.observe(prev, next);
+                }
+                let dist = d.dist(Some(prev));
+                for (t, &p) in dist.iter().enumerate() {
+                    if t as u32 != next && p >= dist[next as usize] {
+                        return Err(format!(
+                            "token {t} mass {p} >= observed next {} mass {}",
+                            next, dist[next as usize]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn drafter_reports_name_and_books_no_model_forward() {
+        let d = BigramDrafter::from_sequence(&[0, 1, MASK], 8);
+        assert_eq!(d.name(), "bigram");
+        assert!(!d.needs_model_forward());
+        assert!(!d.lemma1_exact());
+    }
+}

@@ -1,0 +1,253 @@
+//! The draft subsystem: pluggable speculation sources for ASSD.
+//!
+//! ASSD's speedup is bounded by how good and how long the draft is
+//! (Theorem 1 charges one verify forward per while-loop iteration, so
+//! longer accepted prefixes mean fewer forwards per token). This module
+//! makes the draft source a first-class, swappable component:
+//!
+//! * [`Drafter`] — the trait: propose `t - n` tokens *with their full
+//!   per-token proposal distributions* for a window of orders, and receive
+//!   accept/reject feedback after verification. Any proposal distribution
+//!   is admissible — speculative accept/resample reproduces the target
+//!   distribution exactly for arbitrary proposals (decode/sampling.rs's
+//!   `prop_speculative_rule_recovers_target`) — so swapping drafters can
+//!   change speed but never the output law (Theorem 2).
+//! * [`SelfDrafter`] — the paper's Algorithm 1: the AS-ARM drafts for
+//!   itself from its own parallel marginals (one draft-mode forward, model
+//!   NFE; Lemma 1 makes the first proposal exact).
+//! * [`BigramDrafter`] — the paper's Algorithm 2: a context bigram table
+//!   (aux NFE only; Lemma 1 does not apply).
+//! * [`PromptLookupDrafter`] — mistral.rs-style prompt-lookup decoding:
+//!   match the longest recent context suffix against the prompt and the
+//!   already-generated text and propose the continuation (aux NFE only).
+//! * [`AdaptiveSpeculation`] — the per-request draft-length controller: an
+//!   EWMA of observed acceptance rates grows the window under sustained
+//!   acceptance and shrinks it on rejection streaks, clamped to the
+//!   engine's compiled shape limits.
+//!
+//! [`AssdMachine`](crate::decode::assd::AssdMachine) drives the loop:
+//! `propose` -> write window -> verify forward -> accept/reject ->
+//! `observe_outcome` (feedback to the controller and the drafter) ->
+//! `observe_commit` (committed tokens, e.g. to grow the bigram table).
+
+pub mod adaptive;
+pub mod bigram;
+pub mod lookup;
+pub mod selfmodel;
+
+pub use adaptive::AdaptiveSpeculation;
+pub use bigram::{BigramDraft, BigramDrafter};
+pub use lookup::PromptLookupDrafter;
+pub use selfmodel::SelfDrafter;
+
+use anyhow::{bail, Result};
+
+use crate::model::mask::Ordering;
+use crate::util::rng::Rng;
+
+/// Everything a drafter may condition on: the current full-sequence token
+/// buffer (MASK at not-yet-committed positions), the generation ordering,
+/// and the window of orders `n..t` to draft.
+pub struct DraftContext<'a> {
+    pub tokens: &'a [u32],
+    pub ord: &'a Ordering,
+    /// First order to draft (the current decode state).
+    pub n: usize,
+    /// One past the last order to draft (`t - n` proposals wanted).
+    pub t: usize,
+    pub temp: f32,
+    pub vocab: usize,
+}
+
+/// A drafter's output: one token and one full proposal distribution per
+/// order in `n..t` (the distributions are the `p` rows of the speculative
+/// accept test `r < min(1, q/p)`).
+pub struct DraftProposal {
+    pub tokens: Vec<u32>,
+    pub dists: Vec<Vec<f32>>,
+}
+
+/// A speculation source for ASSD.
+///
+/// Contract: `propose` must return exactly `ctx.t - ctx.n` tokens and
+/// distributions; every distribution must be normalized with zero mass on
+/// the MASK/PAD specials (the verify pass bans them, and a proposal the
+/// model can never emit would be pure waste). Proposals sampled from the
+/// returned distributions — the machine relies on `dists[i][tokens[i]] > 0`
+/// for the acceptance ratio.
+pub trait Drafter {
+    /// Short stable identifier ("self" / "bigram" / "lookup"), reported in
+    /// responses and metrics.
+    fn name(&self) -> &'static str;
+
+    /// True when proposals are read from the AS-ARM's own draft-phase
+    /// forward: the machine runs one draft-mode forward (model NFE) and
+    /// passes its logits to `propose`. External drafters return false and
+    /// are booked as aux NFE instead.
+    fn needs_model_forward(&self) -> bool {
+        false
+    }
+
+    /// Lemma 1: the proposal density at the first unknown order equals the
+    /// oracle density, so the final remaining token may be accepted without
+    /// a verify forward. Exact only for self-drafting.
+    fn lemma1_exact(&self) -> bool {
+        self.needs_model_forward()
+    }
+
+    /// Propose tokens + proposal distributions for orders `ctx.n..ctx.t`.
+    /// `logits` is `Some` ([N, V] row-major draft-phase logits) iff
+    /// [`Drafter::needs_model_forward`] returns true.
+    fn propose(
+        &mut self,
+        ctx: &DraftContext<'_>,
+        logits: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> DraftProposal;
+
+    /// Verification feedback: of the `proposed` tokens examined this
+    /// iteration, the first `accepted` were kept. Default: ignore.
+    fn observe_outcome(&mut self, accepted: usize, proposed: usize) {
+        let _ = (accepted, proposed);
+    }
+
+    /// Committed-token feedback: orders `n_old..n_new` of `ord` are now
+    /// final in `tokens` (accepted or resampled). Table-based drafters use
+    /// this to learn from the generated text. Default: ignore.
+    fn observe_commit(&mut self, tokens: &[u32], ord: &Ordering, n_old: usize, n_new: usize) {
+        let _ = (tokens, ord, n_old, n_new);
+    }
+}
+
+/// Which [`Drafter`] implementation serves a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DraftKind {
+    /// The AS-ARM drafts for itself (Algorithm 1; model NFE, Lemma 1).
+    SelfModel,
+    /// Context bigram table (Algorithm 2; aux NFE).
+    Bigram,
+    /// Prompt-lookup / suffix matching against prompt + generated text.
+    Lookup,
+}
+
+impl DraftKind {
+    pub const ALL: [DraftKind; 3] = [DraftKind::SelfModel, DraftKind::Bigram, DraftKind::Lookup];
+
+    /// Case-insensitive parse; the error lists the valid kinds.
+    pub fn parse(s: &str) -> Result<DraftKind> {
+        let lower = s.to_ascii_lowercase();
+        for k in DraftKind::ALL {
+            if k.name() == lower {
+                return Ok(k);
+            }
+        }
+        bail!(
+            "unknown draft kind '{s}' (valid kinds: {})",
+            DraftKind::ALL.map(|k| k.name()).join(", ")
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DraftKind::SelfModel => "self",
+            DraftKind::Bigram => "bigram",
+            DraftKind::Lookup => "lookup",
+        }
+    }
+}
+
+/// Per-request draft configuration (the HTTP `"draft"` object and the
+/// `--draft*` CLI flags).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DraftOptions {
+    pub kind: DraftKind,
+    /// Draft window length (Algorithm 1's k). Fixed length when `adaptive`
+    /// is false; the initial length otherwise.
+    pub max_len: usize,
+    /// Let [`AdaptiveSpeculation`] retune the window from observed
+    /// acceptance (grow past `max_len` up to the engine's shape limits,
+    /// shrink on rejection streaks).
+    pub adaptive: bool,
+}
+
+impl Default for DraftOptions {
+    fn default() -> Self {
+        DraftOptions {
+            kind: DraftKind::SelfModel,
+            max_len: 5,
+            adaptive: false,
+        }
+    }
+}
+
+impl DraftOptions {
+    /// Instantiate the drafter. `tokens` is the initial full-sequence
+    /// buffer (prompt visible, targets MASK) used to seed table drafters.
+    pub fn build(&self, tokens: &[u32], vocab: usize) -> Box<dyn Drafter> {
+        match self.kind {
+            DraftKind::SelfModel => Box::new(SelfDrafter),
+            DraftKind::Bigram => Box::new(BigramDrafter::from_sequence(tokens, vocab)),
+            DraftKind::Lookup => Box::new(PromptLookupDrafter::new(vocab)),
+        }
+    }
+
+    /// The matching speculation controller.
+    pub fn speculation(&self) -> AdaptiveSpeculation {
+        if self.adaptive {
+            AdaptiveSpeculation::adaptive(self.max_len)
+        } else {
+            AdaptiveSpeculation::fixed(self.max_len)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrips_and_is_case_insensitive() {
+        for k in DraftKind::ALL {
+            assert_eq!(DraftKind::parse(k.name()).unwrap(), k);
+            assert_eq!(DraftKind::parse(&k.name().to_uppercase()).unwrap(), k);
+        }
+        assert_eq!(DraftKind::parse("Self").unwrap(), DraftKind::SelfModel);
+    }
+
+    #[test]
+    fn kind_parse_error_lists_valid_kinds() {
+        let err = DraftKind::parse("bogus").unwrap_err().to_string();
+        for k in DraftKind::ALL {
+            assert!(err.contains(k.name()), "{err}");
+        }
+    }
+
+    #[test]
+    fn options_build_matches_kind() {
+        let toks = [0u32, 1, 2];
+        for kind in DraftKind::ALL {
+            let opts = DraftOptions {
+                kind,
+                ..Default::default()
+            };
+            assert_eq!(opts.build(&toks, 8).name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn options_speculation_mode() {
+        let fixed = DraftOptions {
+            max_len: 7,
+            ..Default::default()
+        };
+        assert_eq!(fixed.speculation().current(), 7);
+        assert!(!fixed.speculation().is_adaptive());
+        let adaptive = DraftOptions {
+            adaptive: true,
+            max_len: 7,
+            ..Default::default()
+        };
+        assert!(adaptive.speculation().is_adaptive());
+        assert_eq!(adaptive.speculation().current(), 7);
+    }
+}

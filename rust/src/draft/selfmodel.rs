@@ -1,0 +1,90 @@
+//! Self-drafting: the AS-ARM proposes from its own parallel marginals
+//! (paper Algorithm 1).
+//!
+//! Under the draft-mode masks, every unknown position's head is exactly
+//! p(. | x_sigma(<n)) — the conditionally independent parallel sampler of
+//! Fig. 1a. The machine runs one draft-mode forward (model NFE) and hands
+//! the logits here; this drafter just samples the window rows. Lemma 1:
+//! the row at the first unknown order equals the oracle conditional, so
+//! the first proposal of every window survives verification and the final
+//! remaining token needs no verify at all.
+
+use crate::decode::sampling::{ban_ids, sample_probs, softmax, BANNED};
+use crate::util::rng::Rng;
+
+use super::{DraftContext, DraftProposal, Drafter};
+
+/// The Algorithm-1 drafter. Stateless: everything it needs arrives with
+/// the draft-phase logits.
+pub struct SelfDrafter;
+
+impl Drafter for SelfDrafter {
+    fn name(&self) -> &'static str {
+        "self"
+    }
+
+    fn needs_model_forward(&self) -> bool {
+        true
+    }
+
+    fn propose(
+        &mut self,
+        ctx: &DraftContext<'_>,
+        logits: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> DraftProposal {
+        let logits = logits.expect("self-drafting needs the draft-phase forward logits");
+        let v = ctx.vocab;
+        debug_assert_eq!(logits.len(), ctx.ord.n() * v);
+        let mut tokens = Vec::with_capacity(ctx.t - ctx.n);
+        let mut dists = Vec::with_capacity(ctx.t - ctx.n);
+        for i in ctx.n..ctx.t {
+            let pos = ctx.ord.sigma[i];
+            let mut row = logits[pos * v..(pos + 1) * v].to_vec();
+            ban_ids(&mut row, &BANNED);
+            let probs = softmax(&row, ctx.temp);
+            let tok = sample_probs(rng, &probs) as u32;
+            tokens.push(tok);
+            dists.push(probs);
+        }
+        DraftProposal { tokens, dists }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::masking::lattice_sigma;
+    use crate::model::mask::Ordering;
+
+    #[test]
+    fn samples_window_from_logit_rows() {
+        let mut d = SelfDrafter;
+        assert_eq!(d.name(), "self");
+        assert!(d.needs_model_forward());
+        assert!(d.lemma1_exact());
+        let v = 4;
+        let n = 3;
+        let ord = Ordering::new(lattice_sigma(&[0], n), 1);
+        let tokens = vec![1u32, crate::tokenizer::MASK, crate::tokenizer::MASK];
+        // Row for position 1 strongly prefers token 2; position 2 token 3.
+        let mut logits = vec![0.0f32; n * v];
+        logits[v + 2] = 50.0;
+        logits[2 * v + 3] = 50.0;
+        let ctx = DraftContext {
+            tokens: &tokens,
+            ord: &ord,
+            n: 1,
+            t: 3,
+            temp: 1.0,
+            vocab: v,
+        };
+        let mut rng = Rng::new(7);
+        let prop = d.propose(&ctx, Some(&logits), &mut rng);
+        assert_eq!(prop.tokens, vec![2, 3]);
+        for dist in &prop.dists {
+            let sum: f32 = dist.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+        }
+    }
+}

@@ -9,10 +9,11 @@ use anyhow::Result;
 use crate::coordinator::SamplerKind;
 use crate::data::masking::lattice_sigma;
 use crate::data::{pack_chunks, stories};
-use crate::decode::assd::{AssdMachine, DraftSource};
+use crate::decode::assd::AssdMachine;
 use crate::decode::diffusion::DiffusionMachine;
 use crate::decode::sequential::SequentialMachine;
 use crate::decode::{run_machine, DecodeOutcome};
+use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
 use crate::runtime::Engine;
 use crate::tokenizer::{ByteTokenizer, MASK, PAD};
@@ -126,7 +127,9 @@ pub fn story_infill_workload(
     out
 }
 
-/// Decode one work item with the given sampler; returns outcome + seconds.
+/// Decode one work item with the given sampler and a fixed draft length
+/// `k`; returns outcome + seconds. See [`run_sampler_with`] for full draft
+/// control (drafter kind, adaptive speculation).
 pub fn run_sampler(
     engine: &dyn Engine,
     item: &WorkItem,
@@ -136,27 +139,42 @@ pub fn run_sampler(
     temp: f32,
     seed: u64,
 ) -> Result<(DecodeOutcome, f64)> {
+    run_sampler_with(
+        engine,
+        item,
+        sampler,
+        DraftOptions {
+            max_len: k,
+            ..Default::default()
+        },
+        steps,
+        temp,
+        seed,
+    )
+}
+
+/// Decode one work item with the given sampler and draft configuration.
+pub fn run_sampler_with(
+    engine: &dyn Engine,
+    item: &WorkItem,
+    sampler: SamplerKind,
+    draft: DraftOptions,
+    steps: usize,
+    temp: f32,
+    seed: u64,
+) -> Result<(DecodeOutcome, f64)> {
     let rng = Rng::new(seed);
     let v = engine.vocab();
     let t0 = Instant::now();
     let machine: Box<dyn crate::decode::DecodeMachine> = match sampler {
-        SamplerKind::Assd => Box::new(AssdMachine::new(
+        SamplerKind::Assd | SamplerKind::AssdNgram => Box::new(AssdMachine::from_options(
             item.ord.clone(),
             item.tokens.clone(),
             v,
-            k,
+            sampler.effective_draft(draft),
+            engine.seq_len(),
             temp,
             rng,
-            DraftSource::SelfModel,
-        )),
-        SamplerKind::AssdNgram => Box::new(AssdMachine::new(
-            item.ord.clone(),
-            item.tokens.clone(),
-            v,
-            k,
-            temp,
-            rng,
-            DraftSource::NGram,
         )),
         SamplerKind::Sequential => Box::new(SequentialMachine::new(
             item.ord.clone(),
@@ -228,6 +246,7 @@ pub fn masked_span_text(item: &WorkItem, completed: &[u32]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::draft::DraftKind;
     use crate::runtime::mock::MockEngine;
 
     #[test]
@@ -275,6 +294,25 @@ mod tests {
             let (out, secs) = run_sampler(&e, &items[0], s, 5, 8, 1.0, 7).unwrap();
             assert!(out.tokens.iter().all(|&t| t != MASK), "{s:?}");
             assert!(secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn drafter_sweep_runs_on_workload() {
+        let e = MockEngine::new(4, 32, 258, 1.0);
+        let items = masked_prose_workload(32, 1, 0.9, 5);
+        for kind in DraftKind::ALL {
+            for adaptive in [false, true] {
+                let opts = DraftOptions {
+                    kind,
+                    max_len: 5,
+                    adaptive,
+                };
+                let (out, _) =
+                    run_sampler_with(&e, &items[0], SamplerKind::Assd, opts, 8, 1.0, 9).unwrap();
+                assert!(out.tokens.iter().all(|&t| t != MASK), "{kind:?}");
+                assert_eq!(out.draft_kind, kind.name());
+            }
         }
     }
 

@@ -9,10 +9,12 @@
 //!   model, AOT-lowered once to HLO text artifacts.
 //! * **Layer 3 (this crate)** — the serving system: PJRT runtime with a
 //!   multi-replica engine pool, mask construction, the ASSD decoder
-//!   family, a continuous-batching coordinator (shared admission queue,
-//!   one worker per replica) with an HTTP front end, the rust training
-//!   loop, and the evaluation/benchmark harness reproducing every table
-//!   and figure of the paper.
+//!   family with its pluggable draft subsystem (self / bigram /
+//!   prompt-lookup drafters plus adaptive speculation control), a
+//!   continuous-batching coordinator (shared admission queue, one worker
+//!   per replica) with an HTTP front end, the rust training loop, and the
+//!   evaluation/benchmark harness reproducing every table and figure of
+//!   the paper.
 //!
 //! See README.md for how to run everything and docs/ARCHITECTURE.md for
 //! the serving architecture (request lifecycle, engine pool, batching
@@ -21,6 +23,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod decode;
+pub mod draft;
 pub mod eval;
 pub mod model;
 pub mod runtime;

@@ -11,9 +11,10 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use asarm::coordinator::{self, InfillRequest, Metrics, SamplerKind, SchedulerConfig};
+use asarm::coordinator::{self, DraftSpec, InfillRequest, Metrics, SamplerKind, SchedulerConfig};
 use asarm::data::masking::{MaskRateSchedule, OrderProtocol, PromptDist};
 use asarm::data::{pack_chunks, split_chunks, stories};
+use asarm::draft::{DraftKind, DraftOptions};
 use asarm::runtime::engine::TrainRunner;
 use asarm::runtime::{PoolConfig, XlaEngine};
 use asarm::train::TrainConfig;
@@ -23,11 +24,14 @@ use asarm::util::rng::Rng;
 const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
   serve  --artifacts DIR --params FILE --addr 127.0.0.1:8080 --max-batch 4
          --replicas 1   (engine replicas, one scheduler worker each)
+         --draft self|bigram|lookup --draft-max-len 5 --adaptive
+         (default draft config for requests without a \"draft\" field)
   train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
          --protocol lattice|permutation --prompt-lo F --prompt-hi F
          --out CKPT.bin --seed S
   infill --artifacts DIR --params FILE --text 'Tom went to ____.'
          --sampler assd|assd_ngram|sequential|diffusion --k 5 --seed 0
+         --draft self|bigram|lookup --adaptive
   corpus --kind stories|prose|expr --n 10
   smoke";
 
@@ -54,6 +58,14 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str("artifacts", "artifacts"))
 }
 
+fn draft_options(args: &Args, len_key: &str) -> Result<DraftOptions> {
+    Ok(DraftOptions {
+        kind: DraftKind::parse(&args.str("draft", "self"))?,
+        max_len: args.usize(len_key, 5).max(1),
+        adaptive: args.bool("adaptive"),
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let metrics = Metrics::new();
     let params = args.opt("params").map(PathBuf::from);
@@ -64,6 +76,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         PoolConfig { replicas },
         SchedulerConfig {
             max_batch: args.usize("max-batch", 4),
+            default_draft: draft_options(args, "draft-max-len")?,
             ..Default::default()
         },
         metrics.clone(),
@@ -174,7 +187,7 @@ fn cmd_infill(args: &Args) -> Result<()> {
         text: args.str("text", "Tom went to the ____."),
         mask_char: '_',
         sampler: SamplerKind::parse(&args.str("sampler", "assd"))?,
-        k: args.usize("k", 5),
+        draft: DraftSpec::from_options(draft_options(args, "k")?),
         steps: args.usize("steps", 32),
         temperature: args.f64("temperature", 1.0) as f32,
         seed: args.u64("seed", 0),

@@ -245,6 +245,73 @@ mod tests {
         assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
     }
 
+    /// The scheduler-shutdown contract under contention: jobs carry reply
+    /// channels; several workers drain the queue concurrently and exit
+    /// after a bounded amount of work; the LAST worker out closes the
+    /// queue and fails the backlog. Every accepted job must be answered —
+    /// served or failed, never silently dropped.
+    #[test]
+    fn close_under_contention_fails_queued_jobs_instead_of_dropping() {
+        use std::sync::mpsc;
+        const WORKERS: usize = 4;
+        const PER_WORKER: usize = 25;
+        const JOBS: usize = 500;
+        let (tx, rx) = channel::<(usize, mpsc::Sender<Result<usize, &'static str>>)>();
+        // Queue the full backlog up front so the worker capacity
+        // (WORKERS * PER_WORKER < JOBS) deterministically leaves a backlog
+        // for the closer to fail.
+        let mut replies = vec![];
+        for i in 0..JOBS {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((i, rtx)).unwrap();
+            replies.push(rrx);
+        }
+        let live = Arc::new(AtomicUsize::new(WORKERS));
+        let workers: Vec<_> = (0..WORKERS)
+            .map(|_| {
+                let rx = rx.clone();
+                let live = Arc::clone(&live);
+                thread::spawn(move || {
+                    for _ in 0..PER_WORKER {
+                        match rx.recv_timeout(Duration::from_secs(5)) {
+                            Ok((v, reply)) => {
+                                let _ = reply.send(Ok(v));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    // last-one-out: close and fail whatever is left queued
+                    if live.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        rx.close();
+                        while let Ok((_, reply)) = rx.try_recv() {
+                            let _ = reply.send(Err("shut down"));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        // Every queued job got an answer (served or failed) — no reply
+        // sender was dropped unanswered.
+        let mut served = 0usize;
+        let mut failed = 0usize;
+        for rrx in replies {
+            match rrx.recv() {
+                Ok(Ok(_)) => served += 1,
+                Ok(Err(_)) => failed += 1,
+                Err(_) => panic!("queued job dropped without an answer"),
+            }
+        }
+        assert_eq!(served + failed, JOBS);
+        assert_eq!(served, WORKERS * PER_WORKER);
+        assert_eq!(failed, JOBS - WORKERS * PER_WORKER);
+        // and the channel stays closed for late senders
+        let (rtx, _rrx) = mpsc::channel();
+        assert!(tx.send((0, rtx)).is_err());
+    }
+
     #[test]
     fn recv_times_out_while_open() {
         let (tx, rx) = channel::<u32>();

@@ -20,6 +20,7 @@ fn mock_server(max_batch: usize) -> (std::net::SocketAddr, Metrics) {
         SchedulerConfig {
             max_batch,
             idle_poll: Duration::from_millis(2),
+            ..Default::default()
         },
         m2,
     );
@@ -44,6 +45,7 @@ fn mock_pool(replicas: usize, max_batch: usize, fail: &[usize]) -> (SchedulerHan
         SchedulerConfig {
             max_batch,
             idle_poll: Duration::from_millis(2),
+            ..Default::default()
         },
         metrics.clone(),
     );
@@ -113,6 +115,73 @@ fn concurrent_http_load_is_consistent() {
     let nfe = j.get("model_nfe").unwrap().as_f64().unwrap();
     let toks = j.get("tokens_generated").unwrap().as_f64().unwrap();
     assert!(nfe <= toks, "fleet NFE {nfe} > tokens {toks}");
+}
+
+/// The draft subsystem over HTTP: per-kind requests round-trip, report
+/// speculation telemetry, and the accept-rate shows up in /metrics and
+/// /replicas.
+#[test]
+fn draft_field_and_speculation_telemetry_over_http() {
+    let (addr, _) = mock_server(2);
+    for (kind, adaptive) in [("self", true), ("bigram", false), ("lookup", false)] {
+        let body = format!(
+            r#"{{"text":"ab________cd","sampler":"assd","seed":4,
+                "draft":{{"kind":"{kind}","max_len":4,"adaptive":{adaptive}}}}}"#
+        );
+        let (code, resp) = http_post(&addr, "/v1/infill", &body).unwrap();
+        assert_eq!(code, 200, "{resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("draft").unwrap().as_str(), Some(kind));
+        assert!(!j.get("text").unwrap().as_str().unwrap().contains('_'));
+        assert!(j.get("proposed").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("draft_len").unwrap().as_f64().unwrap() >= 1.0);
+    }
+    // unknown draft kind is a 400 that names the valid ones
+    let (code, resp) = http_post(
+        &addr,
+        "/v1/infill",
+        r#"{"text":"a__b","draft":{"kind":"bogus"}}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+    assert!(resp.contains("lookup"), "error should list kinds: {resp}");
+    let (_, m) = http_get(&addr, "/metrics").unwrap();
+    let j = Json::parse(&m).unwrap();
+    assert!(j.get("proposed").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("acceptance_rate").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// Per-replica speculation counters are exported at /replicas and sum to
+/// the aggregate.
+#[test]
+fn replica_speculation_counters_sum_to_aggregate() {
+    let (handle, metrics) = mock_pool(2, 2, &[]);
+    let rxs: Vec<_> = (0..10)
+        .map(|i| {
+            handle
+                .submit(InfillRequest {
+                    text: "xy______z".into(),
+                    seed: i,
+                    ..Default::default()
+                })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let stats = handle.replica_stats();
+    let prop_sum: u64 = stats.iter().map(|r| r.proposed()).sum();
+    let acc_sum: u64 = stats.iter().map(|r| r.accepted()).sum();
+    let j = metrics.snapshot_json();
+    assert_eq!(prop_sum as f64, j.get("proposed").unwrap().as_f64().unwrap());
+    assert_eq!(acc_sum as f64, j.get("accepted").unwrap().as_f64().unwrap());
+    assert!(prop_sum > 0);
+    for r in stats {
+        let s = r.snapshot_json();
+        assert!(s.get("acceptance_rate").is_some());
+        assert!(s.get("proposed").is_some());
+    }
 }
 
 #[test]

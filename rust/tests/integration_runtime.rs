@@ -6,10 +6,11 @@
 //! ASSD decodes real sequences within the Theorem-1 NFE bound.
 
 use asarm::data::masking::lattice_sigma;
-use asarm::decode::assd::{AssdMachine, DraftSource};
+use asarm::decode::assd::AssdMachine;
 use asarm::decode::sampling::log_softmax;
 use asarm::decode::sequential::SequentialMachine;
 use asarm::decode::{init_tokens, run_machine, DecodeMachine};
+use asarm::draft::DraftKind;
 use asarm::model::mask::{draft_masks, verify_masks, Ordering};
 use asarm::runtime::{Engine, XlaEngine};
 use asarm::tokenizer::MASK;
@@ -164,14 +165,14 @@ fn assd_decodes_real_sequence_within_nfe_bound() {
     let m = n - 24; // 24 targets
     let (ord, toks, _) = random_case(&e, 5, m);
     let before = e.nfe();
-    let mach = AssdMachine::new(
+    let mach = AssdMachine::with_kind(
         ord.clone(),
         toks,
         e.vocab(),
         5,
         1.0,
         Rng::new(99),
-        DraftSource::SelfModel,
+        DraftKind::SelfModel,
     );
     let out = run_machine(&e, Box::new(mach)).unwrap();
     let nfe = e.nfe() - before;
