@@ -4,7 +4,7 @@
 # (ROADMAP.md) plus the documentation surface — rustdoc with warnings
 # denied and rustfmt in check mode — so docs and formatting cannot rot.
 
-.PHONY: all build test doc fmt verify artifacts models bench bench-smoke
+.PHONY: all build test doc fmt verify artifacts fixtures models bench bench-smoke
 
 all: build
 
@@ -25,9 +25,18 @@ fmt:
 verify: build test doc fmt
 
 # Python runs exactly once: AOT-lower the AS-ARM (Pallas kernels) to HLO
-# text artifacts consumed by the rust runtime.
+# text artifacts consumed by the rust runtime (dense fwd_b{B} AND compact
+# fwd_ord_b{B} families — see docs/ARCHITECTURE.md §Compact forward ABI).
+# (module invocation: aot.py uses package-relative imports, so running it
+# as a plain script fails with "attempted relative import")
 artifacts:
-	python3 python/compile/aot.py --out-dir artifacts
+	PYTHONPATH=python python3 -m compile.aot --out-dir artifacts
+
+# Regenerate the committed golden mask fixtures (numpy only, no jax):
+# the cross-language parity test `golden_fixtures_match_python` pins the
+# rust builders and the on-device construction to this file.
+fixtures:
+	python3 python/compile/fixtures.py --out artifacts/fixtures/masks.json
 
 # Train the stories checkpoint the examples and serve_e2e load.
 models:
@@ -38,7 +47,11 @@ bench:
 	cargo bench --bench perf_coordinator
 	cargo bench --bench perf_engine
 
-# Tiny Table-1 run (drafter sweep included) on the analytic mock engine:
-# no artifacts or checkpoint needed, finishes in seconds. CI smoke.
+# Tiny Table-1 run (drafter sweep included) plus the compact-vs-dense
+# forward-ABI ablation, both on the analytic mock engine: no artifacts or
+# checkpoint needed, finishes in seconds. CI smoke — the perf_engine run
+# writes BENCH_engine.json and exits non-zero if the compact path
+# regresses tokens/sec vs dense or the paths' outputs diverge.
 bench-smoke:
 	ASARM_BENCH_MOCK=1 ASARM_BENCH_SEQS=2 cargo bench --bench table1_assd
+	ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine

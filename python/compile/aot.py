@@ -8,8 +8,14 @@ parser reassigns ids and round-trips cleanly (see /opt/xla-example).
 
 Exports into artifacts/:
   fwd_b{B}.hlo.txt        forward(theta, tokens, mask_h, mask_g) -> (logits,)
+  fwd_ord_b{B}.hlo.txt    COMPACT forward(theta, tokens, order, m, known,
+                          want[B,R]) -> (logits[B,R,V],): masks rebuilt on
+                          device from (order, m, known), only the R
+                          requested rows gathered back to the host
   train_step_b{B}.hlo.txt adamw step -> (theta', m', v', loss)
-  model_meta.json         dims + flat-theta layout (config.py)
+  model_meta.json         dims + flat-theta layout (config.py) + ord_rows
+                          (the gather width R the compact family was
+                          lowered with)
   params_init.bin         random-init flat theta, little-endian f32
   fixtures/masks.json     golden sigma->mask fixtures for rust parity tests
 """
@@ -26,11 +32,16 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from .config import DEFAULT, ModelConfig
-from . import masks as masks_mod
-from .model import adam_train_step, forward, init_params
+from .fixtures import export_mask_fixtures
+from .model import adam_train_step, forward, forward_ord, init_params
 
 FWD_BATCH_SIZES = (1, 4)
 TRAIN_BATCH_SIZES = (4,)
+# Default row-gather width R of the compact fwd_ord family: covers every
+# speculation window the scheduler admits (it clamps draft lengths to R via
+# Engine::max_gather_rows); diffusion steps wanting more rows fall back to
+# the dense path.
+FWD_ORD_ROWS = 32
 
 
 def to_hlo_text(lowered) -> str:
@@ -53,6 +64,31 @@ def export_forward(cfg: ModelConfig, batch: int, use_pallas: bool = True) -> str
         jax.ShapeDtypeStruct((batch, n), jnp.int32),
         jax.ShapeDtypeStruct((batch, n, n), jnp.float32),
         jax.ShapeDtypeStruct((batch, n, n), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def export_forward_ord(
+    cfg: ModelConfig, batch: int, rows: int, use_pallas: bool = True
+) -> str:
+    """Lower the compact forward ABI: device-side mask construction from
+    (order, m, known) + gather of the `rows` requested logit rows."""
+    n = cfg.seq_len
+
+    def fn(theta, tokens, order, m, known, want):
+        return (
+            forward_ord(
+                cfg, theta, tokens, order, m, known, want, use_pallas=use_pallas
+            ),
+        )
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch, rows), jnp.int32),
     )
     return to_hlo_text(lowered)
 
@@ -80,52 +116,6 @@ def export_train_step(cfg: ModelConfig, batch: int, use_pallas: bool = True) -> 
     return to_hlo_text(lowered)
 
 
-def export_mask_fixtures(cfg: ModelConfig, path: str) -> None:
-    """Golden fixtures: rust mask builders must match these bit-for-bit."""
-    rng = np.random.default_rng(1234)
-    cases = []
-    for trial in range(8):
-        n = int(rng.integers(4, 17))
-        m = int(rng.integers(1, n))
-        n_known = int(rng.integers(m, n + 1))
-        vis = sorted(rng.choice(n, size=m, replace=False).tolist())
-        sigma = masks_mod.lattice_sigma(vis, n)
-        mh, mg = masks_mod.verify_masks(sigma, m)
-        dh, dg = masks_mod.draft_masks(sigma, m, n_known)
-        cases.append(
-            {
-                "n": n,
-                "m": m,
-                "n_known": n_known,
-                "visible": vis,
-                "sigma": sigma,
-                "verify_h": mh.astype(int).flatten().tolist(),
-                "verify_g": mg.astype(int).flatten().tolist(),
-                "draft_h": dh.astype(int).flatten().tolist(),
-                "draft_g": dg.astype(int).flatten().tolist(),
-            }
-        )
-    # A couple of arbitrary-permutation (non-lattice) cases for the Fig. 3
-    # ablation path.
-    for trial in range(4):
-        n = int(rng.integers(4, 13))
-        m = int(rng.integers(1, n))
-        sigma = rng.permutation(n).tolist()
-        mh, mg = masks_mod.verify_masks(sigma, m)
-        cases.append(
-            {
-                "n": n,
-                "m": m,
-                "visible": sorted(sigma[:m]),
-                "sigma": sigma,
-                "verify_h": mh.astype(int).flatten().tolist(),
-                "verify_g": mg.astype(int).flatten().tolist(),
-            }
-        )
-    with open(path, "w") as f:
-        json.dump(cases, f)
-
-
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out-dir", default="../artifacts")
@@ -135,15 +125,30 @@ def main() -> None:
         action="store_true",
         help="lower with the pure-jnp reference attention/xent instead of the Pallas kernels",
     )
+    ap.add_argument(
+        "--ord-rows",
+        type=int,
+        default=FWD_ORD_ROWS,
+        help="row-gather width R of the compact fwd_ord_b{B} artifacts "
+        "(recorded as ord_rows in model_meta.json)",
+    )
     args = ap.parse_args()
     cfg = DEFAULT
     use_pallas = not args.no_pallas
+    rows = min(args.ord_rows, cfg.seq_len)
     os.makedirs(args.out_dir, exist_ok=True)
     os.makedirs(os.path.join(args.out_dir, "fixtures"), exist_ok=True)
 
     for b in FWD_BATCH_SIZES:
         text = export_forward(cfg, b, use_pallas)
         path = os.path.join(args.out_dir, f"fwd_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in FWD_BATCH_SIZES:
+        text = export_forward_ord(cfg, b, rows, use_pallas)
+        path = os.path.join(args.out_dir, f"fwd_ord_b{b}.hlo.txt")
         with open(path, "w") as f:
             f.write(text)
         print(f"wrote {path} ({len(text)} chars)")
@@ -156,8 +161,13 @@ def main() -> None:
         print(f"wrote {path} ({len(text)} chars)")
 
     meta_path = os.path.join(args.out_dir, "model_meta.json")
+    meta = json.loads(cfg.meta_json())
+    # Artifact-set property, not a model dimension: the gather width the
+    # compact family above was lowered with (rust refuses to enable the
+    # compact path without it).
+    meta["ord_rows"] = rows
     with open(meta_path, "w") as f:
-        f.write(cfg.meta_json())
+        json.dump(meta, f, indent=1)
     print(f"wrote {meta_path}")
 
     theta = np.asarray(init_params(cfg, args.seed), dtype="<f4")

@@ -1,0 +1,106 @@
+"""Golden cross-language mask fixtures (numpy only — no jax import, so
+`make fixtures` runs anywhere the python tests do).
+
+Generates artifacts/fixtures/masks.json, which is COMMITTED to the repo:
+`cargo test` byte-compares the rust builders (rust/src/model/mask.rs)
+against it on every run, and the python suite compares the on-device
+constructor reference (masks.masks_from_order) against the same dense
+builders — so the rust path, the python reference, and the device-side
+construction are all pinned to one artifact and cannot silently diverge.
+
+Schema: a JSON array of cases
+  {"n", "m", "visible", "sigma",
+   "verify_h": [n*n], "verify_g": [n*n],
+   "drafts": [{"n_known": k, "h": [n*n], "g": [n*n]}, ...]}
+with the draft sweep covering the endpoints (k = m, k = n) plus sampled
+interior states for every sigma — lattice orderings and arbitrary
+permutations (the Fig. 3 ablation path) alike.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+try:
+    from . import masks as masks_mod
+except ImportError:  # invoked as a script: `python3 python/compile/fixtures.py`
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from compile import masks as masks_mod
+
+
+def _draft_sweep(rng: np.random.Generator, m: int, n: int) -> list:
+    """Endpoint states plus up to 3 sampled interior states."""
+    ks = {m, n}
+    if n - m > 1:
+        ks.update(int(k) for k in rng.integers(m, n + 1, size=3))
+    return sorted(ks)
+
+
+def _case(sigma: list, m: int, vis: list, rng: np.random.Generator) -> dict:
+    n = len(sigma)
+    mh, mg = masks_mod.verify_masks(sigma, m)
+    drafts = []
+    for k in _draft_sweep(rng, m, n):
+        dh, dg = masks_mod.draft_masks(sigma, m, k)
+        drafts.append(
+            {
+                "n_known": k,
+                "h": dh.astype(int).flatten().tolist(),
+                "g": dg.astype(int).flatten().tolist(),
+            }
+        )
+    return {
+        "n": n,
+        "m": m,
+        "visible": vis,
+        "sigma": sigma,
+        "verify_h": mh.astype(int).flatten().tolist(),
+        "verify_g": mg.astype(int).flatten().tolist(),
+        "drafts": drafts,
+    }
+
+
+def export_mask_fixtures(cfg, path: str, seed: int = 1234) -> None:
+    """Golden fixtures: rust mask builders must match these bit-for-bit.
+
+    `cfg` is accepted (and ignored) for aot.py signature compatibility —
+    fixture shapes are deliberately independent of any model config.
+    """
+    del cfg
+    rng = np.random.default_rng(seed)
+    cases = []
+    for _ in range(8):
+        n = int(rng.integers(4, 17))
+        m = int(rng.integers(1, n))
+        vis = sorted(rng.choice(n, size=m, replace=False).tolist())
+        sigma = masks_mod.lattice_sigma(vis, n)
+        cases.append(_case(sigma, m, vis, rng))
+    # Arbitrary-permutation (non-lattice) cases for the Fig. 3 ablation
+    # path — the draft sweep applies to these too.
+    for _ in range(4):
+        n = int(rng.integers(4, 13))
+        m = int(rng.integers(1, n))
+        sigma = rng.permutation(n).tolist()
+        cases.append(_case(sigma, m, sorted(sigma[:m]), rng))
+    with open(path, "w") as f:
+        json.dump(cases, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts/fixtures/masks.json")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    export_mask_fixtures(None, args.out, args.seed)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

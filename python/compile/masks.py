@@ -73,6 +73,31 @@ def verify_masks(sigma: Sequence[int], m: int) -> Tuple[np.ndarray, np.ndarray]:
     return mask_h, mask_g
 
 
+def masks_from_order(order: np.ndarray, m: int, known: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Unified (order, m, known) mask constructor — the numpy REFERENCE for
+    the on-device construction baked into the compact ``fwd_ord_b{B}``
+    artifacts (model.py::masks_from_order_batched is the jnp twin that gets
+    lowered into the HLO).
+
+    ``known == n`` reproduces ``verify_masks``; ``m <= known < n`` the
+    draft masks at decode state ``known`` — one parameterization covers
+    both families because ``draft_masks(sigma, m, n) == verify_masks``.
+    Mirrors rust's ``model::mask::g_allows`` predicate exactly.
+    """
+    order = np.asarray(order, dtype=np.int64)
+    oa = order[:, None]
+    ob = order[None, :]
+    prompt_col = ob < m
+    g = np.where(
+        oa < m,
+        prompt_col,
+        np.where(oa < known, prompt_col | ((ob < known) & (ob < oa)), ob < known),
+    ).astype(np.float32)
+    h = g.copy()
+    np.fill_diagonal(h, 1.0)
+    return h, g
+
+
 def draft_masks(sigma: Sequence[int], m: int, n_known: int) -> Tuple[np.ndarray, np.ndarray]:
     """Parallel-sampling masks (Fig. 1a) at decode state n. [N,N] f32 each."""
     n = len(sigma)

@@ -106,6 +106,49 @@ def forward(
     return logits
 
 
+def masks_from_order_batched(
+    order: jax.Array,  # [B, N] int32, position -> order index
+    m: jax.Array,  # [B] int32, prompt sizes
+    known: jax.Array,  # [B] int32, decode states (known == N => verify)
+) -> Tuple[jax.Array, jax.Array]:
+    """DEVICE-SIDE mask construction: the jnp twin of
+    masks.masks_from_order, batched, lowered into the compact
+    ``fwd_ord_b{B}`` artifacts so the O(N^2) masks never cross the host
+    boundary. Returns ([B,N,N] mask_h, [B,N,N] mask_g), f32."""
+    oa = order[:, :, None]
+    ob = order[:, None, :]
+    mm = m[:, None, None]
+    kk = known[:, None, None]
+    prompt_col = ob < mm
+    g = jnp.where(
+        oa < mm,
+        prompt_col,
+        jnp.where(oa < kk, prompt_col | ((ob < kk) & (ob < oa)), ob < kk),
+    ).astype(jnp.float32)
+    n = order.shape[1]
+    h = jnp.maximum(g, jnp.eye(n, dtype=jnp.float32)[None, :, :])
+    return h, g
+
+
+def forward_ord(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    tokens: jax.Array,  # [B, N] int32
+    order: jax.Array,  # [B, N] int32
+    m: jax.Array,  # [B] int32
+    known: jax.Array,  # [B] int32
+    want: jax.Array,  # [B, R] int32 — positions whose logit rows to return
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Compact forward ABI: reconstruct (mask_h, mask_g) on device from
+    (order, m, known), run the two-stream forward, and gather only the
+    requested R rows before anything returns to the host. [B, R, V]."""
+    mask_h, mask_g = masks_from_order_batched(order, m, known)
+    logits = forward(cfg, theta, tokens, mask_h, mask_g, use_pallas=use_pallas)
+    return jnp.take_along_axis(logits, want[:, :, None], axis=1)
+
+
 def loss_fn(
     cfg: ModelConfig,
     theta: jax.Array,

@@ -28,6 +28,19 @@ def test_forward_hlo_parameters(fwd_text):
     assert f"f32[1,{n},{v}]" in fwd_text
 
 
+def test_forward_ord_hlo_interface():
+    rows = 4
+    text = aot.export_forward_ord(TINY, 1, rows)
+    n, v, p = TINY.seq_len, TINY.vocab, TINY.n_params
+    assert "ENTRY" in text
+    # theta + the compact index inputs (tokens/order [1,N], want [1,R])
+    assert f"f32[{p}]" in text
+    assert f"s32[1,{n}]" in text
+    assert f"s32[1,{rows}]" in text
+    # gathered output rows, NOT the full [N, V] grid
+    assert f"f32[1,{rows},{v}]" in text
+
+
 def test_train_step_hlo_outputs():
     text = aot.export_train_step(TINY, 2)
     p = TINY.n_params

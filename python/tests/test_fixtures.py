@@ -1,0 +1,47 @@
+"""Committed-fixture parity gate (deliberately hypothesis-free so it runs
+even where hypothesis is not installed — unlike test_masks.py)."""
+
+import json
+import os
+
+from compile import masks as M
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__), "..", "..", "artifacts", "fixtures", "masks.json"
+)
+
+
+def test_fixture_file_matches_builders():
+    """The COMMITTED golden fixture (consumed byte-for-byte by `cargo
+    test`) must itself match the python builders — regenerating it with
+    `make fixtures` after a semantic change is mandatory, not optional."""
+    with open(FIXTURE) as f:
+        cases = json.load(f)
+    assert len(cases) >= 10
+    draft_cases = 0
+    for c in cases:
+        m, sigma = c["m"], c["sigma"]
+        vh, vg = M.verify_masks(sigma, m)
+        assert vh.astype(int).flatten().tolist() == c["verify_h"]
+        assert vg.astype(int).flatten().tolist() == c["verify_g"]
+        assert c["drafts"], "every fixture case carries a draft sweep"
+        order = M.order_from_sigma(sigma)
+        for d in c["drafts"]:
+            dh, dg = M.draft_masks(sigma, m, d["n_known"])
+            assert dh.astype(int).flatten().tolist() == d["h"]
+            assert dg.astype(int).flatten().tolist() == d["g"]
+            # the on-device constructor reference agrees too
+            oh, og = M.masks_from_order(order, m, d["n_known"])
+            assert (oh == dh).all() and (og == dg).all()
+            draft_cases += 1
+    assert draft_cases >= 20, "draft sweep too thin"
+
+
+def test_fixture_regenerates_byte_identically(tmp_path):
+    """fixtures.py with the default seed must reproduce the committed file
+    byte-for-byte (determinism is what makes the commit reviewable)."""
+    from compile.fixtures import export_mask_fixtures
+
+    out = tmp_path / "masks.json"
+    export_mask_fixtures(None, str(out))
+    assert out.read_bytes() == open(FIXTURE, "rb").read()

@@ -89,3 +89,43 @@ def test_draft_at_full_knowledge_equals_verify(seed):
     vh, vg = M.verify_masks(sigma, m)
     np.testing.assert_array_equal(dh, vh)
     np.testing.assert_array_equal(dg, vg)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), extra=st.integers(0, 12))
+def test_masks_from_order_matches_dense_builders(seed, extra):
+    """The unified (order, m, known) constructor — the reference for the
+    on-device construction in the compact fwd_ord artifacts — must equal
+    the dense builders at every decode state, verify included."""
+    n, m, vis, sigma = _case(seed)
+    order = M.order_from_sigma(sigma)
+    n_known = min(n, m + extra)
+    h, g = M.masks_from_order(order, m, n_known)
+    dh, dg = M.draft_masks(sigma, m, n_known)
+    np.testing.assert_array_equal(h, dh)
+    np.testing.assert_array_equal(g, dg)
+    vh, vg = M.verify_masks(sigma, m)
+    h_full, g_full = M.masks_from_order(order, m, n)
+    np.testing.assert_array_equal(h_full, vh)
+    np.testing.assert_array_equal(g_full, vg)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_masks_from_order_arbitrary_permutation(seed):
+    """Non-lattice sigmas (Fig. 3 ablation path) go through the same
+    unified constructor."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 16))
+    m = int(rng.integers(1, n))
+    sigma = rng.permutation(n).tolist()
+    order = M.order_from_sigma(sigma)
+    n_known = int(rng.integers(m, n + 1))
+    h, g = M.masks_from_order(order, m, n_known)
+    dh, dg = M.draft_masks(sigma, m, n_known)
+    np.testing.assert_array_equal(h, dh)
+    np.testing.assert_array_equal(g, dg)
+
+
+# The committed-fixture parity gate lives in test_fixtures.py (NOT here):
+# it must stay importable without hypothesis, which this module needs.

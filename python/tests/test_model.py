@@ -14,7 +14,14 @@ import jax
 import jax.numpy as jnp
 
 from compile.config import TINY
-from compile.model import adam_train_step, forward, init_params, loss_fn
+from compile.model import (
+    adam_train_step,
+    forward,
+    forward_ord,
+    init_params,
+    loss_fn,
+    masks_from_order_batched,
+)
 from compile import masks as M
 
 CFG = TINY
@@ -117,6 +124,65 @@ def test_draft_logits_independent_of_unknown_content(theta):
         np.testing.assert_allclose(
             np.asarray(la)[0, pos], np.asarray(lb)[0, pos], rtol=1e-5, atol=1e-5
         )
+
+
+def test_masks_from_order_batched_matches_numpy_reference():
+    """The jnp device-side constructor (lowered into fwd_ord artifacts)
+    must agree with the numpy reference at every batched state."""
+    rng = np.random.default_rng(21)
+    n = TINY.seq_len
+    b = 3
+    orders, ms, knowns, want_h, want_g = [], [], [], [], []
+    for _ in range(b):
+        m = int(rng.integers(1, n))
+        vis = sorted(rng.choice(n, size=m, replace=False).tolist())
+        sigma = M.lattice_sigma(vis, n)
+        order = M.order_from_sigma(sigma)
+        known = int(rng.integers(m, n + 1))
+        h, g = M.masks_from_order(order, m, known)
+        orders.append(order)
+        ms.append(m)
+        knowns.append(known)
+        want_h.append(h)
+        want_g.append(g)
+    bh, bg = masks_from_order_batched(
+        jnp.asarray(np.stack(orders).astype("int32")),
+        jnp.asarray(np.array(ms, "int32")),
+        jnp.asarray(np.array(knowns, "int32")),
+    )
+    np.testing.assert_array_equal(np.asarray(bh), np.stack(want_h))
+    np.testing.assert_array_equal(np.asarray(bg), np.stack(want_g))
+
+
+def test_forward_ord_matches_dense_forward_plus_gather(theta):
+    """The compact forward (device-side masks + row gather) must reproduce
+    the dense path: forward under draft_masks, then take the same rows."""
+    rng, n, m, toks, vis, sigma = _random_case(9)
+    n_known = min(n, m + 3)
+    order = M.order_from_sigma(sigma)
+    want = np.array(
+        [sigma[i] for i in range(n_known, min(n_known + 4, n))], dtype="int32"
+    )[None]
+    dh, dg = M.draft_masks(sigma, m, n_known)
+    dense = forward(
+        CFG, theta, jnp.asarray(toks), jnp.asarray(dh[None]), jnp.asarray(dg[None]),
+        use_pallas=False,
+    )
+    gathered_dense = np.asarray(dense)[0, want[0]]
+    compact = forward_ord(
+        CFG,
+        theta,
+        jnp.asarray(toks),
+        jnp.asarray(order.astype("int32")[None]),
+        jnp.asarray(np.array([m], "int32")),
+        jnp.asarray(np.array([n_known], "int32")),
+        jnp.asarray(want),
+        use_pallas=False,
+    )
+    assert compact.shape == (1, want.shape[1], CFG.vocab)
+    np.testing.assert_allclose(
+        np.asarray(compact)[0], gathered_dense, rtol=1e-5, atol=1e-5
+    )
 
 
 def test_train_step_reduces_loss(theta):

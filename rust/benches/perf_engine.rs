@@ -1,24 +1,228 @@
-//! Perf bench (L3/L2 boundary): forward latency vs batch size, mask
-//! construction cost (full rebuild vs incremental update), and literal
-//! upload overhead. Feeds the perf notes in docs/ARCHITECTURE.md.
+//! Perf bench (L3/L2 boundary): the compact-vs-dense forward ABI ablation
+//! (same seeds, same σ sweep, machine-readable output in
+//! BENCH_engine.json), forward latency vs batch size, mask construction
+//! cost, and literal upload overhead. Feeds the perf notes in
+//! docs/ARCHITECTURE.md §Compact forward ABI.
 //!
-//! Run: `cargo bench --bench perf_engine`
+//! Run: `cargo bench --bench perf_engine` (XLA artifacts), or
+//! `ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine` for the hermetic
+//! MockEngine ablation (`make bench-smoke` / CI). The mock run FAILS
+//! (non-zero exit) if the compact path regresses tokens/sec vs dense or
+//! if the two paths' decode outputs ever diverge — CI uploads the JSON
+//! and gates on this exit code.
 
+use anyhow::{bail, Result};
+
+use asarm::coordinator::SamplerKind;
 use asarm::data::masking::lattice_sigma;
+use asarm::draft::{DraftKind, DraftOptions};
+use asarm::eval::harness::{masked_prose_workload, run_sampler_with, WorkItem};
 use asarm::model::mask::{advance_draft_masks, draft_masks, draft_masks_into, Ordering};
-use asarm::runtime::{Engine, XlaEngine};
+use asarm::runtime::mock::MockEngine;
+use asarm::runtime::{DensePath, Engine, XlaEngine};
 use asarm::util::bench::{time_it, Table};
+use asarm::util::json::Json;
 use asarm::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+/// Per-iteration host<->device traffic model for one sequence (B = 1),
+/// in bytes. `rows` is the gathered-row count of the compact request.
+fn traffic_bytes(n: usize, v: usize, rows: usize, compact: bool) -> (u64, u64) {
+    let (h2d, d2h) = if compact {
+        // tokens + order (i32 each) + m + known + want indices
+        ((4 * n + 4 * n + 4 + 4 + 4 * rows) as u64, (4 * rows * v) as u64)
+    } else {
+        // tokens + two dense [N, N] masks; full [N, V] logits back
+        ((4 * n + 2 * 4 * n * n) as u64, (4 * n * v) as u64)
+    };
+    (h2d, d2h)
+}
+
+/// Run the σ sweep through one engine path; returns (outcomes digest,
+/// total targets, total seconds, max window rows used).
+fn run_sweep(
+    engine: &dyn Engine,
+    items: &[WorkItem],
+    opts: DraftOptions,
+) -> Result<(Vec<Vec<u32>>, u64, f64, usize)> {
+    let mut digests = Vec::with_capacity(items.len());
+    let mut targets = 0u64;
+    let mut secs = 0.0;
+    for (i, item) in items.iter().enumerate() {
+        let (out, s) = run_sampler_with(
+            engine,
+            item,
+            SamplerKind::Assd,
+            opts,
+            8,
+            1.0,
+            9000 + i as u64,
+        )?;
+        targets += item.ord.n_targets() as u64;
+        secs += s;
+        digests.push(out.tokens);
+    }
+    Ok((digests, targets, secs, opts.max_len))
+}
+
+/// The compact-vs-dense ablation on a given engine pair. Appends two
+/// machine-readable result entries and returns (dense_tps, compact_tps,
+/// outputs_identical).
+fn ablation(
+    dense_engine: &dyn Engine,
+    compact_engine: &dyn Engine,
+    items: &[WorkItem],
+    n: usize,
+    v: usize,
+    check_identity: bool,
+    results: &mut Vec<Json>,
+) -> Result<(f64, f64, bool)> {
+    let opts = DraftOptions {
+        kind: DraftKind::SelfModel,
+        max_len: 5,
+        adaptive: false,
+    };
+    let (dense_out, targets, dense_s, rows) = run_sweep(dense_engine, items, opts)?;
+    let (compact_out, _, compact_s, _) = run_sweep(compact_engine, items, opts)?;
+    let identical = dense_out == compact_out;
+    if check_identity && !identical {
+        bail!("compact and dense decode outputs diverged — ABI is not a pure transport change");
+    }
+    let dense_tps = targets as f64 / dense_s.max(1e-12);
+    let compact_tps = targets as f64 / compact_s.max(1e-12);
+    for (mode, tps, secs, compact) in [
+        ("dense", dense_tps, dense_s, false),
+        ("compact", compact_tps, compact_s, true),
+    ] {
+        let (h2d, d2h) = traffic_bytes(n, v, rows, compact);
+        results.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("tokens_per_sec", Json::num(tps)),
+            ("wall_s", Json::num(secs)),
+            ("targets", Json::num(targets as f64)),
+            ("seqs", Json::num(items.len() as f64)),
+            ("bytes_h2d_per_seq_iter", Json::num(h2d as f64)),
+            ("bytes_d2h_per_seq_iter", Json::num(d2h as f64)),
+        ]));
+    }
+    Ok((dense_tps, compact_tps, identical))
+}
+
+/// σ sweep shared by both engines: several mask fractions × seeds over
+/// the same workload builder, so dense and compact see identical
+/// (ordering, tokens, rng) streams.
+fn sweep_items(n: usize) -> Vec<WorkItem> {
+    let mut items = vec![];
+    for (frac, seed) in [(0.5, 11u64), (0.9, 12), (0.95, 13)] {
+        items.extend(masked_prose_workload(n, 2, frac, seed));
+    }
+    items
+}
+
+fn write_report(
+    path: &str,
+    engine_kind: &str,
+    n: usize,
+    v: usize,
+    results: Vec<Json>,
+    outputs_identical: bool,
+    speedup: f64,
+) -> Result<()> {
+    let report = Json::obj(vec![
+        ("engine", Json::str(engine_kind)),
+        ("seq_len", Json::num(n as f64)),
+        ("vocab", Json::num(v as f64)),
+        ("outputs_identical", Json::Bool(outputs_identical)),
+        ("speedup_compact_over_dense", Json::num(speedup)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(path, report.to_string())?;
+    eprintln!("perf_engine: wrote {path}");
+    Ok(())
+}
+
+fn mock_ablation(out_path: &str) -> Result<()> {
+    let n = 128;
+    let v = 258;
+    let items = sweep_items(n);
+    // Same model on both sides: the paths must agree bit-for-bit.
+    let e_dense = MockEngine::new(7, n, v, 1.0);
+    let e_compact = MockEngine::new(7, n, v, 1.0);
+    let mut results = vec![];
+    let (dense_tps, compact_tps, identical) = ablation(
+        &DensePath(&e_dense),
+        &e_compact,
+        &items,
+        n,
+        v,
+        true,
+        &mut results,
+    )?;
+    let speedup = compact_tps / dense_tps.max(1e-12);
+    let mut table = Table::new(&["path", "tok/s", "h2d B/iter", "d2h B/iter"]);
+    for r in &results {
+        table.row(&[
+            r.get("mode").unwrap().as_str().unwrap().to_string(),
+            format!("{:.0}", r.get("tokens_per_sec").unwrap().as_f64().unwrap()),
+            format!("{:.0}", r.get("bytes_h2d_per_seq_iter").unwrap().as_f64().unwrap()),
+            format!("{:.0}", r.get("bytes_d2h_per_seq_iter").unwrap().as_f64().unwrap()),
+        ]);
+    }
+    println!("\n=== perf_engine (mock): compact vs dense forward ABI ===");
+    table.print();
+    println!("speedup {speedup:.2}x, outputs identical: {identical}");
+    write_report(out_path, "mock", n, v, results, identical, speedup)?;
+    if compact_tps < dense_tps {
+        bail!("compact path regressed: {compact_tps:.0} tok/s < dense {dense_tps:.0} tok/s");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let out_path =
+        std::env::var("ASARM_BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    if std::env::var("ASARM_BENCH_MOCK").is_ok() {
+        eprintln!("perf_engine: ASARM_BENCH_MOCK set — hermetic MockEngine ablation");
+        return mock_ablation(&out_path);
+    }
+
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if !std::path::Path::new(artifacts).join("fwd_b1.hlo.txt").exists() {
-        eprintln!("perf_engine: run `make artifacts` first");
+        eprintln!("perf_engine: run `make artifacts` first (or ASARM_BENCH_MOCK=1)");
         return Ok(());
     }
     let engine = XlaEngine::load(artifacts, None)?;
     let n = engine.seq_len();
+    let v = engine.vocab();
     let mut rng = Rng::new(3);
+
+    // --- compact-vs-dense ablation (when fwd_ord artifacts shipped) ---
+    if engine.max_gather_rows() != usize::MAX {
+        let items = sweep_items(n);
+        let mut results = vec![];
+        // XLA float reductions may be scheduled differently across the two
+        // programs, so identity is not asserted here (the mock run pins
+        // semantic equivalence; this measures transport).
+        let (dense_tps, compact_tps, identical) = ablation(
+            &DensePath(&engine),
+            &engine,
+            &items,
+            n,
+            v,
+            false,
+            &mut results,
+        )?;
+        let speedup = compact_tps / dense_tps.max(1e-12);
+        println!(
+            "\n=== perf_engine: compact {compact_tps:.1} tok/s vs dense {dense_tps:.1} tok/s \
+             ({speedup:.2}x, outputs identical: {identical}) ==="
+        );
+        write_report(&out_path, "xla", n, v, results, identical, speedup)?;
+    } else {
+        eprintln!(
+            "perf_engine: no fwd_ord_b* artifacts — regenerate with `make artifacts` for the \
+             compact ablation"
+        );
+    }
 
     // --- forward latency vs batch ---
     let mut table = Table::new(&[

@@ -9,12 +9,15 @@
 //! never stalls admission. Within a worker the loop is unchanged vLLM-style
 //! continuous batching: each request becomes a decode state machine
 //! occupying a batch slot; every iteration the worker gathers each active
-//! machine's pending forward, executes ONE batched forward on its own
-//! replica, scatters the logits back, and retires finished machines — a
+//! machine's pending COMPACT forward request (ordering + decode state +
+//! wanted rows — no materialized masks, see docs/ARCHITECTURE.md §Compact
+//! forward ABI), executes ONE batched `forward_ord` on its own replica,
+//! scatters the gathered rows back, and retires finished machines — a
 //! slot frees the moment its request completes and a queued request joins
 //! mid-flight. Draft-phase and verify-phase ASSD sequences still share a
-//! batch (both phases use the same fwd executable and differ only in their
-//! per-slot masks), so the paper's NFE accounting is preserved per worker.
+//! batch (both phases use the same executable and differ only in their
+//! per-slot `(known, want)` state), so the paper's NFE accounting is
+//! preserved per worker.
 //!
 //! Aggregate serving metrics ([`Metrics`]) are shared by all workers;
 //! per-replica counters ([`ReplicaStats`]) are exported per worker (GET
@@ -218,17 +221,9 @@ fn run_worker(
     metrics: &Metrics,
     stats: &ReplicaStats,
 ) {
-    let n = engine.seq_len();
-    let v = engine.vocab();
     let tok = ByteTokenizer::new();
     let mut slots: Vec<Slot> = Vec::new();
     let mut queue_open = true;
-
-    // Reusable batch buffers.
-    let max_b = cfg.max_batch;
-    let mut toks_buf = vec![0u32; max_b * n];
-    let mut mh_buf = vec![0f32; max_b * n * n];
-    let mut mg_buf = vec![0f32; max_b * n * n];
 
     while queue_open || !slots.is_empty() {
         // --- admission: top up free slots from the shared queue ---
@@ -274,26 +269,28 @@ fn run_worker(
             continue;
         }
 
-        // --- one batched forward over all active machines ---
+        // --- one batched COMPACT forward over all active machines ---
+        // Each machine's request borrows its own state (tokens, ordering,
+        // wanted rows); no per-slot mask or token buffers are copied —
+        // the engine's compact path packs the O(B·N) index vectors into
+        // its own reusable scratch, and O(B·N²) mask traffic is gone
+        // entirely (docs/ARCHITECTURE.md §Compact forward ABI).
         let b = slots.len();
-        for (s, slot) in slots.iter_mut().enumerate() {
-            let req = slot
-                .machine
-                .forward_request()
-                .expect("active machine must request a forward");
-            toks_buf[s * n..(s + 1) * n].copy_from_slice(req.tokens);
-            mh_buf[s * n * n..(s + 1) * n * n].copy_from_slice(req.mask_h);
-            mg_buf[s * n * n..(s + 1) * n * n].copy_from_slice(req.mask_g);
-        }
         metrics.record_batch_iteration(b);
         stats.record_batch_iteration(b);
-        let logits = match engine.forward(
-            b,
-            &toks_buf[..b * n],
-            &mh_buf[..b * n * n],
-            &mg_buf[..b * n * n],
-        ) {
-            Ok(l) => l,
+        let result = {
+            let specs: Vec<crate::runtime::ForwardSpec<'_>> = slots
+                .iter_mut()
+                .map(|slot| {
+                    slot.machine
+                        .forward_request()
+                        .expect("active machine must request a forward")
+                })
+                .collect();
+            engine.forward_ord(&specs)
+        };
+        let rows = match result {
+            Ok(r) => r,
             Err(e) => {
                 // Engine failure: fail this worker's active requests; the
                 // queue (and other replicas) keep serving.
@@ -305,8 +302,9 @@ fn run_worker(
                 continue;
             }
         };
-        for (s, slot) in slots.iter_mut().enumerate() {
-            slot.machine.absorb(&logits[s * n * v..(s + 1) * n * v]);
+        debug_assert_eq!(rows.len(), b);
+        for (slot, seq_rows) in slots.iter_mut().zip(&rows) {
+            slot.machine.absorb(seq_rows);
         }
 
         // --- retire finished machines ---
@@ -403,12 +401,16 @@ fn admit(
     let machine: Box<dyn DecodeMachine> = match req.sampler {
         SamplerKind::Assd | SamplerKind::AssdNgram => {
             let opts = req.sampler.effective_draft(req.draft.resolve(default_draft));
+            // Window cap: the artifact sequence length AND the compact
+            // path's row-gather width, so speculation never forces the
+            // engine off its fwd_ord artifacts mid-request.
+            let cap = n.min(engine.max_gather_rows());
             Box::new(AssdMachine::from_options(
                 ord,
                 tokens,
                 v,
                 opts,
-                n,
+                cap,
                 req.temperature,
                 rng,
             ))

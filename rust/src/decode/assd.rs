@@ -24,7 +24,7 @@
 //! rust/tests/).
 
 use crate::draft::{AdaptiveSpeculation, DraftContext, DraftKind, DraftOptions, Drafter};
-use crate::model::mask::{advance_draft_masks, draft_masks, verify_masks, Ordering};
+use crate::model::mask::Ordering;
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
@@ -43,12 +43,10 @@ pub struct AssdMachine {
     temp: f32,
     rng: Rng,
     tokens: Vec<u32>,
-    // draft-mode masks at state n (incrementally advanced)
-    draft_h: Vec<f32>,
-    draft_g: Vec<f32>,
-    // verify-mode masks (fixed for the whole decode)
-    ver_h: Vec<f32>,
-    ver_g: Vec<f32>,
+    // rows requested by the current phase (window positions sigma[n..t]):
+    // the compact forward ABI carries (ord, known) instead of materialized
+    // masks, so this is the only per-step buffer the machine maintains
+    want: Vec<usize>,
     n: usize,
     t: usize,
     phase: Phase,
@@ -95,8 +93,6 @@ impl AssdMachine {
         // scheduler additionally clamps to the engine's artifact window).
         spec.clamp_max(ord.n_targets().max(1));
         let n = ord.m;
-        let (draft_h, draft_g) = draft_masks(&ord, n);
-        let (ver_h, ver_g) = verify_masks(&ord);
         let phase = if n >= ord.n() { Phase::Done } else { Phase::Draft };
         AssdMachine {
             ord,
@@ -104,10 +100,7 @@ impl AssdMachine {
             temp,
             rng,
             tokens,
-            draft_h,
-            draft_g,
-            ver_h,
-            ver_g,
+            want: vec![],
             n,
             t: n,
             phase,
@@ -189,8 +182,13 @@ impl AssdMachine {
         self.phase = Phase::Verify;
     }
 
+    /// Fill the wanted-rows buffer with the window positions sigma[n..t].
+    fn fill_want(&mut self) {
+        self.want.clear();
+        self.want.extend_from_slice(&self.ord.sigma[self.n..self.t]);
+    }
+
     fn finish_iteration(&mut self, n_new: usize) {
-        advance_draft_masks(&self.ord, self.n, n_new, &mut self.draft_h, &mut self.draft_g);
         // committed-token feedback (e.g. the bigram table learns from the
         // generated text)
         self.drafter
@@ -216,21 +214,29 @@ impl DecodeMachine for AssdMachine {
                 Phase::Done => return None,
                 Phase::Draft => {
                     if self.drafter.needs_model_forward() {
+                        // Commit to the window NOW (absorb reuses self.t):
+                        // draft state n, rows = the speculation window.
+                        self.t = (self.n + self.spec.current()).min(self.ord.n());
+                        self.fill_want();
                         return Some(ForwardRequest {
                             tokens: &self.tokens,
-                            mask_h: &self.draft_h,
-                            mask_g: &self.draft_g,
+                            ord: &self.ord,
+                            known: self.n,
+                            want: &self.want,
                         });
                     }
                     self.external_draft();
                     continue; // now in Verify; fall through
                 }
                 Phase::Verify => {
+                    // Verify masks = draft masks at full knowledge.
+                    self.fill_want();
                     return Some(ForwardRequest {
                         tokens: &self.tokens,
-                        mask_h: &self.ver_h,
-                        mask_g: &self.ver_g,
-                    })
+                        ord: &self.ord,
+                        known: self.ord.n(),
+                        want: &self.want,
+                    });
                 }
             }
         }
@@ -238,15 +244,15 @@ impl DecodeMachine for AssdMachine {
 
     fn absorb(&mut self, logits: &[f32]) {
         let v = self.vocab;
-        debug_assert_eq!(logits.len(), self.ord.n() * v);
+        debug_assert_eq!(logits.len(), (self.t - self.n) * v, "gathered window rows");
         match self.phase {
             Phase::Done => panic!("absorb on finished machine"),
             Phase::Draft => {
                 // Model-forward drafting: sample the window in parallel
-                // from the draft-phase logits.
+                // from the gathered draft-phase rows (window committed in
+                // forward_request).
                 self.model_nfe += 1;
                 let nseq = self.ord.n();
-                self.t = (self.n + self.spec.current()).min(nseq);
                 let ctx = DraftContext {
                     tokens: &self.tokens,
                     ord: &self.ord,
@@ -279,8 +285,10 @@ impl DecodeMachine for AssdMachine {
                 let mut prop_iter = 0usize;
                 for i in self.n..self.t {
                     let pos = self.ord.sigma[i];
+                    // Gathered rows are window-major: row i-n ↔ order i.
+                    let off = (i - self.n) * v;
                     // Same ban as the draft rows: p and q must share support.
-                    let mut row = logits[pos * v..(pos + 1) * v].to_vec();
+                    let mut row = logits[off..off + v].to_vec();
                     super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
                     let q_probs = softmax(&row, self.temp);
                     let drafted = self.drafted[i - self.n] as usize;
@@ -386,12 +394,11 @@ mod tests {
         // run manually to read instrumentation before consuming
         let mut mach = Box::new(m);
         while !mach.done() {
-            let (t, h, g) = {
+            let rows = {
                 let r = mach.forward_request().unwrap();
-                (r.tokens.to_vec(), r.mask_h.to_vec(), r.mask_g.to_vec())
+                e.forward_ord(std::slice::from_ref(&r)).unwrap().pop().unwrap()
             };
-            let logits = e.forward(1, &t, &h, &g).unwrap();
-            mach.absorb(&logits);
+            mach.absorb(&rows);
         }
         let first_rej = mach.first_token_rejections;
         (mach.outcome(), first_rej)
@@ -644,6 +651,133 @@ mod tests {
                 "TV distance {tv} too large for drafter {:?} (adaptive={adaptive})",
                 kind
             );
+        }
+    }
+
+    /// Theorem-2 equivalence across FORWARD PATHS: a full ASSD decode
+    /// driven through the compact `forward_ord` ABI must be bit-identical
+    /// — token stream, model/aux NFE, iteration and acceptance counters,
+    /// and engine-side NFE — to the same decode driven through the dense
+    /// mask-materializing path, for every drafter, fixed and adaptive.
+    /// (The compact ABI is a transport optimization; if it ever changed
+    /// the sampled law, this catches it at the first diverging bit.)
+    #[test]
+    fn compact_and_dense_paths_bit_identical_for_every_drafter() {
+        use crate::runtime::DensePath;
+        for kind in DraftKind::ALL {
+            for adaptive in [false, true] {
+                for seed in [3u64, 17, 41] {
+                    let n = 14;
+                    let v = 6;
+                    let mut r = Rng::new(seed);
+                    let m = r.range(1, n - 1);
+                    let sigma = sample_sigma(&mut r, n, m, OrderProtocol::Lattice);
+                    let ord = Ordering::new(sigma, m);
+                    let prompt: Vec<(usize, u32)> = (0..n)
+                        .filter(|&p| ord.is_prompt_pos(p))
+                        .map(|p| (p, r.below(v) as u32))
+                        .collect();
+                    let toks = init_tokens(&ord, &prompt);
+                    let opts = DraftOptions {
+                        kind,
+                        max_len: 4,
+                        adaptive,
+                    };
+                    let build = |rng_seed: u64| {
+                        let drafter = opts.build(&toks, v);
+                        AssdMachine::new(
+                            ord.clone(),
+                            toks.clone(),
+                            v,
+                            opts.speculation(),
+                            1.2,
+                            Rng::new(rng_seed),
+                            drafter,
+                        )
+                    };
+                    let e_compact = MockEngine::new(seed ^ 0xA5, n, v, 1.2);
+                    let e_dense = MockEngine::new(seed ^ 0xA5, n, v, 1.2);
+                    let out_c = run_machine(&e_compact, Box::new(build(seed ^ 7))).unwrap();
+                    let out_d =
+                        run_machine(&DensePath(&e_dense), Box::new(build(seed ^ 7))).unwrap();
+                    let tag = format!("{kind:?} adaptive={adaptive} seed={seed}");
+                    assert_eq!(out_c.tokens, out_d.tokens, "tokens diverge: {tag}");
+                    assert_eq!(out_c.model_nfe, out_d.model_nfe, "model NFE: {tag}");
+                    assert_eq!(out_c.aux_nfe, out_d.aux_nfe, "aux NFE: {tag}");
+                    assert_eq!(out_c.iterations, out_d.iterations, "iterations: {tag}");
+                    assert_eq!(out_c.proposed, out_d.proposed, "proposed: {tag}");
+                    assert_eq!(out_c.accepted, out_d.accepted, "accepted: {tag}");
+                    assert_eq!(
+                        out_c.final_draft_len, out_d.final_draft_len,
+                        "window: {tag}"
+                    );
+                    assert_eq!(e_compact.nfe(), e_dense.nfe(), "engine NFE: {tag}");
+                }
+            }
+        }
+    }
+
+    /// The non-speculative machines ride the same compact ABI: sequential
+    /// and diffusion decodes are bit-identical across paths too.
+    #[test]
+    fn compact_and_dense_paths_bit_identical_for_baseline_samplers() {
+        use crate::runtime::DensePath;
+        let n = 12;
+        let v = 5;
+        let ord = Ordering::new(lattice_sigma(&[0, 6], n), 2);
+        let toks = init_tokens(&ord, &[(0, 2), (6, 4)]);
+        for seed in [5u64, 29] {
+            let e_c = MockEngine::new(seed ^ 0x33, n, v, 1.0);
+            let e_d = MockEngine::new(seed ^ 0x33, n, v, 1.0);
+            let seq_c = run_machine(
+                &e_c,
+                Box::new(crate::decode::sequential::SequentialMachine::new(
+                    ord.clone(),
+                    toks.clone(),
+                    v,
+                    1.0,
+                    Rng::new(seed),
+                )),
+            )
+            .unwrap();
+            let seq_d = run_machine(
+                &DensePath(&e_d),
+                Box::new(crate::decode::sequential::SequentialMachine::new(
+                    ord.clone(),
+                    toks.clone(),
+                    v,
+                    1.0,
+                    Rng::new(seed),
+                )),
+            )
+            .unwrap();
+            assert_eq!(seq_c.tokens, seq_d.tokens);
+            assert_eq!(seq_c.model_nfe, seq_d.model_nfe);
+            assert_eq!(e_c.nfe(), e_d.nfe());
+            let dif_c = run_machine(
+                &e_c,
+                Box::new(crate::decode::diffusion::DiffusionMachine::new(
+                    toks.clone(),
+                    v,
+                    4,
+                    1.0,
+                    Rng::new(seed),
+                )),
+            )
+            .unwrap();
+            let dif_d = run_machine(
+                &DensePath(&e_d),
+                Box::new(crate::decode::diffusion::DiffusionMachine::new(
+                    toks.clone(),
+                    v,
+                    4,
+                    1.0,
+                    Rng::new(seed),
+                )),
+            )
+            .unwrap();
+            assert_eq!(dif_c.tokens, dif_d.tokens);
+            assert_eq!(dif_c.model_nfe, dif_d.model_nfe);
         }
     }
 

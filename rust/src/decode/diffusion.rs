@@ -9,7 +9,7 @@
 //! output distribution only matches the true joint as steps -> #targets.
 
 use crate::data::masking::lattice_sigma;
-use crate::model::mask::{draft_masks, Ordering};
+use crate::model::mask::Ordering;
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
@@ -25,8 +25,13 @@ pub struct DiffusionMachine {
     /// positions still masked, in randomized unmasking order
     remaining: Vec<usize>,
     steps_left: usize,
-    mask_h: Vec<f32>,
-    mask_g: Vec<f32>,
+    /// lattice ordering over the CURRENT known set: draft state `ord.m`
+    /// gives "attend exactly the known set" rows for every unknown
+    /// position — the engine rebuilds the masks from this, O(N) per step
+    /// machine-side instead of O(N^2) mask materialization.
+    ord: Ordering,
+    /// positions to unmask this step (the requested logit rows)
+    want: Vec<usize>,
     model_nfe: u64,
     iterations: u64,
 }
@@ -42,7 +47,8 @@ impl DiffusionMachine {
         // Random unmasking order (time-reversal of random absorption).
         rng.shuffle(&mut remaining);
         let steps_left = steps.min(remaining.len()).max(1);
-        let mut m = DiffusionMachine {
+        let ord = Self::known_ordering(&tokens);
+        DiffusionMachine {
             n,
             vocab,
             temp,
@@ -50,29 +56,18 @@ impl DiffusionMachine {
             tokens,
             remaining,
             steps_left,
-            mask_h: vec![0.0; n * n],
-            mask_g: vec![0.0; n * n],
+            ord,
+            want: vec![],
             model_nfe: 0,
             iterations: 0,
-        };
-        m.rebuild_masks();
-        m
+        }
     }
 
-    fn rebuild_masks(&mut self) {
-        // Known set = all non-MASK positions; draft-mode masks over the
-        // lattice ordering of that set give "attend exactly the known set"
-        // rows for every unknown position.
-        let known: Vec<usize> = (0..self.n).filter(|&p| self.tokens[p] != MASK).collect();
+    fn known_ordering(tokens: &[u32]) -> Ordering {
+        let n = tokens.len();
+        let known: Vec<usize> = (0..n).filter(|&p| tokens[p] != MASK).collect();
         let m = known.len();
-        let ord = Ordering::new(lattice_sigma(&known, self.n), m);
-        draft_masks(&ord, m)
-            .0
-            .iter()
-            .zip(self.mask_h.iter_mut())
-            .for_each(|(&a, b)| *b = a);
-        let (_, g) = draft_masks(&ord, m);
-        self.mask_g.copy_from_slice(&g);
+        Ordering::new(lattice_sigma(&known, n), m)
     }
 }
 
@@ -85,29 +80,33 @@ impl DecodeMachine for DiffusionMachine {
         if self.done() {
             return None;
         }
+        // Unmask ceil(remaining / steps_left) positions this step.
+        let count = self.remaining.len().div_ceil(self.steps_left);
+        self.want.clear();
+        self.want.extend_from_slice(&self.remaining[..count]);
         Some(ForwardRequest {
             tokens: &self.tokens,
-            mask_h: &self.mask_h,
-            mask_g: &self.mask_g,
+            ord: &self.ord,
+            known: self.ord.m,
+            want: &self.want,
         })
     }
 
     fn absorb(&mut self, logits: &[f32]) {
-        debug_assert_eq!(logits.len(), self.n * self.vocab);
+        debug_assert_eq!(logits.len(), self.want.len() * self.vocab);
         self.model_nfe += 1;
         self.iterations += 1;
-        // Unmask ceil(remaining / steps_left) positions this step.
-        let count = self.remaining.len().div_ceil(self.steps_left);
-        for _ in 0..count {
-            let pos = self.remaining.remove(0);
-            let mut row = logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec();
+        let count = self.want.len();
+        for (i, &pos) in self.want.iter().enumerate() {
+            let mut row = logits[i * self.vocab..(i + 1) * self.vocab].to_vec();
             super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
             let (tok, _) = sample_logits(&mut self.rng, &row, self.temp);
             self.tokens[pos] = tok as u32;
         }
+        self.remaining.drain(..count);
         self.steps_left = self.steps_left.saturating_sub(1).max(1);
         if !self.done() {
-            self.rebuild_masks();
+            self.ord = Self::known_ordering(&self.tokens);
         }
     }
 

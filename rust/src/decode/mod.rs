@@ -67,40 +67,44 @@ impl DecodeOutcome {
 }
 
 /// A decoder state machine. Drive with:
-/// `while !done() { if let Some(req)=forward_request() { absorb(logits) } }`
+/// `while !done() { if let Some(req)=forward_request() { absorb(rows) } }`
 pub trait DecodeMachine {
     /// True when the sequence is fully decoded.
     fn done(&self) -> bool;
 
-    /// The forward the machine needs next: (tokens, mask_h, mask_g), all
-    /// full-sequence views. Returns None iff `done()`.
+    /// The COMPACT forward the machine needs next: the token buffer, the
+    /// generation ordering + decode state the engine rebuilds the masks
+    /// from, and the logit rows the machine will read in `absorb`. Returns
+    /// None iff `done()`. Must be idempotent between absorbs (the driver
+    /// may call it more than once per iteration).
     fn forward_request(&mut self) -> Option<ForwardRequest<'_>>;
 
-    /// Feed the logits ([N, V] row-major) for the last request.
+    /// Feed the GATHERED logit rows for the last request:
+    /// `[want.len(), V]` row-major, rows in the exact order of the
+    /// request's `want` list (NOT the full `[N, V]` grid — machines never
+    /// see rows they did not ask for).
     fn absorb(&mut self, logits: &[f32]);
 
     /// Consume the machine and return the outcome (panics if !done()).
     fn outcome(self: Box<Self>) -> DecodeOutcome;
 }
 
-/// Borrowed forward inputs for one sequence.
-pub struct ForwardRequest<'a> {
-    pub tokens: &'a [u32],
-    pub mask_h: &'a [f32],
-    pub mask_g: &'a [f32],
-}
+/// Borrowed compact forward inputs for one sequence — the same type the
+/// engines consume ([`crate::runtime::ForwardSpec`]), so the scheduler
+/// passes machine requests to [`Engine::forward_ord`] without repacking.
+pub use crate::runtime::ForwardSpec as ForwardRequest;
 
 /// Drive a machine to completion against an engine (batch = 1).
 pub fn run_machine(engine: &dyn Engine, mut machine: Box<dyn DecodeMachine>) -> Result<DecodeOutcome> {
     while !machine.done() {
-        let (toks, mh, mg) = {
+        let rows = {
             let req = machine
                 .forward_request()
                 .expect("machine not done but no request");
-            (req.tokens.to_vec(), req.mask_h.to_vec(), req.mask_g.to_vec())
+            let mut out = engine.forward_ord(std::slice::from_ref(&req))?;
+            out.pop().expect("engine returned no row batch")
         };
-        let logits = engine.forward(1, &toks, &mh, &mg)?;
-        machine.absorb(&logits);
+        machine.absorb(&rows);
     }
     Ok(machine.outcome())
 }

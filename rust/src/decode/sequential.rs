@@ -1,12 +1,14 @@
 //! Sequential decoding baseline: one forward per token, following the
 //! factorization chain (paper "Sequential Sampling via Factorization").
 //!
-//! Each step uses the DRAFT-mode masks at state n, whose row for order n
-//! is exactly the oracle conditional p(x_sigma(n) | x_sigma(<n)) (the same
-//! fact that powers Lemma 1), so sequential decoding samples the true
-//! joint. NFE = number of target tokens.
+//! Each step requests the draft-mode state n with a single wanted row —
+//! order n's position — whose conditional is exactly the oracle
+//! p(x_sigma(n) | x_sigma(<n)) (the same fact that powers Lemma 1), so
+//! sequential decoding samples the true joint. NFE = number of target
+//! tokens. No mask is ever materialized machine-side: the compact
+//! forward ABI carries (ordering, n) and the engine rebuilds the masks.
 
-use crate::model::mask::{advance_draft_masks, draft_masks, Ordering};
+use crate::model::mask::Ordering;
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
@@ -19,9 +21,9 @@ pub struct SequentialMachine {
     temp: f32,
     rng: Rng,
     tokens: Vec<u32>,
-    mask_h: Vec<f32>,
-    mask_g: Vec<f32>,
     n: usize,
+    /// the single row requested this step (order n's position)
+    want: [usize; 1],
     model_nfe: u64,
 }
 
@@ -34,16 +36,14 @@ impl SequentialMachine {
             }
         }
         let n = ord.m;
-        let (mask_h, mask_g) = draft_masks(&ord, n);
         SequentialMachine {
             ord,
             vocab,
             temp,
             rng,
             tokens,
-            mask_h,
-            mask_g,
             n,
+            want: [0],
             model_nfe: 0,
         }
     }
@@ -58,24 +58,24 @@ impl DecodeMachine for SequentialMachine {
         if self.done() {
             return None;
         }
+        self.want = [self.ord.sigma[self.n]];
         Some(ForwardRequest {
             tokens: &self.tokens,
-            mask_h: &self.mask_h,
-            mask_g: &self.mask_g,
+            ord: &self.ord,
+            known: self.n,
+            want: &self.want,
         })
     }
 
     fn absorb(&mut self, logits: &[f32]) {
-        debug_assert_eq!(logits.len(), self.ord.n() * self.vocab);
+        debug_assert_eq!(logits.len(), self.vocab);
         self.model_nfe += 1;
         let pos = self.ord.sigma[self.n];
-        let mut row = logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec();
+        let mut row = logits.to_vec();
         super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
         let (tok, _p) = sample_logits(&mut self.rng, &row, self.temp);
         self.tokens[pos] = tok as u32;
-        let n_new = self.n + 1;
-        advance_draft_masks(&self.ord, self.n, n_new, &mut self.mask_h, &mut self.mask_g);
-        self.n = n_new;
+        self.n += 1;
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {

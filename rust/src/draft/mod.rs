@@ -96,8 +96,11 @@ pub trait Drafter {
     }
 
     /// Propose tokens + proposal distributions for orders `ctx.n..ctx.t`.
-    /// `logits` is `Some` ([N, V] row-major draft-phase logits) iff
-    /// [`Drafter::needs_model_forward`] returns true.
+    /// `logits` is `Some` iff [`Drafter::needs_model_forward`] returns
+    /// true, and then holds the GATHERED draft-phase window rows
+    /// (`[ctx.t - ctx.n, V]` row-major, row `i` ↔ order `ctx.n + i`) —
+    /// the compact forward ABI returns only the rows the machine asked
+    /// for, never the full `[N, V]` grid.
     fn propose(
         &mut self,
         ctx: &DraftContext<'_>,

@@ -4,10 +4,11 @@
 //! Under the draft-mode masks, every unknown position's head is exactly
 //! p(. | x_sigma(<n)) — the conditionally independent parallel sampler of
 //! Fig. 1a. The machine runs one draft-mode forward (model NFE) and hands
-//! the logits here; this drafter just samples the window rows. Lemma 1:
-//! the row at the first unknown order equals the oracle conditional, so
-//! the first proposal of every window survives verification and the final
-//! remaining token needs no verify at all.
+//! the GATHERED window rows here (compact ABI: `[t - n, V]`, row i ↔ order
+//! n + i); this drafter just samples them. Lemma 1: the row at the first
+//! unknown order equals the oracle conditional, so the first proposal of
+//! every window survives verification and the final remaining token needs
+//! no verify at all.
 
 use crate::decode::sampling::{ban_ids, sample_probs, softmax, BANNED};
 use crate::util::rng::Rng;
@@ -35,12 +36,12 @@ impl Drafter for SelfDrafter {
     ) -> DraftProposal {
         let logits = logits.expect("self-drafting needs the draft-phase forward logits");
         let v = ctx.vocab;
-        debug_assert_eq!(logits.len(), ctx.ord.n() * v);
-        let mut tokens = Vec::with_capacity(ctx.t - ctx.n);
-        let mut dists = Vec::with_capacity(ctx.t - ctx.n);
-        for i in ctx.n..ctx.t {
-            let pos = ctx.ord.sigma[i];
-            let mut row = logits[pos * v..(pos + 1) * v].to_vec();
+        let w = ctx.t - ctx.n;
+        debug_assert_eq!(logits.len(), w * v, "gathered window rows");
+        let mut tokens = Vec::with_capacity(w);
+        let mut dists = Vec::with_capacity(w);
+        for i in 0..w {
+            let mut row = logits[i * v..(i + 1) * v].to_vec();
             ban_ids(&mut row, &BANNED);
             let probs = softmax(&row, ctx.temp);
             let tok = sample_probs(rng, &probs) as u32;
@@ -67,10 +68,11 @@ mod tests {
         let n = 3;
         let ord = Ordering::new(lattice_sigma(&[0], n), 1);
         let tokens = vec![1u32, crate::tokenizer::MASK, crate::tokenizer::MASK];
-        // Row for position 1 strongly prefers token 2; position 2 token 3.
-        let mut logits = vec![0.0f32; n * v];
-        logits[v + 2] = 50.0;
-        logits[2 * v + 3] = 50.0;
+        // Gathered window rows (orders 1..3): row 0 strongly prefers
+        // token 2; row 1 token 3.
+        let mut logits = vec![0.0f32; 2 * v];
+        logits[2] = 50.0;
+        logits[v + 3] = 50.0;
         let ctx = DraftContext {
             tokens: &tokens,
             ord: &ord,

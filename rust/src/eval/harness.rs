@@ -172,7 +172,7 @@ pub fn run_sampler_with(
             item.tokens.clone(),
             v,
             sampler.effective_draft(draft),
-            engine.seq_len(),
+            engine.seq_len().min(engine.max_gather_rows()),
             temp,
             rng,
         )),

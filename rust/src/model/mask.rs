@@ -11,8 +11,13 @@
 //!    (this is what makes Lemma 1 exact); UNKNOWN query rows attend
 //!    exactly the known set (order < n); nothing attends unknown columns.
 //!
-//! Masks are row-major [N*N] f32 with 1.0 = may-attend, matching the HLO
-//! artifact inputs.
+//! Masks are row-major [N*N] f32 with 1.0 = may-attend, matching the dense
+//! HLO artifact inputs. Both families are projections of one scalar
+//! predicate, [`g_allows`] — the compact forward ABI
+//! (`fwd_ord_b{B}.hlo.txt`, see docs/ARCHITECTURE.md §Compact forward ABI)
+//! re-evaluates the same predicate *inside* the compiled graph from
+//! `(order, m, known)`, so these builders double as the fixture/reference
+//! path for the on-device construction.
 
 /// A generation ordering: sigma (order -> position) with prompt size m.
 #[derive(Clone, Debug)]
@@ -50,29 +55,34 @@ impl Ordering {
     }
 }
 
+/// The scalar mask predicate every construction path shares: may the
+/// query-stream row with order `oa` attend the column with order `ob`,
+/// given prompt size `m` and decode state `known` (orders `< known` hold
+/// committed tokens)?
+///
+/// `known == n` yields the verify masks (Fig. 1b); `m <= known < n` the
+/// draft masks at that state (Fig. 1a). The dense builders below, the
+/// MockEngine's native compact forward, and — semantically — the on-device
+/// construction baked into the `fwd_ord_b{B}` HLO artifacts
+/// (`python/compile/model.py::masks_from_order_batched`) all evaluate
+/// exactly this predicate, so they cannot diverge independently.
+#[inline]
+pub fn g_allows(oa: usize, ob: usize, m: usize, known: usize) -> bool {
+    if oa < m {
+        // prompt row: full prompt attention
+        ob < m
+    } else if oa < known {
+        // known target row: prompt + strictly-earlier known targets
+        ob < m || (ob < known && ob < oa)
+    } else {
+        // unknown row: attend exactly the known set
+        ob < known
+    }
+}
+
 /// Write the verify-mode (mask_h, mask_g) into row-major buffers.
 pub fn verify_masks_into(ord: &Ordering, mask_h: &mut [f32], mask_g: &mut [f32]) {
-    let n = ord.n();
-    assert_eq!(mask_h.len(), n * n);
-    assert_eq!(mask_g.len(), n * n);
-    for a in 0..n {
-        let oa = ord.order[a];
-        let row_g = &mut mask_g[a * n..(a + 1) * n];
-        if oa < ord.m {
-            for b in 0..n {
-                row_g[b] = if ord.order[b] < ord.m { 1.0 } else { 0.0 };
-            }
-        } else {
-            for b in 0..n {
-                let ob = ord.order[b];
-                row_g[b] = if ob < ord.m || ob < oa { 1.0 } else { 0.0 };
-            }
-        }
-    }
-    mask_h.copy_from_slice(mask_g);
-    for a in 0..n {
-        mask_h[a * n + a] = 1.0;
-    }
+    draft_masks_into(ord, ord.n(), mask_h, mask_g);
 }
 
 /// Write the draft-mode (mask_h, mask_g) at decode state `n_known`.
@@ -84,26 +94,12 @@ pub fn draft_masks_into(ord: &Ordering, n_known: usize, mask_h: &mut [f32], mask
     for a in 0..n {
         let oa = ord.order[a];
         let row_g = &mut mask_g[a * n..(a + 1) * n];
-        if oa < ord.m {
-            // prompt row: full prompt attention (same as verify)
-            for b in 0..n {
-                row_g[b] = if ord.order[b] < ord.m { 1.0 } else { 0.0 };
-            }
-        } else if oa < n_known {
-            // known target row: causal (same as verify restricted to known)
-            for b in 0..n {
-                let ob = ord.order[b];
-                row_g[b] = if ob < ord.m || (ob < n_known && ob < oa) {
-                    1.0
-                } else {
-                    0.0
-                };
-            }
-        } else {
-            // unknown row: attend exactly the known set
-            for b in 0..n {
-                row_g[b] = if ord.order[b] < n_known { 1.0 } else { 0.0 };
-            }
+        for (b, cell) in row_g.iter_mut().enumerate() {
+            *cell = if g_allows(oa, ord.order[b], ord.m, n_known) {
+                1.0
+            } else {
+                0.0
+            };
         }
     }
     mask_h.copy_from_slice(mask_g);
@@ -148,9 +144,12 @@ pub fn advance_draft_masks(
     for i in n_prev..n_new {
         let a = ord.sigma[i];
         let row_g = &mut mask_g[a * n..(a + 1) * n];
-        for b in 0..n {
-            let ob = ord.order[b];
-            row_g[b] = if ob < ord.m || (ob < n_new && ob < i) { 1.0 } else { 0.0 };
+        for (b, cell) in row_g.iter_mut().enumerate() {
+            *cell = if g_allows(i, ord.order[b], ord.m, n_new) {
+                1.0
+            } else {
+                0.0
+            };
         }
     }
     // 2. unknown rows gain the newly-known columns
@@ -297,19 +296,24 @@ mod tests {
         );
     }
 
-    /// Golden parity with the python mirror (artifacts/fixtures/masks.json).
+    /// Golden parity with the python reference (artifacts/fixtures/
+    /// masks.json, generated by `python/compile/fixtures.py` and committed
+    /// to the repo): the rust builders must byte-match the python
+    /// `verify_masks`/`draft_masks` output over a sweep of
+    /// (N, m, sigma, known). The same fixture semantics anchor the
+    /// on-device construction (python tests compare `masks_from_order`
+    /// against the dense builders), so all three paths are pinned to one
+    /// reference.
     #[test]
     fn golden_fixtures_match_python() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/fixtures/masks.json");
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
-            Err(_) => {
-                eprintln!("skipping golden fixture test: run `make artifacts` first");
-                return;
-            }
-        };
+        let text = std::fs::read_to_string(path)
+            .expect("artifacts/fixtures/masks.json missing — run `make fixtures`");
         let cases = crate::util::json::Json::parse(&text).unwrap();
-        for case in cases.as_arr().unwrap() {
+        let cases = cases.as_arr().unwrap();
+        assert!(cases.len() >= 10, "suspiciously few fixture cases");
+        let mut draft_cases = 0usize;
+        for case in cases {
             let n = case.get("n").unwrap().as_usize().unwrap();
             let m = case.get("m").unwrap().as_usize().unwrap();
             let sigma: Vec<usize> = case
@@ -321,24 +325,58 @@ mod tests {
                 .map(|x| x.as_usize().unwrap())
                 .collect();
             let ord = Ordering::new(sigma, m);
-            let to_vec = |key: &str| -> Option<Vec<f32>> {
-                case.get(key).map(|v| {
-                    v.as_arr()
-                        .unwrap()
-                        .iter()
-                        .map(|x| x.as_f64().unwrap() as f32)
-                        .collect()
-                })
+            let to_vec = |j: &crate::util::json::Json, key: &str| -> Vec<f32> {
+                j.get(key)
+                    .unwrap_or_else(|| panic!("fixture missing key {key}"))
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.as_f64().unwrap() as f32)
+                    .collect()
             };
             let (vh, vg) = verify_masks(&ord);
-            assert_eq!(vh, to_vec("verify_h").unwrap(), "verify_h n={n} m={m}");
-            assert_eq!(vg, to_vec("verify_g").unwrap(), "verify_g n={n} m={m}");
-            if let Some(dh_want) = to_vec("draft_h") {
-                let nk = case.get("n_known").unwrap().as_usize().unwrap();
+            assert_eq!(vh, to_vec(case, "verify_h"), "verify_h n={n} m={m}");
+            assert_eq!(vg, to_vec(case, "verify_g"), "verify_g n={n} m={m}");
+            for d in case.get("drafts").unwrap().as_arr().unwrap() {
+                let nk = d.get("n_known").unwrap().as_usize().unwrap();
                 let (dh, dg) = draft_masks(&ord, nk);
-                assert_eq!(dh, dh_want, "draft_h n={n} m={m} nk={nk}");
-                assert_eq!(dg, to_vec("draft_g").unwrap(), "draft_g n={n} m={m} nk={nk}");
+                assert_eq!(dh, to_vec(d, "h"), "draft_h n={n} m={m} nk={nk}");
+                assert_eq!(dg, to_vec(d, "g"), "draft_g n={n} m={m} nk={nk}");
+                draft_cases += 1;
             }
         }
+        assert!(draft_cases >= 20, "draft sweep too thin: {draft_cases}");
+    }
+
+    /// The scalar predicate is the single source of truth: builders are its
+    /// projection at every (m, known) state.
+    #[test]
+    fn prop_g_allows_matches_builders() {
+        propcheck::check_no_shrink(
+            9,
+            150,
+            |r: &mut Rng| {
+                let ord = random_ordering(r, 20);
+                let nk = r.range(ord.m, ord.n() + 1);
+                (ord, nk)
+            },
+            |(ord, nk)| {
+                let n = ord.n();
+                let (dh, dg) = draft_masks(ord, *nk);
+                for a in 0..n {
+                    for b in 0..n {
+                        let want = g_allows(ord.order[a], ord.order[b], ord.m, *nk);
+                        if (dg[a * n + b] > 0.0) != want {
+                            return Err(format!("g[{a}][{b}] != g_allows at nk={nk}"));
+                        }
+                        let want_h = want || a == b;
+                        if (dh[a * n + b] > 0.0) != want_h {
+                            return Err(format!("h[{a}][{b}] != g_allows at nk={nk}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

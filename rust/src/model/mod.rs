@@ -23,6 +23,10 @@ pub struct ModelMeta {
     pub mask_id: u32,
     pub pad_id: u32,
     pub n_params: usize,
+    /// Row-gather width `R` of the compact `fwd_ord_b{B}` artifacts in this
+    /// set (absent in pre-compact artifact sets, which then serve through
+    /// the dense fallback — see docs/ARCHITECTURE.md §Compact forward ABI).
+    pub ord_rows: Option<usize>,
     pub params: Vec<(String, usize, Vec<usize>)>, // (name, offset, shape)
 }
 
@@ -65,6 +69,7 @@ impl ModelMeta {
             mask_id: get("mask_id")? as u32,
             pad_id: get("pad_id")? as u32,
             n_params: get("n_params")?,
+            ord_rows: j.get("ord_rows").and_then(|v| v.as_usize()).filter(|&r| r > 0),
             params,
         })
     }
@@ -137,6 +142,17 @@ mod tests {
         assert_eq!(m.params.len(), 2);
         assert_eq!(m.params[0].0, "a");
         m.validate().unwrap();
+    }
+
+    #[test]
+    fn ord_rows_optional_and_parsed() {
+        // Pre-compact artifact sets carry no ord_rows field.
+        assert_eq!(ModelMeta::parse(META).unwrap().ord_rows, None);
+        let with = META.replace("\"n_params\": 20,", "\"n_params\": 20, \"ord_rows\": 32,");
+        assert_eq!(ModelMeta::parse(&with).unwrap().ord_rows, Some(32));
+        // A malformed 0 is treated as absent, not as an empty gather.
+        let zero = META.replace("\"n_params\": 20,", "\"n_params\": 20, \"ord_rows\": 0,");
+        assert_eq!(ModelMeta::parse(&zero).unwrap().ord_rows, None);
     }
 
     #[test]

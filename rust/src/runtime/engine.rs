@@ -3,23 +3,51 @@
 //! One compiled executable per (program, batch size). `forward` picks the
 //! smallest compiled batch variant that fits and pads the remainder with
 //! PAD-token rows + zero masks (padding rows cost compute but not
-//! correctness; the batcher sizes batches to the variants).
+//! correctness; the batcher sizes batches to the variants). The compact
+//! `forward_ord` path does the same over the `fwd_ord_b{B}` family, which
+//! reconstructs the masks on device from `(order, m, known)` and gathers
+//! only the requested logit rows before crossing back to the host (see
+//! docs/ARCHITECTURE.md §Compact forward ABI).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
-use super::{compile_artifact, Engine};
+use super::{compile_artifact, forward_ord_dense, Engine, ForwardSpec};
 use crate::model::ModelMeta;
 use crate::tokenizer::PAD;
+
+/// Reusable host-side packing buffers for the compact path: the per-call
+/// i32 index vectors are tiny (O(B·N)), but re-zeroing fresh allocations
+/// every scheduler iteration is pure waste. Behind a RefCell because
+/// `forward_ord` takes `&self` (the engine is single-threaded by
+/// construction — see the `Engine` trait docs — so the borrow can never
+/// be contended).
+#[derive(Default)]
+struct OrdScratch {
+    toks: Vec<i32>,
+    order: Vec<i32>,
+    m: Vec<i32>,
+    known: Vec<i32>,
+    want: Vec<i32>,
+}
 
 pub struct XlaEngine {
     pub meta: ModelMeta,
     client: xla::PjRtClient,
-    /// batch size -> compiled forward executable
+    /// batch size -> compiled dense forward executable
     fwd: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// batch size -> compiled COMPACT forward executable
+    /// (`fwd_ord_b{B}.hlo.txt`: on-device mask construction + row gather;
+    /// empty for pre-compact artifact sets, which serve via the dense
+    /// fallback)
+    fwd_ord: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// row-gather width R of the compact artifacts (0 iff `fwd_ord` empty)
+    ord_rows: usize,
+    scratch: RefCell<OrdScratch>,
     /// current parameters (flat theta), host copy
     theta: Vec<f32>,
     /// device-resident theta — uploaded ONCE per set_params instead of per
@@ -30,31 +58,38 @@ pub struct XlaEngine {
 
 impl XlaEngine {
     /// Load the standard artifact set from a directory:
-    /// model_meta.json, params file, fwd_b{B}.hlo.txt for each available B.
+    /// model_meta.json, params file, fwd_b{B}.hlo.txt for each available B,
+    /// and (when present) the compact fwd_ord_b{B}.hlo.txt family.
     ///
     /// Batch variants are DISCOVERED by scanning the directory for files
-    /// matching the `fwd_b{B}.hlo.txt` naming contract (B a positive
-    /// decimal integer; see docs/ARCHITECTURE.md §Artifact naming) rather
-    /// than probing a hard-coded variant set, so the compile pipeline can
-    /// emit any batch ladder without a rust-side change.
+    /// matching the `fwd_b{B}.hlo.txt` / `fwd_ord_b{B}.hlo.txt` naming
+    /// contracts (B a positive decimal integer; see docs/ARCHITECTURE.md
+    /// §Artifact naming) rather than probing a hard-coded variant set, so
+    /// the compile pipeline can emit any batch ladder without a rust-side
+    /// change. Compact artifacts additionally require the `ord_rows` field
+    /// in model_meta.json (the gather width R they were lowered with);
+    /// a set missing it is served through the dense fallback.
     pub fn load(artifacts_dir: impl AsRef<Path>, params_path: Option<&Path>) -> Result<XlaEngine> {
         let dir = artifacts_dir.as_ref();
         let meta = ModelMeta::load(dir.join("model_meta.json"))?;
         meta.validate()?;
         let client = super::cpu_client()?;
         let mut fwd = BTreeMap::new();
+        let mut fwd_ord = BTreeMap::new();
         for entry in std::fs::read_dir(dir)
             .with_context(|| format!("reading artifacts dir {}", dir.display()))?
         {
             let entry = entry?;
             let name = entry.file_name();
             let name = name.to_string_lossy();
-            let Some(b) = name
-                .strip_prefix("fwd_b")
-                .and_then(|rest| rest.strip_suffix(".hlo.txt"))
-            else {
+            let (family, b) = if let Some(rest) = name.strip_prefix("fwd_ord_b") {
+                (&mut fwd_ord, rest.strip_suffix(".hlo.txt"))
+            } else if let Some(rest) = name.strip_prefix("fwd_b") {
+                (&mut fwd, rest.strip_suffix(".hlo.txt"))
+            } else {
                 continue;
             };
+            let Some(b) = b else { continue };
             let b: usize = match b.parse() {
                 Ok(b) if b > 0 => b,
                 // A stray near-miss (fwd_b4_old.hlo.txt, fwd_b4.copy.hlo.txt)
@@ -66,11 +101,26 @@ impl XlaEngine {
                     continue;
                 }
             };
-            fwd.insert(b, compile_artifact(&client, entry.path())?);
+            family.insert(b, compile_artifact(&client, entry.path())?);
         }
         if fwd.is_empty() {
             bail!("no fwd_b*.hlo.txt artifacts in {}", dir.display());
         }
+        let ord_rows = match meta.ord_rows {
+            Some(r) => r.min(meta.seq_len),
+            None if !fwd_ord.is_empty() => {
+                eprintln!(
+                    "XlaEngine::load: fwd_ord_b* artifacts present but model_meta.json has no \
+                     ord_rows field — serving through the dense fallback"
+                );
+                fwd_ord.clear();
+                0
+            }
+            None => 0,
+        };
+        // ord_rows without artifacts (or vice versa) must not enable a
+        // half-configured compact path.
+        let ord_rows = if fwd_ord.is_empty() { 0 } else { ord_rows };
         let params_path: PathBuf = params_path
             .map(|p| p.to_path_buf())
             .unwrap_or_else(|| dir.join("params_init.bin"));
@@ -83,6 +133,9 @@ impl XlaEngine {
             meta,
             client,
             fwd,
+            fwd_ord,
+            ord_rows,
+            scratch: RefCell::new(OrdScratch::default()),
             theta,
             theta_buf,
             nfe: AtomicU64::new(0),
@@ -97,10 +150,15 @@ impl XlaEngine {
                 self.meta.n_params
             );
         }
-        self.theta_buf = self
+        // Upload into a fresh buffer FIRST and only then replace engine
+        // state, so a failed upload leaves the engine fully on the OLD
+        // (theta, theta_buf) pair instead of stranding new host params
+        // against a stale device buffer.
+        let new_buf = self
             .client
             .buffer_from_host_buffer::<f32>(&theta, &[theta.len()], None)
             .context("uploading theta")?;
+        self.theta_buf = new_buf;
         self.theta = theta;
         Ok(())
     }
@@ -113,13 +171,26 @@ impl XlaEngine {
         &self.client
     }
 
-    fn pick_batch(&self, want: usize) -> usize {
-        for (&b, _) in self.fwd.iter() {
+    /// Smallest compiled variant >= `want` (largest otherwise) — one
+    /// policy shared by the dense and compact families.
+    fn smallest_fitting(
+        family: &BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        want: usize,
+    ) -> usize {
+        for (&b, _) in family.iter() {
             if b >= want {
                 return b;
             }
         }
-        *self.fwd.keys().last().unwrap()
+        *family.keys().last().unwrap()
+    }
+
+    fn pick_batch(&self, want: usize) -> usize {
+        Self::smallest_fitting(&self.fwd, want)
+    }
+
+    fn pick_batch_ord(&self, want: usize) -> usize {
+        Self::smallest_fitting(&self.fwd_ord, want)
     }
 
     /// The pre-optimization forward path (per-call theta LITERAL upload).
@@ -235,6 +306,156 @@ impl Engine for XlaEngine {
         logits.truncate(batch * n * v);
         self.nfe.fetch_add(1, Ordering::Relaxed);
         Ok(logits)
+    }
+
+    /// Compact path: ship `(tokens, order, m, known, want)` indices only —
+    /// O(B·N) host→device — and read back just the gathered rows —
+    /// O(B·R·V) device→host. The masks are rebuilt INSIDE the compiled
+    /// graph from `(order, m, known)` (same semantics as
+    /// `model::mask::g_allows`). Falls back to [`forward_ord_dense`] when
+    /// the artifact set predates the compact family or a request wants
+    /// more rows than the compiled gather width R.
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        if specs.is_empty() {
+            return Ok(vec![]);
+        }
+        let r = self.ord_rows;
+        if self.fwd_ord.is_empty() {
+            return forward_ord_dense(self, specs);
+        }
+        // Mixed batches: a request wanting more rows than the compiled
+        // gather width (rare — deep diffusion steps) takes the dense
+        // fallback ALONE; its batch-mates stay on the compact path
+        // instead of the whole batch regressing to O(N²) mask traffic.
+        if specs.iter().any(|s| s.want.len() > r) {
+            let mut compact = Vec::new();
+            let mut dense = Vec::new();
+            // (routed-to-dense, index within that route's output)
+            let mut route = Vec::with_capacity(specs.len());
+            for s in specs {
+                if s.want.len() > r {
+                    route.push((true, dense.len()));
+                    dense.push(*s);
+                } else {
+                    route.push((false, compact.len()));
+                    compact.push(*s);
+                }
+            }
+            let mut dense_out: Vec<Option<Vec<f32>>> =
+                forward_ord_dense(self, &dense)?.into_iter().map(Some).collect();
+            let mut compact_out: Vec<Option<Vec<f32>>> = if compact.is_empty() {
+                vec![]
+            } else {
+                // No oversized entries remain, so this recursion takes the
+                // compact path below.
+                self.forward_ord(&compact)?.into_iter().map(Some).collect()
+            };
+            return Ok(route
+                .into_iter()
+                .map(|(is_dense, i)| {
+                    let slot = if is_dense {
+                        &mut dense_out[i]
+                    } else {
+                        &mut compact_out[i]
+                    };
+                    slot.take().expect("route index duplicated")
+                })
+                .collect());
+        }
+        let n = self.meta.seq_len;
+        let v = self.meta.vocab;
+        // Batches larger than the largest compact variant split into chunks
+        // (mirrors the dense path's policy).
+        let max_b = *self.fwd_ord.keys().last().unwrap();
+        if specs.len() > max_b {
+            let mut out = Vec::with_capacity(specs.len());
+            for chunk in specs.chunks(max_b) {
+                out.extend(self.forward_ord(chunk)?);
+            }
+            return Ok(out);
+        }
+        let b_exec = self.pick_batch_ord(specs.len());
+        let exe = &self.fwd_ord[&b_exec];
+
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.toks.clear();
+        s.order.clear();
+        s.m.clear();
+        s.known.clear();
+        s.want.clear();
+        for spec in specs {
+            assert_eq!(spec.tokens.len(), n, "tokens shape");
+            assert_eq!(spec.ord.n(), n, "ordering length");
+            assert!(
+                spec.ord.m <= spec.known && spec.known <= n,
+                "known out of range"
+            );
+            s.toks.extend(spec.tokens.iter().map(|&t| t as i32));
+            s.order.extend(spec.ord.order.iter().map(|&o| o as i32));
+            s.m.push(spec.ord.m as i32);
+            s.known.push(spec.known as i32);
+            for &pos in spec.want {
+                assert!(pos < n, "wanted row {pos} out of range");
+                s.want.push(pos as i32);
+            }
+            // Pad the want vector with row 0 (harmless duplicate gather;
+            // the surplus rows are sliced off below).
+            s.want.resize(s.want.len() + (r - spec.want.len()), 0);
+        }
+        // Pad to the executable's batch: PAD tokens under an all-prompt
+        // state (m = known = N) cost compute but cannot influence real
+        // rows.
+        for _ in specs.len()..b_exec {
+            s.toks.resize(s.toks.len() + n, PAD as i32);
+            s.order.extend(0..n as i32);
+            s.m.push(n as i32);
+            s.known.push(n as i32);
+            s.want.resize(s.want.len() + r, 0);
+        }
+
+        let buf_tokens = self
+            .client
+            .buffer_from_host_buffer::<i32>(&s.toks, &[b_exec, n], None)?;
+        let buf_order = self
+            .client
+            .buffer_from_host_buffer::<i32>(&s.order, &[b_exec, n], None)?;
+        let buf_m = self
+            .client
+            .buffer_from_host_buffer::<i32>(&s.m, &[b_exec], None)?;
+        let buf_known = self
+            .client
+            .buffer_from_host_buffer::<i32>(&s.known, &[b_exec], None)?;
+        let buf_want = self
+            .client
+            .buffer_from_host_buffer::<i32>(&s.want, &[b_exec, r], None)?;
+        let result = exe
+            .execute_b(&[
+                &self.theta_buf,
+                &buf_tokens,
+                &buf_order,
+                &buf_m,
+                &buf_known,
+                &buf_want,
+            ])
+            .context("executing forward_ord")?[0][0]
+            .to_literal_sync()?;
+        let rows = result.to_tuple1()?.to_vec::<f32>()?;
+        debug_assert_eq!(rows.len(), b_exec * r * v);
+        self.nfe.fetch_add(1, Ordering::Relaxed);
+        Ok(specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| rows[i * r * v..i * r * v + spec.want.len() * v].to_vec())
+            .collect())
+    }
+
+    fn max_gather_rows(&self) -> usize {
+        if self.fwd_ord.is_empty() {
+            usize::MAX
+        } else {
+            self.ord_rows
+        }
     }
 
     fn nfe(&self) -> u64 {

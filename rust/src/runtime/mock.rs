@@ -20,7 +20,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
-use super::Engine;
+use crate::model::mask::{g_allows, Ordering as GenOrdering};
+
+use super::{Engine, ForwardSpec};
 
 pub struct MockEngine {
     pub n: usize,
@@ -83,6 +85,38 @@ impl MockEngine {
         }
         out
     }
+
+    /// Exact logits for one row under the `(order, m, known)` mask
+    /// parameterization — the NATIVE compact path: no `[N, N]` mask is
+    /// ever materialized; the [`g_allows`] predicate is evaluated per
+    /// column instead, in the same `b = 0..n` accumulation order as
+    /// [`MockEngine::row_logits`], so the two paths produce bit-identical
+    /// f32 sums.
+    pub fn row_logits_ord(
+        &self,
+        a: usize,
+        tokens: &[u32],
+        ord: &GenOrdering,
+        known: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.v];
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = self.bias_at(a, t);
+        }
+        let oa = ord.order[a];
+        for b in 0..self.n {
+            if b != a && g_allows(oa, ord.order[b], ord.m, known) {
+                let tb = (tokens[b] as usize).min(self.v - 1);
+                for t in 0..self.v {
+                    out[t] += self.w_at(a, b, tb, t);
+                }
+            }
+        }
+        for t in 0..self.v {
+            out[t] *= self.temp;
+        }
+        out
+    }
 }
 
 impl Engine for MockEngine {
@@ -115,6 +149,35 @@ impl Engine for MockEngine {
         }
         self.nfe.fetch_add(1, Ordering::Relaxed);
         Ok(logits)
+    }
+
+    /// Native compact path: compute ONLY the wanted rows, masks never
+    /// materialized. One call = one NFE, same as the dense path, so the
+    /// Theorem-1 accounting is path-independent.
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        if specs.is_empty() {
+            return Ok(vec![]);
+        }
+        let out = specs
+            .iter()
+            .map(|spec| {
+                assert_eq!(spec.tokens.len(), self.n, "tokens shape");
+                assert_eq!(spec.ord.n(), self.n, "ordering length");
+                assert!(!spec.want.is_empty(), "empty row request");
+                let mut rows = Vec::with_capacity(spec.want.len() * self.v);
+                for &pos in spec.want {
+                    rows.extend_from_slice(&self.row_logits_ord(
+                        pos,
+                        spec.tokens,
+                        spec.ord,
+                        spec.known,
+                    ));
+                }
+                rows
+            })
+            .collect();
+        self.nfe.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
     }
 
     fn nfe(&self) -> u64 {
@@ -176,6 +239,74 @@ mod tests {
                 "unknown row {pos} depended on unknown content"
             );
         }
+    }
+
+    /// The native compact path must be BIT-identical to the dense fallback
+    /// (same masks, same accumulation order) over random (sigma, known,
+    /// want) states — this is what makes the compact ABI a pure transport
+    /// optimization.
+    #[test]
+    fn prop_compact_rows_bit_identical_to_dense_fallback() {
+        use crate::data::masking::{sample_sigma, OrderProtocol};
+        use crate::runtime::forward_ord_dense;
+        use crate::util::{propcheck, rng::Rng};
+        propcheck::check_no_shrink(
+            31,
+            60,
+            |r: &mut Rng| {
+                let n = r.range(3, 12);
+                let m = r.range(1, n);
+                (n, m, r.next_u64())
+            },
+            |&(n, m, seed)| {
+                let e = MockEngine::new(seed ^ 9, n, 5, 1.0);
+                let mut r = Rng::new(seed);
+                let sigma = sample_sigma(&mut r, n, m, OrderProtocol::Lattice);
+                let ord = Ord::new(sigma, m);
+                let known = r.range(m, n + 1);
+                let tokens: Vec<u32> = (0..n).map(|_| r.below(5) as u32).collect();
+                let n_want = r.range(1, n + 1);
+                let want: Vec<usize> = (0..n_want).map(|_| r.below(n)).collect();
+                let spec = ForwardSpec {
+                    tokens: &tokens,
+                    ord: &ord,
+                    known,
+                    want: &want,
+                };
+                let native = e.forward_ord(std::slice::from_ref(&spec)).unwrap();
+                let dense = forward_ord_dense(&e, std::slice::from_ref(&spec)).unwrap();
+                if native != dense {
+                    return Err(format!("rows diverge (n={n} m={m} known={known})"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn compact_counts_one_nfe_per_batched_call() {
+        let e = MockEngine::new(4, 4, 3, 1.0);
+        let ord = Ord::new(lattice_sigma(&[0], 4), 1);
+        let toks = vec![1u32, 2, 0, 1];
+        let want = [1usize, 2];
+        let specs = [
+            ForwardSpec {
+                tokens: &toks,
+                ord: &ord,
+                known: 1,
+                want: &want,
+            },
+            ForwardSpec {
+                tokens: &toks,
+                ord: &ord,
+                known: 4,
+                want: &want,
+            },
+        ];
+        let rows = e.forward_ord(&specs).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), 2 * 3);
+        assert_eq!(e.nfe(), 1, "one batched compact call = one NFE");
     }
 
     #[test]

@@ -14,14 +14,43 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::model::mask::{draft_masks_into, Ordering};
+
 pub use engine::{TrainOutput, XlaEngine};
 pub use pool::{EnginePool, PoolConfig};
 
+/// One sequence's COMPACT forward request: instead of materialized
+/// `[N, N]` attention masks, it carries the generation ordering and decode
+/// state the masks are pure functions of (paper §3, Lemma 1), plus the
+/// logit rows the caller will actually read. This is the ABI the decode
+/// state machines speak (`decode::ForwardRequest` is an alias) and the
+/// engines consume via [`Engine::forward_ord`].
+#[derive(Clone, Copy)]
+pub struct ForwardSpec<'a> {
+    /// Full-sequence token ids, `[N]`.
+    pub tokens: &'a [u32],
+    /// The generation ordering (sigma, position -> order, prompt size m).
+    pub ord: &'a Ordering,
+    /// Decode state: orders `< known` hold committed tokens.
+    /// `known == ord.n()` yields the verify masks (Fig. 1b);
+    /// `ord.m <= known < ord.n()` the draft masks at that state (Fig. 1a)
+    /// — one parameterization covers both families because
+    /// `draft_masks(ord, N) == verify_masks(ord)`.
+    pub known: usize,
+    /// Positions whose logit rows to return, in exactly the order the
+    /// caller's `absorb` will read them. Must be non-empty.
+    pub want: &'a [usize],
+}
+
 /// The forward interface the decoders run against.
 ///
-/// `tokens` is row-major [batch, N] (u32 ids); `mask_h` / `mask_g` are
-/// row-major [batch, N, N] (1.0 = may-attend). Returns logits, row-major
-/// [batch, N, V].
+/// The COMPACT path ([`Engine::forward_ord`]) is what the decode machines
+/// and the scheduler use: per sequence it ships O(N) indices host→device
+/// and returns only the requested logit rows (O(R·V)) device→host. The
+/// dense [`Engine::forward`] contract (`tokens` row-major [batch, N] u32;
+/// `mask_h`/`mask_g` row-major [batch, N, N], 1.0 = may-attend; returns
+/// logits [batch, N, V]) remains the substrate for training, density
+/// evaluation (eval/ppl.rs), and the compact path's fallback.
 ///
 /// NOTE: deliberately NOT `Send` — the PJRT client is single-threaded
 /// (`Rc` internally). Ownership transfer to a worker thread happens at
@@ -41,12 +70,148 @@ pub trait Engine {
         mask_g: &[f32],
     ) -> Result<Vec<f32>>;
 
+    /// Compact batched forward: one entry per sequence, returning for each
+    /// spec the gathered logit rows (`spec.want.len() * vocab` f32s,
+    /// row-major in `want` order). NFE accounting follows
+    /// [`Engine::forward`]'s convention: one underlying executable launch
+    /// = one network function evaluation — a batch that fits one compiled
+    /// variant counts 1 on either path, while batches the engine has to
+    /// split (larger than the biggest variant, or mixed compact/dense
+    /// routing) count one per launch, exactly as the dense path's
+    /// chunking always has.
+    ///
+    /// The default implementation routes through [`forward_ord_dense`]
+    /// (materialize masks host-side, run the dense forward, gather rows)
+    /// so every engine is correct by construction; engines with a cheaper
+    /// native path override it (MockEngine computes only the wanted rows;
+    /// XlaEngine executes `fwd_ord_b{B}` artifacts that rebuild the masks
+    /// on device and gather before crossing back to the host).
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        forward_ord_dense(self, specs)
+    }
+
+    /// Largest `want` length the engine's NATIVE compact path can serve in
+    /// one call (`usize::MAX` when unbounded, e.g. the dense fallback).
+    /// The scheduler clamps speculation windows to this so compact
+    /// artifacts are never bypassed mid-request.
+    fn max_gather_rows(&self) -> usize {
+        usize::MAX
+    }
+
     /// Number of forward calls so far (NFE accounting — Theorem 1).
     fn nfe(&self) -> u64;
 
     /// Supported batch sizes, ascending (artifact variants).
     fn batch_sizes(&self) -> Vec<usize> {
         vec![1]
+    }
+}
+
+/// Reusable buffers for [`forward_ord_dense`]: this fallback IS the
+/// serving hot path for pre-compact artifact sets, so it must not
+/// allocate + zero O(B·N²) of masks per iteration (the deleted
+/// scheduler-side buffers were reused for the same reason). Thread-local
+/// because engines are pinned to one worker thread by construction, and
+/// every cell is overwritten before the forward reads it, so stale
+/// contents are harmless.
+#[derive(Default)]
+struct DenseScratch {
+    toks: Vec<u32>,
+    mh: Vec<f32>,
+    mg: Vec<f32>,
+}
+
+thread_local! {
+    static DENSE_SCRATCH: std::cell::RefCell<DenseScratch> =
+        std::cell::RefCell::new(DenseScratch::default());
+}
+
+/// The dense fallback behind [`Engine::forward_ord`]: reconstruct the
+/// masks host-side with the reference builders, run one dense batched
+/// forward, and gather the requested rows. Used directly by engines
+/// without compact artifacts and by [`DensePath`] for the
+/// compact-vs-dense equivalence tests and the `perf_engine` ablation.
+pub fn forward_ord_dense<E: Engine + ?Sized>(
+    engine: &E,
+    specs: &[ForwardSpec<'_>],
+) -> Result<Vec<Vec<f32>>> {
+    if specs.is_empty() {
+        return Ok(vec![]);
+    }
+    let n = engine.seq_len();
+    let v = engine.vocab();
+    let b = specs.len();
+    DENSE_SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let s = &mut *scratch;
+        // resize, don't re-allocate: same-shape iterations are free, and
+        // every cell below is written before the engine reads it.
+        s.toks.resize(b * n, 0);
+        s.mh.resize(b * n * n, 0.0);
+        s.mg.resize(b * n * n, 0.0);
+        for (i, spec) in specs.iter().enumerate() {
+            assert_eq!(spec.tokens.len(), n, "tokens shape");
+            assert_eq!(spec.ord.n(), n, "ordering length");
+            assert!(!spec.want.is_empty(), "empty row request");
+            s.toks[i * n..(i + 1) * n].copy_from_slice(spec.tokens);
+            draft_masks_into(
+                spec.ord,
+                spec.known,
+                &mut s.mh[i * n * n..(i + 1) * n * n],
+                &mut s.mg[i * n * n..(i + 1) * n * n],
+            );
+        }
+        let logits = engine.forward(b, &s.toks, &s.mh, &s.mg)?;
+        Ok(specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let mut rows = Vec::with_capacity(spec.want.len() * v);
+                for &pos in spec.want {
+                    assert!(pos < n, "wanted row {pos} out of range");
+                    rows.extend_from_slice(
+                        &logits[i * n * v + pos * v..i * n * v + (pos + 1) * v],
+                    );
+                }
+                rows
+            })
+            .collect())
+    })
+}
+
+/// Wrapper that pins the wrapped engine to the DENSE forward path:
+/// `forward_ord` is deliberately not overridden, so compact requests route
+/// through [`forward_ord_dense`] even when the inner engine has a native
+/// compact implementation. This is the "before" side of the
+/// compact-vs-dense ablation (`perf_engine`) and of the bit-identity
+/// equivalence tests (decode/assd.rs, runtime/mock.rs).
+pub struct DensePath<'e, E: Engine + ?Sized>(pub &'e E);
+
+impl<E: Engine + ?Sized> Engine for DensePath<'_, E> {
+    fn seq_len(&self) -> usize {
+        self.0.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.0.vocab()
+    }
+
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.0.forward(batch, tokens, mask_h, mask_g)
+    }
+
+    fn nfe(&self) -> u64 {
+        self.0.nfe()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.0.batch_sizes()
     }
 }
 

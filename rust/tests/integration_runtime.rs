@@ -12,7 +12,7 @@ use asarm::decode::sequential::SequentialMachine;
 use asarm::decode::{init_tokens, run_machine, DecodeMachine};
 use asarm::draft::DraftKind;
 use asarm::model::mask::{draft_masks, verify_masks, Ordering};
-use asarm::runtime::{Engine, XlaEngine};
+use asarm::runtime::{forward_ord_dense, Engine, ForwardSpec, XlaEngine};
 use asarm::tokenizer::MASK;
 use asarm::util::rng::Rng;
 
@@ -183,6 +183,41 @@ fn assd_decodes_real_sequence_within_nfe_bound() {
         out.model_nfe
     );
     assert!(out.tokens.iter().all(|&t| t != MASK));
+}
+
+/// Compact ABI on the REAL artifacts: the fwd_ord path (on-device mask
+/// construction + row gather) must numerically match the dense path
+/// (host-built masks + full logits + host-side gather) on every requested
+/// row. Skipped when the artifact set predates the compact family.
+#[test]
+fn compact_forward_matches_dense_on_real_artifacts() {
+    let Some(e) = engine() else { return };
+    if e.max_gather_rows() == usize::MAX {
+        eprintln!("skipping: no fwd_ord_b* artifacts (regenerate with `make artifacts`)");
+        return;
+    }
+    let v = e.vocab();
+    let m = 6;
+    let (ord, toks, mut rng) = random_case(&e, 8, m);
+    for known in [m, m + 3, ord.n()] {
+        let n_want = e.max_gather_rows().min(5);
+        let want: Vec<usize> = (0..n_want).map(|_| rng.below(ord.n())).collect();
+        let spec = ForwardSpec {
+            tokens: &toks,
+            ord: &ord,
+            known,
+            want: &want,
+        };
+        let compact = e.forward_ord(std::slice::from_ref(&spec)).unwrap();
+        let dense = forward_ord_dense(&e, std::slice::from_ref(&spec)).unwrap();
+        assert_eq!(compact[0].len(), n_want * v);
+        for (i, (a, b)) in compact[0].iter().zip(&dense[0]).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "known={known} row-elem {i}: compact {a} vs dense {b}"
+            );
+        }
+    }
 }
 
 #[test]
