@@ -46,12 +46,17 @@ models:
 bench:
 	cargo bench --bench perf_coordinator
 	cargo bench --bench perf_engine
+	cargo bench --bench perf_streaming
 
 # Tiny Table-1 run (drafter sweep included) plus the compact-vs-dense
-# forward-ABI ablation, both on the analytic mock engine: no artifacts or
-# checkpoint needed, finishes in seconds. CI smoke — the perf_engine run
-# writes BENCH_engine.json and exits non-zero if the compact path
-# regresses tokens/sec vs dense or the paths' outputs diverge.
+# forward-ABI ablation and the streaming-lifecycle TTFT/ITL sweep, all on
+# the analytic mock engine: no artifacts or checkpoint needed, finishes
+# in seconds. CI smoke — perf_engine writes BENCH_engine.json and exits
+# non-zero if the compact path regresses tokens/sec vs dense or the
+# paths' outputs diverge; perf_streaming writes BENCH_streaming.json and
+# exits non-zero if streaming TTFT stops beating the blocking path's
+# total latency.
 bench-smoke:
 	ASARM_BENCH_MOCK=1 ASARM_BENCH_SEQS=2 cargo bench --bench table1_assd
 	ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine
+	cargo bench --bench perf_streaming

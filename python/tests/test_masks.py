@@ -1,6 +1,11 @@
 """Mask-builder invariants (python mirror of rust/src/model/mask.rs)."""
 
 import numpy as np
+import pytest
+
+# Property sweeps need hypothesis; skip the whole module cleanly where it
+# is not installed (offline containers) instead of erroring at collection.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile import masks as M

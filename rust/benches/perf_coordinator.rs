@@ -33,6 +33,10 @@ fn run_load(
         SchedulerConfig {
             max_batch,
             idle_poll: std::time::Duration::from_millis(1),
+            // The whole closed-loop burst is submitted before anything is
+            // drained, so the bounded admission queue must hold all of it
+            // (no shedding in this bench).
+            queue_depth: n_requests.max(1),
             ..Default::default()
         },
         metrics.clone(),
@@ -40,7 +44,7 @@ fn run_load(
     // Submit all requests up front (closed-loop batch of open-loop work).
     let spec = draft.map(DraftSpec::from_options).unwrap_or_default();
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
+    let handles: Vec<_> = (0..n_requests)
         .map(|i| {
             handle
                 .submit(InfillRequest {
@@ -52,8 +56,8 @@ fn run_load(
                 .unwrap()
         })
         .collect();
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
+    for rh in handles {
+        rh.wait().unwrap();
     }
     (t0.elapsed().as_secs_f64(), metrics)
 }

@@ -1,0 +1,251 @@
+//! Perf bench (L3): the streaming request lifecycle — TTFT (time to
+//! first committed token) and inter-token latency for `submit` + event
+//! draining versus the blocking round-trip, swept across drafters and
+//! per-worker batch sizes. Machine-readable output in
+//! BENCH_streaming.json; exits non-zero if streaming ever fails to beat
+//! the blocking path's total latency to the first token — the whole
+//! point of the lifecycle subsystem — so CI gates on TTFT regressions.
+//!
+//! Hermetic by construction: the engine is the analytic mock wrapped in
+//! a fixed per-forward delay ([`SlowEngine`]), so the numbers isolate
+//! scheduler/lifecycle behavior from XLA compute and the TTFT < total
+//! inequality is deterministic. Run: `cargo bench --bench perf_streaming`
+//! (env: ASARM_BENCH_REQS requests per cell, default 8; ASARM_BENCH_OUT
+//! output path).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use asarm::coordinator::lifecycle::Event;
+use asarm::coordinator::scheduler::{spawn, SchedulerConfig, SchedulerHandle};
+use asarm::coordinator::{DraftSpec, InfillRequest, Metrics};
+use asarm::draft::{DraftKind, DraftOptions};
+use asarm::runtime::mock::{MockEngine, SlowEngine};
+use asarm::runtime::Engine;
+use asarm::util::bench::Table;
+use asarm::util::json::Json;
+use asarm::util::stats::percentile;
+use asarm::util::threadpool::ThreadPool;
+
+/// Per-forward model latency: large enough that iteration counts
+/// dominate thread-scheduling noise, small enough for a CI smoke run.
+const FORWARD_DELAY: Duration = Duration::from_millis(3);
+
+fn spawn_slow(max_batch: usize) -> SchedulerHandle {
+    spawn(
+        move || {
+            Ok(Box::new(SlowEngine::new(
+                MockEngine::new(7, 64, 258, 1.0),
+                FORWARD_DELAY,
+            )) as Box<dyn Engine>)
+        },
+        SchedulerConfig {
+            max_batch,
+            idle_poll: Duration::from_millis(1),
+            queue_depth: 4096,
+            ..Default::default()
+        },
+        Metrics::new(),
+    )
+}
+
+fn request(i: u64, draft: DraftOptions) -> InfillRequest {
+    InfillRequest {
+        // 28 blanked bytes in a 32-byte text: plenty of iterations for
+        // TTFT to be visibly earlier than completion
+        text: format!("{:02}{}{:02}", i % 100, "_".repeat(28), i % 100),
+        seed: i,
+        draft: DraftSpec::from_options(draft),
+        ..Default::default()
+    }
+}
+
+struct StreamStats {
+    ttft: Vec<f64>,
+    itl: Vec<f64>,
+    total: Vec<f64>,
+    tokens: u64,
+}
+
+/// Drive `n` streaming requests concurrently; per request, timestamp the
+/// first commit event (TTFT), per-token gaps (ITL), and the terminal.
+fn run_streaming(h: &SchedulerHandle, n: usize, conc: usize, draft: DraftOptions) -> StreamStats {
+    let results: Arc<Mutex<StreamStats>> = Arc::new(Mutex::new(StreamStats {
+        ttft: vec![],
+        itl: vec![],
+        total: vec![],
+        tokens: 0,
+    }));
+    let pool = ThreadPool::new(conc);
+    let jobs: Vec<_> = (0..n)
+        .map(|i| {
+            let h = h.clone();
+            let results = Arc::clone(&results);
+            move || {
+                let t0 = Instant::now();
+                let rh = h.submit(request(i as u64, draft)).expect("submit");
+                let mut first: Option<f64> = None;
+                let mut gaps: Vec<f64> = vec![];
+                let mut last = t0;
+                let mut tokens = 0u64;
+                loop {
+                    match rh.next_event().expect("stream died") {
+                        Event::Committed {
+                            tokens: chunk,
+                            positions: _,
+                        } => {
+                            let now = Instant::now();
+                            if first.is_none() {
+                                first = Some((now - t0).as_secs_f64());
+                            } else {
+                                gaps.push((now - last).as_secs_f64() / chunk.len() as f64);
+                            }
+                            tokens += chunk.len() as u64;
+                            last = now;
+                        }
+                        Event::Done(_) => break,
+                        Event::Error(e) => panic!("streaming request failed: {e}"),
+                    }
+                }
+                let mut r = results.lock().unwrap();
+                r.ttft.push(first.expect("no commit before done"));
+                r.itl.extend(gaps);
+                r.total.push(t0.elapsed().as_secs_f64());
+                r.tokens += tokens;
+            }
+        })
+        .collect();
+    pool.scoped_run(jobs);
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("stats still shared"))
+        .into_inner()
+        .unwrap()
+}
+
+/// Same workload over the blocking round-trip: one latency per request.
+fn run_blocking(h: &SchedulerHandle, n: usize, conc: usize, draft: DraftOptions) -> Vec<f64> {
+    let results: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(vec![]));
+    let pool = ThreadPool::new(conc);
+    let jobs: Vec<_> = (0..n)
+        .map(|i| {
+            let h = h.clone();
+            let results = Arc::clone(&results);
+            move || {
+                let t0 = Instant::now();
+                h.infill(request(i as u64, draft)).expect("infill");
+                results.lock().unwrap().push(t0.elapsed().as_secs_f64());
+            }
+        })
+        .collect();
+    pool.scoped_run(jobs);
+    Arc::try_unwrap(results).unwrap().into_inner().unwrap()
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::var("ASARM_BENCH_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let out_path =
+        std::env::var("ASARM_BENCH_OUT").unwrap_or_else(|_| "BENCH_streaming.json".to_string());
+    let conc = 8;
+
+    let drafters = [
+        ("self", DraftKind::SelfModel, false),
+        ("self adaptive", DraftKind::SelfModel, true),
+        ("bigram", DraftKind::Bigram, false),
+        ("lookup", DraftKind::Lookup, false),
+    ];
+    let mut table = Table::new(&[
+        "drafter",
+        "batch",
+        "TTFT p50 (ms)",
+        "ITL mean (ms/tok)",
+        "stream total (ms)",
+        "blocking total (ms)",
+        "TTFT speedup",
+    ]);
+    let mut results = vec![];
+    let mut regressed = false;
+    for (label, kind, adaptive) in drafters {
+        let draft = DraftOptions {
+            kind,
+            max_len: 5,
+            adaptive,
+        };
+        for &batch in &[1usize, 4] {
+            // Fresh pools per cell so queue depth and metrics are clean;
+            // identical seeds on both sides.
+            let h_stream = spawn_slow(batch);
+            let s = run_streaming(&h_stream, n_requests, conc, draft);
+            drop(h_stream);
+            let h_block = spawn_slow(batch);
+            let blocking = run_blocking(&h_block, n_requests, conc, draft);
+            drop(h_block);
+
+            let ttft_p50 = percentile(&s.ttft, 50.0);
+            let ttft_mean = mean(&s.ttft);
+            let itl_mean = mean(&s.itl);
+            let stream_total = mean(&s.total);
+            let blocking_total = mean(&blocking);
+            let speedup = blocking_total / ttft_mean.max(1e-12);
+            if ttft_mean >= blocking_total {
+                regressed = true;
+            }
+            table.row(&[
+                label.to_string(),
+                format!("{batch}"),
+                format!("{:.1}", ttft_p50 * 1e3),
+                format!("{:.2}", itl_mean * 1e3),
+                format!("{:.1}", stream_total * 1e3),
+                format!("{:.1}", blocking_total * 1e3),
+                format!("{speedup:.1}x"),
+            ]);
+            results.push(Json::obj(vec![
+                ("drafter", Json::str(label)),
+                ("adaptive", Json::Bool(adaptive)),
+                ("max_batch", Json::num(batch as f64)),
+                ("requests", Json::num(n_requests as f64)),
+                ("tokens", Json::num(s.tokens as f64)),
+                ("ttft_p50_s", Json::num(ttft_p50)),
+                ("ttft_mean_s", Json::num(ttft_mean)),
+                ("itl_mean_s", Json::num(itl_mean)),
+                ("stream_total_mean_s", Json::num(stream_total)),
+                ("blocking_total_mean_s", Json::num(blocking_total)),
+                ("ttft_speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    println!("\n=== perf_streaming: TTFT / ITL, streaming vs blocking (mock engine) ===");
+    table.print();
+    println!(
+        "(streaming surfaces each ASSD window's accepted prefix as it commits; blocking \
+         replies only at completion — TTFT is the new first-byte latency)"
+    );
+    let report = Json::obj(vec![
+        ("engine", Json::str("mock")),
+        (
+            "forward_delay_ms",
+            Json::num(FORWARD_DELAY.as_secs_f64() * 1e3),
+        ),
+        ("requests_per_cell", Json::num(n_requests as f64)),
+        ("ttft_regressed", Json::Bool(regressed)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(&out_path, report.to_string())?;
+    eprintln!("perf_streaming: wrote {out_path}");
+    if regressed {
+        bail!("TTFT regression: streaming first-token latency >= blocking total latency");
+    }
+    Ok(())
+}

@@ -1,28 +1,51 @@
 //! Minimal HTTP/1.1 server substrate over std::net (no tokio offline).
 //!
 //! Routes:
-//!   POST /v1/infill   — InfillRequest JSON -> InfillResponse JSON
-//!   GET  /metrics     — pool-aggregate metrics snapshot JSON
-//!   GET  /replicas    — per-replica stats JSON array (id, state, counters)
-//!   GET  /healthz     — liveness
+//!   POST /v1/infill        — InfillRequest JSON -> InfillResponse JSON
+//!                            (blocks until the decode finishes)
+//!   POST /infill/stream    — same request JSON, but the response is a
+//!                            chunked `text/event-stream` (SSE): one
+//!     (alias /v1/infill/stream)  `commit` event per accepted chunk with
+//!                            positions, tokens, and the incrementally
+//!                            decodable text, then a terminal
+//!                            `done`/`error` event
+//!   GET  /metrics          — pool-aggregate metrics snapshot JSON
+//!                            (incl. TTFT / inter-token latency /
+//!                            cancelled / shed)
+//!   GET  /replicas         — per-replica stats JSON array
+//!   GET  /healthz          — liveness
 //!
 //! Connections are handled on the thread pool; each request round-trips
 //! through the scheduler handle (the engines themselves stay on their
 //! worker threads). Connection: close semantics (one request per
 //! connection) keeps the parser simple; the bench client follows suit.
+//!
+//! Backpressure: when the scheduler's bounded admission queue is full,
+//! BOTH infill endpoints shed with `429 Too Many Requests` +
+//! `Retry-After` instead of queueing without bound. On the streaming
+//! path a failed socket write (client went away) flips the request's
+//! cancel token so the scheduler frees the batch slot within one
+//! iteration; between commits, keepalive comments are written on an idle
+//! timeout so a silent disconnect is still noticed.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
+use super::lifecycle::{Event, TextAssembler};
 use super::metrics::Metrics;
 use super::request::InfillRequest;
-use super::scheduler::SchedulerHandle;
+use super::scheduler::{SchedulerHandle, SubmitError};
+
+/// How long the SSE writer waits for the next event before emitting a
+/// keepalive comment (which doubles as disconnect detection).
+const SSE_KEEPALIVE: Duration = Duration::from_millis(500);
 
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
@@ -117,13 +140,67 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
 }
 
 fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> Result<()> {
-    let resp = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    write_response_headers(stream, status, reason, &[], body)
+}
+
+fn write_response_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> Result<()> {
+    let mut resp = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (k, v) in extra_headers {
+        resp.push_str(&format!("{k}: {v}\r\n"));
+    }
+    resp.push_str("\r\n");
+    resp.push_str(body);
     stream.write_all(resp.as_bytes())?;
     stream.flush()?;
     Ok(())
+}
+
+fn shed_response(stream: &mut TcpStream) -> Result<()> {
+    write_response_headers(
+        stream,
+        429,
+        "Too Many Requests",
+        &[("Retry-After", "1")],
+        r#"{"error":"admission queue full; retry later"}"#,
+    )
+}
+
+/// The scheduler pool is gone (every replica failed or shut down): a
+/// server-side condition, so 503 — not a 400 that would stop clients
+/// and alerting from treating it as retryable/page-worthy.
+fn unavailable_response(stream: &mut TcpStream) -> Result<()> {
+    write_response_headers(
+        stream,
+        503,
+        "Service Unavailable",
+        &[("Retry-After", "5")],
+        r#"{"error":"scheduler shut down"}"#,
+    )
+}
+
+/// One HTTP chunk (`Transfer-Encoding: chunked`), flushed immediately so
+/// SSE events reach the client as they happen.
+fn write_chunk(stream: &mut TcpStream, payload: &str) -> Result<()> {
+    stream.write_all(format!("{:x}\r\n", payload.len()).as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One SSE frame as one HTTP chunk. `data` must be single-line (the JSON
+/// serializer never emits raw newlines).
+fn write_sse_event(stream: &mut TcpStream, event: &str, data: &str) -> Result<()> {
+    write_chunk(stream, &format!("event: {event}\ndata: {data}\n\n"))
 }
 
 fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics) -> Result<()> {
@@ -143,24 +220,218 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
             write_response(&mut stream, 200, "OK", &handle.replicas_json().to_string())
         }
         ("POST", "/v1/infill") => {
-            let run = || -> Result<String> {
-                let text = std::str::from_utf8(&req.body).context("body not utf-8")?;
-                let j = Json::parse(text).map_err(|e| anyhow!("bad json: {e}"))?;
-                let infill = InfillRequest::from_json(&j)?;
-                let resp = handle.infill(infill)?;
-                Ok(resp.to_json().to_string())
+            let infill = match parse_infill(&req.body) {
+                Ok(r) => r,
+                Err(e) => return bad_request(&mut stream, &e),
             };
-            match run() {
-                Ok(body) => write_response(&mut stream, 200, "OK", &body),
-                Err(e) => {
-                    let body =
-                        Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
-                    write_response(&mut stream, 400, "Bad Request", &body)
-                }
+            match handle.submit(infill) {
+                Err(SubmitError::QueueFull(_)) => shed_response(&mut stream),
+                Err(SubmitError::ShutDown) => unavailable_response(&mut stream),
+                Ok(rh) => match wait_watching_socket(rh, &stream) {
+                    Some(Ok(resp)) => {
+                        write_response(&mut stream, 200, "OK", &resp.to_json().to_string())
+                    }
+                    Some(Err(e)) => bad_request(&mut stream, &e),
+                    // client vanished mid-request: nothing to answer
+                    None => Ok(()),
+                },
             }
+        }
+        ("POST", "/infill/stream") | ("POST", "/v1/infill/stream") => {
+            handle_stream(stream, handle, &req.body)
         }
         _ => write_response(&mut stream, 404, "Not Found", r#"{"error":"not found"}"#),
     }
+}
+
+/// Has the peer closed its end? A non-blocking `peek`: EOF (`Ok(0)`) or
+/// a hard error means gone; `WouldBlock` means an open, idle socket.
+/// Pipelined bytes (`Ok(_)`) count as alive — Connection: close clients
+/// never send them, and we must not consume anything here.
+///
+/// POLICY: a half-close (client `shutdown(WR)` after the request while
+/// still reading) is indistinguishable from a full close on the read
+/// side, so it too counts as gone and cancels the decode. That is the
+/// usual serving-stack interpretation of client EOF mid-request; the
+/// deliberate alternative — ignoring EOF — would resurrect the
+/// dead-client-holds-a-slot problem this subsystem exists to fix.
+/// Half-closing clients should keep the socket fully open (standard
+/// HTTP/1.1 practice) or use the SSE endpoint.
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// Blocking-path wait that still notices a dead client: between events,
+/// probe the socket; on disconnect flip the cancel token (freeing the
+/// batch slot within one iteration — the same contract as the SSE path)
+/// and return None since there is nobody left to answer.
+fn wait_watching_socket(
+    rh: super::lifecycle::RequestHandle,
+    stream: &TcpStream,
+) -> Option<Result<crate::coordinator::InfillResponse>> {
+    use crate::util::mpmc::RecvTimeoutError;
+    loop {
+        match rh.next_event_timeout(SSE_KEEPALIVE) {
+            // Probe on every commit too: while a decode is active the
+            // channel never idles long enough for the Timeout arm, and
+            // commits arrive at iteration cadence so the non-blocking
+            // peek stays cheap.
+            Ok(Event::Committed { .. }) | Err(RecvTimeoutError::Timeout) => {
+                if client_gone(stream) {
+                    rh.cancel();
+                    return None;
+                }
+                if rh.deadline_overdue() {
+                    rh.cancel();
+                    return Some(Err(anyhow!("deadline exceeded awaiting scheduler")));
+                }
+            }
+            Ok(Event::Done(resp)) => return Some(Ok(resp)),
+            Ok(Event::Error(e)) => return Some(Err(anyhow!(e))),
+            Err(RecvTimeoutError::Disconnected) => {
+                return Some(Err(anyhow!("scheduler dropped request")))
+            }
+        }
+    }
+}
+
+fn parse_infill(body: &[u8]) -> Result<InfillRequest> {
+    let text = std::str::from_utf8(body).context("body not utf-8")?;
+    let j = Json::parse(text).map_err(|e| anyhow!("bad json: {e}"))?;
+    InfillRequest::from_json(&j)
+}
+
+fn bad_request(stream: &mut TcpStream, e: &anyhow::Error) -> Result<()> {
+    let body = Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+    write_response(stream, 400, "Bad Request", &body)
+}
+
+/// The SSE surface: serve one request's event channel as a chunked
+/// `text/event-stream`. Any failed write (the client hung up) flips the
+/// cancel token so the scheduler frees the slot within one iteration.
+fn handle_stream(mut stream: TcpStream, handle: SchedulerHandle, body: &[u8]) -> Result<()> {
+    let infill = match parse_infill(body) {
+        Ok(r) => r,
+        Err(e) => return bad_request(&mut stream, &e),
+    };
+    // The assembler mirrors the blocking path's text reconstruction
+    // incrementally (complete UTF-8 only; lossy like the tokenizer).
+    let mut assembler = TextAssembler::new(&infill.text, infill.mask_char);
+    let rh = match handle.submit(infill) {
+        Err(SubmitError::QueueFull(_)) => return shed_response(&mut stream),
+        Err(SubmitError::ShutDown) => return unavailable_response(&mut stream),
+        Ok(rh) => rh,
+    };
+    let cancel = rh.cancel_token();
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(header.as_bytes()).is_err() {
+        cancel.cancel();
+        return Ok(());
+    }
+    loop {
+        use crate::util::mpmc::RecvTimeoutError;
+        let event = match rh.next_event_timeout(SSE_KEEPALIVE) {
+            Ok(ev) => ev,
+            Err(RecvTimeoutError::Timeout) => {
+                // Client-side deadline backstop: a request that expired
+                // without any worker observing it (deep in a saturated
+                // queue) must not stream keepalives forever.
+                if rh.deadline_overdue() {
+                    rh.cancel();
+                    let _ = write_sse_event(
+                        &mut stream,
+                        "error",
+                        &Json::obj(vec![(
+                            "error",
+                            Json::str("deadline exceeded awaiting scheduler"),
+                        )])
+                        .to_string(),
+                    );
+                    break;
+                }
+                // Idle: keepalive comment doubles as disconnect probe.
+                if write_chunk(&mut stream, ": keepalive\n\n").is_err() {
+                    cancel.cancel();
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let _ = write_sse_event(
+                    &mut stream,
+                    "error",
+                    &Json::obj(vec![("error", Json::str("scheduler dropped request"))])
+                        .to_string(),
+                );
+                break;
+            }
+        };
+        let ok = match event {
+            Event::Committed { positions, tokens } => {
+                let delta = assembler.apply(&positions, &tokens);
+                let data = Json::obj(vec![
+                    (
+                        "positions",
+                        Json::Arr(positions.iter().map(|&p| Json::num(p as f64)).collect()),
+                    ),
+                    (
+                        "tokens",
+                        Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                    ),
+                    ("text_delta", Json::str(delta)),
+                ])
+                .to_string();
+                write_sse_event(&mut stream, "commit", &data).is_ok()
+            }
+            Event::Done(resp) => {
+                // Flush any bytes held back for UTF-8 completeness so the
+                // concatenated deltas equal the final text exactly.
+                let tail = assembler.finish();
+                if !tail.is_empty() {
+                    let data = Json::obj(vec![
+                        ("positions", Json::Arr(vec![])),
+                        ("tokens", Json::Arr(vec![])),
+                        ("text_delta", Json::str(tail)),
+                    ])
+                    .to_string();
+                    if write_sse_event(&mut stream, "commit", &data).is_err() {
+                        cancel.cancel();
+                        return Ok(());
+                    }
+                }
+                let _ = write_sse_event(&mut stream, "done", &resp.to_json().to_string());
+                break;
+            }
+            Event::Error(e) => {
+                let _ = write_sse_event(
+                    &mut stream,
+                    "error",
+                    &Json::obj(vec![("error", Json::str(e))]).to_string(),
+                );
+                break;
+            }
+        };
+        if !ok {
+            // Client went away mid-stream: free the batch slot.
+            cancel.cancel();
+            return Ok(());
+        }
+    }
+    // Terminal chunk of the chunked encoding.
+    let _ = stream.write_all(b"0\r\n\r\n");
+    let _ = stream.flush();
+    Ok(())
 }
 
 /// A tiny blocking HTTP client (bench load generator / tests).
@@ -179,6 +450,120 @@ pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> Result<(u16, String)
     let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
     stream.write_all(req.as_bytes())?;
     read_http_response(stream)
+}
+
+/// One parsed server-sent event.
+#[derive(Clone, Debug)]
+pub struct SseEvent {
+    pub event: String,
+    pub data: String,
+}
+
+/// A streaming response, fully drained: status + headers, and either the
+/// parsed SSE events (chunked streams) or the plain body (errors/sheds).
+#[derive(Debug, Default)]
+pub struct StreamResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+    pub events: Vec<SseEvent>,
+}
+
+impl StreamResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// POST and drain a streaming endpoint over a real socket (tests and the
+/// serve_e2e example). Chunked bodies are decoded and parsed into SSE
+/// events; non-chunked responses (400/429) land in `body`.
+pub fn http_post_stream(
+    addr: &std::net::SocketAddr,
+    path: &str,
+    body: &str,
+) -> Result<StreamResponse> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nAccept: text/event-stream\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line: {status_line}"))?;
+    let mut resp = StreamResponse {
+        status,
+        ..Default::default()
+    };
+    let mut content_length = 0usize;
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().unwrap_or(0);
+            }
+            if k.eq_ignore_ascii_case("transfer-encoding") && v.eq_ignore_ascii_case("chunked") {
+                chunked = true;
+            }
+            resp.headers.push((k.to_string(), v.to_string()));
+        }
+    }
+    if !chunked {
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
+        resp.body = String::from_utf8_lossy(&body).into_owned();
+        return Ok(resp);
+    }
+    // Decode the chunked stream, then split the SSE frames.
+    let mut raw = Vec::new();
+    loop {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line)?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .map_err(|_| anyhow!("bad chunk size: {size_line:?}"))?;
+        if size == 0 {
+            let mut crlf = String::new();
+            let _ = reader.read_line(&mut crlf);
+            break;
+        }
+        let mut chunk = vec![0u8; size + 2]; // payload + trailing CRLF
+        reader.read_exact(&mut chunk)?;
+        chunk.truncate(size);
+        raw.extend_from_slice(&chunk);
+    }
+    let text = String::from_utf8_lossy(&raw);
+    for frame in text.split("\n\n") {
+        let mut event = String::new();
+        let mut data = String::new();
+        for line in frame.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = v.to_string();
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = v.to_string();
+            }
+            // comment lines (": keepalive") are dropped
+        }
+        if !event.is_empty() {
+            resp.events.push(SseEvent { event, data });
+        }
+    }
+    Ok(resp)
 }
 
 fn read_http_response(stream: TcpStream) -> Result<(u16, String)> {

@@ -1,0 +1,597 @@
+//! Request lifecycle: the event channel, cancellation, and deadlines
+//! around one admitted request (docs/ARCHITECTURE.md §Request lifecycle &
+//! streaming).
+//!
+//! Every request submitted to the scheduler gets a paired
+//! ([`LifecycleEmitter`], [`RequestHandle`]):
+//!
+//! * the EMITTER travels with the job into the scheduler worker and
+//!   streams [`Event`]s — `Committed` chunks the moment the decode
+//!   machine accepts tokens (for ASSD that is exactly the accepted prefix
+//!   of each speculation window, so chunk sizes visualize Theorem 2 in
+//!   action), then one terminal `Done`/`Error`;
+//! * the HANDLE stays with the submitter: it reads events (SSE surface,
+//!   progress UIs) or just [`RequestHandle::wait`]s for the terminal
+//!   event (the blocking `POST /v1/infill` path), and can cancel the
+//!   request at any time.
+//!
+//! The event channel is BOUNDED ([`crate::util::mpmc::bounded`]); the
+//! backpressure policy is cancel-on-lag: a client that cannot drain its
+//! events as fast as the worker commits tokens gets its request
+//! cancelled rather than stalling the worker's whole batch (the emitter
+//! never blocks). Dropping the handle closes the channel, which the
+//! worker detects at its per-iteration retire check and treats the same
+//! way — an abandoned request stops consuming a batch slot within one
+//! iteration.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::mpmc;
+
+use super::request::InfillResponse;
+
+/// Cooperative cancellation flag shared by everyone holding a clone.
+/// Flipped by the client ([`RequestHandle::cancel`]), by the HTTP layer
+/// on client disconnect, and by the emitter itself on a lagging event
+/// channel; observed by the scheduler worker between batch iterations.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// One request's streamed lifecycle events, in emission order: any number
+/// of `Committed` chunks followed by exactly one terminal `Done`/`Error`.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Tokens the decode machine accepted this iteration. `positions[i]`
+    /// is the sequence position of `tokens[i]`; infilling commits out of
+    /// order, so positions are not necessarily contiguous or ascending
+    /// across events (use [`TextAssembler`] to rebuild the text view).
+    Committed {
+        positions: Vec<usize>,
+        tokens: Vec<u32>,
+    },
+    /// Terminal: the full response the blocking path would have returned.
+    Done(InfillResponse),
+    /// Terminal: admission/engine failure, cancellation, or deadline
+    /// expiry (the message carries the partial progress).
+    Error(String),
+}
+
+/// Why the scheduler retired a slot before completion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Abort {
+    /// Cancel token flipped (client cancel, disconnect, or lagging event
+    /// channel).
+    Cancelled,
+    /// The request's deadline passed.
+    DeadlineExpired,
+    /// Every [`RequestHandle`] clone was dropped — nobody can read the
+    /// outcome, so decoding further is pure waste.
+    Abandoned,
+}
+
+/// Build the paired emitter/handle for one request. `timeout` starts now
+/// (queue wait counts toward the deadline); `event_capacity` bounds the
+/// event channel (cancel-on-lag backpressure).
+pub fn channel(
+    timeout: Option<Duration>,
+    event_capacity: usize,
+) -> (LifecycleEmitter, RequestHandle) {
+    let commit_capacity = event_capacity.max(1);
+    // One extra physical slot, never used by commits: the terminal
+    // Done/Error event must always have room, so a decode that filled
+    // the commit budget still reports its outcome instead of surfacing
+    // as a dropped request.
+    let (tx, rx) = mpmc::bounded(commit_capacity + 1);
+    let cancel = CancelToken::new();
+    let now = Instant::now();
+    let deadline = timeout.map(|t| now + t);
+    (
+        LifecycleEmitter {
+            events: tx,
+            cancel: cancel.clone(),
+            deadline,
+            submitted: now,
+            commit_capacity,
+        },
+        RequestHandle {
+            events: rx,
+            cancel,
+            deadline,
+        },
+    )
+}
+
+/// How far past its deadline a CLIENT waits before giving up on its own.
+/// The worker's per-iteration check is the normal path (it knows the
+/// partial progress); this grace keeps the client-side backstop from
+/// racing it, while still bounding the wait when no worker ever observes
+/// the request (e.g. it expires deep in a saturated admission queue).
+const CLIENT_DEADLINE_GRACE: Duration = Duration::from_millis(250);
+
+/// The scheduler-side half: carried in the job, then in the batch slot.
+pub struct LifecycleEmitter {
+    events: mpmc::Sender<Event>,
+    cancel: CancelToken,
+    deadline: Option<Instant>,
+    /// When the request entered the system (queue wait included): the
+    /// zero point for TTFT and the response's latency_s.
+    submitted: Instant,
+    /// Commit budget — one less than the physical channel capacity (the
+    /// reserved terminal slot).
+    commit_capacity: usize,
+}
+
+impl LifecycleEmitter {
+    /// The reason this request should be retired early, if any. Checked
+    /// by the worker between iterations (and at admission, so a request
+    /// that died in the queue never occupies a slot). The deadline is
+    /// checked FIRST: the client-side backstop flips the cancel token
+    /// when it gives up on an expired request, and that must still be
+    /// booked as a deadline expiry, not a cancellation.
+    pub fn abort_reason(&self) -> Option<Abort> {
+        if self.deadline.is_some_and(|d| Instant::now() >= d) {
+            return Some(Abort::DeadlineExpired);
+        }
+        if self.cancel.is_cancelled() {
+            return Some(Abort::Cancelled);
+        }
+        if self.events.is_closed() {
+            return Some(Abort::Abandoned);
+        }
+        None
+    }
+
+    /// True when the event stream can no longer faithfully reach the
+    /// client: cancelled (possibly cancel-on-lag, i.e. a chunk was
+    /// already dropped) or every handle gone. Unlike
+    /// [`LifecycleEmitter::abort_reason`] this ignores the deadline —
+    /// the retire path uses it so `Done` is never sent over a broken
+    /// stream even when a deadline happens to have expired too.
+    pub fn stream_broken(&self) -> Option<Abort> {
+        if self.cancel.is_cancelled() {
+            return Some(Abort::Cancelled);
+        }
+        if self.events.is_closed() {
+            return Some(Abort::Abandoned);
+        }
+        None
+    }
+
+    /// Stream a committed chunk. Never blocks: a channel at the commit
+    /// budget means the client is not keeping up, a closed one that it
+    /// is gone — either way the cancel token flips and `false` comes
+    /// back so the worker retires the slot at its next check. The
+    /// reserved terminal slot is never consumed here (we are the sole
+    /// sender, so the length check cannot race upward).
+    pub fn commit(&self, positions: Vec<usize>, tokens: Vec<u32>) -> bool {
+        debug_assert_eq!(positions.len(), tokens.len());
+        if self.events.len() >= self.commit_capacity {
+            self.cancel.cancel();
+            return false;
+        }
+        match self.events.try_send(Event::Committed { positions, tokens }) {
+            Ok(()) => true,
+            Err(_) => {
+                self.cancel.cancel();
+                false
+            }
+        }
+    }
+
+    /// Terminal event. Consumes the emitter so nothing can be streamed
+    /// after `Done`/`Error`. The reserved channel slot guarantees room,
+    /// so this only fails when every handle is gone (a vanished client
+    /// cannot read it anyway).
+    pub fn finish(self, result: Result<InfillResponse>) {
+        let event = match result {
+            Ok(resp) => Event::Done(resp),
+            Err(e) => Event::Error(format!("{e:#}")),
+        };
+        let _ = self.events.try_send(event);
+    }
+
+    /// When the request was submitted — the zero point for TTFT and
+    /// response latency, so queue wait counts toward both (matching the
+    /// deadline clock).
+    pub fn submitted_at(&self) -> Instant {
+        self.submitted
+    }
+
+    /// The shared cancel token (HTTP disconnect detection clones this).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+}
+
+/// The client-side half: read events, cancel, or block for the outcome.
+pub struct RequestHandle {
+    events: mpmc::Receiver<Event>,
+    cancel: CancelToken,
+    deadline: Option<Instant>,
+}
+
+impl RequestHandle {
+    /// Flip the cancel token; the worker retires the slot within one
+    /// batch iteration and replies with a terminal `Error`.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// The shared cancel token.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Next event, blocking. `None` once the channel is closed with no
+    /// terminal event delivered (scheduler died mid-request).
+    pub fn next_event(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Next event, blocking up to `timeout` (SSE keepalive cadence).
+    pub fn next_event_timeout(&self, timeout: Duration) -> Result<Event, mpmc::RecvTimeoutError> {
+        self.events.recv_timeout(timeout)
+    }
+
+    /// True once the request's deadline (plus the client-side grace) is
+    /// behind us with no terminal event delivered. The worker normally
+    /// reports expiry first, with partial progress; this is the backstop
+    /// for requests no worker ever observes (expired deep in a saturated
+    /// queue) so a deadlined client is never parked indefinitely.
+    pub fn deadline_overdue(&self) -> bool {
+        self.deadline
+            .is_some_and(|d| Instant::now() >= d + CLIENT_DEADLINE_GRACE)
+    }
+
+    /// Drain to the terminal event: the blocking round-trip. `Committed`
+    /// chunks are discarded — callers that want them read events
+    /// themselves. Returns a deadline error on its own if the deadline
+    /// passes (plus grace) without the scheduler answering.
+    pub fn wait(self) -> Result<InfillResponse> {
+        loop {
+            let event = match self.deadline {
+                None => self.events.recv(),
+                Some(d) => {
+                    let limit = d + CLIENT_DEADLINE_GRACE;
+                    let remaining = limit.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        // Overdue: deliver anything already queued (the
+                        // worker may have answered at the wire), else
+                        // flip the token — the queued job is reaped the
+                        // moment a worker sees it — and stop waiting.
+                        match self.events.try_recv() {
+                            Ok(ev) => Ok(ev),
+                            Err(mpmc::TryRecvError::Empty) => {
+                                self.cancel.cancel();
+                                return Err(anyhow!("deadline exceeded awaiting scheduler"));
+                            }
+                            Err(mpmc::TryRecvError::Disconnected) => {
+                                Err(mpmc::RecvTimeoutError::Disconnected)
+                            }
+                        }
+                    } else {
+                        match self.events.recv_timeout(remaining) {
+                            Err(mpmc::RecvTimeoutError::Timeout) => continue,
+                            other => other,
+                        }
+                    }
+                }
+            };
+            match event {
+                Ok(Event::Committed { .. }) => continue,
+                Ok(Event::Done(resp)) => return Ok(resp),
+                Ok(Event::Error(e)) => return Err(anyhow!(e)),
+                Err(_) => return Err(anyhow!("scheduler dropped request")),
+            }
+        }
+    }
+}
+
+/// Incremental text view over a stream of `Committed` events, for the SSE
+/// surface: byte-level tokens land at arbitrary positions (any-subset
+/// infilling), and this tracks the growing fully-committed PREFIX,
+/// flushing only complete UTF-8 (a multi-byte character split across
+/// commits, or across a mask boundary, is held back until its last byte
+/// lands). Invalid sequences are replaced exactly like
+/// `String::from_utf8_lossy` so the concatenated flushes plus
+/// [`TextAssembler::finish`] reproduce the blocking path's response text
+/// byte for byte.
+pub struct TextAssembler {
+    bytes: Vec<u8>,
+    pending: Vec<bool>,
+    /// Bytes already flushed (always a UTF-8 boundary in the lossy sense).
+    emitted: usize,
+}
+
+impl TextAssembler {
+    /// Start from the request text: `mask_char` positions are pending,
+    /// everything else is committed from the outset.
+    pub fn new(text: &str, mask_char: char) -> TextAssembler {
+        let mut mask_buf = [0u8; 4];
+        let mask = mask_char.encode_utf8(&mut mask_buf).as_bytes();
+        let bytes = text.as_bytes().to_vec();
+        let pending = if mask.len() == 1 {
+            bytes.iter().map(|&b| b == mask[0]).collect()
+        } else {
+            // multi-byte mask_char is rejected at admission; nothing pends
+            vec![false; bytes.len()]
+        };
+        TextAssembler {
+            bytes,
+            pending,
+            emitted: 0,
+        }
+    }
+
+    /// Apply one committed chunk; returns the newly-decodable text (may
+    /// be empty while a multi-byte character is still incomplete).
+    /// Positions outside the text (PAD tail) are ignored.
+    pub fn apply(&mut self, positions: &[usize], tokens: &[u32]) -> String {
+        for (&pos, &tok) in positions.iter().zip(tokens) {
+            if pos < self.bytes.len() {
+                // committed tokens are always plain bytes (MASK/PAD are
+                // banned from sampling); map specials defensively the way
+                // the tokenizer's decode renders MASK
+                self.bytes[pos] = if tok < 256 { tok as u8 } else { b'_' };
+                self.pending[pos] = false;
+            }
+        }
+        self.flush(false)
+    }
+
+    /// Flush whatever is still held back (lossily), closing the stream.
+    /// Empty unless the text ends in an invalid or incomplete sequence.
+    pub fn finish(&mut self) -> String {
+        self.flush(true)
+    }
+
+    /// The committed prefix length in bytes (progress indicator).
+    pub fn frontier(&self) -> usize {
+        self.pending
+            .iter()
+            .position(|&p| p)
+            .unwrap_or(self.bytes.len())
+    }
+
+    fn flush(&mut self, at_end: bool) -> String {
+        let frontier = self.frontier();
+        let mut out = String::new();
+        while self.emitted < frontier {
+            let chunk = &self.bytes[self.emitted..frontier];
+            match std::str::from_utf8(chunk) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.emitted = frontier;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&chunk[..valid]).unwrap());
+                    self.emitted += valid;
+                    match e.error_len() {
+                        // invalid sequence: one replacement char, skip it
+                        Some(bad) => {
+                            out.push('\u{FFFD}');
+                            self.emitted += bad;
+                        }
+                        // incomplete tail: wait for more bytes — unless
+                        // the frontier can never advance past it
+                        None => {
+                            if at_end || frontier == self.bytes.len() {
+                                out.push('\u{FFFD}');
+                                self.emitted = frontier;
+                            }
+                            return out;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_is_shared() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn wait_collects_done_through_commits() {
+        let (emitter, handle) = channel(None, 8);
+        assert!(emitter.commit(vec![2, 3], vec![97, 98]));
+        emitter.finish(Ok(InfillResponse {
+            text: "done".into(),
+            model_nfe: 1,
+            aux_nfe: 0,
+            iterations: 1,
+            proposed: 0,
+            accepted: 0,
+            acceptance_rate: 0.0,
+            draft_kind: String::new(),
+            draft_len: 0,
+            latency_s: 0.0,
+            n_generated: 2,
+        }));
+        let resp = handle.wait().unwrap();
+        assert_eq!(resp.text, "done");
+    }
+
+    #[test]
+    fn wait_surfaces_error_event() {
+        let (emitter, handle) = channel(None, 8);
+        emitter.finish(Err(anyhow!("deadline exceeded after 3/8 tokens")));
+        let err = handle.wait().unwrap_err().to_string();
+        assert!(err.contains("deadline"), "{err}");
+    }
+
+    #[test]
+    fn dropped_handle_reports_abandoned() {
+        let (emitter, handle) = channel(None, 8);
+        assert!(emitter.abort_reason().is_none());
+        drop(handle);
+        assert_eq!(emitter.abort_reason(), Some(Abort::Abandoned));
+        assert!(!emitter.commit(vec![0], vec![97]));
+    }
+
+    #[test]
+    fn deadline_wins_over_cancel_for_attribution() {
+        // The client-side backstop cancels BECAUSE the deadline passed,
+        // so when both flags are up the expiry is the true cause.
+        let (emitter, handle) = channel(Some(Duration::ZERO), 8);
+        handle.cancel();
+        std::thread::sleep(Duration::from_millis(1));
+        assert_eq!(emitter.abort_reason(), Some(Abort::DeadlineExpired));
+        // a plain cancel (no deadline configured) stays a cancel
+        let (emitter, handle) = channel(None, 8);
+        handle.cancel();
+        assert_eq!(emitter.abort_reason(), Some(Abort::Cancelled));
+    }
+
+    #[test]
+    fn expired_deadline_reports_deadline() {
+        let (emitter, _handle) = channel(Some(Duration::ZERO), 8);
+        std::thread::sleep(Duration::from_millis(1));
+        assert_eq!(emitter.abort_reason(), Some(Abort::DeadlineExpired));
+    }
+
+    #[test]
+    fn lagging_event_channel_flips_cancel() {
+        let (emitter, handle) = channel(None, 1);
+        assert!(emitter.commit(vec![0], vec![97]));
+        // capacity 1, nothing drained: the next commit must shed the
+        // client rather than block the worker
+        assert!(!emitter.commit(vec![1], vec![98]));
+        assert!(handle.cancel_token().is_cancelled());
+    }
+
+    /// The terminal event has a reserved slot: a decode whose commits
+    /// exactly fill the channel still reports Done instead of surfacing
+    /// as a dropped request to a client that drains late.
+    #[test]
+    fn terminal_event_survives_full_commit_buffer() {
+        let (emitter, handle) = channel(None, 2);
+        assert!(emitter.commit(vec![0], vec![97]));
+        assert!(emitter.commit(vec![1], vec![98]));
+        emitter.finish(Ok(InfillResponse {
+            text: "full".into(),
+            model_nfe: 2,
+            aux_nfe: 0,
+            iterations: 2,
+            proposed: 0,
+            accepted: 0,
+            acceptance_rate: 0.0,
+            draft_kind: String::new(),
+            draft_len: 0,
+            latency_s: 0.0,
+            n_generated: 2,
+        }));
+        // nothing was drained until now — the commits AND the terminal
+        // must all come through
+        assert_eq!(handle.wait().unwrap().text, "full");
+    }
+
+    // --- TextAssembler ---------------------------------------------------
+
+    #[test]
+    fn assembler_streams_ascii_prefix_in_commit_order() {
+        let mut a = TextAssembler::new("ab__cd", '_');
+        assert_eq!(a.frontier(), 2);
+        assert_eq!(a.apply(&[2], &[b'X' as u32]), "abX");
+        assert_eq!(a.apply(&[3], &[b'Y' as u32]), "Ycd");
+        assert_eq!(a.finish(), "");
+    }
+
+    #[test]
+    fn assembler_holds_back_out_of_order_commits() {
+        let mut a = TextAssembler::new("__cd", '_');
+        // position 1 commits before position 0: nothing decodable yet
+        assert_eq!(a.apply(&[1], &[b'B' as u32]), "");
+        assert_eq!(a.apply(&[0], &[b'A' as u32]), "ABcd");
+    }
+
+    #[test]
+    fn assembler_flushes_only_complete_utf8() {
+        // é = 0xC3 0xA9: commit the lead byte alone, then the tail
+        let mut a = TextAssembler::new("x__y", '_');
+        assert_eq!(a.apply(&[1], &[0xC3]), "x");
+        assert_eq!(a.apply(&[2], &[0xA9]), "éy");
+    }
+
+    #[test]
+    fn assembler_replaces_invalid_sequences_like_lossy() {
+        // a lone continuation byte is invalid wherever it lands
+        let mut a = TextAssembler::new("a_b", '_');
+        let s = a.apply(&[1], &[0xA9]);
+        assert_eq!(s, "a\u{FFFD}b");
+        assert_eq!(
+            s,
+            String::from_utf8_lossy(&[b'a', 0xA9, b'b']).into_owned()
+        );
+    }
+
+    #[test]
+    fn assembler_finish_flushes_incomplete_tail() {
+        let mut a = TextAssembler::new("a_", '_');
+        // trailing lead byte with no continuation: held, then lossy at end
+        assert_eq!(a.apply(&[1], &[0xC3]), "a\u{FFFD}");
+        assert_eq!(a.finish(), "");
+        assert_eq!(
+            "a\u{FFFD}",
+            String::from_utf8_lossy(&[b'a', 0xC3]).into_owned()
+        );
+    }
+
+    #[test]
+    fn assembler_concatenation_matches_lossy_decode_of_final_bytes() {
+        // arbitrary byte soup, committed in a scrambled order
+        let text = "ab______cd";
+        let fills: &[(usize, u8)] = &[
+            (4, 0xE2),
+            (2, b'h'),
+            (7, b'!'),
+            (3, 0xC3),
+            (6, 0x82),
+            (5, 0x82),
+        ];
+        let mut final_bytes = text.as_bytes().to_vec();
+        for &(p, b) in fills {
+            final_bytes[p] = b;
+        }
+        let expect = String::from_utf8_lossy(&final_bytes).into_owned();
+        let mut a = TextAssembler::new(text, '_');
+        let mut got = String::new();
+        for &(p, b) in fills {
+            got.push_str(&a.apply(&[p], &[b as u32]));
+        }
+        got.push_str(&a.finish());
+        assert_eq!(got, expect);
+    }
+}

@@ -36,6 +36,20 @@ struct Inner {
     latency: Histogram,
     batch_occupancy_sum: u64,
     batch_iterations: u64,
+    // --- streaming lifecycle (docs/ARCHITECTURE.md §Request lifecycle &
+    //     streaming) ---
+    /// Time-to-first-token: submit -> first committed chunk.
+    ttft: Histogram,
+    /// Inter-token latency: gap between commit events, normalized per
+    /// token committed in the later chunk.
+    itl: Histogram,
+    /// Requests retired early by a client cancel, disconnect, lagging
+    /// event channel, or dropped handle.
+    cancelled: u64,
+    /// Requests retired early because their deadline passed.
+    deadline_expired: u64,
+    /// Requests refused at admission because the queue was full (429).
+    shed: u64,
 }
 
 impl Default for Metrics {
@@ -59,6 +73,11 @@ impl Metrics {
                 latency: Histogram::latency(),
                 batch_occupancy_sum: 0,
                 batch_iterations: 0,
+                ttft: Histogram::latency(),
+                itl: Histogram::latency(),
+                cancelled: 0,
+                deadline_expired: 0,
+                shed: 0,
             })),
         }
     }
@@ -92,8 +111,42 @@ impl Metrics {
         m.batch_iterations += 1;
     }
 
+    /// Submit -> first committed chunk, once per streamed request.
+    pub fn record_ttft(&self, seconds: f64) {
+        self.inner.lock().unwrap().ttft.record(seconds);
+    }
+
+    /// Per-token inter-token latency, once per post-first commit chunk.
+    pub fn record_itl(&self, seconds_per_token: f64) {
+        self.inner.lock().unwrap().itl.record(seconds_per_token);
+    }
+
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    pub fn record_deadline_expired(&self) {
+        self.inner.lock().unwrap().deadline_expired += 1;
+    }
+
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.inner.lock().unwrap().cancelled
+    }
+
+    pub fn deadline_expired(&self) -> u64 {
+        self.inner.lock().unwrap().deadline_expired
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.inner.lock().unwrap().shed
     }
 
     pub fn snapshot_json(&self) -> Json {
@@ -129,6 +182,15 @@ impl Metrics {
             ("latency_mean_s", Json::num(m.latency.mean())),
             ("mean_batch_occupancy", Json::num(mean_occ)),
             ("batch_iterations", Json::num(m.batch_iterations as f64)),
+            ("ttft_p50_s", Json::num(m.ttft.quantile(0.5))),
+            ("ttft_p95_s", Json::num(m.ttft.quantile(0.95))),
+            ("ttft_mean_s", Json::num(m.ttft.mean())),
+            ("itl_p50_s", Json::num(m.itl.quantile(0.5))),
+            ("itl_p95_s", Json::num(m.itl.quantile(0.95))),
+            ("itl_mean_s", Json::num(m.itl.mean())),
+            ("cancelled", Json::num(m.cancelled as f64)),
+            ("deadline_expired", Json::num(m.deadline_expired as f64)),
+            ("shed", Json::num(m.shed as f64)),
         ])
     }
 }
@@ -171,6 +233,9 @@ pub struct ReplicaStats {
     accepted: AtomicU64,
     batch_iterations: AtomicU64,
     batch_occupancy_sum: AtomicU64,
+    /// Slots this replica retired early (cancel, disconnect, abandoned
+    /// handle, or deadline expiry).
+    cancelled: AtomicU64,
 }
 
 impl ReplicaStats {
@@ -186,6 +251,7 @@ impl ReplicaStats {
             accepted: AtomicU64::new(0),
             batch_iterations: AtomicU64::new(0),
             batch_occupancy_sum: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
         }
     }
 
@@ -212,6 +278,10 @@ impl ReplicaStats {
 
     pub fn record_failure(&self) {
         self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch_iteration(&self, occupancy: usize) {
@@ -248,6 +318,10 @@ impl ReplicaStats {
         self.batch_iterations.load(Ordering::Relaxed)
     }
 
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
     pub fn snapshot_json(&self) -> Json {
         let iters = self.batch_iterations.load(Ordering::Relaxed);
         let occ = if iters > 0 {
@@ -276,6 +350,7 @@ impl ReplicaStats {
             ("acceptance_rate", Json::num(accept_rate)),
             ("batch_iterations", Json::num(iters as f64)),
             ("mean_batch_occupancy", Json::num(occ)),
+            ("cancelled", Json::num(self.cancelled() as f64)),
         ])
     }
 }
@@ -323,6 +398,33 @@ mod tests {
         assert_eq!(j.get("accepted").unwrap().as_f64(), Some(15.0));
         assert_eq!(j.get("acceptance_rate").unwrap().as_f64(), Some(0.75));
         assert_eq!(j.get("mean_batch_occupancy").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn lifecycle_counters_and_latency_split() {
+        let m = Metrics::new();
+        m.record_ttft(0.010);
+        m.record_ttft(0.030);
+        m.record_itl(0.002);
+        m.record_cancelled();
+        m.record_deadline_expired();
+        m.record_shed();
+        m.record_shed();
+        let j = m.snapshot_json();
+        assert!(j.get("ttft_mean_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("itl_mean_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("cancelled").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("deadline_expired").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("shed").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(m.shed(), 2);
+        let r = ReplicaStats::new(0);
+        r.record_cancelled();
+        assert_eq!(r.cancelled(), 1);
+        assert_eq!(
+            r.snapshot_json().get("cancelled").unwrap().as_f64(),
+            Some(1.0)
+        );
     }
 
     #[test]

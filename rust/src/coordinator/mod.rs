@@ -1,18 +1,25 @@
 //! Layer-3 coordinator: the serving system around the AS-ARM.
 //!
-//! * [`scheduler`] — engine-pool front: one shared MPMC admission queue
-//!   drained by N continuous-batching workers, each owning one replica
+//! * [`scheduler`] — engine-pool front: one shared BOUNDED MPMC admission
+//!   queue (load-shedding) drained by N continuous-batching workers, each
+//!   owning one replica
+//! * [`lifecycle`] — per-request event channel (streamed token commits),
+//!   cancellation tokens, and deadlines
 //! * [`request`] — the infill protocol (JSON codec)
-//! * [`http`] — HTTP/1.1 front end over the threadpool substrate
-//! * [`metrics`] — aggregate counters/latency/acceptance (GET /metrics)
-//!   and per-replica stats (GET /replicas)
+//! * [`http`] — HTTP/1.1 front end over the threadpool substrate,
+//!   including the SSE streaming surface (`POST /infill/stream`)
+//! * [`metrics`] — aggregate counters/latency/TTFT/ITL/acceptance (GET
+//!   /metrics) and per-replica stats (GET /replicas)
 //!
-//! Request lifecycle (full diagram in docs/ARCHITECTURE.md): HTTP
-//! connection -> JSON decode -> admission queue -> first free scheduler
-//! worker -> decode state machine batched on that worker's engine ->
-//! response back over the per-request reply channel.
+//! Request lifecycle (full diagram in docs/ARCHITECTURE.md §Request
+//! lifecycle & streaming): HTTP connection -> JSON decode -> bounded
+//! admission queue (429 when full) -> first free scheduler worker ->
+//! decode state machine batched on that worker's engine -> per-iteration
+//! `Committed` events plus one terminal `Done`/`Error` over the
+//! per-request event channel -> blocking JSON response or SSE stream.
 
 pub mod http;
+pub mod lifecycle;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
@@ -21,9 +28,10 @@ use std::path::Path;
 
 use crate::runtime::{EnginePool, PoolConfig};
 
+pub use lifecycle::{Abort, CancelToken, Event, RequestHandle, TextAssembler};
 pub use metrics::{Metrics, ReplicaState, ReplicaStats};
 pub use request::{DraftSpec, InfillRequest, InfillResponse, SamplerKind};
-pub use scheduler::{SchedulerConfig, SchedulerHandle};
+pub use scheduler::{SchedulerConfig, SchedulerHandle, SubmitError};
 
 /// Convenience: spawn a scheduler pool backed by real XLA engines, each
 /// replica independently loading `artifacts_dir` (and optional checkpoint).

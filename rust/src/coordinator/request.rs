@@ -112,6 +112,10 @@ pub struct InfillRequest {
     pub steps: usize,
     pub temperature: f32,
     pub seed: u64,
+    /// Optional deadline, measured from SUBMISSION (queue wait counts):
+    /// past it the scheduler retires the request with a partial-progress
+    /// error instead of finishing the decode. Wire field `timeout_ms`.
+    pub timeout_ms: Option<u64>,
 }
 
 impl Default for InfillRequest {
@@ -124,6 +128,7 @@ impl Default for InfillRequest {
             steps: 32,
             temperature: 1.0,
             seed: 0,
+            timeout_ms: None,
         }
     }
 }
@@ -184,6 +189,14 @@ impl InfillRequest {
         }
         if let Some(s) = j.get("seed").and_then(|t| t.as_f64()) {
             r.seed = s as u64;
+        }
+        if let Some(t) = j.get("timeout_ms").and_then(|t| t.as_f64()) {
+            // strictly >= 1: a fractional value in (0,1) would truncate
+            // to an instantly-expired 0ms deadline
+            if t < 1.0 {
+                bail!("timeout_ms must be >= 1");
+            }
+            r.timeout_ms = Some(t as u64);
         }
         Ok(r)
     }
@@ -319,6 +332,14 @@ mod tests {
     }
 
     #[test]
+    fn parse_timeout_ms() {
+        let j = Json::parse(r#"{"text":"a__b","timeout_ms":250}"#).unwrap();
+        assert_eq!(InfillRequest::from_json(&j).unwrap().timeout_ms, Some(250));
+        let j = Json::parse(r#"{"text":"a__b"}"#).unwrap();
+        assert_eq!(InfillRequest::from_json(&j).unwrap().timeout_ms, None);
+    }
+
+    #[test]
     fn rejects_bad_requests() {
         for bad in [
             r#"{}"#,
@@ -329,6 +350,8 @@ mod tests {
             r#"{"text":"x","draft":"self"}"#,
             r#"{"text":"x","draft":{"kind":"nope"}}"#,
             r#"{"text":"x","draft":{"max_len":0}}"#,
+            r#"{"text":"x","timeout_ms":0}"#,
+            r#"{"text":"x","timeout_ms":0.5}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(InfillRequest::from_json(&j).is_err(), "accepted: {bad}");

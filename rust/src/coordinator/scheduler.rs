@@ -3,21 +3,29 @@
 //!
 //! The PJRT client is single-threaded, so each engine is OWNED by one
 //! dedicated scheduler worker (constructed on that thread via
-//! [`EnginePool`]). Requests arrive on one shared MPMC admission queue
-//! ([`crate::util::mpmc`]) drained by all workers: whichever worker has a
-//! free batch slot first picks up the next job, so a slow or dead replica
-//! never stalls admission. Within a worker the loop is unchanged vLLM-style
-//! continuous batching: each request becomes a decode state machine
-//! occupying a batch slot; every iteration the worker gathers each active
+//! [`EnginePool`]). Requests arrive on one shared BOUNDED MPMC admission
+//! queue ([`crate::util::mpmc`]) drained by all workers: whichever worker
+//! has a free batch slot first picks up the next job, so a slow or dead
+//! replica never stalls admission; when the queue is full, submission is
+//! refused outright (load shedding — the HTTP layer renders it as a 429).
+//! Within a worker the loop is unchanged vLLM-style continuous batching:
+//! each request becomes a decode state machine occupying a batch slot;
+//! every iteration the worker first retires slots whose lifecycle ended
+//! early (cancel token flipped, deadline passed, or the client's event
+//! channel closed — see [`super::lifecycle`]), then gathers each active
 //! machine's pending COMPACT forward request (ordering + decode state +
 //! wanted rows — no materialized masks, see docs/ARCHITECTURE.md §Compact
 //! forward ABI), executes ONE batched `forward_ord` on its own replica,
-//! scatters the gathered rows back, and retires finished machines — a
-//! slot frees the moment its request completes and a queued request joins
-//! mid-flight. Draft-phase and verify-phase ASSD sequences still share a
-//! batch (both phases use the same executable and differ only in their
-//! per-slot `(known, want)` state), so the paper's NFE accounting is
-//! preserved per worker.
+//! scatters the gathered rows back, STREAMS each machine's freshly
+//! accepted tokens over its event channel, and retires finished machines
+//! — a slot frees the moment its request completes (or dies) and a queued
+//! request joins mid-flight. Because every machine owns its private RNG
+//! and the engines evaluate sequences independently, retiring one slot
+//! never perturbs its batch-mates' outputs (enforced by tests below).
+//! Draft-phase and verify-phase ASSD sequences still share a batch (both
+//! phases use the same executable and differ only in their per-slot
+//! `(known, want)` state), so the paper's NFE accounting is preserved per
+//! worker.
 //!
 //! Aggregate serving metrics ([`Metrics`]) are shared by all workers;
 //! per-replica counters ([`ReplicaStats`]) are exported per worker (GET
@@ -28,7 +36,7 @@
 //! error instead of a hang.
 
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -47,6 +55,7 @@ use crate::util::json::Json;
 use crate::util::mpmc;
 use crate::util::rng::Rng;
 
+use super::lifecycle::{self, Abort, LifecycleEmitter, RequestHandle};
 use super::metrics::{Metrics, ReplicaState, ReplicaStats};
 use super::request::{InfillRequest, InfillResponse, SamplerKind};
 
@@ -63,6 +72,17 @@ pub struct SchedulerConfig {
     /// their own `draft` field (`asarm serve --draft/--draft-max-len/
     /// --adaptive`).
     pub default_draft: DraftOptions,
+    /// Admission-queue capacity, POOL-WIDE: beyond this many queued (not
+    /// yet admitted) requests, [`SchedulerHandle::submit`] sheds with
+    /// [`SubmitError::QueueFull`] instead of letting the backlog grow
+    /// without bound (`--queue-depth`).
+    pub queue_depth: usize,
+    /// Per-request event-channel capacity. Sized so a full decode's
+    /// commit events fit comfortably; a client that still falls this far
+    /// behind is cancelled rather than allowed to stall its batch
+    /// (`--event-buffer`; docs/ARCHITECTURE.md §Request lifecycle &
+    /// streaming).
+    pub event_capacity: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -71,13 +91,27 @@ impl Default for SchedulerConfig {
             max_batch: 4,
             idle_poll: Duration::from_millis(50),
             default_draft: DraftOptions::default(),
+            queue_depth: 1024,
+            event_capacity: 256,
         }
     }
 }
 
 struct Job {
     request: InfillRequest,
-    reply: mpsc::Sender<Result<InfillResponse>>,
+    life: LifecycleEmitter,
+}
+
+/// Submission failure: distinguishes backpressure (the caller should
+/// retry later — HTTP 429) from shutdown.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity (load shedding).
+    #[error("admission queue full ({0} requests queued); retry later")]
+    QueueFull(usize),
+    /// The pool is gone; no request will ever be served again.
+    #[error("scheduler shut down")]
+    ShutDown,
 }
 
 /// Cloneable handle for submitting requests to the worker pool.
@@ -85,26 +119,32 @@ struct Job {
 pub struct SchedulerHandle {
     tx: mpmc::Sender<Job>,
     replicas: Arc<Vec<ReplicaStats>>,
+    metrics: Metrics,
+    queue_depth: usize,
+    event_capacity: usize,
 }
 
 impl SchedulerHandle {
-    /// Blocking round-trip: submit and await the response.
+    /// Blocking round-trip: submit and await the terminal event.
     pub fn infill(&self, request: InfillRequest) -> Result<InfillResponse> {
-        let rx = self.submit(request)?;
-        rx.recv()
-            .map_err(|_| anyhow!("scheduler dropped request"))?
+        self.submit(request).map_err(anyhow::Error::new)?.wait()
     }
 
-    /// Async submit: returns the receiver immediately (load generators).
-    pub fn submit(&self, request: InfillRequest) -> Result<mpsc::Receiver<Result<InfillResponse>>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Job {
-                request,
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("scheduler shut down"))?;
-        Ok(reply_rx)
+    /// Async submit: returns the request's lifecycle handle immediately
+    /// (event stream + cancellation; load generators and the SSE
+    /// surface). Sheds with [`SubmitError::QueueFull`] when the bounded
+    /// admission queue is at capacity.
+    pub fn submit(&self, request: InfillRequest) -> Result<RequestHandle, SubmitError> {
+        let timeout = request.timeout_ms.map(Duration::from_millis);
+        let (life, handle) = lifecycle::channel(timeout, self.event_capacity);
+        match self.tx.try_send(Job { request, life }) {
+            Ok(()) => Ok(handle),
+            Err(mpmc::TrySendError::Full(_)) => {
+                self.metrics.record_shed();
+                Err(SubmitError::QueueFull(self.queue_depth))
+            }
+            Err(mpmc::TrySendError::Closed(_)) => Err(SubmitError::ShutDown),
+        }
     }
 
     /// Per-replica serving counters, indexed by replica id.
@@ -120,8 +160,12 @@ impl SchedulerHandle {
 
 struct Slot {
     machine: Box<dyn DecodeMachine>,
-    reply: mpsc::Sender<Result<InfillResponse>>,
+    life: LifecycleEmitter,
     t0: Instant,
+    /// When the previous commit chunk was streamed (ITL bookkeeping).
+    last_commit: Instant,
+    /// Tokens committed so far (partial-progress error messages).
+    committed: usize,
     text_len: usize,
     n_targets: usize,
 }
@@ -153,7 +197,7 @@ where
 /// and runs the continuous-batching loop against that replica alone.
 pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> SchedulerHandle {
     let n_workers = pool.replicas();
-    let (tx, rx) = mpmc::channel::<Job>();
+    let (tx, rx) = mpmc::bounded::<Job>(cfg.queue_depth);
     let replicas: Arc<Vec<ReplicaStats>> =
         Arc::new((0..n_workers).map(ReplicaStats::new).collect());
     let live = Arc::new(AtomicUsize::new(n_workers));
@@ -190,7 +234,13 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
             })
             .expect("spawn scheduler worker");
     }
-    SchedulerHandle { tx, replicas }
+    SchedulerHandle {
+        tx,
+        replicas,
+        metrics,
+        queue_depth: cfg.queue_depth,
+        event_capacity: cfg.event_capacity,
+    }
 }
 
 /// Last-worker-out bookkeeping, panic-safe via Drop: when the final worker
@@ -207,10 +257,37 @@ impl Drop for WorkerExitGuard {
         if self.live.fetch_sub(1, AtomicOrdering::AcqRel) == 1 {
             self.rx.close();
             while let Ok(job) = self.rx.try_recv() {
-                let _ = job.reply.send(Err(anyhow!("engine pool shut down")));
+                job.life.finish(Err(anyhow!("engine pool shut down")));
             }
         }
     }
+}
+
+/// Book the right counters for a lifecycle that ended early — shared by
+/// the in-slot retire check and the admission-time queued-job check, so
+/// a new [`Abort`] variant cannot silently diverge between the paths.
+fn record_abort(reason: Abort, metrics: &Metrics, stats: &ReplicaStats) -> &'static str {
+    match reason {
+        Abort::DeadlineExpired => metrics.record_deadline_expired(),
+        Abort::Cancelled | Abort::Abandoned => metrics.record_cancelled(),
+    }
+    stats.record_cancelled();
+    match reason {
+        Abort::Cancelled => "cancelled",
+        Abort::DeadlineExpired => "deadline exceeded",
+        Abort::Abandoned => "abandoned by client",
+    }
+}
+
+/// Retire a slot whose lifecycle ended before the decode finished: book
+/// the right counter and send the terminal error (with partial progress).
+fn abort_slot(slot: Slot, reason: Abort, metrics: &Metrics, stats: &ReplicaStats) {
+    let what = record_abort(reason, metrics, stats);
+    slot.life.finish(Err(anyhow!(
+        "{what} after {}/{} tokens",
+        slot.committed,
+        slot.n_targets
+    )));
 }
 
 /// One worker's continuous-batching loop over its private engine replica.
@@ -247,22 +324,51 @@ fn run_worker(
                     }
                 }
             };
+            // A request can die while still queued (client cancelled or
+            // vanished, deadline burned up waiting): never give it a slot.
+            if let Some(reason) = job.life.abort_reason() {
+                let what = record_abort(reason, metrics, stats);
+                job.life.finish(Err(anyhow!("{what} while queued")));
+                continue;
+            }
             match admit(engine, &tok, job.request, cfg.default_draft) {
-                Ok(AdmitResult::Slot(machine, text_len, n_targets)) => slots.push(Slot {
-                    machine,
-                    reply: job.reply,
-                    t0: Instant::now(),
-                    text_len,
-                    n_targets,
-                }),
+                Ok(AdmitResult::Slot(machine, text_len, n_targets)) => {
+                    // TTFT and latency_s run from SUBMISSION, the same
+                    // clock the deadline uses — queue wait counts.
+                    let t0 = job.life.submitted_at();
+                    slots.push(Slot {
+                        machine,
+                        life: job.life,
+                        t0,
+                        last_commit: t0,
+                        committed: 0,
+                        text_len,
+                        n_targets,
+                    });
+                }
                 Ok(AdmitResult::Immediate(resp)) => {
-                    let _ = job.reply.send(Ok(resp));
+                    job.life.finish(Ok(resp));
                 }
                 Err(e) => {
                     metrics.record_failure();
                     stats.record_failure();
-                    let _ = job.reply.send(Err(e));
+                    job.life.finish(Err(e));
                 }
+            }
+        }
+
+        // --- lifecycle check: retire dead slots BEFORE spending compute
+        //     on them (cancel token, deadline, abandoned event channel).
+        //     Machines own their RNG and the engine evaluates sequences
+        //     independently, so removal never disturbs batch-mates. ---
+        let mut s = 0;
+        while s < slots.len() {
+            match slots[s].life.abort_reason() {
+                Some(reason) => {
+                    let slot = slots.swap_remove(s);
+                    abort_slot(slot, reason, metrics, stats);
+                }
+                None => s += 1,
             }
         }
         if slots.is_empty() {
@@ -297,7 +403,7 @@ fn run_worker(
                 for slot in slots.drain(..) {
                     metrics.record_failure();
                     stats.record_failure();
-                    let _ = slot.reply.send(Err(anyhow!("engine error: {e:#}")));
+                    slot.life.finish(Err(anyhow!("engine error: {e:#}")));
                 }
                 continue;
             }
@@ -307,11 +413,45 @@ fn run_worker(
             slot.machine.absorb(seq_rows);
         }
 
+        // --- stream freshly accepted tokens (TTFT/ITL bookkeeping) ---
+        for slot in slots.iter_mut() {
+            let commits = slot.machine.drain_commits();
+            if commits.is_empty() {
+                continue;
+            }
+            let now = Instant::now();
+            if slot.committed == 0 {
+                metrics.record_ttft((now - slot.t0).as_secs_f64());
+            } else {
+                metrics.record_itl((now - slot.last_commit).as_secs_f64() / commits.len() as f64);
+            }
+            slot.committed += commits.len();
+            slot.last_commit = now;
+            let (positions, tokens): (Vec<usize>, Vec<u32>) = commits.into_iter().unzip();
+            // A false return means the client lags or vanished; the
+            // emitter flipped the cancel token, so the lifecycle check
+            // above retires this slot at the next iteration.
+            slot.life.commit(positions, tokens);
+        }
+
         // --- retire finished machines ---
         let mut s = 0;
         while s < slots.len() {
             if slots[s].machine.done() {
                 let slot = slots.swap_remove(s);
+                // A machine can finish on the very iteration its client
+                // lagged (final commit dropped, cancel flipped) or
+                // vanished: delivering Done then would end the stream as
+                // a SUCCESS with tokens silently missing. Deadline
+                // expiry alone is different — the work is complete and
+                // the stream intact, so the result is still delivered
+                // (stream_broken ignores the deadline, unlike
+                // abort_reason, so an expired deadline cannot mask a
+                // broken stream here).
+                if let Some(reason) = slot.life.stream_broken() {
+                    abort_slot(slot, reason, metrics, stats);
+                    continue;
+                }
                 let latency = slot.t0.elapsed().as_secs_f64();
                 let outcome = slot.machine.outcome();
                 let resp =
@@ -330,7 +470,7 @@ fn run_worker(
                     resp.proposed,
                     resp.accepted,
                 );
-                let _ = slot.reply.send(Ok(resp));
+                slot.life.finish(Ok(resp));
             } else {
                 s += 1;
             }
@@ -462,9 +602,10 @@ fn outcome_to_response(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::lifecycle::Event;
     use crate::coordinator::DraftSpec;
     use crate::draft::DraftKind;
-    use crate::runtime::mock::MockEngine;
+    use crate::runtime::mock::{MockEngine, SlowEngine};
 
     fn mock_handle(max_batch: usize) -> (SchedulerHandle, Metrics) {
         let metrics = Metrics::new();
@@ -474,6 +615,33 @@ mod tests {
             SchedulerConfig {
                 max_batch,
                 idle_poll: Duration::from_millis(5),
+                ..Default::default()
+            },
+            m2,
+        );
+        (h, metrics)
+    }
+
+    /// A pool whose forwards take `delay` each: slow enough to observe
+    /// cancellation, deadlines, and shedding deterministically.
+    fn slow_handle(
+        max_batch: usize,
+        queue_depth: usize,
+        delay_ms: u64,
+    ) -> (SchedulerHandle, Metrics) {
+        let metrics = Metrics::new();
+        let m2 = metrics.clone();
+        let h = spawn(
+            move || {
+                Ok(Box::new(SlowEngine::new(
+                    MockEngine::new(3, 16, 258, 1.0),
+                    Duration::from_millis(delay_ms),
+                )) as Box<dyn Engine>)
+            },
+            SchedulerConfig {
+                max_batch,
+                queue_depth,
+                idle_poll: Duration::from_millis(2),
                 ..Default::default()
             },
             m2,
@@ -618,6 +786,7 @@ mod tests {
                     max_len: 3,
                     adaptive: false,
                 },
+                ..Default::default()
             },
             metrics,
         );
@@ -657,7 +826,7 @@ mod tests {
     #[test]
     fn concurrent_requests_batch_together() {
         let (h, metrics) = mock_handle(4);
-        let rxs: Vec<_> = (0..8)
+        let handles: Vec<_> = (0..8)
             .map(|i| {
                 h.submit(InfillRequest {
                     text: "ab______".into(),
@@ -667,8 +836,8 @@ mod tests {
                 .unwrap()
             })
             .collect();
-        for rx in rxs {
-            let resp = rx.recv().unwrap().unwrap();
+        for rh in handles {
+            let resp = rh.wait().unwrap();
             assert_eq!(resp.n_generated, 6);
         }
         let j = metrics.snapshot_json();
@@ -713,7 +882,7 @@ mod tests {
     #[test]
     fn pool_serves_concurrent_load() {
         let (h, metrics) = mock_pool_handle(2, 2);
-        let rxs: Vec<_> = (0..16)
+        let handles: Vec<_> = (0..16)
             .map(|i| {
                 h.submit(InfillRequest {
                     text: "ab______".into(),
@@ -723,8 +892,8 @@ mod tests {
                 .unwrap()
             })
             .collect();
-        for rx in rxs {
-            let resp = rx.recv().unwrap().unwrap();
+        for rh in handles {
+            let resp = rh.wait().unwrap();
             assert_eq!(resp.n_generated, 6);
         }
         assert_eq!(metrics.requests(), 16);
@@ -740,7 +909,7 @@ mod tests {
             bail!("replica {id} down")
         });
         let h = spawn_pool(pool, SchedulerConfig::default(), metrics);
-        // Regardless of whether the workers have already exited (send
+        // Regardless of whether the workers have already exited (submit
         // fails) or exit after we queue (drain-and-fail), we get an error.
         assert!(h
             .infill(InfillRequest {
@@ -748,5 +917,203 @@ mod tests {
                 ..Default::default()
             })
             .is_err());
+    }
+
+    // --- request lifecycle: streaming, cancellation, deadlines ----------
+
+    /// Commit events stream DURING the decode and reassemble to exactly
+    /// the terminal response: every target position exactly once, token
+    /// values matching the final text's bytes.
+    #[test]
+    fn commit_events_reassemble_to_final_response() {
+        let (h, _) = mock_handle(1);
+        let rh = h
+            .submit(InfillRequest {
+                text: "ab________cd".into(),
+                seed: 13,
+                ..Default::default()
+            })
+            .unwrap();
+        let mut commits: Vec<(usize, u32)> = vec![];
+        let resp = loop {
+            match rh.next_event().expect("stream ended without terminal") {
+                Event::Committed { positions, tokens } => {
+                    commits.extend(positions.into_iter().zip(tokens));
+                }
+                Event::Done(resp) => break resp,
+                Event::Error(e) => panic!("unexpected error: {e}"),
+            }
+        };
+        assert_eq!(commits.len(), 8, "each target committed exactly once");
+        let mut bytes = "ab________cd".as_bytes().to_vec();
+        for &(pos, tok) in &commits {
+            assert!(pos >= 2 && pos < 10, "commit outside the blanked span");
+            bytes[pos] = tok as u8;
+        }
+        assert_eq!(String::from_utf8_lossy(&bytes).into_owned(), resp.text);
+    }
+
+    /// Cancelling one request mid-batch frees its slot and leaves its
+    /// batch-mate's output BIT-IDENTICAL to an undisturbed run — the
+    /// per-slot RNG streams are independent, so a retirement next door is
+    /// invisible (the `deterministic_given_seed` pattern, extended).
+    #[test]
+    fn cancel_mid_batch_leaves_batchmates_bit_identical() {
+        let long_text = || format!("ab{}cd", "_".repeat(12));
+        // sequential = one token per iteration: plenty of iterations for
+        // the cancel to land mid-decode
+        let mate = |seed| InfillRequest {
+            text: long_text(),
+            seed,
+            sampler: SamplerKind::Sequential,
+            ..Default::default()
+        };
+        // undisturbed reference: the batch-mate alone
+        let (h_ref, _) = slow_handle(2, 16, 3);
+        let reference = h_ref.infill(mate(99)).unwrap().text;
+
+        let (h, metrics) = slow_handle(2, 16, 3);
+        let victim = h
+            .submit(InfillRequest {
+                text: long_text(),
+                seed: 7,
+                sampler: SamplerKind::Sequential,
+                ..Default::default()
+            })
+            .unwrap();
+        let survivor = h.submit(mate(99)).unwrap();
+        // wait until the victim demonstrably occupies a slot (first
+        // commit arrived), then cancel it mid-flight
+        match victim.next_event() {
+            Some(Event::Committed { .. }) => {}
+            other => panic!("expected a commit first, got {other:?}"),
+        }
+        victim.cancel();
+        let err = victim.wait().unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+        assert_eq!(survivor.wait().unwrap().text, reference);
+        assert_eq!(metrics.cancelled(), 1);
+        assert_eq!(h.replica_stats()[0].cancelled(), 1);
+    }
+
+    /// Deadline expiry retires the slot with a partial-progress error.
+    #[test]
+    fn deadline_expiry_returns_partial_progress_error() {
+        let (h, metrics) = slow_handle(1, 16, 10);
+        let err = h
+            .infill(InfillRequest {
+                text: format!("ab{}cd", "_".repeat(12)),
+                seed: 3,
+                sampler: SamplerKind::Sequential,
+                timeout_ms: Some(45),
+                ..Default::default()
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadline exceeded"), "{err}");
+        assert!(err.contains("/12 tokens"), "no partial progress: {err}");
+        assert_eq!(metrics.deadline_expired(), 1);
+    }
+
+    /// A deadlined request stuck in a saturated queue (no worker ever
+    /// observes it) must still release its client: the handle's own
+    /// deadline backstop fires at deadline + grace instead of blocking
+    /// until the queue drains.
+    #[test]
+    fn deadline_in_saturated_queue_unblocks_client() {
+        // 12 sequential targets x 40ms/forward ≈ 480ms of slot occupancy
+        let (h, _metrics) = slow_handle(1, 16, 40);
+        let blocker = h
+            .submit(InfillRequest {
+                text: format!("ab{}cd", "_".repeat(12)),
+                seed: 1,
+                sampler: SamplerKind::Sequential,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(matches!(
+            blocker.next_event(),
+            Some(Event::Committed { .. })
+        ));
+        let t0 = Instant::now();
+        let err = h
+            .infill(InfillRequest {
+                text: "ab____cd".into(),
+                seed: 2,
+                timeout_ms: Some(30),
+                ..Default::default()
+            })
+            .unwrap_err()
+            .to_string();
+        // Released by its own backstop (30ms deadline + 250ms grace),
+        // NOT by the blocker finishing (~480ms in).
+        assert!(err.contains("deadline"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(450),
+            "client blocked {}ms past its deadline",
+            t0.elapsed().as_millis()
+        );
+        let _ = blocker.wait();
+    }
+
+    /// Dropping the request handle (dead reply channel) cancels the slot
+    /// early instead of decoding to completion.
+    #[test]
+    fn abandoned_handle_frees_slot_early() {
+        let (h, metrics) = slow_handle(1, 16, 5);
+        let rh = h
+            .submit(InfillRequest {
+                text: format!("ab{}cd", "_".repeat(12)),
+                seed: 5,
+                sampler: SamplerKind::Sequential,
+                ..Default::default()
+            })
+            .unwrap();
+        drop(rh); // caller gives up; nobody will ever read the outcome
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while metrics.cancelled() == 0 {
+            assert!(Instant::now() < deadline, "abandoned slot never retired");
+            thread::sleep(Duration::from_millis(5));
+        }
+        // The counter alone proves early retirement (no timing assert):
+        // a completed decode books a request, never a cancellation.
+        assert_eq!(metrics.requests(), 0);
+    }
+
+    /// A full admission queue sheds instead of queueing without bound.
+    #[test]
+    fn queue_full_sheds_with_typed_error() {
+        let (h, metrics) = slow_handle(1, 1, 20);
+        let in_slot = h
+            .submit(InfillRequest {
+                text: format!("ab{}cd", "_".repeat(12)),
+                seed: 1,
+                sampler: SamplerKind::Sequential,
+                ..Default::default()
+            })
+            .unwrap();
+        // wait until the first request demonstrably LEFT the queue (its
+        // first commit proves it occupies the only batch slot)
+        assert!(matches!(
+            in_slot.next_event(),
+            Some(Event::Committed { .. })
+        ));
+        let _queued = h
+            .submit(InfillRequest {
+                text: "ab____cd".into(),
+                seed: 2,
+                ..Default::default()
+            })
+            .unwrap();
+        // queue_depth = 1 and the slot is busy: the third submission sheds
+        match h.submit(InfillRequest {
+            text: "ab____cd".into(),
+            seed: 3,
+            ..Default::default()
+        }) {
+            Err(SubmitError::QueueFull(depth)) => assert_eq!(depth, 1),
+            other => panic!("expected QueueFull, got {:?}", other.err()),
+        }
+        assert_eq!(metrics.shed(), 1);
     }
 }

@@ -55,6 +55,10 @@ pub struct AssdMachine {
     // scratch for the current iteration
     drafted: Vec<u32>,          // tokens for orders n..t
     draft_probs: Vec<Vec<f32>>, // full p(.|x_sigma(<n)) rows for orders n..t
+    // tokens accepted since the last drain_commits (streaming hook):
+    // exactly the accepted prefix of each speculation window plus the
+    // resampled token — never unverified drafts
+    committed: Vec<(usize, u32)>,
     // stats
     model_nfe: u64,
     aux_nfe: u64,
@@ -108,6 +112,7 @@ impl AssdMachine {
             spec,
             drafted: vec![],
             draft_probs: vec![],
+            committed: vec![],
             model_nfe: 0,
             aux_nfe: 0,
             iterations: 0,
@@ -189,6 +194,14 @@ impl AssdMachine {
     }
 
     fn finish_iteration(&mut self, n_new: usize) {
+        // Orders n..n_new are final from here on (accepted prefix +
+        // resampled token, or the Lemma-1 final token): record them for
+        // the streaming drain — this is the single choke point both the
+        // verify and shortcut paths funnel through.
+        for i in self.n..n_new {
+            let pos = self.ord.sigma[i];
+            self.committed.push((pos, self.tokens[pos]));
+        }
         // committed-token feedback (e.g. the bigram table learns from the
         // generated text)
         self.drafter
@@ -327,6 +340,10 @@ impl DecodeMachine for AssdMachine {
                 self.finish_iteration(n_new);
             }
         }
+    }
+
+    fn drain_commits(&mut self) -> Vec<(usize, u32)> {
+        std::mem::take(&mut self.committed)
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {
@@ -778,6 +795,56 @@ mod tests {
             .unwrap();
             assert_eq!(dif_c.tokens, dif_d.tokens);
             assert_eq!(dif_c.model_nfe, dif_d.model_nfe);
+        }
+    }
+
+    /// The streaming hook: every drafter's drained commits are exactly
+    /// the final target tokens — each target exactly once, never an
+    /// unverified draft, values matching the outcome bit for bit.
+    #[test]
+    fn drain_commits_streams_exactly_the_accepted_tokens() {
+        let e = MockEngine::new(31, 12, 5, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[0, 6], 12), 2);
+        let toks = init_tokens(&ord, &[(0, 2), (6, 1)]);
+        for kind in DraftKind::ALL {
+            let opts = DraftOptions {
+                kind,
+                max_len: 4,
+                adaptive: false,
+            };
+            let drafter = opts.build(&toks, e.vocab());
+            let mut mach = Box::new(AssdMachine::new(
+                ord.clone(),
+                toks.clone(),
+                e.vocab(),
+                opts.speculation(),
+                1.0,
+                Rng::new(77),
+                drafter,
+            ));
+            let mut commits: Vec<(usize, u32)> = vec![];
+            let mut chunks = 0u64;
+            while !mach.done() {
+                let rows = {
+                    let r = mach.forward_request().unwrap();
+                    e.forward_ord(std::slice::from_ref(&r)).unwrap().pop().unwrap()
+                };
+                mach.absorb(&rows);
+                commits.extend(mach.drain_commits());
+                chunks += 1;
+            }
+            assert!(mach.drain_commits().is_empty(), "drain must not repeat");
+            let out = mach.outcome();
+            let mut positions: Vec<usize> = commits.iter().map(|c| c.0).collect();
+            positions.sort_unstable();
+            positions.dedup();
+            assert_eq!(positions.len(), commits.len(), "double-committed position");
+            assert_eq!(commits.len(), ord.n_targets(), "{kind:?}");
+            assert!(chunks >= out.iterations, "commits arrive per iteration");
+            for (pos, tok) in commits {
+                assert!(!ord.is_prompt_pos(pos));
+                assert_eq!(out.tokens[pos], tok, "{kind:?} pos {pos}");
+            }
         }
     }
 

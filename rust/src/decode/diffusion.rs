@@ -32,6 +32,9 @@ pub struct DiffusionMachine {
     ord: Ordering,
     /// positions to unmask this step (the requested logit rows)
     want: Vec<usize>,
+    /// tokens unmasked since the last drain_commits (streaming hook);
+    /// diffusion commits every position the moment it is unmasked
+    committed: Vec<(usize, u32)>,
     model_nfe: u64,
     iterations: u64,
 }
@@ -58,6 +61,7 @@ impl DiffusionMachine {
             steps_left,
             ord,
             want: vec![],
+            committed: vec![],
             model_nfe: 0,
             iterations: 0,
         }
@@ -102,12 +106,17 @@ impl DecodeMachine for DiffusionMachine {
             super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
             let (tok, _) = sample_logits(&mut self.rng, &row, self.temp);
             self.tokens[pos] = tok as u32;
+            self.committed.push((pos, tok as u32));
         }
         self.remaining.drain(..count);
         self.steps_left = self.steps_left.saturating_sub(1).max(1);
         if !self.done() {
             self.ord = Self::known_ordering(&self.tokens);
         }
+    }
+
+    fn drain_commits(&mut self) -> Vec<(usize, u32)> {
+        std::mem::take(&mut self.committed)
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {
@@ -166,6 +175,33 @@ mod tests {
         let out = run_machine(&e, Box::new(m)).unwrap();
         assert_eq!(out.model_nfe, 1);
         assert!(out.tokens.iter().all(|&t| t != MASK));
+    }
+
+    #[test]
+    fn drain_commits_covers_every_unmasked_position() {
+        let e = MockEngine::new(6, 10, 4, 1.0);
+        let toks = masked_input(10, &[(0, 1), (5, 2)]);
+        let mut m = Box::new(DiffusionMachine::new(toks, e.vocab(), 3, 1.0, Rng::new(8)));
+        let mut commits = vec![];
+        while !m.done() {
+            let rows = {
+                let r = m.forward_request().unwrap();
+                e.forward_ord(std::slice::from_ref(&r)).unwrap().pop().unwrap()
+            };
+            m.absorb(&rows);
+            let chunk = m.drain_commits();
+            assert!(!chunk.is_empty(), "every diffusion step unmasks something");
+            commits.extend(chunk);
+        }
+        let out = m.outcome();
+        let mut positions: Vec<usize> = commits.iter().map(|c| c.0).collect();
+        positions.sort_unstable();
+        positions.dedup();
+        assert_eq!(positions.len(), commits.len());
+        assert_eq!(commits.len(), 8);
+        for (pos, tok) in commits {
+            assert_eq!(out.tokens[pos], tok);
+        }
     }
 
     #[test]

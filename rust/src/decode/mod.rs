@@ -85,6 +85,18 @@ pub trait DecodeMachine {
     /// see rows they did not ask for).
     fn absorb(&mut self, logits: &[f32]);
 
+    /// Tokens ACCEPTED since the last call, as `(position, token)` pairs
+    /// in commit order — the streaming hook. A token is committed only
+    /// once it can never be rolled back: for ASSD that is the accepted
+    /// prefix of each speculation window plus the resampled token (never
+    /// unverified drafts), for sequential/diffusion every sampled token.
+    /// The scheduler drains this after each `absorb` and streams the
+    /// chunk as an `Event::Committed`; drivers that do not stream may
+    /// simply never call it.
+    fn drain_commits(&mut self) -> Vec<(usize, u32)> {
+        Vec::new()
+    }
+
     /// Consume the machine and return the outcome (panics if !done()).
     fn outcome(self: Box<Self>) -> DecodeOutcome;
 }

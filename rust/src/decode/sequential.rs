@@ -24,6 +24,9 @@ pub struct SequentialMachine {
     n: usize,
     /// the single row requested this step (order n's position)
     want: [usize; 1],
+    /// tokens sampled since the last drain_commits (streaming hook);
+    /// sequential decoding commits every sampled token immediately
+    committed: Vec<(usize, u32)>,
     model_nfe: u64,
 }
 
@@ -44,6 +47,7 @@ impl SequentialMachine {
             tokens,
             n,
             want: [0],
+            committed: vec![],
             model_nfe: 0,
         }
     }
@@ -75,7 +79,12 @@ impl DecodeMachine for SequentialMachine {
         super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
         let (tok, _p) = sample_logits(&mut self.rng, &row, self.temp);
         self.tokens[pos] = tok as u32;
+        self.committed.push((pos, tok as u32));
         self.n += 1;
+    }
+
+    fn drain_commits(&mut self) -> Vec<(usize, u32)> {
+        std::mem::take(&mut self.committed)
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {
@@ -119,6 +128,36 @@ mod tests {
         let out = run_machine(&e, Box::new(m)).unwrap();
         assert_eq!(out.model_nfe, 0);
         assert_eq!(out.tokens, toks);
+    }
+
+    #[test]
+    fn drain_commits_streams_one_token_per_step() {
+        let e = MockEngine::new(4, 8, 5, 1.0);
+        let ord = Ordering::new(lattice_sigma(&[0, 4], 8), 2);
+        let toks = init_tokens(&ord, &[(0, 1), (4, 2)]);
+        let mut m = Box::new(SequentialMachine::new(
+            ord.clone(),
+            toks,
+            e.vocab(),
+            1.0,
+            Rng::new(3),
+        ));
+        let mut commits = vec![];
+        while !m.done() {
+            let rows = {
+                let r = m.forward_request().unwrap();
+                e.forward_ord(std::slice::from_ref(&r)).unwrap().pop().unwrap()
+            };
+            m.absorb(&rows);
+            let chunk = m.drain_commits();
+            assert_eq!(chunk.len(), 1, "sequential commits one token per step");
+            commits.extend(chunk);
+        }
+        let out = m.outcome();
+        assert_eq!(commits.len(), 6);
+        for (pos, tok) in commits {
+            assert_eq!(out.tokens[pos], tok);
+        }
     }
 
     #[test]

@@ -11,10 +11,11 @@
 //!   multi-replica engine pool, mask construction, the ASSD decoder
 //!   family with its pluggable draft subsystem (self / bigram /
 //!   prompt-lookup drafters plus adaptive speculation control), a
-//!   continuous-batching coordinator (shared admission queue, one worker
-//!   per replica) with an HTTP front end, the rust training loop, and the
-//!   evaluation/benchmark harness reproducing every table and figure of
-//!   the paper.
+//!   continuous-batching coordinator (bounded admission queue with load
+//!   shedding, one worker per replica, per-request lifecycle: streamed
+//!   token commits, cancellation, deadlines) with an HTTP + SSE front
+//!   end, the rust training loop, and the evaluation/benchmark harness
+//!   reproducing every table and figure of the paper.
 //!
 //! See README.md for how to run everything and docs/ARCHITECTURE.md for
 //! the serving architecture (request lifecycle, engine pool, batching

@@ -26,12 +26,15 @@ const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
          --replicas 1   (engine replicas, one scheduler worker each)
          --draft self|bigram|lookup --draft-max-len 5 --adaptive
          (default draft config for requests without a \"draft\" field)
+         --queue-depth 1024   (admission queue bound; full => HTTP 429)
+         --event-buffer 256   (per-request event-channel capacity;
+         lagging streaming clients beyond it are cancelled)
   train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
          --protocol lattice|permutation --prompt-lo F --prompt-hi F
          --out CKPT.bin --seed S
   infill --artifacts DIR --params FILE --text 'Tom went to ____.'
          --sampler assd|assd_ngram|sequential|diffusion --k 5 --seed 0
-         --draft self|bigram|lookup --adaptive
+         --draft self|bigram|lookup --adaptive --timeout-ms 0 (0 = none)
   corpus --kind stories|prose|expr --n 10
   smoke";
 
@@ -77,6 +80,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         SchedulerConfig {
             max_batch: args.usize("max-batch", 4),
             default_draft: draft_options(args, "draft-max-len")?,
+            queue_depth: args.usize("queue-depth", 1024).max(1),
+            event_capacity: args.usize("event-buffer", 256).max(8),
             ..Default::default()
         },
         metrics.clone(),
@@ -89,7 +94,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.addr,
         if replicas == 1 { "" } else { "s" }
     );
-    println!("  POST /v1/infill   GET /metrics   GET /replicas   GET /healthz");
+    println!(
+        "  POST /v1/infill   POST /infill/stream (SSE)   GET /metrics   GET /replicas   GET /healthz"
+    );
     server.serve()
 }
 
@@ -191,6 +198,10 @@ fn cmd_infill(args: &Args) -> Result<()> {
         steps: args.usize("steps", 32),
         temperature: args.f64("temperature", 1.0) as f32,
         seed: args.u64("seed", 0),
+        timeout_ms: match args.u64("timeout-ms", 0) {
+            0 => None,
+            t => Some(t),
+        },
     };
     let resp = handle.infill(req)?;
     println!("{}", resp.to_json());

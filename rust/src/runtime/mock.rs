@@ -189,6 +189,61 @@ impl Engine for MockEngine {
     }
 }
 
+/// A [`MockEngine`] whose forwards take a configurable wall-clock time:
+/// the timing substrate for lifecycle tests and the streaming bench
+/// (cancellation mid-decode, deadline expiry, queue-full shedding, TTFT
+/// vs total latency) — the plain mock decodes too fast to observe any of
+/// that deterministically. Semantics are bit-identical to the wrapped
+/// mock; only latency is added.
+pub struct SlowEngine {
+    inner: MockEngine,
+    delay: std::time::Duration,
+}
+
+impl SlowEngine {
+    pub fn new(inner: MockEngine, delay: std::time::Duration) -> SlowEngine {
+        SlowEngine { inner, delay }
+    }
+}
+
+impl Engine for SlowEngine {
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.forward(batch, tokens, mask_h, mask_g)
+    }
+
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.forward_ord(specs)
+    }
+
+    fn max_gather_rows(&self) -> usize {
+        self.inner.max_gather_rows()
+    }
+
+    fn nfe(&self) -> u64 {
+        self.inner.nfe()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

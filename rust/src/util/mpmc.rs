@@ -8,10 +8,23 @@
 //! push/pop, never while blocked waiting, so any worker can pick up the
 //! next job the moment it is enqueued.
 //!
-//! Close semantics mirror `mpsc` plus one addition the engine pool needs:
+//! Two flavours share the same `Sender`/`Receiver` types:
+//!
+//! * [`channel`] — unbounded, the original API (training/eval plumbing);
+//! * [`bounded`] — capacity-limited: [`Sender::try_send`] reports
+//!   [`TrySendError::Full`] instead of enqueueing, which is what the
+//!   coordinator's load-shedding admission queue (HTTP 429) and the
+//!   per-request event channels (slow-client backpressure) are built on.
+//!   The blocking [`Sender::send`] waits for space instead.
+//!
+//! Close semantics mirror `mpsc` plus two additions the serving stack
+//! needs:
 //!
 //! * dropping the last [`Sender`] closes the channel — receivers drain the
 //!   remaining items and then see `Disconnected`;
+//! * dropping the last [`Receiver`] ALSO closes it — subsequent `send`s
+//!   fail, which is how a scheduler worker notices that the client behind
+//!   a request's event channel has given up (see coordinator/lifecycle.rs);
 //! * [`Receiver::close`] closes it from the consumer side — subsequent
 //!   `send`s fail and the closer can drain what is left (used by the last
 //!   scheduler worker on the way out so queued jobs fail fast instead of
@@ -34,12 +47,18 @@ pub struct Receiver<T> {
 
 struct Shared<T> {
     state: Mutex<State<T>>,
+    /// Wakes receivers blocked on an empty queue.
     cv: Condvar,
+    /// Wakes senders blocked on a full bounded queue.
+    cv_space: Condvar,
 }
 
 struct State<T> {
     queue: VecDeque<T>,
     senders: usize,
+    receivers: usize,
+    /// `None` = unbounded.
+    capacity: Option<usize>,
     closed: bool,
 }
 
@@ -47,6 +66,16 @@ struct State<T> {
 /// undelivered value back to the caller.
 #[derive(Debug)]
 pub struct SendError<T>(pub T);
+
+/// Error returned by [`Sender::try_send`]; carries the undelivered value.
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    /// Bounded channel at capacity (still open) — the caller sheds or
+    /// retries.
+    Full(T),
+    /// Channel closed (every receiver dropped, or closed explicitly).
+    Closed(T),
+}
 
 /// Error returned by [`Receiver::try_recv`].
 #[derive(Debug, PartialEq, Eq)]
@@ -68,13 +97,27 @@ pub enum RecvTimeoutError {
 
 /// Create an unbounded MPMC channel.
 pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    with_capacity(None)
+}
+
+/// Create a bounded MPMC channel holding at most `capacity` items
+/// (clamped to >= 1). [`Sender::try_send`] reports `Full` at capacity;
+/// [`Sender::send`] blocks until space frees up.
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    with_capacity(Some(capacity.max(1)))
+}
+
+fn with_capacity<T>(capacity: Option<usize>) -> (Sender<T>, Receiver<T>) {
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
             queue: VecDeque::new(),
             senders: 1,
+            receivers: 1,
+            capacity,
             closed: false,
         }),
         cv: Condvar::new(),
+        cv_space: Condvar::new(),
     });
     (
         Sender {
@@ -84,11 +127,21 @@ pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
     )
 }
 
+impl<T> State<T> {
+    fn full(&self) -> bool {
+        self.capacity.is_some_and(|c| self.queue.len() >= c)
+    }
+}
+
 impl<T> Sender<T> {
-    /// Enqueue `value`, waking one waiting receiver. Fails (returning the
+    /// Enqueue `value`, waking one waiting receiver. On a bounded channel
+    /// this blocks while the queue is at capacity. Fails (returning the
     /// value) iff the channel is closed.
     pub fn send(&self, value: T) -> Result<(), SendError<T>> {
         let mut st = self.shared.state.lock().unwrap();
+        while st.full() && !st.closed {
+            st = self.shared.cv_space.wait(st).unwrap();
+        }
         if st.closed {
             return Err(SendError(value));
         }
@@ -96,6 +149,39 @@ impl<T> Sender<T> {
         drop(st);
         self.shared.cv.notify_one();
         Ok(())
+    }
+
+    /// Non-blocking enqueue: `Full` on a bounded channel at capacity,
+    /// `Closed` once every receiver is gone (or the channel was closed
+    /// explicitly). The coordinator's shedding + backpressure primitive.
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(value));
+        }
+        if st.full() {
+            return Err(TrySendError::Full(value));
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    /// True once the channel can no longer deliver (every receiver
+    /// dropped, or closed from the receiving side). The scheduler's
+    /// retire-check uses this to spot abandoned requests without paying
+    /// for a failed send.
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+
+    /// Number of items currently queued (racy in general; exact for a
+    /// sole sender, since concurrent receives only shrink it — the
+    /// lifecycle emitter uses this to leave a slot free for its terminal
+    /// event).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
     }
 }
 
@@ -116,6 +202,7 @@ impl<T> Drop for Sender<T> {
             st.closed = true;
             drop(st);
             self.shared.cv.notify_all();
+            self.shared.cv_space.notify_all();
         }
     }
 }
@@ -125,9 +212,30 @@ impl<T> Receiver<T> {
     pub fn try_recv(&self) -> Result<T, TryRecvError> {
         let mut st = self.shared.state.lock().unwrap();
         match st.queue.pop_front() {
-            Some(v) => Ok(v),
+            Some(v) => {
+                drop(st);
+                self.shared.cv_space.notify_one();
+                Ok(v)
+            }
             None if st.closed => Err(TryRecvError::Disconnected),
             None => Err(TryRecvError::Empty),
+        }
+    }
+
+    /// Block until the next item (or disconnection). Items still queued on
+    /// a closed channel are delivered before `Disconnected` is reported.
+    pub fn recv(&self) -> Result<T, RecvTimeoutError> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.shared.cv_space.notify_one();
+                return Ok(v);
+            }
+            if st.closed {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            st = self.shared.cv.wait(st).unwrap();
         }
     }
 
@@ -138,6 +246,8 @@ impl<T> Receiver<T> {
         let mut st = self.shared.state.lock().unwrap();
         loop {
             if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.shared.cv_space.notify_one();
                 return Ok(v);
             }
             if st.closed {
@@ -160,6 +270,7 @@ impl<T> Receiver<T> {
         st.closed = true;
         drop(st);
         self.shared.cv.notify_all();
+        self.shared.cv_space.notify_all();
     }
 
     /// Number of items currently queued (racy; diagnostics only).
@@ -175,8 +286,23 @@ impl<T> Receiver<T> {
 
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().receivers += 1;
         Receiver {
             shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            // Nobody can ever drain the queue again: close so senders see
+            // an abandoned channel instead of enqueueing into the void.
+            st.closed = true;
+            drop(st);
+            self.shared.cv_space.notify_all();
         }
     }
 }
@@ -310,6 +436,85 @@ mod tests {
         // and the channel stays closed for late senders
         let (rtx, _rrx) = mpsc::channel();
         assert!(tx.send((0, rtx)).is_err());
+    }
+
+    #[test]
+    fn bounded_try_send_reports_full_until_drained() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        match tx.try_send(3) {
+            Err(TrySendError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        // popping one frees one slot
+        assert_eq!(rx.try_recv(), Ok(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(rx.try_recv(), Ok(2));
+        assert_eq!(rx.try_recv(), Ok(3));
+    }
+
+    #[test]
+    fn bounded_blocking_send_waits_for_space() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let t = {
+            let tx = tx.clone();
+            thread::spawn(move || tx.send(2).unwrap())
+        };
+        // The sender is blocked on the full queue until we drain.
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.try_recv(), Ok(1));
+        t.join().unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(1)), Ok(2));
+    }
+
+    #[test]
+    fn unbounded_try_send_never_full() {
+        let (tx, rx) = channel::<u32>();
+        for i in 0..10_000 {
+            tx.try_send(i).unwrap();
+        }
+        assert_eq!(rx.len(), 10_000);
+    }
+
+    #[test]
+    fn dropping_last_receiver_closes_channel() {
+        let (tx, rx) = bounded::<u32>(4);
+        let rx2 = rx.clone();
+        assert!(!tx.is_closed());
+        drop(rx);
+        assert!(!tx.is_closed(), "one receiver still alive");
+        drop(rx2);
+        assert!(tx.is_closed());
+        match tx.try_send(1) {
+            Err(TrySendError::Closed(1)) => {}
+            other => panic!("expected Closed(1), got {other:?}"),
+        }
+        assert!(tx.send(2).is_err());
+    }
+
+    #[test]
+    fn receiver_drop_unblocks_full_sender() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let t = thread::spawn(move || tx.send(2));
+        thread::sleep(Duration::from_millis(20));
+        drop(rx); // closes; the blocked sender must wake with an error
+        assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn recv_blocks_until_item_or_disconnect() {
+        let (tx, rx) = channel::<u32>();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(10));
+            tx.send(7).unwrap();
+        });
+        assert_eq!(rx.recv(), Ok(7));
+        t.join().unwrap();
+        // all senders gone -> Disconnected
+        assert_eq!(rx.recv(), Err(RecvTimeoutError::Disconnected));
     }
 
     #[test]

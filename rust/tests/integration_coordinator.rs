@@ -1,14 +1,17 @@
 //! Integration: the full coordinator stack (engine pool + scheduler
 //! workers + HTTP server) over mock engines — hermetic, no artifacts
-//! needed — plus one real-engine smoke when artifacts exist.
+//! needed — plus one real-engine smoke when artifacts exist. Includes
+//! the streaming lifecycle surface: SSE over a real socket, queue-full
+//! shedding (429), and client-disconnect cancellation.
 
 use std::time::Duration;
 
 use anyhow::bail;
-use asarm::coordinator::http::{http_get, http_post, HttpServer};
+use asarm::coordinator::http::{http_get, http_post, http_post_stream, HttpServer};
+use asarm::coordinator::lifecycle::Event;
 use asarm::coordinator::scheduler::{spawn, spawn_pool, SchedulerConfig, SchedulerHandle};
 use asarm::coordinator::{InfillRequest, Metrics, ReplicaState};
-use asarm::runtime::mock::MockEngine;
+use asarm::runtime::mock::{MockEngine, SlowEngine};
 use asarm::runtime::{Engine, EnginePool, PoolConfig};
 use asarm::util::json::Json;
 
@@ -156,7 +159,7 @@ fn draft_field_and_speculation_telemetry_over_http() {
 #[test]
 fn replica_speculation_counters_sum_to_aggregate() {
     let (handle, metrics) = mock_pool(2, 2, &[]);
-    let rxs: Vec<_> = (0..10)
+    let handles: Vec<_> = (0..10)
         .map(|i| {
             handle
                 .submit(InfillRequest {
@@ -167,8 +170,8 @@ fn replica_speculation_counters_sum_to_aggregate() {
                 .unwrap()
         })
         .collect();
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
+    for rh in handles {
+        rh.wait().unwrap();
     }
     let stats = handle.replica_stats();
     let prop_sum: u64 = stats.iter().map(|r| r.proposed()).sum();
@@ -215,7 +218,7 @@ fn sequential_vs_assd_nfe_over_http() {
 #[test]
 fn pool_serves_requests_across_multiple_workers() {
     let (handle, metrics) = mock_pool(2, 1, &[]);
-    let rxs: Vec<_> = (0..32)
+    let handles: Vec<_> = (0..32)
         .map(|i| {
             handle
                 .submit(InfillRequest {
@@ -226,8 +229,8 @@ fn pool_serves_requests_across_multiple_workers() {
                 .unwrap()
         })
         .collect();
-    for rx in rxs {
-        let resp = rx.recv().unwrap().unwrap();
+    for rh in handles {
+        let resp = rh.wait().unwrap();
         assert_eq!(resp.n_generated, 8);
     }
     assert_eq!(metrics.requests(), 32);
@@ -251,7 +254,7 @@ fn pool_serves_requests_across_multiple_workers() {
 #[test]
 fn pool_aggregate_metrics_equal_sum_of_replica_stats() {
     let (handle, metrics) = mock_pool(3, 2, &[]);
-    let rxs: Vec<_> = (0..24)
+    let handles: Vec<_> = (0..24)
         .map(|i| {
             handle
                 .submit(InfillRequest {
@@ -262,8 +265,8 @@ fn pool_aggregate_metrics_equal_sum_of_replica_stats() {
                 .unwrap()
         })
         .collect();
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
+    for rh in handles {
+        rh.wait().unwrap();
     }
     let stats = handle.replica_stats();
     assert_eq!(stats.len(), 3);
@@ -289,7 +292,7 @@ fn pool_aggregate_metrics_equal_sum_of_replica_stats() {
 #[test]
 fn pool_survives_failed_replica_without_stalling_queue() {
     let (handle, metrics) = mock_pool(3, 2, &[1]);
-    let rxs: Vec<_> = (0..12)
+    let handles: Vec<_> = (0..12)
         .map(|i| {
             handle
                 .submit(InfillRequest {
@@ -300,8 +303,8 @@ fn pool_survives_failed_replica_without_stalling_queue() {
                 .unwrap()
         })
         .collect();
-    for rx in rxs {
-        let resp = rx.recv().unwrap().unwrap();
+    for rh in handles {
+        let resp = rh.wait().unwrap();
         assert_eq!(resp.n_generated, 4);
     }
     assert_eq!(metrics.requests(), 12);
@@ -344,6 +347,231 @@ fn replicas_endpoint_reports_per_worker_stats() {
         .map(|r| r.get("requests").unwrap().as_f64().unwrap())
         .sum();
     assert_eq!(served, 1.0);
+}
+
+// --- streaming lifecycle over a real socket ----------------------------
+
+/// A server whose engine sleeps per forward: slow enough to observe
+/// shedding and disconnect-cancellation deterministically over HTTP.
+fn slow_server(
+    max_batch: usize,
+    queue_depth: usize,
+    delay_ms: u64,
+) -> (std::net::SocketAddr, SchedulerHandle, Metrics) {
+    let metrics = Metrics::new();
+    let handle = spawn(
+        move || {
+            Ok(Box::new(SlowEngine::new(
+                MockEngine::new(5, 32, 258, 1.0),
+                Duration::from_millis(delay_ms),
+            )) as Box<dyn Engine>)
+        },
+        SchedulerConfig {
+            max_batch,
+            queue_depth,
+            idle_poll: Duration::from_millis(2),
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle.clone(), metrics.clone(), 4).unwrap();
+    (server.serve_background(), handle, metrics)
+}
+
+/// ACCEPTANCE: the SSE stream reassembles to exactly the blocking-path
+/// text for the same seed — for all three decode machines and every
+/// drafter — and the concatenated `text_delta`s match too.
+#[test]
+fn sse_stream_reassembles_to_blocking_text_for_all_machines() {
+    let (addr, _metrics) = mock_server(2);
+    let configs: &[(&str, &str)] = &[
+        ("assd", "self"),
+        ("assd", "bigram"),
+        ("assd", "lookup"),
+        ("sequential", "self"),
+        ("diffusion", "self"),
+    ];
+    let text = "ab________cd";
+    for (sampler, draft) in configs {
+        let body = format!(
+            r#"{{"text":"{text}","sampler":"{sampler}","seed":17,
+                "draft":{{"kind":"{draft}","max_len":4}}}}"#
+        );
+        let (code, blocking) = http_post(&addr, "/v1/infill", &body).unwrap();
+        assert_eq!(code, 200, "{blocking}");
+        let blocking_text = Json::parse(&blocking)
+            .unwrap()
+            .get("text")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+
+        let resp = http_post_stream(&addr, "/infill/stream", &body).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert_eq!(
+            resp.header("content-type"),
+            Some("text/event-stream"),
+            "not SSE"
+        );
+        let mut bytes = text.as_bytes().to_vec();
+        let mut deltas = String::new();
+        let mut commits = 0usize;
+        let mut done_text = None;
+        for ev in &resp.events {
+            let j = Json::parse(&ev.data).unwrap();
+            match ev.event.as_str() {
+                "commit" => {
+                    let ps = j.get("positions").unwrap().as_arr().unwrap();
+                    let ts = j.get("tokens").unwrap().as_arr().unwrap();
+                    for (p, t) in ps.iter().zip(ts) {
+                        bytes[p.as_usize().unwrap()] = t.as_usize().unwrap() as u8;
+                        commits += 1;
+                    }
+                    deltas.push_str(j.get("text_delta").unwrap().as_str().unwrap());
+                }
+                "done" => {
+                    done_text = Some(j.get("text").unwrap().as_str().unwrap().to_string());
+                }
+                other => panic!("unexpected event {other}: {}", ev.data),
+            }
+        }
+        let tag = format!("{sampler}/{draft}");
+        assert_eq!(commits, 8, "{tag}: each target streamed exactly once");
+        assert_eq!(done_text.as_deref(), Some(blocking_text.as_str()), "{tag}");
+        assert_eq!(
+            String::from_utf8_lossy(&bytes).into_owned(),
+            blocking_text,
+            "{tag}: positional reassembly diverged"
+        );
+        assert_eq!(deltas, blocking_text, "{tag}: delta stream diverged");
+    }
+    // TTFT / ITL made it into the aggregate metrics
+    let (_, m) = http_get(&addr, "/metrics").unwrap();
+    let j = Json::parse(&m).unwrap();
+    assert!(j.get("ttft_mean_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// ACCEPTANCE: a full admission queue sheds with 429 + Retry-After on
+/// BOTH infill endpoints, and /metrics counts every shed.
+#[test]
+fn queue_full_returns_429_with_retry_after_and_counts_shed() {
+    let (addr, handle, metrics) = slow_server(1, 1, 20);
+    let long = format!("ab{}cd", "_".repeat(12));
+    // Occupy the only batch slot (first commit proves admission)...
+    let in_slot = handle
+        .submit(InfillRequest {
+            text: long.clone(),
+            seed: 1,
+            sampler: asarm::coordinator::SamplerKind::Sequential,
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(matches!(in_slot.next_event(), Some(Event::Committed { .. })));
+    // ...fill the queue (depth 1)...
+    let _queued = handle
+        .submit(InfillRequest {
+            text: "ab____cd".into(),
+            seed: 2,
+            ..Default::default()
+        })
+        .unwrap();
+    // ...then both HTTP endpoints must shed.
+    let body = r#"{"text":"ab____cd","seed":3}"#;
+    let resp = http_post_stream(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(resp.status, 429, "{}", resp.body);
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert!(resp.body.contains("queue full"), "{}", resp.body);
+    let resp = http_post_stream(&addr, "/infill/stream", body).unwrap();
+    assert_eq!(resp.status, 429, "{}", resp.body);
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert_eq!(metrics.shed(), 2);
+    let (_, m) = http_get(&addr, "/metrics").unwrap();
+    let j = Json::parse(&m).unwrap();
+    assert_eq!(j.get("shed").unwrap().as_f64(), Some(2.0));
+}
+
+/// A client that disconnects mid-stream flips the cancel token: the
+/// scheduler frees the slot and books a cancellation instead of decoding
+/// to completion.
+#[test]
+fn client_disconnect_mid_stream_cancels_request() {
+    use std::io::{Read, Write};
+    let (addr, _handle, metrics) = slow_server(1, 16, 10);
+    let body = format!(r#"{{"text":"ab{}cd","sampler":"sequential","seed":4}}"#, "_".repeat(12));
+    let mut socket = std::net::TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "POST /infill/stream HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    socket.write_all(req.as_bytes()).unwrap();
+    socket
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    // Read until the first commit event proves the decode is mid-flight,
+    // then vanish without a trace.
+    let mut seen = Vec::new();
+    let mut buf = [0u8; 1024];
+    while !String::from_utf8_lossy(&seen).contains("event: commit") {
+        let n = socket.read(&mut buf).unwrap();
+        assert!(n > 0, "server closed before first commit");
+        seen.extend_from_slice(&buf[..n]);
+    }
+    drop(socket);
+    // The server notices on its next write (or keepalive) and cancels.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while metrics.cancelled() == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "disconnect never cancelled the request"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(metrics.requests(), 0, "cancelled decode must not complete");
+}
+
+/// The blocking endpoint also notices a vanished client (socket probe
+/// between events): the motivating "dead client occupies a batch slot
+/// forever" failure is fixed on BOTH endpoints.
+#[test]
+fn client_disconnect_on_blocking_endpoint_cancels_request() {
+    use std::io::Write;
+    let (addr, _handle, metrics) = slow_server(1, 16, 10);
+    let body = format!(r#"{{"text":"ab{}cd","sampler":"sequential","seed":6}}"#, "_".repeat(12));
+    let mut socket = std::net::TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "POST /v1/infill HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    socket.write_all(req.as_bytes()).unwrap();
+    // Vanish without reading the response: the server must cancel the
+    // decode instead of running it to completion for nobody.
+    drop(socket);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while metrics.cancelled() == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "blocking disconnect never cancelled the request"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(metrics.requests(), 0, "cancelled decode must not complete");
+}
+
+/// Deadline expiry over HTTP: the blocking endpoint reports the partial
+/// progress and /metrics counts it.
+#[test]
+fn timeout_ms_expires_over_http_with_partial_progress() {
+    let (addr, _handle, metrics) = slow_server(1, 16, 10);
+    let body = format!(
+        r#"{{"text":"ab{}cd","sampler":"sequential","seed":5,"timeout_ms":45}}"#,
+        "_".repeat(12)
+    );
+    let (code, resp) = http_post(&addr, "/v1/infill", &body).unwrap();
+    assert_eq!(code, 400, "{resp}");
+    assert!(resp.contains("deadline exceeded"), "{resp}");
+    assert!(resp.contains("/12 tokens"), "{resp}");
+    assert_eq!(metrics.deadline_expired(), 1);
 }
 
 /// Real-engine smoke: full HTTP round trip through the XLA engine.
