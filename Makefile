@@ -49,13 +49,20 @@ bench:
 	cargo bench --bench perf_streaming
 
 # Tiny Table-1 run (drafter sweep included) plus the compact-vs-dense
-# forward-ABI ablation and the streaming-lifecycle TTFT/ITL sweep, all on
-# the analytic mock engine: no artifacts or checkpoint needed, finishes
-# in seconds. CI smoke — perf_engine writes BENCH_engine.json and exits
-# non-zero if the compact path regresses tokens/sec vs dense or the
-# paths' outputs diverge; perf_streaming writes BENCH_streaming.json and
-# exits non-zero if streaming TTFT stops beating the blocking path's
-# total latency.
+# forward-ABI ablation, the incremental-vs-compact KV-cache ablation, and
+# the streaming-lifecycle TTFT/ITL sweep, all on the analytic mock
+# engine: no artifacts or checkpoint needed, finishes in seconds. CI
+# smoke — perf_engine writes BENCH_engine.json + BENCH_incremental.json
+# and exits non-zero if the compact path regresses tokens/sec vs dense,
+# if the incremental path regresses vs compact (or its modeled
+# per-iteration compute stops beating compact's), or any paths' outputs
+# diverge; perf_streaming writes BENCH_streaming.json and exits non-zero
+# if streaming TTFT stops beating the blocking path's total latency.
+#
+# The BENCH_*.json files land at the REPO ROOT (cargo bench runs from
+# here) and are COMMITTED, so the perf trajectory is tracked in-tree
+# across PRs instead of living only in CI artifacts: after a bench run
+# with meaningful changes, `git add BENCH_*.json`.
 bench-smoke:
 	ASARM_BENCH_MOCK=1 ASARM_BENCH_SEQS=2 cargo bench --bench table1_assd
 	ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine

@@ -12,10 +12,19 @@ Exports into artifacts/:
                           want[B,R]) -> (logits[B,R,V],): masks rebuilt on
                           device from (order, m, known), only the R
                           requested rows gathered back to the host
+  fwd_inc_b{B}.hlo.txt    INCREMENTAL forward(theta, tokens, order, m,
+                          known, cached, nrows, rows[B,R], cache_k, cache_v
+                          [B,L,N,D]) -> (logits[B,R,V], k_new, v_new
+                          [B,L,R,D]): only the R active rows are computed,
+                          against the persistent per-lane K/V cache
+  fwd_inc_pre_b1.hlo.txt  prefill(theta, tokens, order, sigma, m,
+                          committed) -> (cache_k, cache_v [B,L,N,D]):
+                          seeds a lane's cache (one h-stream pass)
   train_step_b{B}.hlo.txt adamw step -> (theta', m', v', loss)
-  model_meta.json         dims + flat-theta layout (config.py) + ord_rows
-                          (the gather width R the compact family was
-                          lowered with)
+  model_meta.json         dims + flat-theta layout (config.py) + ord_rows /
+                          inc_rows (the gather / active-row widths the
+                          compact and incremental families were lowered
+                          with) + inc_cache (per-lane cache shape)
   params_init.bin         random-init flat theta, little-endian f32
   fixtures/masks.json     golden sigma->mask fixtures for rust parity tests
 """
@@ -33,7 +42,14 @@ from jax._src.lib import xla_client as xc
 
 from .config import DEFAULT, ModelConfig
 from .fixtures import export_mask_fixtures
-from .model import adam_train_step, forward, forward_ord, init_params
+from .model import (
+    adam_train_step,
+    forward,
+    forward_inc,
+    forward_ord,
+    init_params,
+    prefill_inc,
+)
 
 FWD_BATCH_SIZES = (1, 4)
 TRAIN_BATCH_SIZES = (4,)
@@ -42,6 +58,14 @@ TRAIN_BATCH_SIZES = (4,)
 # Engine::max_gather_rows); diffusion steps wanting more rows fall back to
 # the dense path.
 FWD_ORD_ROWS = 32
+# Active-row width of the incremental fwd_inc family. An incremental step
+# carries last iteration's committed rows (<= window) PLUS the current
+# window's want rows (<= window), so 2x the compact gather width keeps the
+# scheduler's window clamp unchanged when both families ship.
+FWD_INC_ROWS = 64
+# Prefill runs once per admitted sequence (the bidirectional prompt block
+# cannot be appended in causal chunks), so batch 1 suffices.
+INC_PREFILL_BATCH_SIZES = (1,)
 
 
 def to_hlo_text(lowered) -> str:
@@ -93,6 +117,55 @@ def export_forward_ord(
     return to_hlo_text(lowered)
 
 
+def export_forward_inc(
+    cfg: ModelConfig, batch: int, rows: int, use_pallas: bool = True
+) -> str:
+    """Lower the incremental forward: R active rows against the persistent
+    per-layer K/V cache ([B, L, N, D], order-major)."""
+    n, d, nl = cfg.seq_len, cfg.d_model, cfg.n_layers
+    del use_pallas  # rectangular q-vs-kv attention uses the jnp reference
+
+    def fn(theta, tokens, order, m, known, cached, nrows, rows_, cache_k, cache_v):
+        return forward_inc(
+            cfg, theta, tokens, order, m, known, cached, nrows, rows_, cache_k, cache_v
+        )
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch, rows), jnp.int32),
+        jax.ShapeDtypeStruct((batch, nl, n, d), jnp.float32),
+        jax.ShapeDtypeStruct((batch, nl, n, d), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def export_prefill_inc(cfg: ModelConfig, batch: int, use_pallas: bool = True) -> str:
+    """Lower the incremental-path prefill: one content-stream pass that
+    seeds a lane's K/V cache (order-major, zeroed beyond `committed`)."""
+    n = cfg.seq_len
+
+    def fn(theta, tokens, order, sigma, m, committed):
+        return prefill_inc(
+            cfg, theta, tokens, order, sigma, m, committed, use_pallas=use_pallas
+        )
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
 def export_train_step(cfg: ModelConfig, batch: int, use_pallas: bool = True) -> str:
     n = cfg.seq_len
     p = cfg.n_params
@@ -132,10 +205,18 @@ def main() -> None:
         help="row-gather width R of the compact fwd_ord_b{B} artifacts "
         "(recorded as ord_rows in model_meta.json)",
     )
+    ap.add_argument(
+        "--inc-rows",
+        type=int,
+        default=FWD_INC_ROWS,
+        help="active-row width of the incremental fwd_inc_b{B} artifacts "
+        "(recorded as inc_rows in model_meta.json)",
+    )
     args = ap.parse_args()
     cfg = DEFAULT
     use_pallas = not args.no_pallas
     rows = min(args.ord_rows, cfg.seq_len)
+    inc_rows = max(2, min(args.inc_rows, cfg.seq_len))
     os.makedirs(args.out_dir, exist_ok=True)
     os.makedirs(os.path.join(args.out_dir, "fixtures"), exist_ok=True)
 
@@ -153,6 +234,20 @@ def main() -> None:
             f.write(text)
         print(f"wrote {path} ({len(text)} chars)")
 
+    for b in FWD_BATCH_SIZES:
+        text = export_forward_inc(cfg, b, inc_rows, use_pallas)
+        path = os.path.join(args.out_dir, f"fwd_inc_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b in INC_PREFILL_BATCH_SIZES:
+        text = export_prefill_inc(cfg, b, use_pallas)
+        path = os.path.join(args.out_dir, f"fwd_inc_pre_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
     for b in TRAIN_BATCH_SIZES:
         text = export_train_step(cfg, b, use_pallas)
         path = os.path.join(args.out_dir, f"train_step_b{b}.hlo.txt")
@@ -166,6 +261,14 @@ def main() -> None:
     # compact family above was lowered with (rust refuses to enable the
     # compact path without it).
     meta["ord_rows"] = rows
+    # Same for the incremental family: the active-row width R and the
+    # per-lane cache shape (order-major per-layer content-stream K/V).
+    meta["inc_rows"] = inc_rows
+    meta["inc_cache"] = {
+        "layers": cfg.n_layers,
+        "slots": cfg.seq_len,
+        "d_model": cfg.d_model,
+    }
     with open(meta_path, "w") as f:
         json.dump(meta, f, indent=1)
     print(f"wrote {meta_path}")

@@ -106,6 +106,21 @@ def forward(
     return logits
 
 
+def _g_allows(oa: jax.Array, ob: jax.Array, m: jax.Array, known: jax.Array) -> jax.Array:
+    """The scalar mask predicate (jnp twin of rust ``mask::g_allows``),
+    broadcast over any compatible shapes: may the query-stream row with
+    order ``oa`` attend the column with order ``ob`` at decode state
+    ``known``? All construction paths — the dense builders, the compact
+    on-device masks, and the incremental path's column masks — are
+    projections of this one predicate."""
+    prompt_col = ob < m
+    return jnp.where(
+        oa < m,
+        prompt_col,
+        jnp.where(oa < known, prompt_col | ((ob < known) & (ob < oa)), ob < known),
+    )
+
+
 def masks_from_order_batched(
     order: jax.Array,  # [B, N] int32, position -> order index
     m: jax.Array,  # [B] int32, prompt sizes
@@ -119,12 +134,7 @@ def masks_from_order_batched(
     ob = order[:, None, :]
     mm = m[:, None, None]
     kk = known[:, None, None]
-    prompt_col = ob < mm
-    g = jnp.where(
-        oa < mm,
-        prompt_col,
-        jnp.where(oa < kk, prompt_col | ((ob < kk) & (ob < oa)), ob < kk),
-    ).astype(jnp.float32)
+    g = _g_allows(oa, ob, mm, kk).astype(jnp.float32)
     n = order.shape[1]
     h = jnp.maximum(g, jnp.eye(n, dtype=jnp.float32)[None, :, :])
     return h, g
@@ -147,6 +157,159 @@ def forward_ord(
     mask_h, mask_g = masks_from_order_batched(order, m, known)
     logits = forward(cfg, theta, tokens, mask_h, mask_g, use_pallas=use_pallas)
     return jnp.take_along_axis(logits, want[:, :, None], axis=1)
+
+
+def prefill_inc(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    tokens: jax.Array,  # [B, N] int32
+    order: jax.Array,  # [B, N] int32, position -> order index
+    sigma: jax.Array,  # [B, N] int32, order index -> position
+    m: jax.Array,  # [B] int32
+    committed: jax.Array,  # [B] int32 — orders < committed hold final tokens
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Incremental-path prefill: one full content-stream (h) pass that
+    seeds a sequence's per-layer K/V cache.
+
+    The prompt block attends bidirectionally (every prompt row sees every
+    prompt column), so prompt rows cannot be appended to the cache in
+    causal chunks — they must all be computed together, once. This lowers
+    as ``fwd_inc_pre_b{B}.hlo.txt``: it runs the h stream only (no query
+    stream, no logits) under the verify-family masks, then gathers the
+    per-layer K/V rows into ORDER-major cache layout (slot j holds the
+    K/V of position sigma[j]) and zeroes slots >= committed.
+
+    Returns (cache_k, cache_v), each [B, L, N, D] f32.
+    """
+    p = unpack(cfg, theta)
+    attn = masked_attention if use_pallas else masked_attention_ref
+    b, n = tokens.shape
+    oa = order[:, :, None]
+    ob = order[:, None, :]
+    mm = m[:, None, None]
+    # Committed rows' attention set is state-independent (a known row
+    # attends prompt + strictly-earlier-in-order; this is what makes the
+    # cache valid forever), so the full-knowledge masks are correct for
+    # every slot the output keeps. Rows >= committed are computed too but
+    # zeroed below — nothing committed ever attends them.
+    g_full = _g_allows(oa, ob, mm, jnp.full_like(mm, n)).astype(jnp.float32)
+    mask_h = jnp.maximum(g_full, jnp.eye(n, dtype=jnp.float32)[None, :, :])
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :n, :]
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        hn = _layer_norm(h, p["ln1_s"][l], p["ln1_b"][l])
+        k = hn @ p["wk"][l]
+        v = hn @ p["wv"][l]
+        ks.append(k)
+        vs.append(v)
+        qh = _heads(hn @ p["wq"][l], cfg.n_heads)
+        ah = _unheads(attn(qh, _heads(k, cfg.n_heads), _heads(v, cfg.n_heads), mask_h))
+        h = h + ah @ p["wo"][l]
+        hn2 = _layer_norm(h, p["ln2_s"][l], p["ln2_b"][l])
+        h = h + jax.nn.gelu(hn2 @ p["w1"][l] + p["b1"][l]) @ p["w2"][l] + p["b2"][l]
+    k_pos = jnp.stack(ks, axis=1)  # [B, L, N, D], position-major
+    v_pos = jnp.stack(vs, axis=1)
+    idx = sigma[:, None, :, None]  # order-major gather: slot j <- sigma[j]
+    live = (jnp.arange(n)[None, :] < committed[:, None]).astype(jnp.float32)
+    live = live[:, None, :, None]
+    cache_k = jnp.take_along_axis(k_pos, idx, axis=2) * live
+    cache_v = jnp.take_along_axis(v_pos, idx, axis=2) * live
+    return cache_k, cache_v
+
+
+def forward_inc(
+    cfg: ModelConfig,
+    theta: jax.Array,
+    tokens: jax.Array,  # [B, N] int32 — full buffer (active-row embeddings)
+    order: jax.Array,  # [B, N] int32
+    m: jax.Array,  # [B] int32
+    known: jax.Array,  # [B] int32 — decode state for the query-stream rows
+    cached: jax.Array,  # [B] int32 — cache slots < cached are live
+    nrows: jax.Array,  # [B] int32 — real entries of `rows`
+    rows: jax.Array,  # [B, R] int32 — active positions: newly-committed
+    #   rows to append (first entries, orders cached..) then the window/
+    #   want rows; padded with position 0 beyond nrows
+    cache_k: jax.Array,  # [B, L, N, D] f32, ORDER-major (slot j = order j)
+    cache_v: jax.Array,  # [B, L, N, D] f32
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Incremental forward: compute ONLY the R active rows, attending the
+    persistent per-layer content-stream K/V cache plus the active rows
+    themselves. Per iteration this is O(R·(C+R)·D) attention instead of
+    the full O(N²·D) — the compute half of the compact-ABI story (which
+    removed the O(N²) *traffic*; see docs/ARCHITECTURE.md §Incremental
+    forward & KV cache).
+
+    Masks are per-column evaluations of the same ``_g_allows`` predicate
+    as every other path: active h rows use the causal committed predicate
+    (prompt | earlier-in-order | self) — exact for appended committed rows
+    and for verify-state windows, and harmless for draft-state windows,
+    whose columns nothing known ever attends; g rows use the
+    (m, known)-state predicate over cache and active columns.
+
+    Attention here is the pure-jnp reference path (rectangular q-vs-kv
+    shapes; the Pallas kernel tiles square [N, N] blocks), which the
+    kernel itself is pinned allclose to.
+
+    Returns (logits [B, R, V], k_new [B, L, R, D], v_new [B, L, R, D]):
+    logits for every active row (the caller slices its want rows), and
+    the per-layer K/V of every active row (the caller appends only the
+    committed prefix of them to its cache).
+    """
+    p = unpack(cfg, theta)
+    b, n = tokens.shape
+    r = rows.shape[1]
+    f32 = jnp.float32
+    row_tok = jnp.take_along_axis(tokens, rows, axis=1)  # [B, R]
+    row_ord = jnp.take_along_axis(order, rows, axis=1)  # [B, R]
+    pos_e = p["pos_emb"][rows]  # [B, R, D]
+    h = p["tok_emb"][row_tok] + pos_e
+    g = pos_e + p["q_bias"]
+    real = jnp.arange(r)[None, :] < nrows[:, None]  # [B, R]
+    oa = row_ord[:, :, None]  # [B, R, 1] query orders
+    mm = m[:, None, None]
+    kk = known[:, None, None]
+    cc = cached[:, None, None]
+    # cache columns: slot j holds the committed row with order j
+    j = jnp.arange(n)[None, None, :]  # [1, 1, N]
+    live = j < cc
+    h_cache = (live & ((j < mm) | (j < oa))).astype(f32)  # [B, R, N]
+    g_cache = (live & _g_allows(oa, j, mm, kk)).astype(f32)
+    # active columns: column r2 is active row r2 (order row_ord[r2])
+    ob = row_ord[:, None, :]  # [B, 1, R]
+    col_real = real[:, None, :]
+    eye = jnp.eye(r, dtype=bool)[None, :, :]
+    h_act = ((col_real & ((ob < mm) | (ob < oa))) | eye).astype(f32)  # [B, R, R]
+    g_act = (col_real & _g_allows(oa, ob, mm, kk)).astype(f32)
+    mask_h = jnp.concatenate([h_cache, h_act], axis=2)  # [B, R, N+R]
+    mask_g = jnp.concatenate([g_cache, g_act], axis=2)
+    nh = cfg.n_heads
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        hn = _layer_norm(h, p["ln1_s"][l], p["ln1_b"][l])
+        gn = _layer_norm(g, p["ln1_s"][l], p["ln1_b"][l])
+        k_act = hn @ p["wk"][l]  # [B, R, D]
+        v_act = hn @ p["wv"][l]
+        ks.append(k_act)
+        vs.append(v_act)
+        k_cols = _heads(jnp.concatenate([cache_k[:, l], k_act], axis=1), nh)
+        v_cols = _heads(jnp.concatenate([cache_v[:, l], v_act], axis=1), nh)
+        qh = _heads(hn @ p["wq"][l], nh)
+        qg = _heads(gn @ p["wq"][l], nh)
+        ah = _unheads(masked_attention_ref(qh, k_cols, v_cols, mask_h))
+        ag = _unheads(masked_attention_ref(qg, k_cols, v_cols, mask_g))
+        h = h + ah @ p["wo"][l]
+        g = g + ag @ p["wo"][l]
+        hn2 = _layer_norm(h, p["ln2_s"][l], p["ln2_b"][l])
+        gn2 = _layer_norm(g, p["ln2_s"][l], p["ln2_b"][l])
+        h = h + jax.nn.gelu(hn2 @ p["w1"][l] + p["b1"][l]) @ p["w2"][l] + p["b2"][l]
+        g = g + jax.nn.gelu(gn2 @ p["w1"][l] + p["b1"][l]) @ p["w2"][l] + p["b2"][l]
+    gf = _layer_norm(g, p["lnf_s"], p["lnf_b"])
+    logits = gf @ p["tok_emb"].T + p["out_b"]
+    k_new = jnp.stack(ks, axis=1)  # [B, L, R, D]
+    v_new = jnp.stack(vs, axis=1)
+    return logits, k_new, v_new
 
 
 def loss_fn(

@@ -17,10 +17,12 @@ from compile.config import TINY
 from compile.model import (
     adam_train_step,
     forward,
+    forward_inc,
     forward_ord,
     init_params,
     loss_fn,
     masks_from_order_batched,
+    prefill_inc,
 )
 from compile import masks as M
 
@@ -183,6 +185,90 @@ def test_forward_ord_matches_dense_forward_plus_gather(theta):
     np.testing.assert_allclose(
         np.asarray(compact)[0], gathered_dense, rtol=1e-5, atol=1e-5
     )
+
+
+def test_incremental_forward_matches_compact_across_a_decode(theta):
+    """Drive a full ASSD-shaped decode through the incremental path —
+    prefill seeds the cache, every iteration appends last round's commits
+    and computes only the active rows — and pin every step's logits to the
+    compact path (forward_ord, itself pinned to dense-forward + gather),
+    and the incrementally-grown cache to a from-scratch prefill at the
+    same committed state."""
+    rng = np.random.default_rng(31)
+    n = CFG.seq_len
+    m = 5
+    vis = sorted(rng.choice(n, size=m, replace=False).tolist())
+    sigma = M.lattice_sigma(vis, n)
+    order = M.order_from_sigma(sigma).astype("int32")
+    toks = np.full((1, n), CFG.MASK, dtype="int32")
+    for p_ in vis:
+        toks[0, p_] = int(rng.integers(0, CFG.MASK))
+
+    def i32(x):
+        return jnp.asarray(np.asarray(x, "int32"))
+
+    def compact_rows(buf, known, want):
+        out = forward_ord(
+            CFG, theta, i32(buf), i32(order[None]), i32([m]), i32([known]),
+            i32(np.array(want, "int32")[None]), use_pallas=False,
+        )
+        return np.asarray(out)[0]
+
+    def inc_rows(buf, known, cached, rows, ck, cv):
+        r = 8
+        padded = list(rows) + [0] * (r - len(rows))
+        logits, k_new, v_new = forward_inc(
+            CFG, theta, i32(buf), i32(order[None]), i32([m]), i32([known]),
+            i32([cached]), i32([len(rows)]), i32(np.array(padded, "int32")[None]),
+            jnp.asarray(ck), jnp.asarray(cv),
+        )
+        return np.asarray(logits)[0], np.asarray(k_new)[0], np.asarray(v_new)[0]
+
+    def prefill(buf, committed):
+        ck, cv = prefill_inc(
+            CFG, theta, i32(buf), i32(order[None]),
+            i32(np.array(sigma, "int32")[None]), i32([m]), i32([committed]),
+            use_pallas=False,
+        )
+        return np.asarray(ck).copy(), np.asarray(cv).copy()
+
+    ck, cv = prefill(toks, m)
+    assert np.all(ck[0, :, m:] == 0.0), "prefill must zero uncommitted slots"
+    cached, c, w = m, m, 3
+    while c < n:
+        t = min(c + w, n)
+        window = [sigma[i] for i in range(c, t)]
+        appends = [sigma[j] for j in range(cached, c)]
+        # draft-state call: appends first, then the window's want rows
+        logits, k_new, v_new = inc_rows(toks, c, cached, appends + window, ck, cv)
+        ref = compact_rows(toks, c, window)
+        np.testing.assert_allclose(
+            logits[len(appends):len(appends) + len(window)], ref,
+            rtol=2e-4, atol=2e-4, err_msg=f"draft logits at c={c}",
+        )
+        for i in range(len(appends)):
+            ck[0, :, cached + i] = k_new[:, i]
+            cv[0, :, cached + i] = v_new[:, i]
+        cached = c
+        # the incrementally-grown cache equals a from-scratch prefill
+        ck_ref, cv_ref = prefill(toks, cached)
+        np.testing.assert_allclose(ck, ck_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(cv, cv_ref, rtol=2e-4, atol=2e-4)
+        # fill drafts and run the verify-state call (known = n, no appends)
+        drafted = toks.copy()
+        for pos in window:
+            drafted[0, pos] = int(rng.integers(0, CFG.MASK))
+        logits, _, _ = inc_rows(drafted, n, cached, window, ck, cv)
+        ref = compact_rows(drafted, n, window)
+        np.testing.assert_allclose(
+            logits[: len(window)], ref, rtol=2e-4, atol=2e-4,
+            err_msg=f"verify logits at c={c}",
+        )
+        # commit an accepted prefix; the rest rolls back to MASK
+        a = int(rng.integers(1, t - c + 1))
+        for i in range(c, c + a):
+            toks[0, sigma[i]] = drafted[0, sigma[i]]
+        c += a
 
 
 def test_train_step_reduces_loss(theta):

@@ -1,25 +1,35 @@
 //! Perf bench (L3/L2 boundary): the compact-vs-dense forward ABI ablation
-//! (same seeds, same σ sweep, machine-readable output in
-//! BENCH_engine.json), forward latency vs batch size, mask construction
-//! cost, and literal upload overhead. Feeds the perf notes in
-//! docs/ARCHITECTURE.md §Compact forward ABI.
+//! and the incremental-vs-compact KV-cache ablation (same seeds, same σ
+//! sweep, machine-readable output in BENCH_engine.json and
+//! BENCH_incremental.json), forward latency vs batch size, mask
+//! construction cost, and literal upload overhead. Feeds the perf notes
+//! in docs/ARCHITECTURE.md §Compact forward ABI and §Incremental forward
+//! & KV cache.
 //!
 //! Run: `cargo bench --bench perf_engine` (XLA artifacts), or
 //! `ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine` for the hermetic
-//! MockEngine ablation (`make bench-smoke` / CI). The mock run FAILS
-//! (non-zero exit) if the compact path regresses tokens/sec vs dense or
-//! if the two paths' decode outputs ever diverge — CI uploads the JSON
+//! MockEngine ablations (`make bench-smoke` / CI). The mock run FAILS
+//! (non-zero exit) if the compact path regresses tokens/sec vs dense, if
+//! the incremental path regresses tokens/sec vs compact (with slack — on
+//! the analytic mock the two do the same host arithmetic, so the real
+//! gates are the modeled-compute inequality and bit-identity), if the
+//! incremental path's modeled per-iteration device compute is not
+//! strictly below the compact path's from the second committed iteration
+//! on, or if any path's decode outputs diverge — CI uploads both JSONs
 //! and gates on this exit code.
 
 use anyhow::{bail, Result};
 
 use asarm::coordinator::SamplerKind;
 use asarm::data::masking::lattice_sigma;
+use asarm::decode::DecodeMachine;
 use asarm::draft::{DraftKind, DraftOptions};
-use asarm::eval::harness::{masked_prose_workload, run_sampler_with, WorkItem};
+use asarm::eval::harness::{
+    build_machine, masked_prose_workload, run_sampler_inc, run_sampler_with, WorkItem,
+};
 use asarm::model::mask::{advance_draft_masks, draft_masks, draft_masks_into, Ordering};
 use asarm::runtime::mock::MockEngine;
-use asarm::runtime::{DensePath, Engine, XlaEngine};
+use asarm::runtime::{DensePath, Engine, IncSpec, XlaEngine};
 use asarm::util::bench::{time_it, Table};
 use asarm::util::json::Json;
 use asarm::util::rng::Rng;
@@ -140,6 +150,229 @@ fn write_report(
     Ok(())
 }
 
+/// Per-iteration host↔device traffic model for the INCREMENTAL path
+/// (B = 1): `active` rows computed against a `cached + active`-column
+/// attention, cache mirror re-uploaded, appended K/V rows read back.
+/// The cache upload makes incremental h2d HEAVIER than compact at toy
+/// scale — the incremental win is device COMPUTE, which the cells model
+/// below captures; both are reported so neither story hides the other.
+fn traffic_bytes_inc(
+    n: usize,
+    v: usize,
+    active: usize,
+    layers: usize,
+    d: usize,
+) -> (u64, u64) {
+    let h2d = (4 * (2 * n + 4) + 4 * active + 2 * 4 * layers * n * d) as u64;
+    let d2h = (4 * active * v + 2 * 4 * layers * active * d) as u64;
+    (h2d, d2h)
+}
+
+/// Run the σ sweep through the incremental path (lane 0, reset per item);
+/// returns (outcomes digest, total targets, total seconds).
+fn run_sweep_inc(
+    engine: &dyn Engine,
+    items: &[WorkItem],
+    opts: DraftOptions,
+) -> Result<(Vec<Vec<u32>>, u64, f64)> {
+    let mut digests = Vec::with_capacity(items.len());
+    let mut targets = 0u64;
+    let mut secs = 0.0;
+    for (i, item) in items.iter().enumerate() {
+        let (out, s) = run_sampler_inc(
+            engine,
+            item,
+            SamplerKind::Assd,
+            opts,
+            8,
+            1.0,
+            9000 + i as u64,
+            0,
+        )?;
+        targets += item.ord.n_targets() as u64;
+        secs += s;
+        digests.push(out.tokens);
+    }
+    Ok((digests, targets, secs))
+}
+
+/// Drive one item's decode manually through `path` (incremental when
+/// true, compact otherwise) on a MockEngine, recording the modeled
+/// device-compute delta of every engine call. Both paths are
+/// bit-identical, so the traces are call-for-call comparable.
+fn trace_modeled_cells(
+    engine: &MockEngine,
+    item: &WorkItem,
+    opts: DraftOptions,
+    seed: u64,
+    incremental: bool,
+) -> Result<Vec<u64>> {
+    let mut machine = build_machine(engine, item, SamplerKind::Assd, opts, 8, 1.0, seed);
+    let lane = 0;
+    engine.reset_lane(lane);
+    let mut per_call = vec![];
+    while !machine.done() {
+        let committed = machine.incremental();
+        let before = engine.modeled_cells();
+        let rows = {
+            let req = machine
+                .forward_request()
+                .expect("machine not done but no request");
+            let mut out = match committed {
+                Some(committed) if incremental => engine.forward_inc(&[IncSpec {
+                    spec: req,
+                    committed,
+                    lane,
+                }])?,
+                _ => engine.forward_ord(std::slice::from_ref(&req))?,
+            };
+            out.pop().expect("engine returned no row batch")
+        };
+        machine.absorb(&rows);
+        per_call.push(engine.modeled_cells() - before);
+    }
+    engine.reset_lane(lane);
+    Ok(per_call)
+}
+
+/// The incremental-vs-compact ablation on the mock engine: same seeds,
+/// same σ sweep as the compact-vs-dense ablation, bit-identity asserted,
+/// modeled FLOP/cell + byte model reported, and the acceptance gate —
+/// strictly less modeled per-iteration device compute than the compact
+/// path from the second committed iteration on (the one-time prefill is
+/// amortized by then).
+fn mock_incremental_ablation(out_path: &str) -> Result<()> {
+    let n = 128;
+    let v = 258;
+    // byte-model stand-ins for the mock (mirrors the DEFAULT config)
+    let (layers, d) = (4usize, 128usize);
+    let items = sweep_items(n);
+    let opts = DraftOptions {
+        kind: DraftKind::SelfModel,
+        max_len: 5,
+        adaptive: false,
+    };
+    let e_compact = MockEngine::new(7, n, v, 1.0);
+    let e_inc = MockEngine::new(7, n, v, 1.0);
+    let e_dense = MockEngine::new(7, n, v, 1.0);
+    let (compact_out, targets, compact_s, _) = run_sweep(&e_compact, &items, opts)?;
+    let (inc_out, _, inc_s) = run_sweep_inc(&e_inc, &items, opts)?;
+    let (dense_out, _, _, _) = run_sweep(&DensePath(&e_dense), &items, opts)?;
+    let identical = inc_out == compact_out && inc_out == dense_out;
+    if !identical {
+        bail!(
+            "incremental decode outputs diverged from compact/dense — the KV cache is not a \
+             pure compute optimization"
+        );
+    }
+    let compact_tps = targets as f64 / compact_s.max(1e-12);
+    let inc_tps = targets as f64 / inc_s.max(1e-12);
+    let speedup = inc_tps / compact_tps.max(1e-12);
+
+    // --- modeled per-iteration device compute (the acceptance gate) ---
+    let e_tc = MockEngine::new(7, n, v, 1.0);
+    let e_ti = MockEngine::new(7, n, v, 1.0);
+    let trace_c = trace_modeled_cells(&e_tc, &items[0], opts, 9000, false)?;
+    let trace_i = trace_modeled_cells(&e_ti, &items[0], opts, 9000, true)?;
+    assert_eq!(trace_c.len(), trace_i.len(), "paths made different call counts");
+    let mut cum_c = 0u64;
+    let mut cum_i = 0u64;
+    let mut crossover = None;
+    for (t, (c, i)) in trace_c.iter().zip(&trace_i).enumerate() {
+        cum_c += c;
+        cum_i += i;
+        if crossover.is_none() && cum_i < cum_c {
+            crossover = Some(t + 1);
+        }
+        if t + 1 >= 2 && cum_i >= cum_c {
+            bail!(
+                "incremental cumulative modeled compute {cum_i} >= compact {cum_c} at \
+                 iteration {} — the cache is not amortizing",
+                t + 1
+            );
+        }
+    }
+    // mean active rows per call for the byte model
+    let mean_active = (2 * opts.max_len).min(n);
+    let (h2d_c, d2h_c) = traffic_bytes(n, v, opts.max_len, true);
+    let (h2d_i, d2h_i) = traffic_bytes_inc(n, v, mean_active, layers, d);
+    let results = vec![
+        Json::obj(vec![
+            ("mode", Json::str("compact")),
+            ("tokens_per_sec", Json::num(compact_tps)),
+            ("wall_s", Json::num(compact_s)),
+            ("targets", Json::num(targets as f64)),
+            ("seqs", Json::num(items.len() as f64)),
+            ("modeled_cells_total", Json::num(e_compact.modeled_cells() as f64)),
+            ("bytes_h2d_per_seq_iter", Json::num(h2d_c as f64)),
+            ("bytes_d2h_per_seq_iter", Json::num(d2h_c as f64)),
+        ]),
+        Json::obj(vec![
+            ("mode", Json::str("incremental")),
+            ("tokens_per_sec", Json::num(inc_tps)),
+            ("wall_s", Json::num(inc_s)),
+            ("targets", Json::num(targets as f64)),
+            ("seqs", Json::num(items.len() as f64)),
+            ("modeled_cells_total", Json::num(e_inc.modeled_cells() as f64)),
+            ("bytes_h2d_per_seq_iter", Json::num(h2d_i as f64)),
+            ("bytes_d2h_per_seq_iter", Json::num(d2h_i as f64)),
+        ]),
+    ];
+    let report = Json::obj(vec![
+        ("engine", Json::str("mock")),
+        ("seq_len", Json::num(n as f64)),
+        ("vocab", Json::num(v as f64)),
+        ("outputs_identical", Json::Bool(identical)),
+        ("speedup_incremental_over_compact", Json::num(speedup)),
+        (
+            "modeled_cells_per_iter_compact",
+            Json::Arr(trace_c.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        (
+            "modeled_cells_per_iter_incremental",
+            Json::Arr(trace_i.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        (
+            "cumulative_crossover_iter",
+            crossover.map_or(Json::Null, |c| Json::num(c as f64)),
+        ),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(out_path, report.to_string())?;
+    eprintln!("perf_engine: wrote {out_path}");
+
+    let mut table = Table::new(&["path", "tok/s", "cells total", "h2d B/iter", "d2h B/iter"]);
+    table.row(&[
+        "compact".into(),
+        format!("{compact_tps:.0}"),
+        format!("{}", e_compact.modeled_cells()),
+        format!("{h2d_c}"),
+        format!("{d2h_c}"),
+    ]);
+    table.row(&[
+        "incremental".into(),
+        format!("{inc_tps:.0}"),
+        format!("{}", e_inc.modeled_cells()),
+        format!("{h2d_i}"),
+        format!("{d2h_i}"),
+    ]);
+    println!("\n=== perf_engine (mock): incremental vs compact forward ===");
+    table.print();
+    println!(
+        "speedup {speedup:.2}x wall (mock does identical host math on both paths; the device \
+         win is the cells column), crossover at iteration {crossover:?}, outputs identical: \
+         {identical}"
+    );
+    // Wall-clock gate with slack: the analytic mock computes each wanted
+    // row identically on both paths, so tokens/sec should be ~equal; a
+    // hard < gate would be CI noise, but a 25% regression means the lane
+    // bookkeeping itself got expensive.
+    if inc_tps < 0.75 * compact_tps {
+        bail!("incremental path regressed: {inc_tps:.0} tok/s < 0.75x compact {compact_tps:.0}");
+    }
+    Ok(())
+}
+
 fn mock_ablation(out_path: &str) -> Result<()> {
     let n = 128;
     let v = 258;
@@ -180,9 +413,12 @@ fn mock_ablation(out_path: &str) -> Result<()> {
 fn main() -> Result<()> {
     let out_path =
         std::env::var("ASARM_BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    let inc_out_path = std::env::var("ASARM_BENCH_INC_OUT")
+        .unwrap_or_else(|_| "BENCH_incremental.json".to_string());
     if std::env::var("ASARM_BENCH_MOCK").is_ok() {
-        eprintln!("perf_engine: ASARM_BENCH_MOCK set — hermetic MockEngine ablation");
-        return mock_ablation(&out_path);
+        eprintln!("perf_engine: ASARM_BENCH_MOCK set — hermetic MockEngine ablations");
+        mock_ablation(&out_path)?;
+        return mock_incremental_ablation(&inc_out_path);
     }
 
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -221,6 +457,71 @@ fn main() -> Result<()> {
         eprintln!(
             "perf_engine: no fwd_ord_b* artifacts — regenerate with `make artifacts` for the \
              compact ablation"
+        );
+    }
+
+    // --- incremental-vs-compact on the REAL artifacts (when the
+    //     fwd_inc family shipped): measured tokens/sec; identity is not
+    //     asserted on XLA floats (the mock run pins semantics). ---
+    if engine.inc_lanes() > 0 {
+        let items = sweep_items(n);
+        let opts = DraftOptions {
+            kind: DraftKind::SelfModel,
+            max_len: 5,
+            adaptive: false,
+        };
+        let (_, targets, compact_s, _) = run_sweep(&engine, &items, opts)?;
+        let (_, _, inc_s) = run_sweep_inc(&engine, &items, opts)?;
+        let compact_tps = targets as f64 / compact_s.max(1e-12);
+        let inc_tps = targets as f64 / inc_s.max(1e-12);
+        let speedup = inc_tps / compact_tps.max(1e-12);
+        println!(
+            "\n=== perf_engine: incremental {inc_tps:.1} tok/s vs compact {compact_tps:.1} \
+             tok/s ({speedup:.2}x) ==="
+        );
+        // The incremental step currently re-uploads the packed lane
+        // caches each call (no device-resident donation yet — see
+        // §Incremental forward & KV cache), so on transfer-bound setups
+        // the measured leg can lose to compact even though modeled
+        // compute wins. Surface that loudly instead of shipping it
+        // silently; the mock gates stay the CI arbiter.
+        if inc_tps < compact_tps {
+            eprintln!(
+                "perf_engine: WARNING — measured incremental path is SLOWER than compact \
+                 ({inc_tps:.1} < {compact_tps:.1} tok/s): cache-upload traffic is eating the \
+                 compute win on this setup; consider serving without fwd_inc artifacts until \
+                 device-resident caches land"
+            );
+        }
+        let report = Json::obj(vec![
+            ("engine", Json::str("xla")),
+            ("seq_len", Json::num(n as f64)),
+            ("vocab", Json::num(v as f64)),
+            ("speedup_incremental_over_compact", Json::num(speedup)),
+            (
+                "results",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("mode", Json::str("compact")),
+                        ("tokens_per_sec", Json::num(compact_tps)),
+                        ("wall_s", Json::num(compact_s)),
+                        ("targets", Json::num(targets as f64)),
+                    ]),
+                    Json::obj(vec![
+                        ("mode", Json::str("incremental")),
+                        ("tokens_per_sec", Json::num(inc_tps)),
+                        ("wall_s", Json::num(inc_s)),
+                        ("targets", Json::num(targets as f64)),
+                    ]),
+                ]),
+            ),
+        ]);
+        std::fs::write(&inc_out_path, report.to_string())?;
+        eprintln!("perf_engine: wrote {inc_out_path}");
+    } else {
+        eprintln!(
+            "perf_engine: no fwd_inc_b* artifacts — regenerate with `make artifacts` for the \
+             incremental ablation"
         );
     }
 

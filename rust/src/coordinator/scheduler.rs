@@ -8,24 +8,39 @@
 //! has a free batch slot first picks up the next job, so a slow or dead
 //! replica never stalls admission; when the queue is full, submission is
 //! refused outright (load shedding — the HTTP layer renders it as a 429).
-//! Within a worker the loop is unchanged vLLM-style continuous batching:
-//! each request becomes a decode state machine occupying a batch slot;
-//! every iteration the worker first retires slots whose lifecycle ended
-//! early (cancel token flipped, deadline passed, or the client's event
-//! channel closed — see [`super::lifecycle`]), then gathers each active
-//! machine's pending COMPACT forward request (ordering + decode state +
-//! wanted rows — no materialized masks, see docs/ARCHITECTURE.md §Compact
-//! forward ABI), executes ONE batched `forward_ord` on its own replica,
-//! scatters the gathered rows back, STREAMS each machine's freshly
-//! accepted tokens over its event channel, and retires finished machines
-//! — a slot frees the moment its request completes (or dies) and a queued
-//! request joins mid-flight. Because every machine owns its private RNG
-//! and the engines evaluate sequences independently, retiring one slot
-//! never perturbs its batch-mates' outputs (enforced by tests below).
-//! Draft-phase and verify-phase ASSD sequences still share a batch (both
-//! phases use the same executable and differ only in their per-slot
-//! `(known, want)` state), so the paper's NFE accounting is preserved per
-//! worker.
+//! Within a worker the loop is vLLM-style continuous batching with
+//! LANE-PINNED slots: each request becomes a decode state machine that is
+//! pinned to one batch slot — its engine CACHE LANE — for its whole
+//! lifetime. Every iteration the worker first retires slots whose
+//! lifecycle ended early (cancel token flipped, deadline passed, or the
+//! client's event channel closed — see [`super::lifecycle`]), then
+//! gathers each active machine's pending COMPACT forward request
+//! (ordering + decode state + wanted rows — no materialized masks, see
+//! docs/ARCHITECTURE.md §Compact forward ABI), executes ONE batched
+//! forward on its own replica — `forward_inc` for machines that vouch for
+//! a fixed ordering (their lane carries the persistent K/V cache of their
+//! committed prefix; docs/ARCHITECTURE.md §Incremental forward & KV
+//! cache), `forward_ord` for the rest (diffusion) — scatters the gathered
+//! rows back, STREAMS each machine's freshly accepted tokens over its
+//! event channel, and retires finished machines. A lane frees the moment
+//! its request completes (or dies) — the worker resets the engine-side
+//! lane cache at every handoff, so a newly admitted slot can never
+//! observe a retired request's cache — and a queued request joins
+//! mid-flight. Because every machine owns its private RNG, the engines
+//! evaluate sequences independently, and retiring a slot touches only its
+//! own lane (no re-indexing of survivors, unlike the old `swap_remove`
+//! composition), retirement never perturbs batch-mates' outputs or caches
+//! (enforced by tests below). Draft-phase and verify-phase ASSD sequences
+//! still share a batch (both phases use the same executable and differ
+//! only in their per-slot `(known, want, committed)` state), and each
+//! machine's OWN model-NFE accounting (the Theorem-1 bound) is untouched
+//! by routing. Engine-side launch counts are a different matter: a MIXED
+//! batch on a native-incremental engine costs two launches per iteration
+//! (one `forward_inc`, one `forward_ord`), and XlaEngine books extra
+//! launches for per-lane prefill/catch-up — "one iteration = one engine
+//! launch" holds only for unmixed batches on a single path, exactly as it
+//! already did for the compact path's oversized-want and chunked-batch
+//! routing.
 //!
 //! Aggregate serving metrics ([`Metrics`]) are shared by all workers;
 //! per-replica counters ([`ReplicaStats`]) are exported per worker (GET
@@ -49,7 +64,7 @@ use crate::decode::sequential::SequentialMachine;
 use crate::decode::{DecodeMachine, DecodeOutcome};
 use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
-use crate::runtime::{Engine, EnginePool, PoolConfig};
+use crate::runtime::{Engine, EnginePool, ForwardSpec, IncSpec, PoolConfig};
 use crate::tokenizer::{ByteTokenizer, MASK};
 use crate::util::json::Json;
 use crate::util::mpmc;
@@ -299,13 +314,21 @@ fn run_worker(
     stats: &ReplicaStats,
 ) {
     let tok = ByteTokenizer::new();
-    let mut slots: Vec<Slot> = Vec::new();
+    // Batch slots double as engine CACHE LANES: a request is pinned to
+    // its slot index for its whole lifetime, so the engine can key the
+    // sequence's persistent K/V cache by lane and retiring one slot never
+    // re-indexes (or touches the cache of) a batch-mate — the reason this
+    // is a fixed Vec<Option<Slot>> rather than the old swap_remove Vec.
+    let mut lanes: Vec<Option<Slot>> = (0..cfg.max_batch.max(1)).map(|_| None).collect();
     let mut queue_open = true;
+    fn active(lanes: &[Option<Slot>]) -> usize {
+        lanes.iter().filter(|s| s.is_some()).count()
+    }
 
-    while queue_open || !slots.is_empty() {
-        // --- admission: top up free slots from the shared queue ---
-        while slots.len() < cfg.max_batch && queue_open {
-            let job = if slots.is_empty() {
+    while queue_open || active(&lanes) > 0 {
+        // --- admission: top up free lanes from the shared queue ---
+        while active(&lanes) < lanes.len() && queue_open {
+            let job = if active(&lanes) == 0 {
                 match rx.recv_timeout(cfg.idle_poll) {
                     Ok(j) => j,
                     Err(mpmc::RecvTimeoutError::Timeout) => break,
@@ -333,10 +356,18 @@ fn run_worker(
             }
             match admit(engine, &tok, job.request, cfg.default_draft) {
                 Ok(AdmitResult::Slot(machine, text_len, n_targets)) => {
+                    let lane = lanes
+                        .iter()
+                        .position(|s| s.is_none())
+                        .expect("admission loop guarantees a free lane");
+                    // Lane handoff: whatever the previous occupant left in
+                    // the engine-side cache is dropped BEFORE the new
+                    // request can issue a forward from this lane.
+                    engine.reset_lane(lane);
                     // TTFT and latency_s run from SUBMISSION, the same
                     // clock the deadline uses — queue wait counts.
                     let t0 = job.life.submitted_at();
-                    slots.push(Slot {
+                    lanes[lane] = Some(Slot {
                         machine,
                         life: job.life,
                         t0,
@@ -359,62 +390,104 @@ fn run_worker(
 
         // --- lifecycle check: retire dead slots BEFORE spending compute
         //     on them (cancel token, deadline, abandoned event channel).
-        //     Machines own their RNG and the engine evaluates sequences
-        //     independently, so removal never disturbs batch-mates. ---
-        let mut s = 0;
-        while s < slots.len() {
-            match slots[s].life.abort_reason() {
-                Some(reason) => {
-                    let slot = slots.swap_remove(s);
-                    abort_slot(slot, reason, metrics, stats);
-                }
-                None => s += 1,
+        //     Machines own their RNG, the engine evaluates sequences
+        //     independently, and retirement only clears this slot's own
+        //     lane, so removal never disturbs batch-mates. ---
+        for lane in 0..lanes.len() {
+            let aborted = lanes[lane].as_ref().and_then(|s| s.life.abort_reason());
+            if let Some(reason) = aborted {
+                let slot = lanes[lane].take().expect("checked above");
+                engine.reset_lane(lane);
+                abort_slot(slot, reason, metrics, stats);
             }
         }
-        if slots.is_empty() {
+        let b = active(&lanes);
+        if b == 0 {
             continue;
         }
 
-        // --- one batched COMPACT forward over all active machines ---
+        // --- one batched forward over all active machines ---
         // Each machine's request borrows its own state (tokens, ordering,
-        // wanted rows); no per-slot mask or token buffers are copied —
-        // the engine's compact path packs the O(B·N) index vectors into
-        // its own reusable scratch, and O(B·N²) mask traffic is gone
-        // entirely (docs/ARCHITECTURE.md §Compact forward ABI).
-        let b = slots.len();
+        // wanted rows); no per-slot mask or token buffers are copied.
+        // Machines that vouch for a fixed ordering route through the
+        // lane-pinned INCREMENTAL path (the engine appends their newly
+        // committed rows to the lane cache and computes only the active
+        // rows); the rest (diffusion) stay on the compact path. On
+        // engines without a native incremental path everything takes one
+        // compact call, exactly as before.
         metrics.record_batch_iteration(b);
         stats.record_batch_iteration(b);
-        let result = {
-            let specs: Vec<crate::runtime::ForwardSpec<'_>> = slots
-                .iter_mut()
-                .map(|slot| {
-                    slot.machine
-                        .forward_request()
-                        .expect("active machine must request a forward")
-                })
-                .collect();
-            engine.forward_ord(&specs)
+        let native_inc = engine.inc_lanes() > 0;
+        let (inc_idx, ord_idx, result) = {
+            let mut inc_specs: Vec<IncSpec<'_>> = Vec::new();
+            let mut inc_idx: Vec<usize> = Vec::new();
+            let mut ord_specs: Vec<ForwardSpec<'_>> = Vec::new();
+            let mut ord_idx: Vec<usize> = Vec::new();
+            for (lane, slot) in lanes.iter_mut().enumerate() {
+                let Some(slot) = slot.as_mut() else { continue };
+                // Read the commit level BEFORE the request borrows the
+                // machine (it describes the state the request is from).
+                let committed = slot.machine.incremental();
+                let spec = slot
+                    .machine
+                    .forward_request()
+                    .expect("active machine must request a forward");
+                match committed {
+                    Some(committed) if native_inc => {
+                        inc_idx.push(lane);
+                        inc_specs.push(IncSpec {
+                            spec,
+                            committed,
+                            lane,
+                        });
+                    }
+                    _ => {
+                        ord_idx.push(lane);
+                        ord_specs.push(spec);
+                    }
+                }
+            }
+            let result = (|| -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+                let inc_rows = if inc_specs.is_empty() {
+                    vec![]
+                } else {
+                    engine.forward_inc(&inc_specs)?
+                };
+                let ord_rows = if ord_specs.is_empty() {
+                    vec![]
+                } else {
+                    engine.forward_ord(&ord_specs)?
+                };
+                Ok((inc_rows, ord_rows))
+            })();
+            (inc_idx, ord_idx, result)
         };
-        let rows = match result {
+        let (inc_rows, ord_rows) = match result {
             Ok(r) => r,
             Err(e) => {
                 // Engine failure: fail this worker's active requests; the
                 // queue (and other replicas) keep serving.
-                for slot in slots.drain(..) {
-                    metrics.record_failure();
-                    stats.record_failure();
-                    slot.life.finish(Err(anyhow!("engine error: {e:#}")));
+                for (lane, cell) in lanes.iter_mut().enumerate() {
+                    if let Some(slot) = cell.take() {
+                        engine.reset_lane(lane);
+                        metrics.record_failure();
+                        stats.record_failure();
+                        slot.life.finish(Err(anyhow!("engine error: {e:#}")));
+                    }
                 }
                 continue;
             }
         };
-        debug_assert_eq!(rows.len(), b);
-        for (slot, seq_rows) in slots.iter_mut().zip(&rows) {
-            slot.machine.absorb(seq_rows);
+        debug_assert_eq!(inc_rows.len() + ord_rows.len(), b);
+        for (seq_rows, &lane) in inc_rows.iter().zip(&inc_idx) {
+            lanes[lane].as_mut().expect("routed lane").machine.absorb(seq_rows);
+        }
+        for (seq_rows, &lane) in ord_rows.iter().zip(&ord_idx) {
+            lanes[lane].as_mut().expect("routed lane").machine.absorb(seq_rows);
         }
 
         // --- stream freshly accepted tokens (TTFT/ITL bookkeeping) ---
-        for slot in slots.iter_mut() {
+        for slot in lanes.iter_mut().flatten() {
             let commits = slot.machine.drain_commits();
             if commits.is_empty() {
                 continue;
@@ -435,45 +508,44 @@ fn run_worker(
         }
 
         // --- retire finished machines ---
-        let mut s = 0;
-        while s < slots.len() {
-            if slots[s].machine.done() {
-                let slot = slots.swap_remove(s);
-                // A machine can finish on the very iteration its client
-                // lagged (final commit dropped, cancel flipped) or
-                // vanished: delivering Done then would end the stream as
-                // a SUCCESS with tokens silently missing. Deadline
-                // expiry alone is different — the work is complete and
-                // the stream intact, so the result is still delivered
-                // (stream_broken ignores the deadline, unlike
-                // abort_reason, so an expired deadline cannot mask a
-                // broken stream here).
-                if let Some(reason) = slot.life.stream_broken() {
-                    abort_slot(slot, reason, metrics, stats);
-                    continue;
-                }
-                let latency = slot.t0.elapsed().as_secs_f64();
-                let outcome = slot.machine.outcome();
-                let resp =
-                    outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
-                metrics.record_request(
-                    latency,
-                    resp.n_generated as u64,
-                    resp.model_nfe,
-                    resp.aux_nfe,
-                    resp.proposed,
-                    resp.accepted,
-                );
-                stats.record_request(
-                    resp.n_generated as u64,
-                    resp.model_nfe,
-                    resp.proposed,
-                    resp.accepted,
-                );
-                slot.life.finish(Ok(resp));
-            } else {
-                s += 1;
+        for lane in 0..lanes.len() {
+            let done = lanes[lane].as_ref().is_some_and(|s| s.machine.done());
+            if !done {
+                continue;
             }
+            let slot = lanes[lane].take().expect("checked above");
+            engine.reset_lane(lane);
+            // A machine can finish on the very iteration its client
+            // lagged (final commit dropped, cancel flipped) or
+            // vanished: delivering Done then would end the stream as
+            // a SUCCESS with tokens silently missing. Deadline
+            // expiry alone is different — the work is complete and
+            // the stream intact, so the result is still delivered
+            // (stream_broken ignores the deadline, unlike
+            // abort_reason, so an expired deadline cannot mask a
+            // broken stream here).
+            if let Some(reason) = slot.life.stream_broken() {
+                abort_slot(slot, reason, metrics, stats);
+                continue;
+            }
+            let latency = slot.t0.elapsed().as_secs_f64();
+            let outcome = slot.machine.outcome();
+            let resp = outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
+            metrics.record_request(
+                latency,
+                resp.n_generated as u64,
+                resp.model_nfe,
+                resp.aux_nfe,
+                resp.proposed,
+                resp.accepted,
+            );
+            stats.record_request(
+                resp.n_generated as u64,
+                resp.model_nfe,
+                resp.proposed,
+                resp.accepted,
+            );
+            slot.life.finish(Ok(resp));
         }
     }
 }
@@ -917,6 +989,106 @@ mod tests {
                 ..Default::default()
             })
             .is_err());
+    }
+
+    // --- lane allocator ---------------------------------------------------
+
+    /// Lane reuse across admission/retire interleavings never crosses
+    /// caches: a staggered stream of requests (different lengths, so
+    /// lanes free and refill mid-flight) must produce, for every seed,
+    /// exactly the text an isolated single-lane scheduler produces. The
+    /// mock engine reads committed columns from its lane cache (not the
+    /// live buffer), so a lane-crossing or skipped reset would change
+    /// sampled tokens — and trips its debug asserts first.
+    #[test]
+    fn lane_reuse_across_churn_keeps_outputs_bit_identical() {
+        let texts = |i: usize| -> String {
+            // staggered target counts: 2..12 blanks
+            format!("ab{}cd", "_".repeat(2 + (i * 3) % 11))
+        };
+        let (isolated, _) = mock_handle(1);
+        let reference: Vec<String> = (0..12)
+            .map(|i| {
+                isolated
+                    .infill(InfillRequest {
+                        text: texts(i),
+                        seed: 100 + i as u64,
+                        ..Default::default()
+                    })
+                    .unwrap()
+                    .text
+            })
+            .collect();
+        let (churny, metrics) = mock_handle(3);
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                churny
+                    .submit(InfillRequest {
+                        text: texts(i),
+                        seed: 100 + i as u64,
+                        ..Default::default()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for (i, rh) in handles.into_iter().enumerate() {
+            assert_eq!(rh.wait().unwrap().text, reference[i], "request {i}");
+        }
+        assert_eq!(metrics.requests(), 12);
+    }
+
+    /// Retiring a lane frees it for new admissions without touching
+    /// batch-mates: more requests than lanes all complete, and occupancy
+    /// shows lanes were actually shared over time.
+    #[test]
+    fn lanes_recycle_through_more_requests_than_slots() {
+        let (h, metrics) = mock_handle(2);
+        let handles: Vec<_> = (0..10)
+            .map(|i| {
+                h.submit(InfillRequest {
+                    text: "ab____".into(),
+                    seed: i,
+                    sampler: SamplerKind::Sequential,
+                    ..Default::default()
+                })
+                .unwrap()
+            })
+            .collect();
+        for rh in handles {
+            assert_eq!(rh.wait().unwrap().n_generated, 4);
+        }
+        assert_eq!(metrics.requests(), 10);
+    }
+
+    /// Mixed batches route per slot: incremental-capable machines (ASSD,
+    /// sequential) and non-incremental ones (diffusion) coexist in one
+    /// scheduler batch and all complete correctly.
+    #[test]
+    fn mixed_incremental_and_compact_slots_batch_together() {
+        let (h, metrics) = mock_handle(3);
+        let reqs = [
+            (SamplerKind::Assd, 1u64),
+            (SamplerKind::Diffusion, 2),
+            (SamplerKind::Sequential, 3),
+        ];
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|&(sampler, seed)| {
+                h.submit(InfillRequest {
+                    text: "ab______cd".into(),
+                    sampler,
+                    seed,
+                    ..Default::default()
+                })
+                .unwrap()
+            })
+            .collect();
+        for rh in handles {
+            let resp = rh.wait().unwrap();
+            assert!(!resp.text.contains('_'));
+            assert_eq!(resp.n_generated, 6);
+        }
+        assert_eq!(metrics.requests(), 3);
     }
 
     // --- request lifecycle: streaming, cancellation, deadlines ----------

@@ -28,7 +28,7 @@ use crate::model::mask::Ordering;
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
-use super::sampling::{residual, sample_probs, softmax};
+use super::sampling::{residual_into, sample_probs, softmax_into};
 use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
 
 enum Phase {
@@ -59,6 +59,13 @@ pub struct AssdMachine {
     // exactly the accepted prefix of each speculation window plus the
     // resampled token — never unverified drafts
     committed: Vec<(usize, u32)>,
+    // vocab-sized scratch reused across verify rows (one row copy, its
+    // softmax, and the rejection residual per row — allocating these
+    // fresh per row per iteration was the decode loop's dominant
+    // allocator traffic)
+    row_buf: Vec<f32>,
+    q_buf: Vec<f32>,
+    res_buf: Vec<f32>,
     // stats
     model_nfe: u64,
     aux_nfe: u64,
@@ -113,6 +120,9 @@ impl AssdMachine {
             drafted: vec![],
             draft_probs: vec![],
             committed: vec![],
+            row_buf: vec![],
+            q_buf: vec![],
+            res_buf: vec![],
             model_nfe: 0,
             aux_nfe: 0,
             iterations: 0,
@@ -301,12 +311,13 @@ impl DecodeMachine for AssdMachine {
                     // Gathered rows are window-major: row i-n ↔ order i.
                     let off = (i - self.n) * v;
                     // Same ban as the draft rows: p and q must share support.
-                    let mut row = logits[off..off + v].to_vec();
-                    super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
-                    let q_probs = softmax(&row, self.temp);
+                    self.row_buf.clear();
+                    self.row_buf.extend_from_slice(&logits[off..off + v]);
+                    super::sampling::ban_ids(&mut self.row_buf, &super::sampling::BANNED);
+                    softmax_into(&self.row_buf, self.temp, &mut self.q_buf);
                     let drafted = self.drafted[i - self.n] as usize;
                     let p_probs = &self.draft_probs[i - self.n];
-                    let q_i = q_probs[drafted] as f64;
+                    let q_i = self.q_buf[drafted] as f64;
                     let p_i = (p_probs[drafted] as f64).max(1e-30);
                     let r = self.rng.f64();
                     prop_iter += 1;
@@ -318,11 +329,12 @@ impl DecodeMachine for AssdMachine {
                     if i == self.n {
                         self.first_token_rejections += 1;
                     }
-                    let new_tok = match residual(&q_probs, p_probs) {
-                        Some(res) => sample_probs(&mut self.rng, &res) as u32,
+                    let new_tok = if residual_into(&self.q_buf, p_probs, &mut self.res_buf) {
+                        sample_probs(&mut self.rng, &self.res_buf) as u32
+                    } else {
                         // Residual numerically empty => q == p; sampling q
                         // is then distributionally identical.
-                        None => sample_probs(&mut self.rng, &q_probs) as u32,
+                        sample_probs(&mut self.rng, &self.q_buf) as u32
                     };
                     self.tokens[pos] = new_tok;
                     for j in (i + 1)..self.t {
@@ -344,6 +356,14 @@ impl DecodeMachine for AssdMachine {
 
     fn drain_commits(&mut self) -> Vec<(usize, u32)> {
         std::mem::take(&mut self.committed)
+    }
+
+    /// ASSD's ordering is fixed at admission and orders `< n` are final
+    /// (accepted prefixes + resamples — drafts beyond `n` always roll
+    /// back to MASK on rejection), so the engine may cache exactly those
+    /// rows.
+    fn incremental(&self) -> Option<usize> {
+        Some(self.n)
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {
@@ -714,9 +734,13 @@ mod tests {
                     };
                     let e_compact = MockEngine::new(seed ^ 0xA5, n, v, 1.2);
                     let e_dense = MockEngine::new(seed ^ 0xA5, n, v, 1.2);
+                    let e_inc = MockEngine::new(seed ^ 0xA5, n, v, 1.2);
                     let out_c = run_machine(&e_compact, Box::new(build(seed ^ 7))).unwrap();
                     let out_d =
                         run_machine(&DensePath(&e_dense), Box::new(build(seed ^ 7))).unwrap();
+                    let out_i =
+                        crate::decode::run_machine_inc(&e_inc, Box::new(build(seed ^ 7)), 3)
+                            .unwrap();
                     let tag = format!("{kind:?} adaptive={adaptive} seed={seed}");
                     assert_eq!(out_c.tokens, out_d.tokens, "tokens diverge: {tag}");
                     assert_eq!(out_c.model_nfe, out_d.model_nfe, "model NFE: {tag}");
@@ -729,15 +753,28 @@ mod tests {
                         "window: {tag}"
                     );
                     assert_eq!(e_compact.nfe(), e_dense.nfe(), "engine NFE: {tag}");
+                    // The incremental path rides the same equivalence:
+                    // tokens, NFE, and speculation counters all identical.
+                    assert_eq!(out_i.tokens, out_d.tokens, "inc tokens diverge: {tag}");
+                    assert_eq!(out_i.model_nfe, out_d.model_nfe, "inc model NFE: {tag}");
+                    assert_eq!(out_i.aux_nfe, out_d.aux_nfe, "inc aux NFE: {tag}");
+                    assert_eq!(out_i.iterations, out_d.iterations, "inc iterations: {tag}");
+                    assert_eq!(out_i.proposed, out_d.proposed, "inc proposed: {tag}");
+                    assert_eq!(out_i.accepted, out_d.accepted, "inc accepted: {tag}");
+                    assert_eq!(e_inc.nfe(), e_dense.nfe(), "inc engine NFE: {tag}");
                 }
             }
         }
     }
 
     /// The non-speculative machines ride the same compact ABI: sequential
-    /// and diffusion decodes are bit-identical across paths too.
+    /// and diffusion decodes are bit-identical across paths too —
+    /// including the incremental driver (sequential caches every sampled
+    /// token; diffusion declines incrementality and falls through to the
+    /// compact route inside `run_machine_inc`).
     #[test]
     fn compact_and_dense_paths_bit_identical_for_baseline_samplers() {
+        use crate::decode::run_machine_inc;
         use crate::runtime::DensePath;
         let n = 12;
         let v = 5;
@@ -746,55 +783,41 @@ mod tests {
         for seed in [5u64, 29] {
             let e_c = MockEngine::new(seed ^ 0x33, n, v, 1.0);
             let e_d = MockEngine::new(seed ^ 0x33, n, v, 1.0);
-            let seq_c = run_machine(
-                &e_c,
+            let e_i = MockEngine::new(seed ^ 0x33, n, v, 1.0);
+            let seq = |rng_seed: u64| {
                 Box::new(crate::decode::sequential::SequentialMachine::new(
                     ord.clone(),
                     toks.clone(),
                     v,
                     1.0,
-                    Rng::new(seed),
-                )),
-            )
-            .unwrap();
-            let seq_d = run_machine(
-                &DensePath(&e_d),
-                Box::new(crate::decode::sequential::SequentialMachine::new(
-                    ord.clone(),
-                    toks.clone(),
-                    v,
-                    1.0,
-                    Rng::new(seed),
-                )),
-            )
-            .unwrap();
+                    Rng::new(rng_seed),
+                ))
+            };
+            let seq_c = run_machine(&e_c, seq(seed)).unwrap();
+            let seq_d = run_machine(&DensePath(&e_d), seq(seed)).unwrap();
+            let seq_i = run_machine_inc(&e_i, seq(seed), 0).unwrap();
             assert_eq!(seq_c.tokens, seq_d.tokens);
             assert_eq!(seq_c.model_nfe, seq_d.model_nfe);
+            assert_eq!(seq_i.tokens, seq_d.tokens, "incremental sequential diverged");
+            assert_eq!(seq_i.model_nfe, seq_d.model_nfe);
             assert_eq!(e_c.nfe(), e_d.nfe());
-            let dif_c = run_machine(
-                &e_c,
+            assert_eq!(e_i.nfe(), e_d.nfe());
+            let dif = |rng_seed: u64| {
                 Box::new(crate::decode::diffusion::DiffusionMachine::new(
                     toks.clone(),
                     v,
                     4,
                     1.0,
-                    Rng::new(seed),
-                )),
-            )
-            .unwrap();
-            let dif_d = run_machine(
-                &DensePath(&e_d),
-                Box::new(crate::decode::diffusion::DiffusionMachine::new(
-                    toks.clone(),
-                    v,
-                    4,
-                    1.0,
-                    Rng::new(seed),
-                )),
-            )
-            .unwrap();
+                    Rng::new(rng_seed),
+                ))
+            };
+            let dif_c = run_machine(&e_c, dif(seed)).unwrap();
+            let dif_d = run_machine(&DensePath(&e_d), dif(seed)).unwrap();
+            let dif_i = run_machine_inc(&e_i, dif(seed), 1).unwrap();
             assert_eq!(dif_c.tokens, dif_d.tokens);
             assert_eq!(dif_c.model_nfe, dif_d.model_nfe);
+            assert_eq!(dif_i.tokens, dif_d.tokens, "incremental diffusion diverged");
+            assert_eq!(dif_i.model_nfe, dif_d.model_nfe);
         }
     }
 

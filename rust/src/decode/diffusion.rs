@@ -13,7 +13,7 @@ use crate::model::mask::Ordering;
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
-use super::sampling::sample_logits;
+use super::sampling::{sample_probs, softmax_into};
 use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
 
 pub struct DiffusionMachine {
@@ -35,6 +35,9 @@ pub struct DiffusionMachine {
     /// tokens unmasked since the last drain_commits (streaming hook);
     /// diffusion commits every position the moment it is unmasked
     committed: Vec<(usize, u32)>,
+    /// vocab-sized scratch reused across rows (banned row copy + softmax)
+    row_buf: Vec<f32>,
+    prob_buf: Vec<f32>,
     model_nfe: u64,
     iterations: u64,
 }
@@ -62,6 +65,8 @@ impl DiffusionMachine {
             ord,
             want: vec![],
             committed: vec![],
+            row_buf: vec![],
+            prob_buf: vec![],
             model_nfe: 0,
             iterations: 0,
         }
@@ -102,9 +107,12 @@ impl DecodeMachine for DiffusionMachine {
         self.iterations += 1;
         let count = self.want.len();
         for (i, &pos) in self.want.iter().enumerate() {
-            let mut row = logits[i * self.vocab..(i + 1) * self.vocab].to_vec();
-            super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
-            let (tok, _) = sample_logits(&mut self.rng, &row, self.temp);
+            self.row_buf.clear();
+            self.row_buf
+                .extend_from_slice(&logits[i * self.vocab..(i + 1) * self.vocab]);
+            super::sampling::ban_ids(&mut self.row_buf, &super::sampling::BANNED);
+            softmax_into(&self.row_buf, self.temp, &mut self.prob_buf);
+            let tok = sample_probs(&mut self.rng, &self.prob_buf);
             self.tokens[pos] = tok as u32;
             self.committed.push((pos, tok as u32));
         }
@@ -117,6 +125,17 @@ impl DecodeMachine for DiffusionMachine {
 
     fn drain_commits(&mut self) -> Vec<(usize, u32)> {
         std::mem::take(&mut self.committed)
+    }
+
+    /// Deliberately NOT incremental (stays at the default `None`
+    /// semantics, made explicit here): diffusion re-derives its lattice
+    /// ordering from the current known set every step, and a "prompt"
+    /// row's attention set grows with the known set — no committed row's
+    /// content-stream state is ever stable, so there is nothing a K/V
+    /// cache could legally persist. The scheduler keeps diffusion slots
+    /// on the compact path.
+    fn incremental(&self) -> Option<usize> {
+        None
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {

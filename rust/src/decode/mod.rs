@@ -97,6 +97,20 @@ pub trait DecodeMachine {
         Vec::new()
     }
 
+    /// Incremental-forward eligibility: `Some(c)` guarantees that the
+    /// machine's generation ordering is FIXED for its lifetime and that
+    /// orders `< c` hold token values that will never change again — the
+    /// engine may persist exactly those rows' per-layer K/V in the
+    /// request's cache lane ([`crate::runtime::IncSpec`]). Must be
+    /// read BEFORE `forward_request` each iteration (it describes the
+    /// state the request is issued from). `None` (the default) routes
+    /// the machine through the compact path — correct for machines whose
+    /// ordering or committed set can move (diffusion re-derives its
+    /// ordering every step).
+    fn incremental(&self) -> Option<usize> {
+        None
+    }
+
     /// Consume the machine and return the outcome (panics if !done()).
     fn outcome(self: Box<Self>) -> DecodeOutcome;
 }
@@ -106,7 +120,8 @@ pub trait DecodeMachine {
 /// passes machine requests to [`Engine::forward_ord`] without repacking.
 pub use crate::runtime::ForwardSpec as ForwardRequest;
 
-/// Drive a machine to completion against an engine (batch = 1).
+/// Drive a machine to completion against an engine (batch = 1), through
+/// the COMPACT forward path.
 pub fn run_machine(engine: &dyn Engine, mut machine: Box<dyn DecodeMachine>) -> Result<DecodeOutcome> {
     while !machine.done() {
         let rows = {
@@ -118,6 +133,43 @@ pub fn run_machine(engine: &dyn Engine, mut machine: Box<dyn DecodeMachine>) -> 
         };
         machine.absorb(&rows);
     }
+    Ok(machine.outcome())
+}
+
+/// Drive a machine to completion through the INCREMENTAL forward path,
+/// pinned to cache lane `lane` (batch = 1; the scheduler's lane-pinned
+/// batching is the many-machine form of this loop). Machines that do not
+/// vouch for incrementality ([`DecodeMachine::incremental`] = None) fall
+/// through to the compact path per request, exactly as the scheduler
+/// routes them. The lane is reset around the decode, so callers may reuse
+/// lane ids freely.
+pub fn run_machine_inc(
+    engine: &dyn Engine,
+    mut machine: Box<dyn DecodeMachine>,
+    lane: usize,
+) -> Result<DecodeOutcome> {
+    engine.reset_lane(lane);
+    while !machine.done() {
+        // `incremental` describes the state the request is issued from,
+        // so read it before borrowing the request.
+        let committed = machine.incremental();
+        let rows = {
+            let req = machine
+                .forward_request()
+                .expect("machine not done but no request");
+            let mut out = match committed {
+                Some(committed) => engine.forward_inc(&[crate::runtime::IncSpec {
+                    spec: req,
+                    committed,
+                    lane,
+                }])?,
+                None => engine.forward_ord(std::slice::from_ref(&req))?,
+            };
+            out.pop().expect("engine returned no row batch")
+        };
+        machine.absorb(&rows);
+    }
+    engine.reset_lane(lane);
     Ok(machine.outcome())
 }
 

@@ -4,12 +4,18 @@
 
 use crate::util::rng::Rng;
 
-/// Numerically stable softmax with temperature, into a fresh Vec.
-pub fn softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+/// Numerically stable softmax with temperature, into a caller-provided
+/// buffer (cleared first). The `_into` variants exist because the decode
+/// machines call these once per ROW per iteration — a fresh vocab-sized
+/// allocation each time is the serving hot path's dominant allocator
+/// traffic; per-machine scratch buffers make the steady state
+/// allocation-free.
+pub fn softmax_into(logits: &[f32], temp: f32, out: &mut Vec<f32>) {
     assert!(temp > 0.0);
     let inv = 1.0 / temp;
     let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - mx) * inv).exp()).collect();
+    out.clear();
+    out.extend(logits.iter().map(|&l| ((l - mx) * inv).exp()));
     let sum: f32 = out.iter().sum();
     if sum > 0.0 {
         out.iter_mut().for_each(|x| *x /= sum);
@@ -17,11 +23,17 @@ pub fn softmax(logits: &[f32], temp: f32) -> Vec<f32> {
         let u = 1.0 / out.len() as f32;
         out.iter_mut().for_each(|x| *x = u);
     }
+}
+
+/// Numerically stable softmax with temperature, into a fresh Vec.
+pub fn softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(logits.len());
+    softmax_into(logits, temp, &mut out);
     out
 }
 
-/// Log-softmax (for density evaluation / perplexity).
-pub fn log_softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+/// Log-softmax into a caller-provided buffer (cleared first).
+pub fn log_softmax_into(logits: &[f32], temp: f32, out: &mut Vec<f32>) {
     let inv = 1.0 / temp;
     let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let lse: f32 = logits
@@ -29,7 +41,15 @@ pub fn log_softmax(logits: &[f32], temp: f32) -> Vec<f32> {
         .map(|&l| ((l - mx) * inv).exp())
         .sum::<f32>()
         .ln();
-    logits.iter().map(|&l| (l - mx) * inv - lse).collect()
+    out.clear();
+    out.extend(logits.iter().map(|&l| (l - mx) * inv - lse));
+}
+
+/// Log-softmax (for density evaluation / perplexity).
+pub fn log_softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(logits.len());
+    log_softmax_into(logits, temp, &mut out);
+    out
 }
 
 /// Sample from a probability vector.
@@ -61,19 +81,32 @@ pub fn sample_logits(rng: &mut Rng, logits: &[f32], temp: f32) -> (usize, f32) {
     (tok, probs[tok])
 }
 
-/// The speculative-decoding residual distribution (q - p)_+, normalized.
-/// Returns None if the residual has (numerically) zero mass — callers fall
-/// back to sampling from q (only reachable when q == p, in which case the
-/// proposal would have been accepted anyway).
-pub fn residual(q: &[f32], p: &[f32]) -> Option<Vec<f32>> {
+/// The speculative-decoding residual distribution (q - p)_+, normalized,
+/// into a caller-provided buffer (cleared first). Returns false if the
+/// residual has (numerically) zero mass — callers fall back to sampling
+/// from q (only reachable when q == p, in which case the proposal would
+/// have been accepted anyway); the buffer contents are unspecified then.
+pub fn residual_into(q: &[f32], p: &[f32], out: &mut Vec<f32>) -> bool {
     debug_assert_eq!(q.len(), p.len());
-    let mut r: Vec<f32> = q.iter().zip(p).map(|(&a, &b)| (a - b).max(0.0)).collect();
-    let sum: f32 = r.iter().sum();
+    out.clear();
+    out.extend(q.iter().zip(p).map(|(&a, &b)| (a - b).max(0.0)));
+    let sum: f32 = out.iter().sum();
     if sum <= 1e-12 {
-        return None;
+        return false;
     }
-    r.iter_mut().for_each(|x| *x /= sum);
-    Some(r)
+    out.iter_mut().for_each(|x| *x /= sum);
+    true
+}
+
+/// The speculative-decoding residual distribution (q - p)_+, normalized.
+/// Returns None when the residual has (numerically) zero mass.
+pub fn residual(q: &[f32], p: &[f32]) -> Option<Vec<f32>> {
+    let mut out = Vec::with_capacity(q.len());
+    if residual_into(q, p, &mut out) {
+        Some(out)
+    } else {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +161,26 @@ mod tests {
     fn residual_none_when_equal() {
         let q = [0.25f32; 4];
         assert!(residual(&q, &q).is_none());
+        let mut buf = vec![9.0f32; 2];
+        assert!(!residual_into(&q, &q, &mut buf));
+    }
+
+    /// The `_into` scratch variants are bit-identical to the allocating
+    /// wrappers (the machines' hot paths must not change a single sample).
+    #[test]
+    fn into_variants_match_allocating_variants() {
+        let logits = [0.3f32, -1.2, 2.0, 0.0, 5.5];
+        let p = [0.2f32, 0.4, 0.1, 0.2, 0.1];
+        let mut buf = vec![7.0f32; 3]; // stale contents must not leak
+        for temp in [0.5f32, 1.0, 2.0] {
+            softmax_into(&logits, temp, &mut buf);
+            assert_eq!(buf, softmax(&logits, temp));
+            log_softmax_into(&logits, temp, &mut buf);
+            assert_eq!(buf, log_softmax(&logits, temp));
+        }
+        let q = softmax(&logits, 1.0);
+        assert!(residual_into(&q, &p, &mut buf));
+        assert_eq!(buf, residual(&q, &p).unwrap());
     }
 
     /// Property: the speculative accept/resample rule reproduces q exactly.

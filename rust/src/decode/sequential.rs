@@ -12,7 +12,7 @@ use crate::model::mask::Ordering;
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
-use super::sampling::sample_logits;
+use super::sampling::{sample_probs, softmax_into};
 use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
 
 pub struct SequentialMachine {
@@ -27,6 +27,9 @@ pub struct SequentialMachine {
     /// tokens sampled since the last drain_commits (streaming hook);
     /// sequential decoding commits every sampled token immediately
     committed: Vec<(usize, u32)>,
+    /// vocab-sized scratch reused every step (banned row copy + softmax)
+    row_buf: Vec<f32>,
+    prob_buf: Vec<f32>,
     model_nfe: u64,
 }
 
@@ -48,6 +51,8 @@ impl SequentialMachine {
             n,
             want: [0],
             committed: vec![],
+            row_buf: vec![],
+            prob_buf: vec![],
             model_nfe: 0,
         }
     }
@@ -75,9 +80,11 @@ impl DecodeMachine for SequentialMachine {
         debug_assert_eq!(logits.len(), self.vocab);
         self.model_nfe += 1;
         let pos = self.ord.sigma[self.n];
-        let mut row = logits.to_vec();
-        super::sampling::ban_ids(&mut row, &super::sampling::BANNED);
-        let (tok, _p) = sample_logits(&mut self.rng, &row, self.temp);
+        self.row_buf.clear();
+        self.row_buf.extend_from_slice(logits);
+        super::sampling::ban_ids(&mut self.row_buf, &super::sampling::BANNED);
+        softmax_into(&self.row_buf, self.temp, &mut self.prob_buf);
+        let tok = sample_probs(&mut self.rng, &self.prob_buf);
         self.tokens[pos] = tok as u32;
         self.committed.push((pos, tok as u32));
         self.n += 1;
@@ -85,6 +92,12 @@ impl DecodeMachine for SequentialMachine {
 
     fn drain_commits(&mut self) -> Vec<(usize, u32)> {
         std::mem::take(&mut self.committed)
+    }
+
+    /// The chain's ordering is fixed and every sampled token is final
+    /// immediately, so orders `< n` are always cacheable.
+    fn incremental(&self) -> Option<usize> {
+        Some(self.n)
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {

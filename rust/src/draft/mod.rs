@@ -188,7 +188,7 @@ impl DraftOptions {
     /// buffer (prompt visible, targets MASK) used to seed table drafters.
     pub fn build(&self, tokens: &[u32], vocab: usize) -> Box<dyn Drafter> {
         match self.kind {
-            DraftKind::SelfModel => Box::new(SelfDrafter),
+            DraftKind::SelfModel => Box::new(SelfDrafter::default()),
             DraftKind::Bigram => Box::new(BigramDrafter::from_sequence(tokens, vocab)),
             DraftKind::Lookup => Box::new(PromptLookupDrafter::new(vocab)),
         }

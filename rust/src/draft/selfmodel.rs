@@ -10,14 +10,20 @@
 //! every window survives verification and the final remaining token needs
 //! no verify at all.
 
-use crate::decode::sampling::{ban_ids, sample_probs, softmax, BANNED};
+use crate::decode::sampling::{ban_ids, sample_probs, softmax_into, BANNED};
 use crate::util::rng::Rng;
 
 use super::{DraftContext, DraftProposal, Drafter};
 
-/// The Algorithm-1 drafter. Stateless: everything it needs arrives with
-/// the draft-phase logits.
-pub struct SelfDrafter;
+/// The Algorithm-1 drafter. Semantically stateless — everything it needs
+/// arrives with the draft-phase logits — but it keeps a vocab-sized
+/// scratch row so the per-window ban+softmax never re-allocates (the
+/// proposal DISTRIBUTIONS are still owned Vecs: the machine stores them
+/// across the verify pass).
+#[derive(Default)]
+pub struct SelfDrafter {
+    row_buf: Vec<f32>,
+}
 
 impl Drafter for SelfDrafter {
     fn name(&self) -> &'static str {
@@ -41,9 +47,11 @@ impl Drafter for SelfDrafter {
         let mut tokens = Vec::with_capacity(w);
         let mut dists = Vec::with_capacity(w);
         for i in 0..w {
-            let mut row = logits[i * v..(i + 1) * v].to_vec();
-            ban_ids(&mut row, &BANNED);
-            let probs = softmax(&row, ctx.temp);
+            self.row_buf.clear();
+            self.row_buf.extend_from_slice(&logits[i * v..(i + 1) * v]);
+            ban_ids(&mut self.row_buf, &BANNED);
+            let mut probs = Vec::with_capacity(v);
+            softmax_into(&self.row_buf, ctx.temp, &mut probs);
             let tok = sample_probs(rng, &probs) as u32;
             tokens.push(tok);
             dists.push(probs);
@@ -60,7 +68,7 @@ mod tests {
 
     #[test]
     fn samples_window_from_logit_rows() {
-        let mut d = SelfDrafter;
+        let mut d = SelfDrafter::default();
         assert_eq!(d.name(), "self");
         assert!(d.needs_model_forward());
         assert!(d.lemma1_exact());

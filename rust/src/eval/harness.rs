@@ -153,8 +153,10 @@ pub fn run_sampler(
     )
 }
 
-/// Decode one work item with the given sampler and draft configuration.
-pub fn run_sampler_with(
+/// Build the decode machine a (sampler, draft, seed) combination runs —
+/// shared by the compact and incremental harness drivers so path
+/// comparisons start from identical machines.
+pub fn build_machine(
     engine: &dyn Engine,
     item: &WorkItem,
     sampler: SamplerKind,
@@ -162,11 +164,10 @@ pub fn run_sampler_with(
     steps: usize,
     temp: f32,
     seed: u64,
-) -> Result<(DecodeOutcome, f64)> {
+) -> Box<dyn crate::decode::DecodeMachine> {
     let rng = Rng::new(seed);
     let v = engine.vocab();
-    let t0 = Instant::now();
-    let machine: Box<dyn crate::decode::DecodeMachine> = match sampler {
+    match sampler {
         SamplerKind::Assd | SamplerKind::AssdNgram => Box::new(AssdMachine::from_options(
             item.ord.clone(),
             item.tokens.clone(),
@@ -190,8 +191,42 @@ pub fn run_sampler_with(
             temp,
             rng,
         )),
-    };
+    }
+}
+
+/// Decode one work item with the given sampler and draft configuration
+/// (compact forward path).
+pub fn run_sampler_with(
+    engine: &dyn Engine,
+    item: &WorkItem,
+    sampler: SamplerKind,
+    draft: DraftOptions,
+    steps: usize,
+    temp: f32,
+    seed: u64,
+) -> Result<(DecodeOutcome, f64)> {
+    let machine = build_machine(engine, item, sampler, draft, steps, temp, seed);
+    let t0 = Instant::now();
     let outcome = run_machine(engine, machine)?;
+    Ok((outcome, t0.elapsed().as_secs_f64()))
+}
+
+/// Decode one work item through the INCREMENTAL forward path, pinned to
+/// `lane` (the perf_engine incremental-vs-compact ablation and the
+/// equivalence tests drive this).
+pub fn run_sampler_inc(
+    engine: &dyn Engine,
+    item: &WorkItem,
+    sampler: SamplerKind,
+    draft: DraftOptions,
+    steps: usize,
+    temp: f32,
+    seed: u64,
+    lane: usize,
+) -> Result<(DecodeOutcome, f64)> {
+    let machine = build_machine(engine, item, sampler, draft, steps, temp, seed);
+    let t0 = Instant::now();
+    let outcome = crate::decode::run_machine_inc(engine, machine, lane)?;
     Ok((outcome, t0.elapsed().as_secs_f64()))
 }
 

@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::data::masking::lattice_sigma;
-use crate::decode::sampling::log_softmax;
+use crate::decode::sampling::log_softmax_into;
 use crate::model::mask::{verify_masks, Ordering};
 use crate::runtime::Engine;
 
@@ -24,9 +24,10 @@ pub fn joint_logprob(engine: &dyn Engine, ord: &Ordering, tokens: &[u32]) -> Res
     let (h, g) = verify_masks(ord);
     let logits = engine.forward(1, tokens, &h, &g)?;
     let mut total = 0.0f64;
+    let mut lp = Vec::with_capacity(v);
     for i in ord.m..n {
         let pos = ord.sigma[i];
-        let lp = log_softmax(&logits[pos * v..(pos + 1) * v], 1.0);
+        log_softmax_into(&logits[pos * v..(pos + 1) * v], 1.0, &mut lp);
         total += lp[tokens[pos] as usize] as f64;
     }
     Ok(total)
@@ -104,6 +105,7 @@ mod tests {
     /// mock engine too (it does on the real model — integration tests).
     #[test]
     fn joint_matches_chain_on_mock() {
+        use crate::decode::sampling::log_softmax;
         use crate::model::mask::draft_masks;
         let e = MockEngine::new(5, 6, 4, 1.0);
         let mut rng = Rng::new(7);

@@ -27,6 +27,12 @@ pub struct ModelMeta {
     /// set (absent in pre-compact artifact sets, which then serve through
     /// the dense fallback — see docs/ARCHITECTURE.md §Compact forward ABI).
     pub ord_rows: Option<usize>,
+    /// Active-row width of the incremental `fwd_inc_b{B}` artifacts
+    /// (absent in pre-incremental sets, which then serve through the
+    /// compact path — see docs/ARCHITECTURE.md §Incremental forward &
+    /// KV cache). The per-lane cache shape itself is derived from
+    /// `(n_layers, seq_len, d_model)`.
+    pub inc_rows: Option<usize>,
     pub params: Vec<(String, usize, Vec<usize>)>, // (name, offset, shape)
 }
 
@@ -59,7 +65,7 @@ impl ModelMeta {
             bail!("model_meta.json missing params object");
         }
         params.sort_by_key(|(_, off, _)| *off);
-        Ok(ModelMeta {
+        let meta = ModelMeta {
             vocab: get("vocab")?,
             seq_len: get("seq_len")?,
             d_model: get("d_model")?,
@@ -70,8 +76,31 @@ impl ModelMeta {
             pad_id: get("pad_id")? as u32,
             n_params: get("n_params")?,
             ord_rows: j.get("ord_rows").and_then(|v| v.as_usize()).filter(|&r| r > 0),
+            inc_rows: j.get("inc_rows").and_then(|v| v.as_usize()).filter(|&r| r > 0),
             params,
-        })
+        };
+        // The recorded per-lane cache shape is informational (rust derives
+        // it from the dims), but if present it must AGREE with the dims —
+        // a mismatch means the artifact set and this runtime disagree
+        // about the fwd_inc ABI, which would corrupt every lane.
+        if let Some(cache) = j.get("inc_cache") {
+            let field = |k: &str| cache.get(k).and_then(|v| v.as_usize());
+            let want = [
+                ("layers", meta.n_layers),
+                ("slots", meta.seq_len),
+                ("d_model", meta.d_model),
+            ];
+            for (k, expect) in want {
+                match field(k) {
+                    Some(got) if got == expect => {}
+                    got => bail!(
+                        "model_meta.json inc_cache.{k} = {got:?} disagrees with the model \
+                         dims ({expect}) — mismatched incremental artifact set"
+                    ),
+                }
+            }
+        }
+        Ok(meta)
     }
 
     /// Validate the layout is contiguous and totals n_params.
@@ -153,6 +182,32 @@ mod tests {
         // A malformed 0 is treated as absent, not as an empty gather.
         let zero = META.replace("\"n_params\": 20,", "\"n_params\": 20, \"ord_rows\": 0,");
         assert_eq!(ModelMeta::parse(&zero).unwrap().ord_rows, None);
+    }
+
+    #[test]
+    fn inc_rows_optional_and_parsed() {
+        // Pre-incremental artifact sets carry no inc_rows field.
+        assert_eq!(ModelMeta::parse(META).unwrap().inc_rows, None);
+        let with = META.replace("\"n_params\": 20,", "\"n_params\": 20, \"inc_rows\": 64,");
+        assert_eq!(ModelMeta::parse(&with).unwrap().inc_rows, Some(64));
+        let zero = META.replace("\"n_params\": 20,", "\"n_params\": 20, \"inc_rows\": 0,");
+        assert_eq!(ModelMeta::parse(&zero).unwrap().inc_rows, None);
+    }
+
+    #[test]
+    fn inc_cache_shape_validated_against_dims() {
+        let good = META.replace(
+            "\"n_params\": 20,",
+            "\"n_params\": 20, \"inc_cache\": {\"layers\": 4, \"slots\": 128, \"d_model\": 128},",
+        );
+        ModelMeta::parse(&good).unwrap();
+        // A recorded cache shape that disagrees with the dims is a
+        // mismatched artifact set, not a tolerable variation.
+        let bad = META.replace(
+            "\"n_params\": 20,",
+            "\"n_params\": 20, \"inc_cache\": {\"layers\": 4, \"slots\": 64, \"d_model\": 128},",
+        );
+        assert!(ModelMeta::parse(&bad).unwrap_err().to_string().contains("inc_cache.slots"));
     }
 
     #[test]

@@ -7,16 +7,20 @@
 //! `forward_ord` path does the same over the `fwd_ord_b{B}` family, which
 //! reconstructs the masks on device from `(order, m, known)` and gathers
 //! only the requested logit rows before crossing back to the host (see
-//! docs/ARCHITECTURE.md §Compact forward ABI).
+//! docs/ARCHITECTURE.md §Compact forward ABI). The incremental
+//! `forward_inc` path adds per-lane persistent K/V caches over the
+//! `fwd_inc_b{B}` + `fwd_inc_pre_b{B}` families, so the device computes
+//! only newly-committed and wanted rows per iteration (see
+//! docs/ARCHITECTURE.md §Incremental forward & KV cache).
 
 use std::cell::RefCell;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
-use super::{compile_artifact, forward_ord_dense, Engine, ForwardSpec};
+use super::{compile_artifact, forward_ord_dense, Engine, ForwardSpec, IncSpec};
 use crate::model::ModelMeta;
 use crate::tokenizer::PAD;
 
@@ -35,6 +39,52 @@ struct OrdScratch {
     want: Vec<i32>,
 }
 
+/// Packing buffers for the incremental path (the cache planes are the
+/// big ones: [B, L, N, D] f32 per stream).
+#[derive(Default)]
+struct IncScratch {
+    toks: Vec<i32>,
+    order: Vec<i32>,
+    m: Vec<i32>,
+    known: Vec<i32>,
+    cached: Vec<i32>,
+    nrows: Vec<i32>,
+    rows: Vec<i32>,
+    cache_k: Vec<f32>,
+    cache_v: Vec<f32>,
+}
+
+impl IncScratch {
+    fn clear(&mut self) {
+        self.toks.clear();
+        self.order.clear();
+        self.m.clear();
+        self.known.clear();
+        self.cached.clear();
+        self.nrows.clear();
+        self.rows.clear();
+        self.cache_k.clear();
+        self.cache_v.clear();
+    }
+}
+
+/// One incremental cache lane: the host mirror of the sequence's
+/// persistent per-layer content-stream K/V, ORDER-major ([L, N, D]; slot
+/// j holds the K/V of the committed row with order j), plus the identity
+/// of the request it belongs to. The mirror is uploaded with each
+/// incremental call and extended host-side from the `k_new`/`v_new` rows
+/// the executable returns, so only O(L·R·D) of cache ever crosses
+/// device→host per iteration (the one-time prefill seeds it with a
+/// single full h-stream pass).
+struct IncLane {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// orders `< cached` are in the cache
+    cached: usize,
+    sigma: Vec<usize>,
+    m: usize,
+}
+
 pub struct XlaEngine {
     pub meta: ModelMeta,
     client: xla::PjRtClient,
@@ -47,7 +97,21 @@ pub struct XlaEngine {
     fwd_ord: BTreeMap<usize, xla::PjRtLoadedExecutable>,
     /// row-gather width R of the compact artifacts (0 iff `fwd_ord` empty)
     ord_rows: usize,
+    /// batch size -> compiled INCREMENTAL forward executable
+    /// (`fwd_inc_b{B}.hlo.txt`: active rows against the per-lane K/V
+    /// cache; empty for pre-incremental artifact sets, which serve via
+    /// the compact path)
+    fwd_inc: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// batch size -> compiled incremental PREFILL executable
+    /// (`fwd_inc_pre_b{B}.hlo.txt`: one h-stream pass seeding a lane)
+    fwd_inc_pre: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// active-row width R of the incremental artifacts (0 iff `fwd_inc`
+    /// empty)
+    inc_rows: usize,
+    /// per-lane cache mirrors, allocated on first use
+    lanes: RefCell<HashMap<usize, IncLane>>,
     scratch: RefCell<OrdScratch>,
+    inc_scratch: RefCell<IncScratch>,
     /// current parameters (flat theta), host copy
     theta: Vec<f32>,
     /// device-resident theta — uploaded ONCE per set_params instead of per
@@ -76,13 +140,19 @@ impl XlaEngine {
         let client = super::cpu_client()?;
         let mut fwd = BTreeMap::new();
         let mut fwd_ord = BTreeMap::new();
+        let mut fwd_inc = BTreeMap::new();
+        let mut fwd_inc_pre = BTreeMap::new();
         for entry in std::fs::read_dir(dir)
             .with_context(|| format!("reading artifacts dir {}", dir.display()))?
         {
             let entry = entry?;
             let name = entry.file_name();
             let name = name.to_string_lossy();
-            let (family, b) = if let Some(rest) = name.strip_prefix("fwd_ord_b") {
+            let (family, b) = if let Some(rest) = name.strip_prefix("fwd_inc_pre_b") {
+                (&mut fwd_inc_pre, rest.strip_suffix(".hlo.txt"))
+            } else if let Some(rest) = name.strip_prefix("fwd_inc_b") {
+                (&mut fwd_inc, rest.strip_suffix(".hlo.txt"))
+            } else if let Some(rest) = name.strip_prefix("fwd_ord_b") {
                 (&mut fwd_ord, rest.strip_suffix(".hlo.txt"))
             } else if let Some(rest) = name.strip_prefix("fwd_b") {
                 (&mut fwd, rest.strip_suffix(".hlo.txt"))
@@ -121,6 +191,26 @@ impl XlaEngine {
         // ord_rows without artifacts (or vice versa) must not enable a
         // half-configured compact path.
         let ord_rows = if fwd_ord.is_empty() { 0 } else { ord_rows };
+        // Incremental gating: the path needs the step executables, the
+        // prefill executable, AND the inc_rows meta field; anything less
+        // is half-configured and serves through the compact path instead.
+        let inc_rows = match meta.inc_rows {
+            Some(r) if !fwd_inc.is_empty() && !fwd_inc_pre.is_empty() => {
+                r.clamp(2, meta.seq_len)
+            }
+            _ => {
+                if !fwd_inc.is_empty() || !fwd_inc_pre.is_empty() {
+                    eprintln!(
+                        "XlaEngine::load: incomplete incremental artifact set (need \
+                         fwd_inc_b*, fwd_inc_pre_b* and an inc_rows meta field) — \
+                         serving through the compact path"
+                    );
+                }
+                fwd_inc.clear();
+                fwd_inc_pre.clear();
+                0
+            }
+        };
         let params_path: PathBuf = params_path
             .map(|p| p.to_path_buf())
             .unwrap_or_else(|| dir.join("params_init.bin"));
@@ -135,7 +225,12 @@ impl XlaEngine {
             fwd,
             fwd_ord,
             ord_rows,
+            fwd_inc,
+            fwd_inc_pre,
+            inc_rows,
+            lanes: RefCell::new(HashMap::new()),
             scratch: RefCell::new(OrdScratch::default()),
+            inc_scratch: RefCell::new(IncScratch::default()),
             theta,
             theta_buf,
             nfe: AtomicU64::new(0),
@@ -191,6 +286,246 @@ impl XlaEngine {
 
     fn pick_batch_ord(&self, want: usize) -> usize {
         Self::smallest_fitting(&self.fwd_ord, want)
+    }
+
+    fn pick_batch_inc(&self, want: usize) -> usize {
+        Self::smallest_fitting(&self.fwd_inc, want)
+    }
+
+    /// One `fwd_inc_pre` launch: a full content-stream pass seeding
+    /// `lane`'s K/V mirror for orders `0..committed`. Runs once per
+    /// admitted sequence — the bidirectional prompt block cannot be
+    /// appended in causal chunks, so its rows are computed together here
+    /// and every later call only appends causal target rows.
+    fn prefill_lane(
+        &self,
+        spec: &ForwardSpec<'_>,
+        lane: &mut IncLane,
+        committed: usize,
+    ) -> Result<()> {
+        let n = self.meta.seq_len;
+        let plane = self.meta.n_layers * n * self.meta.d_model;
+        let b_exec = *self.fwd_inc_pre.keys().next().unwrap();
+        let exe = &self.fwd_inc_pre[&b_exec];
+        let mut toks: Vec<i32> = spec.tokens.iter().map(|&t| t as i32).collect();
+        let mut order: Vec<i32> = spec.ord.order.iter().map(|&o| o as i32).collect();
+        let mut sigma: Vec<i32> = spec.ord.sigma.iter().map(|&p| p as i32).collect();
+        let mut m = vec![spec.ord.m as i32];
+        let mut com = vec![committed as i32];
+        for _ in 1..b_exec {
+            toks.resize(toks.len() + n, PAD as i32);
+            order.extend(0..n as i32);
+            sigma.extend(0..n as i32);
+            m.push(n as i32);
+            com.push(0);
+        }
+        let buf_toks = self
+            .client
+            .buffer_from_host_buffer::<i32>(&toks, &[b_exec, n], None)?;
+        let buf_order = self
+            .client
+            .buffer_from_host_buffer::<i32>(&order, &[b_exec, n], None)?;
+        let buf_sigma = self
+            .client
+            .buffer_from_host_buffer::<i32>(&sigma, &[b_exec, n], None)?;
+        let buf_m = self.client.buffer_from_host_buffer::<i32>(&m, &[b_exec], None)?;
+        let buf_com = self
+            .client
+            .buffer_from_host_buffer::<i32>(&com, &[b_exec], None)?;
+        let result = exe
+            .execute_b(&[
+                &self.theta_buf,
+                &buf_toks,
+                &buf_order,
+                &buf_sigma,
+                &buf_m,
+                &buf_com,
+            ])
+            .context("executing fwd_inc_pre")?[0][0]
+            .to_literal_sync()?;
+        let (k, v) = result.to_tuple2()?;
+        let k = k.to_vec::<f32>()?;
+        let v = v.to_vec::<f32>()?;
+        debug_assert!(k.len() >= plane && v.len() >= plane);
+        lane.k.clear();
+        lane.k.extend_from_slice(&k[..plane]);
+        lane.v.clear();
+        lane.v.extend_from_slice(&v[..plane]);
+        lane.cached = committed;
+        self.nfe.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Bring `inc.lane` into a state the batched step can serve:
+    /// (re)initialize on identity change, prefill an empty lane, and
+    /// catch up oversized append backlogs in `inc_rows`-sized chunks
+    /// (each a solo launch; only reachable after a spec was temporarily
+    /// routed off the incremental path).
+    fn prepare_lane(&self, inc: &IncSpec<'_>) -> Result<()> {
+        let n = self.meta.seq_len;
+        let plane = self.meta.n_layers * n * self.meta.d_model;
+        let r = self.inc_rows;
+        let spec = &inc.spec;
+        assert!(
+            spec.ord.m <= inc.committed && inc.committed <= spec.known,
+            "committed out of range"
+        );
+        {
+            let mut lanes = self.lanes.borrow_mut();
+            let lane = lanes.entry(inc.lane).or_insert_with(|| IncLane {
+                k: vec![0.0; plane],
+                v: vec![0.0; plane],
+                cached: 0,
+                sigma: vec![],
+                m: 0,
+            });
+            // Invalidation rule: a different ordering or prompt size, or a
+            // committed count that moved backwards, means a different
+            // request occupies the lane — drop the stale cache. (The
+            // scheduler also calls reset_lane at every slot handoff; this
+            // is the engine-side backstop.)
+            if lane.cached > 0
+                && (lane.sigma != spec.ord.sigma
+                    || lane.m != spec.ord.m
+                    || inc.committed < lane.cached)
+            {
+                lane.k.iter_mut().for_each(|x| *x = 0.0);
+                lane.v.iter_mut().for_each(|x| *x = 0.0);
+                lane.cached = 0;
+            }
+            if lane.cached == 0 {
+                lane.sigma = spec.ord.sigma.clone();
+                lane.m = spec.ord.m;
+            }
+        }
+        let cached = self.lanes.borrow()[&inc.lane].cached;
+        if cached == 0 && inc.committed > 0 {
+            let mut lanes = self.lanes.borrow_mut();
+            let lane = lanes.get_mut(&inc.lane).unwrap();
+            return self.prefill_lane(spec, lane, inc.committed);
+        }
+        loop {
+            let cached = self.lanes.borrow()[&inc.lane].cached;
+            let free = r - spec.want.len().min(r);
+            if inc.committed - cached <= free {
+                return Ok(());
+            }
+            let chunk = (inc.committed - cached - free).min(r);
+            let sub = IncSpec {
+                spec: ForwardSpec { want: &[], ..*spec },
+                committed: cached + chunk,
+                lane: inc.lane,
+            };
+            self.exec_inc(std::slice::from_ref(&sub))?;
+        }
+    }
+
+    /// One batched `fwd_inc` launch. Every lane must already be prepared
+    /// so that `appends + want <= inc_rows`; `want` may be empty for
+    /// internal catch-up chunks.
+    fn exec_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        let n = self.meta.seq_len;
+        let v = self.meta.vocab;
+        let nl = self.meta.n_layers;
+        let d = self.meta.d_model;
+        let r = self.inc_rows;
+        let plane = nl * n * d;
+        let b_exec = self.pick_batch_inc(specs.len());
+        let exe = &self.fwd_inc[&b_exec];
+        let mut lanes = self.lanes.borrow_mut();
+        let mut scratch = self.inc_scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.clear();
+        let mut appended = Vec::with_capacity(specs.len());
+        for inc in specs {
+            let spec = &inc.spec;
+            assert_eq!(spec.tokens.len(), n, "tokens shape");
+            assert_eq!(spec.ord.n(), n, "ordering length");
+            let lane = lanes.get(&inc.lane).expect("lane not prepared");
+            let app = inc.committed - lane.cached;
+            assert!(app + spec.want.len() <= r, "active rows exceed inc_rows");
+            appended.push(app);
+            s.toks.extend(spec.tokens.iter().map(|&t| t as i32));
+            s.order.extend(spec.ord.order.iter().map(|&o| o as i32));
+            s.m.push(spec.ord.m as i32);
+            s.known.push(spec.known as i32);
+            s.cached.push(lane.cached as i32);
+            s.nrows.push((app + spec.want.len()) as i32);
+            for j in lane.cached..inc.committed {
+                s.rows.push(spec.ord.sigma[j] as i32);
+            }
+            for &pos in spec.want {
+                assert!(pos < n, "wanted row {pos} out of range");
+                s.rows.push(pos as i32);
+            }
+            s.rows.resize(s.rows.len() + (r - app - spec.want.len()), 0);
+            s.cache_k.extend_from_slice(&lane.k);
+            s.cache_v.extend_from_slice(&lane.v);
+        }
+        // Pad to the executable's batch: PAD tokens, empty row set, zero
+        // cache — nrows = 0 masks every active column, so padding cannot
+        // influence real lanes.
+        for _ in specs.len()..b_exec {
+            s.toks.resize(s.toks.len() + n, PAD as i32);
+            s.order.extend(0..n as i32);
+            s.m.push(n as i32);
+            s.known.push(n as i32);
+            s.cached.push(0);
+            s.nrows.push(0);
+            s.rows.resize(s.rows.len() + r, 0);
+            s.cache_k.resize(s.cache_k.len() + plane, 0.0);
+            s.cache_v.resize(s.cache_v.len() + plane, 0.0);
+        }
+        let c = &self.client;
+        let buf_toks = c.buffer_from_host_buffer::<i32>(&s.toks, &[b_exec, n], None)?;
+        let buf_order = c.buffer_from_host_buffer::<i32>(&s.order, &[b_exec, n], None)?;
+        let buf_m = c.buffer_from_host_buffer::<i32>(&s.m, &[b_exec], None)?;
+        let buf_known = c.buffer_from_host_buffer::<i32>(&s.known, &[b_exec], None)?;
+        let buf_cached = c.buffer_from_host_buffer::<i32>(&s.cached, &[b_exec], None)?;
+        let buf_nrows = c.buffer_from_host_buffer::<i32>(&s.nrows, &[b_exec], None)?;
+        let buf_rows = c.buffer_from_host_buffer::<i32>(&s.rows, &[b_exec, r], None)?;
+        let buf_ck = c.buffer_from_host_buffer::<f32>(&s.cache_k, &[b_exec, nl, n, d], None)?;
+        let buf_cv = c.buffer_from_host_buffer::<f32>(&s.cache_v, &[b_exec, nl, n, d], None)?;
+        let result = exe
+            .execute_b(&[
+                &self.theta_buf,
+                &buf_toks,
+                &buf_order,
+                &buf_m,
+                &buf_known,
+                &buf_cached,
+                &buf_nrows,
+                &buf_rows,
+                &buf_ck,
+                &buf_cv,
+            ])
+            .context("executing forward_inc")?[0][0]
+            .to_literal_sync()?;
+        let (lg, kn, vn) = result.to_tuple3()?;
+        let logits = lg.to_vec::<f32>()?;
+        let k_new = kn.to_vec::<f32>()?;
+        let v_new = vn.to_vec::<f32>()?;
+        debug_assert_eq!(logits.len(), b_exec * r * v);
+        self.nfe.fetch_add(1, Ordering::Relaxed);
+        // Append the committed rows' K/V to the lane mirrors, then slice
+        // the wanted logit rows (they follow the appends, in order).
+        let mut out = Vec::with_capacity(specs.len());
+        for (i, inc) in specs.iter().enumerate() {
+            let app = appended[i];
+            let lane = lanes.get_mut(&inc.lane).unwrap();
+            for l in 0..nl {
+                for a in 0..app {
+                    let src = ((i * nl + l) * r + a) * d;
+                    let dst = (l * n + lane.cached + a) * d;
+                    lane.k[dst..dst + d].copy_from_slice(&k_new[src..src + d]);
+                    lane.v[dst..dst + d].copy_from_slice(&v_new[src..src + d]);
+                }
+            }
+            lane.cached = inc.committed;
+            let off = (i * r + app) * v;
+            out.push(logits[off..off + inc.spec.want.len() * v].to_vec());
+        }
+        Ok(out)
     }
 
     /// The pre-optimization forward path (per-call theta LITERAL upload).
@@ -450,12 +785,101 @@ impl Engine for XlaEngine {
             .collect())
     }
 
+    /// Incremental path: each sequence's newly-committed rows are appended
+    /// to its lane's persistent K/V cache and only the active rows are
+    /// computed on device — O(R·(C+R)·d) per iteration instead of
+    /// O(N²·d). Falls back to [`Engine::forward_ord`] when the artifact
+    /// set predates the incremental family; a request wanting more rows
+    /// than the compiled width takes the compact path ALONE (its lane
+    /// catches up on a later call — appends only need the committed token
+    /// values, which stay in the buffer).
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        if specs.is_empty() {
+            return Ok(vec![]);
+        }
+        if self.fwd_inc.is_empty() {
+            let plain: Vec<ForwardSpec<'_>> = specs.iter().map(|s| s.spec).collect();
+            return self.forward_ord(&plain);
+        }
+        let r = self.inc_rows;
+        if specs.iter().any(|s| s.spec.want.len() > r) {
+            let mut small = Vec::new();
+            let mut big = Vec::new();
+            // (routed-to-big, index within that route's output)
+            let mut route = Vec::with_capacity(specs.len());
+            for s in specs {
+                if s.spec.want.len() > r {
+                    route.push((true, big.len()));
+                    big.push(s.spec);
+                } else {
+                    route.push((false, small.len()));
+                    small.push(*s);
+                }
+            }
+            let mut big_out: Vec<Option<Vec<f32>>> =
+                self.forward_ord(&big)?.into_iter().map(Some).collect();
+            let mut small_out: Vec<Option<Vec<f32>>> = if small.is_empty() {
+                vec![]
+            } else {
+                self.forward_inc(&small)?.into_iter().map(Some).collect()
+            };
+            return Ok(route
+                .into_iter()
+                .map(|(is_big, i)| {
+                    let slot = if is_big {
+                        &mut big_out[i]
+                    } else {
+                        &mut small_out[i]
+                    };
+                    slot.take().expect("route index duplicated")
+                })
+                .collect());
+        }
+        // Batches larger than the largest compiled variant split into
+        // chunks (mirrors the dense and compact policies).
+        let max_b = *self.fwd_inc.keys().last().unwrap();
+        if specs.len() > max_b {
+            let mut out = Vec::with_capacity(specs.len());
+            for chunk in specs.chunks(max_b) {
+                out.extend(self.forward_inc(chunk)?);
+            }
+            return Ok(out);
+        }
+        for inc in specs {
+            assert!(!inc.spec.want.is_empty(), "empty row request");
+            self.prepare_lane(inc)?;
+        }
+        self.exec_inc(specs)
+    }
+
+    fn inc_lanes(&self) -> usize {
+        if self.fwd_inc.is_empty() {
+            0
+        } else {
+            usize::MAX
+        }
+    }
+
+    fn reset_lane(&self, lane: usize) {
+        self.lanes.borrow_mut().remove(&lane);
+    }
+
     fn max_gather_rows(&self) -> usize {
-        if self.fwd_ord.is_empty() {
+        let ord_cap = if self.fwd_ord.is_empty() {
             usize::MAX
         } else {
             self.ord_rows
-        }
+        };
+        // An incremental step carries up to a window of appends (last
+        // iteration's commits) plus the window's want rows, so windows
+        // are clamped to half the compiled active-row width — with the
+        // default lowering (inc_rows = 2·ord_rows) this changes nothing.
+        let inc_cap = if self.fwd_inc.is_empty() {
+            usize::MAX
+        } else {
+            (self.inc_rows / 2).max(1)
+        };
+        ord_cap.min(inc_cap)
     }
 
     fn nfe(&self) -> u64 {

@@ -16,13 +16,33 @@
 //! tests compute exact joint distributions by enumeration — which is how we
 //! verify Theorem 2 (ASSD output distribution == sequential distribution).
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
 use crate::model::mask::{g_allows, Ordering as GenOrdering};
+use crate::tokenizer::MASK;
 
-use super::{Engine, ForwardSpec};
+use super::{Engine, ForwardSpec, IncSpec};
+
+/// One incremental cache lane of the mock: the committed ordering and the
+/// committed TOKEN VALUES appended so far. The mock is an analytic model
+/// with no hidden states, so "the K/V of a committed row" degenerates to
+/// its token value — but the cache is REAL: committed columns are read
+/// from the lane, not from the live request buffer, so a scheduler bug
+/// that crosses lanes or skips a reset produces observably different
+/// logits (and trips the debug asserts first).
+struct MockLane {
+    sigma: Vec<usize>,
+    m: usize,
+    /// committed token value per POSITION (only slots whose order is
+    /// `< cached` are meaningful)
+    tokens: Vec<u32>,
+    /// orders `< cached` are in the cache
+    cached: usize,
+}
 
 pub struct MockEngine {
     pub n: usize,
@@ -35,6 +55,19 @@ pub struct MockEngine {
     /// sharpness multiplier: larger -> spikier conditionals
     temp: f32,
     nfe: AtomicU64,
+    /// Incremental cache lanes, allocated on first use. RefCell: engines
+    /// are pinned to one worker thread by construction (`Engine` is not
+    /// Send), so the borrow is never contended.
+    lanes: RefCell<HashMap<usize, MockLane>>,
+    /// Modeled device compute, in "attention cells" (query-row × key-col
+    /// pairs over both streams): the hardware-independent cost unit the
+    /// `perf_engine` incremental-vs-compact ablation reports. Dense and
+    /// compact forwards evaluate every row against every column
+    /// (2·N² per sequence — the compact ABI saves traffic, not compute);
+    /// the incremental path evaluates only the active rows against
+    /// cache + active columns (2·A·(C+A)), plus one N² h-stream prefill
+    /// per lane.
+    modeled_cells: AtomicU64,
 }
 
 impl MockEngine {
@@ -45,7 +78,14 @@ impl MockEngine {
             seed,
             temp,
             nfe: AtomicU64::new(0),
+            lanes: RefCell::new(HashMap::new()),
+            modeled_cells: AtomicU64::new(0),
         }
+    }
+
+    /// Modeled device compute so far, in attention cells (see field docs).
+    pub fn modeled_cells(&self) -> u64 {
+        self.modeled_cells.load(Ordering::Relaxed)
     }
 
     #[inline]
@@ -117,6 +157,49 @@ impl MockEngine {
         }
         out
     }
+
+    /// Exact logits for one row on the INCREMENTAL path: same predicate
+    /// and same `b = 0..n` accumulation order as [`row_logits_ord`]
+    /// (bit-identical f32 sums), but committed columns read their token
+    /// values from the LANE CACHE instead of the live buffer.
+    ///
+    /// [`row_logits_ord`]: MockEngine::row_logits_ord
+    fn row_logits_inc(
+        &self,
+        a: usize,
+        tokens: &[u32],
+        ord: &GenOrdering,
+        known: usize,
+        lane: &MockLane,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.v];
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = self.bias_at(a, t);
+        }
+        let oa = ord.order[a];
+        for b in 0..self.n {
+            if b != a && g_allows(oa, ord.order[b], ord.m, known) {
+                let tok = if ord.order[b] < lane.cached {
+                    debug_assert_eq!(
+                        lane.tokens[b], tokens[b],
+                        "lane cache diverged from the live buffer at position {b} \
+                         (lane crossed or reset skipped?)"
+                    );
+                    lane.tokens[b]
+                } else {
+                    tokens[b]
+                };
+                let tb = (tok as usize).min(self.v - 1);
+                for t in 0..self.v {
+                    out[t] += self.w_at(a, b, tb, t);
+                }
+            }
+        }
+        for t in 0..self.v {
+            out[t] *= self.temp;
+        }
+        out
+    }
 }
 
 impl Engine for MockEngine {
@@ -148,6 +231,8 @@ impl Engine for MockEngine {
             }
         }
         self.nfe.fetch_add(1, Ordering::Relaxed);
+        self.modeled_cells
+            .fetch_add((2 * batch * n * n) as u64, Ordering::Relaxed);
         Ok(logits)
     }
 
@@ -177,7 +262,100 @@ impl Engine for MockEngine {
             })
             .collect();
         self.nfe.fetch_add(1, Ordering::Relaxed);
+        // The compiled compact graph still runs every row of both streams
+        // against every column — the gather trims traffic, not compute.
+        self.modeled_cells
+            .fetch_add((2 * specs.len() * self.n * self.n) as u64, Ordering::Relaxed);
         Ok(out)
+    }
+
+    /// Native incremental path: per lane, append the newly-committed token
+    /// values to the lane cache, then compute ONLY the wanted rows,
+    /// reading committed columns from the CACHE. Bit-identical to the
+    /// compact path (same predicate, same accumulation order, and —
+    /// protocol held — the same token values), with the incremental cost
+    /// model booked in [`MockEngine::modeled_cells`]. One call = one NFE,
+    /// so Theorem-1 accounting stays path-independent (the mock needs no
+    /// separate prefill launch; XlaEngine books its real ones).
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        if specs.is_empty() {
+            return Ok(vec![]);
+        }
+        let mut lanes = self.lanes.borrow_mut();
+        let mut cells = 0u64;
+        let out = specs
+            .iter()
+            .map(|inc| {
+                let spec = &inc.spec;
+                assert_eq!(spec.tokens.len(), self.n, "tokens shape");
+                assert_eq!(spec.ord.n(), self.n, "ordering length");
+                assert!(!spec.want.is_empty(), "empty row request");
+                assert!(
+                    spec.ord.m <= inc.committed && inc.committed <= spec.known,
+                    "committed out of range"
+                );
+                let lane = lanes.entry(inc.lane).or_insert_with(|| MockLane {
+                    sigma: vec![],
+                    m: 0,
+                    tokens: vec![MASK; self.n],
+                    cached: 0,
+                });
+                // Invalidation rule (same as XlaEngine): an ordering or
+                // prompt-size change, or a committed count that moved
+                // backwards, means a different request is in the lane —
+                // drop the stale cache and re-seed.
+                if lane.cached > 0
+                    && (lane.sigma != spec.ord.sigma
+                        || lane.m != spec.ord.m
+                        || inc.committed < lane.cached)
+                {
+                    lane.tokens.iter_mut().for_each(|t| *t = MASK);
+                    lane.cached = 0;
+                }
+                if lane.cached == 0 {
+                    lane.sigma = spec.ord.sigma.clone();
+                    lane.m = spec.ord.m;
+                    // Modeled prefill: one full h-stream pass seeds the
+                    // cache (the bidirectional prompt block cannot be
+                    // appended causally).
+                    cells += (self.n * self.n) as u64;
+                }
+                let appended = inc.committed - lane.cached;
+                for j in lane.cached..inc.committed {
+                    let pos = lane.sigma[j];
+                    let tok = spec.tokens[pos];
+                    assert_ne!(tok, MASK, "appending an uncommitted (MASK) row");
+                    lane.tokens[pos] = tok;
+                }
+                lane.cached = inc.committed;
+                // Incremental step cost: active rows (appends + wants)
+                // against cache + active columns, both streams.
+                let active = appended + spec.want.len();
+                cells += (2 * active * (lane.cached + active)) as u64;
+                let mut rows = Vec::with_capacity(spec.want.len() * self.v);
+                for &pos in spec.want {
+                    rows.extend_from_slice(&self.row_logits_inc(
+                        pos,
+                        spec.tokens,
+                        spec.ord,
+                        spec.known,
+                        lane,
+                    ));
+                }
+                rows
+            })
+            .collect();
+        self.nfe.fetch_add(1, Ordering::Relaxed);
+        self.modeled_cells.fetch_add(cells, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn inc_lanes(&self) -> usize {
+        usize::MAX
+    }
+
+    fn reset_lane(&self, lane: usize) {
+        self.lanes.borrow_mut().remove(&lane);
     }
 
     fn nfe(&self) -> u64 {
@@ -229,6 +407,19 @@ impl Engine for SlowEngine {
     fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
         std::thread::sleep(self.delay);
         self.inner.forward_ord(specs)
+    }
+
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inner.forward_inc(specs)
+    }
+
+    fn inc_lanes(&self) -> usize {
+        self.inner.inc_lanes()
+    }
+
+    fn reset_lane(&self, lane: usize) {
+        self.inner.reset_lane(lane)
     }
 
     fn max_gather_rows(&self) -> usize {
@@ -362,6 +553,212 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].len(), 2 * 3);
         assert_eq!(e.nfe(), 1, "one batched compact call = one NFE");
+    }
+
+    /// The native incremental path must be BIT-identical to the compact
+    /// path (and hence to the dense fallback) across a whole simulated
+    /// decode: random commit schedules, draft- and verify-state calls,
+    /// committed columns served from the lane cache throughout.
+    #[test]
+    fn prop_incremental_rows_bit_identical_across_commit_schedules() {
+        use crate::data::masking::{sample_sigma, OrderProtocol};
+        use crate::util::{propcheck, rng::Rng};
+        propcheck::check_no_shrink(
+            37,
+            40,
+            |r: &mut Rng| {
+                let n = r.range(4, 12);
+                let m = r.range(1, n - 1);
+                (n, m, r.next_u64())
+            },
+            |&(n, m, seed)| {
+                let e = MockEngine::new(seed ^ 21, n, 5, 1.0);
+                let e_ref = MockEngine::new(seed ^ 21, n, 5, 1.0);
+                let mut r = Rng::new(seed);
+                let sigma = sample_sigma(&mut r, n, m, OrderProtocol::Lattice);
+                let ord = Ord::new(sigma, m);
+                let mut tokens = vec![MASK; n];
+                for pos in 0..n {
+                    if ord.is_prompt_pos(pos) {
+                        tokens[pos] = r.below(5) as u32;
+                    }
+                }
+                let lane = r.below(4);
+                e.reset_lane(lane);
+                let mut c = m; // committed orders
+                while c < n {
+                    let t = (c + 1 + r.below(3)).min(n);
+                    let window: Vec<usize> = (c..t).map(|i| ord.sigma[i]).collect();
+                    // draft-state call
+                    let spec = ForwardSpec {
+                        tokens: &tokens,
+                        ord: &ord,
+                        known: c,
+                        want: &window,
+                    };
+                    let inc = e
+                        .forward_inc(&[IncSpec {
+                            spec,
+                            committed: c,
+                            lane,
+                        }])
+                        .unwrap();
+                    let ord_rows = e_ref.forward_ord(std::slice::from_ref(&spec)).unwrap();
+                    if inc != ord_rows {
+                        return Err(format!("draft rows diverge at c={c} (n={n} m={m})"));
+                    }
+                    // fill drafts, verify-state call
+                    for &pos in &window {
+                        tokens[pos] = r.below(5) as u32;
+                    }
+                    let spec = ForwardSpec {
+                        tokens: &tokens,
+                        ord: &ord,
+                        known: n,
+                        want: &window,
+                    };
+                    let inc = e
+                        .forward_inc(&[IncSpec {
+                            spec,
+                            committed: c,
+                            lane,
+                        }])
+                        .unwrap();
+                    let ord_rows = e_ref.forward_ord(std::slice::from_ref(&spec)).unwrap();
+                    if inc != ord_rows {
+                        return Err(format!("verify rows diverge at c={c} (n={n} m={m})"));
+                    }
+                    // commit an accepted prefix, roll the rest back
+                    let a = 1 + r.below(t - c);
+                    for i in (c + a)..t {
+                        tokens[ord.sigma[i]] = MASK;
+                    }
+                    c += a;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// A retired lane's cache is never observed by a newly admitted
+    /// sequence: after reset_lane, a different request in the same lane
+    /// gets exactly the rows a fresh engine would produce.
+    #[test]
+    fn lane_reset_isolates_successive_requests() {
+        let n = 8;
+        let e = MockEngine::new(9, n, 5, 1.0);
+        let run = |e: &MockEngine, prompt_tok: u32, lane: usize| -> Vec<Vec<f32>> {
+            let ord = Ord::new(lattice_sigma(&[0, 3], n), 2);
+            let mut tokens = vec![MASK; n];
+            tokens[0] = prompt_tok;
+            tokens[3] = 2;
+            e.reset_lane(lane);
+            let want: Vec<usize> = (2..5).map(|i| ord.sigma[i]).collect();
+            e.forward_inc(&[IncSpec {
+                spec: ForwardSpec {
+                    tokens: &tokens,
+                    ord: &ord,
+                    known: 2,
+                    want: &want,
+                },
+                committed: 2,
+                lane,
+            }])
+            .unwrap()
+        };
+        // same lane, same sigma/m, DIFFERENT prompt values: the reset
+        // must make run 2 identical to a fresh engine's answer
+        let first = run(&e, 1, 0);
+        let second = run(&e, 4, 0);
+        let fresh = MockEngine::new(9, n, 5, 1.0);
+        assert_eq!(second, run(&fresh, 4, 0));
+        assert_ne!(first, second, "prompt change must change the rows");
+    }
+
+    /// The engine-side invalidation rule: an ordering change or a
+    /// committed count moving backwards in an un-reset lane drops the
+    /// stale cache instead of serving from it.
+    #[test]
+    fn lane_auto_invalidates_on_order_change() {
+        let n = 8;
+        let e = MockEngine::new(11, n, 5, 1.0);
+        let decode = |e: &MockEngine, vis: &[usize], lane: usize| -> Vec<Vec<f32>> {
+            let ord = Ord::new(lattice_sigma(vis, n), vis.len());
+            let mut tokens = vec![MASK; n];
+            for &p in vis {
+                tokens[p] = 3;
+            }
+            let want: Vec<usize> = (vis.len()..n).map(|i| ord.sigma[i]).collect();
+            e.forward_inc(&[IncSpec {
+                spec: ForwardSpec {
+                    tokens: &tokens,
+                    ord: &ord,
+                    known: vis.len(),
+                    want: &want,
+                },
+                committed: vis.len(),
+                lane,
+            }])
+            .unwrap()
+        };
+        let _ = decode(&e, &[0, 3], 0);
+        // NO reset: different ordering in the same lane must still answer
+        // exactly like a fresh engine (stale cache dropped, not read)
+        let got = decode(&e, &[1, 5, 6], 0);
+        let fresh = MockEngine::new(11, n, 5, 1.0);
+        assert_eq!(got, decode(&fresh, &[1, 5, 6], 0));
+    }
+
+    /// The modeled-compute accounting: after the one-time prefill, every
+    /// incremental iteration books strictly fewer cells than a compact
+    /// iteration (2·N² per sequence), and the cumulative totals cross
+    /// before the second committed iteration at any realistic shape.
+    #[test]
+    fn incremental_modeled_compute_beats_compact_per_iteration() {
+        let n = 64;
+        let e = MockEngine::new(13, n, 5, 1.0);
+        let ord = Ord::new(lattice_sigma(&[0, 9], n), 2);
+        let mut tokens = vec![MASK; n];
+        tokens[0] = 1;
+        tokens[9] = 2;
+        e.reset_lane(0);
+        let compact_iter = (2 * n * n) as u64;
+        let mut c = 2usize;
+        let mut iter = 0;
+        while c < n {
+            let t = (c + 4).min(n);
+            let window: Vec<usize> = (c..t).map(|i| ord.sigma[i]).collect();
+            let before = e.modeled_cells();
+            e.forward_inc(&[IncSpec {
+                spec: ForwardSpec {
+                    tokens: &tokens,
+                    ord: &ord,
+                    known: c,
+                    want: &window,
+                },
+                committed: c,
+                lane: 0,
+            }])
+            .unwrap();
+            let step = e.modeled_cells() - before;
+            if iter == 0 {
+                // first call pays the N² prefill on top of its step
+                assert!(step > (n * n) as u64);
+                assert!(step < compact_iter + (n * n) as u64);
+            } else {
+                assert!(
+                    step < compact_iter,
+                    "iteration {iter}: inc step {step} >= compact {compact_iter}"
+                );
+            }
+            for &pos in &window {
+                tokens[pos] = 3;
+            }
+            c = t;
+            iter += 1;
+        }
+        // cumulative: prefill amortizes by the second iteration
+        assert!(e.modeled_cells() < compact_iter * iter);
     }
 
     #[test]

@@ -42,15 +42,41 @@ pub struct ForwardSpec<'a> {
     pub want: &'a [usize],
 }
 
+/// One sequence's INCREMENTAL forward request: a [`ForwardSpec`] plus the
+/// cache-lane bookkeeping the engine needs to reuse the sequence's
+/// persistent per-layer content-stream K/V (see docs/ARCHITECTURE.md
+/// §Incremental forward & KV cache). Valid only for machines whose
+/// generation ordering is FIXED for the request's lifetime
+/// ([`crate::decode::DecodeMachine::incremental`]).
+#[derive(Clone, Copy)]
+pub struct IncSpec<'a> {
+    pub spec: ForwardSpec<'a>,
+    /// Orders `< committed` hold FINAL token values in `spec.tokens`
+    /// (accepted or resampled — never an unverified draft). The engine
+    /// appends rows `lane.cached..committed` to the lane cache before
+    /// computing the wanted rows. Monotone per lane between resets;
+    /// always `ord.m <= committed <= known`.
+    pub committed: usize,
+    /// Cache lane this sequence is pinned to for its lifetime (the
+    /// scheduler's batch-slot index). The scheduler calls
+    /// [`Engine::reset_lane`] when a slot is (re)assigned, so a lane
+    /// never leaks state across requests.
+    pub lane: usize,
+}
+
 /// The forward interface the decoders run against.
 ///
 /// The COMPACT path ([`Engine::forward_ord`]) is what the decode machines
 /// and the scheduler use: per sequence it ships O(N) indices host→device
 /// and returns only the requested logit rows (O(R·V)) device→host. The
-/// dense [`Engine::forward`] contract (`tokens` row-major [batch, N] u32;
-/// `mask_h`/`mask_g` row-major [batch, N, N], 1.0 = may-attend; returns
-/// logits [batch, N, V]) remains the substrate for training, density
-/// evaluation (eval/ppl.rs), and the compact path's fallback.
+/// INCREMENTAL path ([`Engine::forward_inc`]) additionally reuses each
+/// sequence's cached content-stream K/V so the device computes only the
+/// newly-committed and wanted rows — O(R·(C+R)·d) instead of O(N²·d) per
+/// iteration. The dense [`Engine::forward`] contract (`tokens` row-major
+/// [batch, N] u32; `mask_h`/`mask_g` row-major [batch, N, N], 1.0 =
+/// may-attend; returns logits [batch, N, V]) remains the substrate for
+/// training, density evaluation (eval/ppl.rs), and the fallback ladder's
+/// floor (inc → ord → dense).
 ///
 /// NOTE: deliberately NOT `Send` — the PJRT client is single-threaded
 /// (`Rc` internally). Ownership transfer to a worker thread happens at
@@ -97,6 +123,39 @@ pub trait Engine {
     fn max_gather_rows(&self) -> usize {
         usize::MAX
     }
+
+    /// Incremental batched forward: like [`Engine::forward_ord`], but each
+    /// sequence runs in its pinned cache lane — the engine appends the
+    /// newly-committed rows' K/V to the lane's persistent cache and
+    /// computes only those plus the wanted rows. Returns the gathered
+    /// wanted rows exactly as `forward_ord` does.
+    ///
+    /// The default implementation drops the cache bookkeeping and routes
+    /// through [`Engine::forward_ord`] (which itself defaults to
+    /// [`forward_ord_dense`]) — the inc → ord → dense fallback ladder —
+    /// so every engine is correct by construction and callers never need
+    /// a capability check for correctness. Engines with a native path
+    /// ([`mock::MockEngine`], [`XlaEngine`] with `fwd_inc_b{B}` artifacts)
+    /// override it and report `inc_lanes() > 0`; the scheduler only
+    /// routes through `forward_inc` in that case, so engines without
+    /// caches keep their exact one-launch-per-iteration batching.
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+        let plain: Vec<ForwardSpec<'_>> = specs.iter().map(|s| s.spec).collect();
+        self.forward_ord(&plain)
+    }
+
+    /// Number of cache lanes the engine's NATIVE incremental path serves
+    /// (0 = no native path; `forward_inc` then falls back to
+    /// `forward_ord`). Lane storage is allocated on first use, so this is
+    /// a routing capability signal, not a memory commitment.
+    fn inc_lanes(&self) -> usize {
+        0
+    }
+
+    /// Drop a lane's cached state. The scheduler calls this whenever a
+    /// batch slot is assigned to a new request or retired, so a freshly
+    /// admitted slot can never observe a previous occupant's cache.
+    fn reset_lane(&self, _lane: usize) {}
 
     /// Number of forward calls so far (NFE accounting — Theorem 1).
     fn nfe(&self) -> u64;
@@ -180,11 +239,12 @@ pub fn forward_ord_dense<E: Engine + ?Sized>(
 }
 
 /// Wrapper that pins the wrapped engine to the DENSE forward path:
-/// `forward_ord` is deliberately not overridden, so compact requests route
-/// through [`forward_ord_dense`] even when the inner engine has a native
-/// compact implementation. This is the "before" side of the
-/// compact-vs-dense ablation (`perf_engine`) and of the bit-identity
-/// equivalence tests (decode/assd.rs, runtime/mock.rs).
+/// `forward_ord` and `forward_inc` are deliberately not overridden (and
+/// `inc_lanes` stays 0), so compact AND incremental requests both route
+/// through [`forward_ord_dense`] even when the inner engine has native
+/// implementations. This is the "before" side of the compact-vs-dense and
+/// incremental-vs-compact ablations (`perf_engine`) and of the
+/// bit-identity equivalence tests (decode/assd.rs, runtime/mock.rs).
 pub struct DensePath<'e, E: Engine + ?Sized>(pub &'e E);
 
 impl<E: Engine + ?Sized> Engine for DensePath<'_, E> {

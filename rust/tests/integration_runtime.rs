@@ -220,6 +220,63 @@ fn compact_forward_matches_dense_on_real_artifacts() {
     }
 }
 
+/// Incremental path on the REAL artifacts: a multi-iteration commit
+/// schedule through fwd_inc (prefill + per-iteration appends against the
+/// persistent lane cache) must numerically match the compact path at
+/// every step. Skipped when the artifact set predates the incremental
+/// family.
+#[test]
+fn incremental_forward_matches_compact_on_real_artifacts() {
+    use asarm::runtime::IncSpec;
+    let Some(e) = engine() else { return };
+    if e.inc_lanes() == 0 {
+        eprintln!("skipping: no fwd_inc_b* artifacts (regenerate with `make artifacts`)");
+        return;
+    }
+    let n = e.seq_len();
+    let v = e.vocab();
+    let m = n - 12; // 12 targets
+    let (ord, mut toks, mut rng) = random_case(&e, 11, m);
+    e.reset_lane(0);
+    let mut c = m;
+    let w = 3;
+    while c < n {
+        let t = (c + w).min(n);
+        let window: Vec<usize> = (c..t).map(|i| ord.sigma[i]).collect();
+        for (known, fill) in [(c, false), (ord.n(), true)] {
+            if fill {
+                for &pos in &window {
+                    toks[pos] = rng.range(97, 123) as u32;
+                }
+            }
+            let spec = ForwardSpec {
+                tokens: &toks,
+                ord: &ord,
+                known,
+                want: &window,
+            };
+            let inc = e
+                .forward_inc(&[IncSpec {
+                    spec,
+                    committed: c,
+                    lane: 0,
+                }])
+                .unwrap();
+            let compact = e.forward_ord(std::slice::from_ref(&spec)).unwrap();
+            assert_eq!(inc[0].len(), window.len() * v);
+            for (i, (a, b)) in inc[0].iter().zip(&compact[0]).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "c={c} known={known} row-elem {i}: inc {a} vs compact {b}"
+                );
+            }
+        }
+        // commit the window (the verify loop above already filled tokens)
+        c = t;
+    }
+    e.reset_lane(0);
+}
+
 #[test]
 fn sequential_decodes_real_sequence() {
     let Some(e) = engine() else { return };
