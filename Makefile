@@ -47,6 +47,7 @@ bench:
 	cargo bench --bench perf_coordinator
 	cargo bench --bench perf_engine
 	cargo bench --bench perf_streaming
+	cargo bench --bench perf_paged
 
 # Tiny Table-1 run (drafter sweep included) plus the compact-vs-dense
 # forward-ABI ablation, the incremental-vs-compact KV-cache ablation, and
@@ -57,7 +58,12 @@ bench:
 # if the incremental path regresses vs compact (or its modeled
 # per-iteration compute stops beating compact's), or any paths' outputs
 # diverge; perf_streaming writes BENCH_streaming.json and exits non-zero
-# if streaming TTFT stops beating the blocking path's total latency.
+# if streaming TTFT stops beating the blocking path's total latency;
+# perf_paged writes BENCH_paged.json (slab-vs-paged memory model,
+# warm-vs-cold TTFT proxy, prefix-cache hit-rate sweep) and exits
+# non-zero if the warm first iteration stops beating the cold one, warm
+# outputs diverge, repeated prompts stop hitting the cache, or the paged
+# peak footprint exceeds the slab layout it replaced.
 #
 # The BENCH_*.json files land at the REPO ROOT (cargo bench runs from
 # here) and are COMMITTED, so the perf trajectory is tracked in-tree
@@ -67,3 +73,4 @@ bench-smoke:
 	ASARM_BENCH_MOCK=1 ASARM_BENCH_SEQS=2 cargo bench --bench table1_assd
 	ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine
 	cargo bench --bench perf_streaming
+	cargo bench --bench perf_paged

@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::runtime::KvStats;
 use crate::util::json::Json;
 use crate::util::stats::Histogram;
 
@@ -50,6 +51,15 @@ struct Inner {
     deadline_expired: u64,
     /// Requests refused at admission because the queue was full (429).
     shed: u64,
+    // --- paged KV / prefix cache (docs/ARCHITECTURE.md §Paged KV &
+    //     prefix cache). Pool-wide totals, accumulated as per-iteration
+    //     deltas by each worker from its replica's engine counters. ---
+    /// Lane initializations served from a cached prefix (prefill skipped).
+    prefix_hits: u64,
+    /// Lane initializations that had to prefill from scratch.
+    prefix_misses: u64,
+    /// Sealed prefix-cache entries evicted (LRU) under block pressure.
+    kv_evictions: u64,
 }
 
 impl Default for Metrics {
@@ -78,6 +88,9 @@ impl Metrics {
                 cancelled: 0,
                 deadline_expired: 0,
                 shed: 0,
+                prefix_hits: 0,
+                prefix_misses: 0,
+                kv_evictions: 0,
             })),
         }
     }
@@ -131,6 +144,31 @@ impl Metrics {
 
     pub fn record_shed(&self) {
         self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Fold one worker's prefix-cache activity DELTAS (since its previous
+    /// push) into the pool-wide totals. Engine counters are cumulative per
+    /// replica, so workers difference them before recording here.
+    pub fn record_prefix_cache(&self, hits: u64, misses: u64, evictions: u64) {
+        if hits == 0 && misses == 0 && evictions == 0 {
+            return;
+        }
+        let mut m = self.inner.lock().unwrap();
+        m.prefix_hits += hits;
+        m.prefix_misses += misses;
+        m.kv_evictions += evictions;
+    }
+
+    pub fn prefix_hits(&self) -> u64 {
+        self.inner.lock().unwrap().prefix_hits
+    }
+
+    pub fn prefix_misses(&self) -> u64 {
+        self.inner.lock().unwrap().prefix_misses
+    }
+
+    pub fn kv_evictions(&self) -> u64 {
+        self.inner.lock().unwrap().kv_evictions
     }
 
     pub fn requests(&self) -> u64 {
@@ -191,6 +229,17 @@ impl Metrics {
             ("cancelled", Json::num(m.cancelled as f64)),
             ("deadline_expired", Json::num(m.deadline_expired as f64)),
             ("shed", Json::num(m.shed as f64)),
+            ("prefix_hits", Json::num(m.prefix_hits as f64)),
+            ("prefix_misses", Json::num(m.prefix_misses as f64)),
+            (
+                "prefix_hit_rate",
+                Json::num(if m.prefix_hits + m.prefix_misses > 0 {
+                    m.prefix_hits as f64 / (m.prefix_hits + m.prefix_misses) as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("kv_evictions", Json::num(m.kv_evictions as f64)),
         ])
     }
 }
@@ -236,6 +285,19 @@ pub struct ReplicaStats {
     /// Slots this replica retired early (cancel, disconnect, abandoned
     /// handle, or deadline expiry).
     cancelled: AtomicU64,
+    // --- paged-KV block pool (gauges + cumulative engine counters,
+    //     overwritten wholesale from the replica's [`KvStats`] snapshot
+    //     each scheduler iteration; 0 on engines without a native
+    //     incremental path). ---
+    kv_blocks_total: AtomicU64,
+    kv_blocks_free: AtomicU64,
+    kv_blocks_cached: AtomicU64,
+    kv_blocks_evictable: AtomicU64,
+    kv_sealed_entries: AtomicU64,
+    kv_prefix_hits: AtomicU64,
+    kv_prefix_misses: AtomicU64,
+    kv_evictions: AtomicU64,
+    kv_cow_copies: AtomicU64,
 }
 
 impl ReplicaStats {
@@ -252,6 +314,15 @@ impl ReplicaStats {
             batch_iterations: AtomicU64::new(0),
             batch_occupancy_sum: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
+            kv_blocks_total: AtomicU64::new(0),
+            kv_blocks_free: AtomicU64::new(0),
+            kv_blocks_cached: AtomicU64::new(0),
+            kv_blocks_evictable: AtomicU64::new(0),
+            kv_sealed_entries: AtomicU64::new(0),
+            kv_prefix_hits: AtomicU64::new(0),
+            kv_prefix_misses: AtomicU64::new(0),
+            kv_evictions: AtomicU64::new(0),
+            kv_cow_copies: AtomicU64::new(0),
         }
     }
 
@@ -288,6 +359,43 @@ impl ReplicaStats {
         self.batch_iterations.fetch_add(1, Ordering::Relaxed);
         self.batch_occupancy_sum
             .fetch_add(occupancy as u64, Ordering::Relaxed);
+    }
+
+    /// Overwrite the block-pool gauges and cumulative prefix-cache
+    /// counters from a fresh engine snapshot (workers push one per
+    /// scheduler iteration and at lane retirement).
+    pub fn record_kv(&self, s: &KvStats) {
+        self.kv_blocks_total
+            .store(s.total_blocks as u64, Ordering::Relaxed);
+        self.kv_blocks_free
+            .store(s.free_blocks as u64, Ordering::Relaxed);
+        self.kv_blocks_cached
+            .store(s.cached_blocks as u64, Ordering::Relaxed);
+        self.kv_blocks_evictable
+            .store(s.evictable_blocks as u64, Ordering::Relaxed);
+        self.kv_sealed_entries
+            .store(s.sealed_entries as u64, Ordering::Relaxed);
+        self.kv_prefix_hits.store(s.prefix_hits, Ordering::Relaxed);
+        self.kv_prefix_misses
+            .store(s.prefix_misses, Ordering::Relaxed);
+        self.kv_evictions.store(s.evictions, Ordering::Relaxed);
+        self.kv_cow_copies.store(s.cow_copies, Ordering::Relaxed);
+    }
+
+    pub fn prefix_hits(&self) -> u64 {
+        self.kv_prefix_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn prefix_misses(&self) -> u64 {
+        self.kv_prefix_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn kv_evictions(&self) -> u64 {
+        self.kv_evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn kv_blocks_free(&self) -> u64 {
+        self.kv_blocks_free.load(Ordering::Relaxed)
     }
 
     pub fn requests(&self) -> u64 {
@@ -351,6 +459,33 @@ impl ReplicaStats {
             ("batch_iterations", Json::num(iters as f64)),
             ("mean_batch_occupancy", Json::num(occ)),
             ("cancelled", Json::num(self.cancelled() as f64)),
+            (
+                "kv_blocks_total",
+                Json::num(self.kv_blocks_total.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_blocks_free",
+                Json::num(self.kv_blocks_free.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_blocks_cached",
+                Json::num(self.kv_blocks_cached.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_blocks_evictable",
+                Json::num(self.kv_blocks_evictable.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_sealed_entries",
+                Json::num(self.kv_sealed_entries.load(Ordering::Relaxed) as f64),
+            ),
+            ("prefix_hits", Json::num(self.prefix_hits() as f64)),
+            ("prefix_misses", Json::num(self.prefix_misses() as f64)),
+            ("kv_evictions", Json::num(self.kv_evictions() as f64)),
+            (
+                "kv_cow_copies",
+                Json::num(self.kv_cow_copies.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -425,6 +560,49 @@ mod tests {
             r.snapshot_json().get("cancelled").unwrap().as_f64(),
             Some(1.0)
         );
+    }
+
+    #[test]
+    fn kv_counters_and_gauges() {
+        let m = Metrics::new();
+        m.record_prefix_cache(3, 1, 2);
+        m.record_prefix_cache(0, 0, 0); // delta-free push is a no-op
+        let j = m.snapshot_json();
+        assert_eq!(j.get("prefix_hits").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("prefix_misses").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("kv_evictions").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("prefix_hit_rate").unwrap().as_f64(), Some(0.75));
+        assert_eq!(m.prefix_hits(), 3);
+        assert_eq!(m.prefix_misses(), 1);
+        assert_eq!(m.kv_evictions(), 2);
+
+        let r = ReplicaStats::new(0);
+        let s = KvStats {
+            block_rows: 16,
+            total_blocks: 8,
+            free_blocks: 5,
+            cached_blocks: 2,
+            evictable_blocks: 1,
+            sealed_entries: 2,
+            prefix_hits: 4,
+            prefix_misses: 6,
+            evictions: 1,
+            cow_copies: 3,
+        };
+        r.record_kv(&s);
+        let j = r.snapshot_json();
+        assert_eq!(j.get("kv_blocks_total").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("kv_blocks_free").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("kv_blocks_cached").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("kv_blocks_evictable").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("kv_sealed_entries").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("prefix_hits").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("prefix_misses").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.get("kv_evictions").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("kv_cow_copies").unwrap().as_f64(), Some(3.0));
+        // gauges overwrite, not accumulate
+        r.record_kv(&KvStats { free_blocks: 8, ..s });
+        assert_eq!(r.kv_blocks_free(), 8);
     }
 
     #[test]

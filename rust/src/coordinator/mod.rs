@@ -26,7 +26,7 @@ pub mod scheduler;
 
 use std::path::Path;
 
-use crate::runtime::{EnginePool, PoolConfig};
+use crate::runtime::{EnginePool, PagedKvConfig, PoolConfig};
 
 pub use lifecycle::{Abort, CancelToken, Event, RequestHandle, TextAssembler};
 pub use metrics::{Metrics, ReplicaState, ReplicaStats};
@@ -42,6 +42,20 @@ pub fn start_xla(
     cfg: SchedulerConfig,
     metrics: Metrics,
 ) -> SchedulerHandle {
+    start_xla_with(artifacts_dir, params_path, pool, cfg, metrics, None)
+}
+
+/// [`start_xla`] with explicit per-replica K/V block-pool sizing (the
+/// `--block-size` / `--cache-blocks` serving flags); `None` uses the
+/// engine's per-seq-len defaults.
+pub fn start_xla_with(
+    artifacts_dir: impl AsRef<Path>,
+    params_path: Option<std::path::PathBuf>,
+    pool: PoolConfig,
+    cfg: SchedulerConfig,
+    metrics: Metrics,
+    kv_cfg: Option<PagedKvConfig>,
+) -> SchedulerHandle {
     let dir = artifacts_dir.as_ref().to_path_buf();
-    scheduler::spawn_pool(EnginePool::xla(pool, dir, params_path), cfg, metrics)
+    scheduler::spawn_pool(EnginePool::xla_with(pool, dir, params_path, kv_cfg), cfg, metrics)
 }

@@ -8,6 +8,11 @@
 //! has a free batch slot first picks up the next job, so a slow or dead
 //! replica never stalls admission; when the queue is full, submission is
 //! refused outright (load shedding — the HTTP layer renders it as a 429).
+//! On paged-KV engines the worker's slot count is additionally capped by
+//! the BLOCK BUDGET — only as many lanes as the K/V block pool can back
+//! at their worst case are admitted, cached prefixes stay LRU-evictable
+//! under pressure, and active lanes are never evicted (docs/
+//! ARCHITECTURE.md §Paged KV & prefix cache).
 //! Within a worker the loop is vLLM-style continuous batching with
 //! LANE-PINNED slots: each request becomes a decode state machine that is
 //! pinned to one batch slot — its engine CACHE LANE — for its whole
@@ -64,7 +69,7 @@ use crate::decode::sequential::SequentialMachine;
 use crate::decode::{DecodeMachine, DecodeOutcome};
 use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
-use crate::runtime::{Engine, EnginePool, ForwardSpec, IncSpec, PoolConfig};
+use crate::runtime::{Engine, EnginePool, ForwardSpec, IncSpec, KvStats, PoolConfig};
 use crate::tokenizer::{ByteTokenizer, MASK};
 use crate::util::json::Json;
 use crate::util::mpmc;
@@ -305,6 +310,26 @@ fn abort_slot(slot: Slot, reason: Abort, metrics: &Metrics, stats: &ReplicaStats
     )));
 }
 
+/// Difference this replica's cumulative engine counters against the
+/// previous push, fold the deltas into the pool aggregate, and overwrite
+/// the per-replica gauges. No-op on engines without a paged KV pool.
+fn push_kv_stats(
+    engine: &dyn Engine,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+    last: &mut KvStats,
+) {
+    if let Some(s) = engine.kv_stats() {
+        stats.record_kv(&s);
+        metrics.record_prefix_cache(
+            s.prefix_hits.saturating_sub(last.prefix_hits),
+            s.prefix_misses.saturating_sub(last.prefix_misses),
+            s.evictions.saturating_sub(last.evictions),
+        );
+        *last = s;
+    }
+}
+
 /// One worker's continuous-batching loop over its private engine replica.
 fn run_worker(
     engine: &dyn Engine,
@@ -314,12 +339,27 @@ fn run_worker(
     stats: &ReplicaStats,
 ) {
     let tok = ByteTokenizer::new();
+    // BLOCK-BUDGET ADMISSION: on a paged-KV engine, concurrency is capped
+    // by memory, not just `max_batch` — admit only as many lanes as the
+    // block pool can back at their worst case (every lane growing to the
+    // full window). Cached prefixes do NOT count against the budget: their
+    // blocks are evictable (LRU) the moment an active lane needs them,
+    // whereas active lanes are never evicted — so admission under this cap
+    // can never deadlock on pool exhaustion. Engines without a pool
+    // (compact/dense paths) keep the plain `max_batch` cap.
+    let lane_budget = engine
+        .kv_stats()
+        .map(|s| s.lane_budget(engine.seq_len()))
+        .unwrap_or(usize::MAX);
+    let mut last_kv = KvStats::default();
     // Batch slots double as engine CACHE LANES: a request is pinned to
     // its slot index for its whole lifetime, so the engine can key the
     // sequence's persistent K/V cache by lane and retiring one slot never
     // re-indexes (or touches the cache of) a batch-mate — the reason this
     // is a fixed Vec<Option<Slot>> rather than the old swap_remove Vec.
-    let mut lanes: Vec<Option<Slot>> = (0..cfg.max_batch.max(1)).map(|_| None).collect();
+    let mut lanes: Vec<Option<Slot>> = (0..cfg.max_batch.max(1).min(lane_budget))
+        .map(|_| None)
+        .collect();
     let mut queue_open = true;
     fn active(lanes: &[Option<Slot>]) -> usize {
         lanes.iter().filter(|s| s.is_some()).count()
@@ -547,6 +587,12 @@ fn run_worker(
             );
             slot.life.finish(Ok(resp));
         }
+
+        // --- export this iteration's block-pool state: gauges overwrite
+        //     the replica snapshot; hit/miss/eviction deltas fold into
+        //     the pool aggregate. Runs AFTER retirement so a lane's
+        //     closing seal (prefix-cache insert) is visible immediately.
+        push_kv_stats(engine, metrics, stats, &mut last_kv);
     }
 }
 
@@ -678,6 +724,7 @@ mod tests {
     use crate::coordinator::DraftSpec;
     use crate::draft::DraftKind;
     use crate::runtime::mock::{MockEngine, SlowEngine};
+    use crate::runtime::PagedKvConfig;
 
     fn mock_handle(max_batch: usize) -> (SchedulerHandle, Metrics) {
         let metrics = Metrics::new();
@@ -1250,6 +1297,126 @@ mod tests {
         // The counter alone proves early retirement (no timing assert):
         // a completed decode books a request, never a cancellation.
         assert_eq!(metrics.requests(), 0);
+    }
+
+    // --- paged KV: block-budget admission, prefix cache, eviction -------
+
+    fn paged_handle(pool_cfg: PagedKvConfig, max_batch: usize) -> (SchedulerHandle, Metrics) {
+        let metrics = Metrics::new();
+        let m2 = metrics.clone();
+        let h = spawn(
+            move || {
+                Ok(Box::new(MockEngine::with_pool(3, 16, 258, 1.0, pool_cfg)) as Box<dyn Engine>)
+            },
+            SchedulerConfig {
+                max_batch,
+                idle_poll: Duration::from_millis(5),
+                ..Default::default()
+            },
+            m2,
+        );
+        (h, metrics)
+    }
+
+    /// A repeated request hits the prefix cache (its retired predecessor's
+    /// sealed prompt blocks seed the new lane, skipping prefill) and the
+    /// warm decode is bit-identical to the cold one. Both granularities
+    /// export the hit: pool-level /metrics and per-replica /replicas.
+    #[test]
+    fn warm_prefix_requests_hit_cache_and_match_cold_outputs() {
+        let (h, metrics) = mock_handle(1);
+        let req = || InfillRequest {
+            text: "ab____cd".into(),
+            seed: 17,
+            sampler: SamplerKind::Sequential,
+            ..Default::default()
+        };
+        let cold = h.infill(req()).unwrap();
+        let warm = h.infill(req()).unwrap();
+        assert_eq!(warm.text, cold.text, "warm decode must be bit-identical");
+        assert!(metrics.prefix_misses() >= 1, "cold request should miss");
+        assert!(
+            metrics.prefix_hits() >= 1,
+            "warm request never hit the prefix cache"
+        );
+        let r = &h.replica_stats()[0];
+        assert!(r.prefix_hits() >= 1);
+        assert!(r.prefix_misses() >= 1);
+    }
+
+    /// Admission is capped by the BLOCK BUDGET, not just `max_batch`: a
+    /// pool that backs 2 worst-case lanes never runs more than 2 slots
+    /// concurrently even with `max_batch = 4`, yet every request still
+    /// completes (lanes recycle through the budget) and the block-pool
+    /// gauges surface in the replica snapshot.
+    #[test]
+    fn block_budget_caps_concurrency_below_max_batch() {
+        let (h, metrics) = paged_handle(
+            PagedKvConfig {
+                block_rows: 16,
+                total_blocks: 2,
+            },
+            4,
+        );
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                h.submit(InfillRequest {
+                    text: "ab______".into(),
+                    seed: i,
+                    ..Default::default()
+                })
+                .unwrap()
+            })
+            .collect();
+        for rh in handles {
+            assert_eq!(rh.wait().unwrap().n_generated, 6);
+        }
+        assert_eq!(metrics.requests(), 6);
+        let j = metrics.snapshot_json();
+        let occ = j.get("mean_batch_occupancy").unwrap().as_f64().unwrap();
+        assert!(occ <= 2.0, "block budget exceeded: occupancy {occ}");
+        let r = h.replica_stats()[0].snapshot_json();
+        assert_eq!(r.get("kv_blocks_total").unwrap().as_f64(), Some(2.0));
+    }
+
+    /// Eviction under block pressure changes WHEN prefill happens, never
+    /// WHAT is sampled: rotating prompts through a pool too small to cache
+    /// them all must produce, for every (text, seed), exactly the output
+    /// of a roomy-pool scheduler — while demonstrably evicting (the
+    /// never-evicts reference pins down the counter's meaning).
+    #[test]
+    fn eviction_under_pressure_never_changes_scheduler_outputs() {
+        let (roomy, _) = mock_handle(1);
+        // blocks_per_seq = 16/4 = 4; 6 total blocks hold one active lane
+        // plus half a sealed prefix, so every prompt rotation evicts.
+        let (tiny, metrics) = paged_handle(
+            PagedKvConfig {
+                block_rows: 4,
+                total_blocks: 6,
+            },
+            1,
+        );
+        let texts = ["ab____cd", "xy______", "pq__rs__"];
+        for round in 0..2u64 {
+            for (i, text) in texts.iter().enumerate() {
+                let req = |seed| InfillRequest {
+                    text: text.to_string(),
+                    seed,
+                    ..Default::default()
+                };
+                let seed = 31 + round * 10 + i as u64;
+                assert_eq!(
+                    tiny.infill(req(seed)).unwrap().text,
+                    roomy.infill(req(seed)).unwrap().text,
+                    "round {round}, prompt {i}"
+                );
+            }
+        }
+        assert!(
+            tiny.replica_stats()[0].kv_evictions() > 0,
+            "pressure pool never evicted — test lost its teeth"
+        );
+        assert!(metrics.kv_evictions() > 0, "pool aggregate missed evictions");
     }
 
     /// A full admission queue sheds instead of queueing without bound.

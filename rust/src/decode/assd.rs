@@ -821,6 +821,121 @@ mod tests {
         }
     }
 
+    /// PREFIX-CACHE exactness across every machine × drafter: the same
+    /// request decoded twice on one engine — the second time seeded from
+    /// the prefix cache that the first decode's retirement sealed, so the
+    /// warm lane skips prefill entirely — must be bit-identical (tokens,
+    /// model/aux NFE, iterations, speculation counters) to the cold run
+    /// AND to the dense-path reference, for all three machines and every
+    /// drafter config. Reorganizing K/V memory (paging, sealing,
+    /// copy-on-write, cache seeding) is a transport optimization; if a
+    /// cache hit ever changed a sampled bit, Theorem-2 exactness would be
+    /// gone and this battery catches it at the first diverging field.
+    #[test]
+    fn warm_prefix_decode_bit_identical_to_cold_for_every_machine_and_drafter() {
+        fn run_warm_cold(
+            tag: &str,
+            n: usize,
+            v: usize,
+            mk: &dyn Fn(u64) -> Box<dyn crate::decode::DecodeMachine>,
+            expect_cache: bool,
+        ) {
+            use crate::decode::run_machine_inc;
+            use crate::runtime::{DensePath, Engine as _};
+            let e = MockEngine::new(0xE11, n, v, 1.2);
+            let e_dense = MockEngine::new(0xE11, n, v, 1.2);
+            let cold = run_machine_inc(&e, mk(77), 0).unwrap();
+            let s0 = e.kv_stats().unwrap();
+            let warm = run_machine_inc(&e, mk(77), 0).unwrap();
+            let s1 = e.kv_stats().unwrap();
+            let dense = run_machine(&DensePath(&e_dense), mk(77)).unwrap();
+            assert_eq!(warm.tokens, cold.tokens, "{tag}: warm tokens diverge");
+            assert_eq!(warm.model_nfe, cold.model_nfe, "{tag}: warm model NFE");
+            assert_eq!(warm.aux_nfe, cold.aux_nfe, "{tag}: warm aux NFE");
+            assert_eq!(warm.iterations, cold.iterations, "{tag}: warm iterations");
+            assert_eq!(warm.proposed, cold.proposed, "{tag}: warm proposed");
+            assert_eq!(warm.accepted, cold.accepted, "{tag}: warm accepted");
+            assert_eq!(cold.tokens, dense.tokens, "{tag}: cold vs dense tokens");
+            assert_eq!(cold.model_nfe, dense.model_nfe, "{tag}: dense model NFE");
+            assert_eq!(cold.aux_nfe, dense.aux_nfe, "{tag}: dense aux NFE");
+            assert_eq!(cold.iterations, dense.iterations, "{tag}: dense iterations");
+            assert_eq!(cold.proposed, dense.proposed, "{tag}: dense proposed");
+            assert_eq!(cold.accepted, dense.accepted, "{tag}: dense accepted");
+            if expect_cache {
+                assert!(s0.prefix_misses >= 1, "{tag}: cold run should miss");
+                assert!(
+                    s1.prefix_hits > s0.prefix_hits,
+                    "{tag}: warm run never hit the prefix cache — the test \
+                     exercised nothing"
+                );
+            } else {
+                // Diffusion declines incrementality: no cache traffic.
+                assert_eq!(s1.prefix_hits, s0.prefix_hits, "{tag}: phantom hit");
+                assert_eq!(s1.prefix_misses, s0.prefix_misses, "{tag}: phantom miss");
+            }
+        }
+
+        let n = 14;
+        let v = 6;
+        let mut r = Rng::new(0xC0FFEE);
+        let m = 5;
+        let sigma = sample_sigma(&mut r, n, m, OrderProtocol::Lattice);
+        let ord = Ordering::new(sigma, m);
+        let prompt: Vec<(usize, u32)> = (0..n)
+            .filter(|&p| ord.is_prompt_pos(p))
+            .map(|p| (p, r.below(v) as u32))
+            .collect();
+        let toks = init_tokens(&ord, &prompt);
+        for kind in DraftKind::ALL {
+            for adaptive in [false, true] {
+                let opts = DraftOptions {
+                    kind,
+                    max_len: 4,
+                    adaptive,
+                };
+                let mk = |rs: u64| -> Box<dyn crate::decode::DecodeMachine> {
+                    let drafter = opts.build(&toks, v);
+                    Box::new(AssdMachine::new(
+                        ord.clone(),
+                        toks.clone(),
+                        v,
+                        opts.speculation(),
+                        1.2,
+                        Rng::new(rs),
+                        drafter,
+                    ))
+                };
+                run_warm_cold(
+                    &format!("assd {kind:?} adaptive={adaptive}"),
+                    n,
+                    v,
+                    &mk,
+                    true,
+                );
+            }
+        }
+        let mk_seq = |rs: u64| -> Box<dyn crate::decode::DecodeMachine> {
+            Box::new(crate::decode::sequential::SequentialMachine::new(
+                ord.clone(),
+                toks.clone(),
+                v,
+                1.2,
+                Rng::new(rs),
+            ))
+        };
+        run_warm_cold("sequential", n, v, &mk_seq, true);
+        let mk_dif = |rs: u64| -> Box<dyn crate::decode::DecodeMachine> {
+            Box::new(crate::decode::diffusion::DiffusionMachine::new(
+                toks.clone(),
+                v,
+                4,
+                1.2,
+                Rng::new(rs),
+            ))
+        };
+        run_warm_cold("diffusion", n, v, &mk_dif, false);
+    }
+
     /// The streaming hook: every drafter's drained commits are exactly
     /// the final target tokens — each target exactly once, never an
     /// unverified draft, values matching the outcome bit for bit.

@@ -16,7 +16,7 @@ use asarm::data::masking::{MaskRateSchedule, OrderProtocol, PromptDist};
 use asarm::data::{pack_chunks, split_chunks, stories};
 use asarm::draft::{DraftKind, DraftOptions};
 use asarm::runtime::engine::TrainRunner;
-use asarm::runtime::{PoolConfig, XlaEngine};
+use asarm::runtime::{PagedKvConfig, PoolConfig, XlaEngine};
 use asarm::train::TrainConfig;
 use asarm::util::args::Args;
 use asarm::util::rng::Rng;
@@ -29,6 +29,10 @@ const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
          --queue-depth 1024   (admission queue bound; full => HTTP 429)
          --event-buffer 256   (per-request event-channel capacity;
          lagging streaming clients beyond it are cancelled)
+         --block-size 16      (rows per K/V cache block)
+         --cache-blocks N     (per-replica K/V block-pool size; bounds
+         engine cache memory and caps concurrent lanes — default
+         8 x blocks-per-sequence. Both unset => engine defaults)
   train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
          --protocol lattice|permutation --prompt-lo F --prompt-hi F
          --out CKPT.bin --seed S
@@ -69,11 +73,27 @@ fn draft_options(args: &Args, len_key: &str) -> Result<DraftOptions> {
     })
 }
 
+/// Optional paged-KV pool sizing from `--block-size` / `--cache-blocks`.
+/// Either flag alone works (0 = "derive the default for the artifact's
+/// window" — only the engine knows the sequence length); both unset
+/// defers sizing to the engine entirely.
+fn kv_config(args: &Args) -> Option<PagedKvConfig> {
+    let block_rows = args.usize("block-size", 0);
+    let total_blocks = args.usize("cache-blocks", 0);
+    if block_rows == 0 && total_blocks == 0 {
+        return None;
+    }
+    Some(PagedKvConfig {
+        block_rows,
+        total_blocks,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let metrics = Metrics::new();
     let params = args.opt("params").map(PathBuf::from);
     let replicas = args.usize("replicas", 1);
-    let handle = coordinator::start_xla(
+    let handle = coordinator::start_xla_with(
         artifacts_dir(args),
         params,
         PoolConfig { replicas },
@@ -85,6 +105,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..Default::default()
         },
         metrics.clone(),
+        kv_config(args),
     );
     let addr = args.str("addr", "127.0.0.1:8080");
     let server =
@@ -183,12 +204,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_infill(args: &Args) -> Result<()> {
     let metrics = Metrics::new();
     let params = args.opt("params").map(PathBuf::from);
-    let handle = coordinator::start_xla(
+    let handle = coordinator::start_xla_with(
         artifacts_dir(args),
         params,
         PoolConfig::default(),
         SchedulerConfig::default(),
         metrics,
+        kv_config(args),
     );
     let req = InfillRequest {
         text: args.str("text", "Tom went to the ____."),

@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
+use super::paged::{chain_extend, chain_hashes, KvStats, PagedKv, PagedKvConfig, PrefixKey};
 use super::{compile_artifact, forward_ord_dense, Engine, ForwardSpec, IncSpec};
 use crate::model::ModelMeta;
 use crate::tokenizer::PAD;
@@ -68,21 +69,32 @@ impl IncScratch {
     }
 }
 
-/// One incremental cache lane: the host mirror of the sequence's
-/// persistent per-layer content-stream K/V, ORDER-major ([L, N, D]; slot
-/// j holds the K/V of the committed row with order j), plus the identity
-/// of the request it belongs to. The mirror is uploaded with each
-/// incremental call and extended host-side from the `k_new`/`v_new` rows
-/// the executable returns, so only O(L·R·D) of cache ever crosses
-/// device→host per iteration (the one-time prefill seeds it with a
-/// single full h-stream pass).
+/// One incremental cache lane: a BLOCK TABLE into the engine's paged K/V
+/// pool plus the identity of the request it belongs to. Each block row
+/// holds one committed order-row's K/V across all layers
+/// (`[K: L·D | V: L·D]` f32s); the `[B, L, N, D]` device planes are
+/// packed from the blocks at call time and extended from the
+/// `k_new`/`v_new` rows the executable returns, so only O(L·R·D) of
+/// cache ever crosses device→host per iteration (the one-time prefill
+/// seeds it with a single full h-stream pass — unless a prefix-cache hit
+/// seeds the lane from a retired request's sealed blocks, in which case
+/// prefill is skipped entirely).
 struct IncLane {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// blocks holding order-rows `0..cached`
+    table: Vec<usize>,
+    /// per-order prefix chain hashes (`>= cached` entries)
+    chain: Vec<PrefixKey>,
     /// orders `< cached` are in the cache
     cached: usize,
     sigma: Vec<usize>,
     m: usize,
+}
+
+/// Pool + lane map behind ONE RefCell so the borrow is taken once per
+/// forward (engines are thread-pinned; never contended).
+struct XlaKv {
+    store: PagedKv<f32>,
+    lanes: HashMap<usize, IncLane>,
 }
 
 pub struct XlaEngine {
@@ -108,8 +120,10 @@ pub struct XlaEngine {
     /// active-row width R of the incremental artifacts (0 iff `fwd_inc`
     /// empty)
     inc_rows: usize,
-    /// per-lane cache mirrors, allocated on first use
-    lanes: RefCell<HashMap<usize, IncLane>>,
+    /// paged K/V block pool + prefix cache + lane tables (see
+    /// [`super::paged`]); a degenerate 1-block pool when the artifact set
+    /// has no incremental family
+    kv: RefCell<XlaKv>,
     scratch: RefCell<OrdScratch>,
     inc_scratch: RefCell<IncScratch>,
     /// current parameters (flat theta), host copy
@@ -134,6 +148,17 @@ impl XlaEngine {
     /// in model_meta.json (the gather width R they were lowered with);
     /// a set missing it is served through the dense fallback.
     pub fn load(artifacts_dir: impl AsRef<Path>, params_path: Option<&Path>) -> Result<XlaEngine> {
+        Self::load_with(artifacts_dir, params_path, None)
+    }
+
+    /// [`XlaEngine::load`] with explicit K/V pool sizing (the
+    /// `--block-size` / `--cache-blocks` serving flags). `None` sizes the
+    /// pool at [`PagedKvConfig::for_seq_len`] defaults.
+    pub fn load_with(
+        artifacts_dir: impl AsRef<Path>,
+        params_path: Option<&Path>,
+        kv_cfg: Option<PagedKvConfig>,
+    ) -> Result<XlaEngine> {
         let dir = artifacts_dir.as_ref();
         let meta = ModelMeta::load(dir.join("model_meta.json"))?;
         meta.validate()?;
@@ -219,6 +244,26 @@ impl XlaEngine {
         let theta_buf = client
             .buffer_from_host_buffer::<f32>(&theta, &[theta.len()], None)
             .context("uploading theta")?;
+        // Pool rows are one committed order-row's K/V across all layers.
+        // Without an incremental family the pool is never touched, so a
+        // degenerate 1-block pool avoids allocating dead cache memory.
+        let (pool_cfg, row_width) = if inc_rows > 0 {
+            (
+                kv_cfg.map_or_else(
+                    || PagedKvConfig::for_seq_len(meta.seq_len),
+                    |c| c.normalized(meta.seq_len),
+                ),
+                2 * meta.n_layers * meta.d_model,
+            )
+        } else {
+            (
+                PagedKvConfig {
+                    block_rows: 1,
+                    total_blocks: 1,
+                },
+                1,
+            )
+        };
         Ok(XlaEngine {
             meta,
             client,
@@ -228,7 +273,10 @@ impl XlaEngine {
             fwd_inc,
             fwd_inc_pre,
             inc_rows,
-            lanes: RefCell::new(HashMap::new()),
+            kv: RefCell::new(XlaKv {
+                store: PagedKv::new(pool_cfg, row_width),
+                lanes: HashMap::new(),
+            }),
             scratch: RefCell::new(OrdScratch::default()),
             inc_scratch: RefCell::new(IncScratch::default()),
             theta,
@@ -255,6 +303,16 @@ impl XlaEngine {
             .context("uploading theta")?;
         self.theta_buf = new_buf;
         self.theta = theta;
+        // New parameters invalidate every cached K/V row: flush the
+        // prefix cache and drop all live lane tables (their next call
+        // re-prefills under the new theta).
+        let kv = &mut *self.kv.borrow_mut();
+        kv.store.clear_sealed();
+        for lane in kv.lanes.values_mut() {
+            kv.store.release_table(&mut lane.table);
+            lane.chain.clear();
+            lane.cached = 0;
+        }
         Ok(())
     }
 
@@ -300,10 +358,12 @@ impl XlaEngine {
     fn prefill_lane(
         &self,
         spec: &ForwardSpec<'_>,
+        store: &mut PagedKv<f32>,
         lane: &mut IncLane,
         committed: usize,
     ) -> Result<()> {
         let n = self.meta.seq_len;
+        let (nl, d) = (self.meta.n_layers, self.meta.d_model);
         let plane = self.meta.n_layers * n * self.meta.d_model;
         let b_exec = *self.fwd_inc_pre.keys().next().unwrap();
         let exe = &self.fwd_inc_pre[&b_exec];
@@ -347,23 +407,31 @@ impl XlaEngine {
         let k = k.to_vec::<f32>()?;
         let v = v.to_vec::<f32>()?;
         debug_assert!(k.len() >= plane && v.len() >= plane);
-        lane.k.clear();
-        lane.k.extend_from_slice(&k[..plane]);
-        lane.v.clear();
-        lane.v.extend_from_slice(&v[..plane]);
+        // Scatter the committed rows ([L, N, D] order-major planes) into
+        // paged blocks: row j = `[K: L·D | V: L·D]`.
+        store.release_table(&mut lane.table);
+        for j in 0..committed {
+            let row = store.append_row(&mut lane.table, j)?;
+            for l in 0..nl {
+                let src = (l * n + j) * d;
+                row[l * d..(l + 1) * d].copy_from_slice(&k[src..src + d]);
+                row[(nl + l) * d..(nl + l + 1) * d].copy_from_slice(&v[src..src + d]);
+            }
+        }
         lane.cached = committed;
         self.nfe.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     /// Bring `inc.lane` into a state the batched step can serve:
-    /// (re)initialize on identity change, prefill an empty lane, and
-    /// catch up oversized append backlogs in `inc_rows`-sized chunks
-    /// (each a solo launch; only reachable after a spec was temporarily
-    /// routed off the incremental path).
+    /// (re)initialize on identity change, seed an empty lane — from the
+    /// PREFIX CACHE when the committed prefix hashes to a sealed entry
+    /// (skipping prefill), by a prefill launch otherwise — and catch up
+    /// append backlogs in `inc_rows`-sized chunks (each a solo launch;
+    /// reachable after a spec was temporarily routed off the incremental
+    /// path, and on cache hits that cover the prompt but not every
+    /// committed target row).
     fn prepare_lane(&self, inc: &IncSpec<'_>) -> Result<()> {
-        let n = self.meta.seq_len;
-        let plane = self.meta.n_layers * n * self.meta.d_model;
         let r = self.inc_rows;
         let spec = &inc.spec;
         assert!(
@@ -371,41 +439,56 @@ impl XlaEngine {
             "committed out of range"
         );
         {
-            let mut lanes = self.lanes.borrow_mut();
+            let kv = &mut *self.kv.borrow_mut();
+            let (store, lanes) = (&mut kv.store, &mut kv.lanes);
             let lane = lanes.entry(inc.lane).or_insert_with(|| IncLane {
-                k: vec![0.0; plane],
-                v: vec![0.0; plane],
+                table: vec![],
+                chain: vec![],
                 cached: 0,
                 sigma: vec![],
                 m: 0,
             });
             // Invalidation rule: a different ordering or prompt size, or a
             // committed count that moved backwards, means a different
-            // request occupies the lane — drop the stale cache. (The
-            // scheduler also calls reset_lane at every slot handoff; this
-            // is the engine-side backstop.)
+            // request occupies the lane — release the stale blocks,
+            // unsealed (the lifecycle seam was skipped, so the content is
+            // not trustworthy cache material). The scheduler also calls
+            // reset_lane at every slot handoff; this is the engine-side
+            // backstop.
             if lane.cached > 0
                 && (lane.sigma != spec.ord.sigma
                     || lane.m != spec.ord.m
                     || inc.committed < lane.cached)
             {
-                lane.k.iter_mut().for_each(|x| *x = 0.0);
-                lane.v.iter_mut().for_each(|x| *x = 0.0);
+                store.release_table(&mut lane.table);
+                lane.chain.clear();
                 lane.cached = 0;
             }
             if lane.cached == 0 {
                 lane.sigma = spec.ord.sigma.clone();
                 lane.m = spec.ord.m;
+                if inc.committed > 0 {
+                    let chain = chain_hashes(spec.ord, spec.tokens, inc.committed);
+                    match store.lookup(&chain, spec.ord.m, inc.committed) {
+                        Some((table, rows)) => {
+                            // Warm prefix: seed from the sealed blocks.
+                            // Rows `rows..committed` are causal target
+                            // rows and catch up through the ordinary
+                            // append path below — NO prefill launch.
+                            lane.table = table;
+                            lane.cached = rows;
+                            lane.chain = chain;
+                        }
+                        None => {
+                            lane.chain = chain;
+                            self.prefill_lane(spec, store, lane, inc.committed)?;
+                        }
+                    }
+                }
             }
         }
-        let cached = self.lanes.borrow()[&inc.lane].cached;
-        if cached == 0 && inc.committed > 0 {
-            let mut lanes = self.lanes.borrow_mut();
-            let lane = lanes.get_mut(&inc.lane).unwrap();
-            return self.prefill_lane(spec, lane, inc.committed);
-        }
         loop {
-            let cached = self.lanes.borrow()[&inc.lane].cached;
+            let cached = self.kv.borrow().lanes[&inc.lane].cached;
             let free = r - spec.want.len().min(r);
             if inc.committed - cached <= free {
                 return Ok(());
@@ -432,7 +515,8 @@ impl XlaEngine {
         let plane = nl * n * d;
         let b_exec = self.pick_batch_inc(specs.len());
         let exe = &self.fwd_inc[&b_exec];
-        let mut lanes = self.lanes.borrow_mut();
+        let kv = &mut *self.kv.borrow_mut();
+        let (store, lanes) = (&mut kv.store, &mut kv.lanes);
         let mut scratch = self.inc_scratch.borrow_mut();
         let s = &mut *scratch;
         s.clear();
@@ -459,8 +543,22 @@ impl XlaEngine {
                 s.rows.push(pos as i32);
             }
             s.rows.resize(s.rows.len() + (r - app - spec.want.len()), 0);
-            s.cache_k.extend_from_slice(&lane.k);
-            s.cache_v.extend_from_slice(&lane.v);
+            // Gather the lane's [L, N, D] cache planes from its paged
+            // blocks; columns >= cached are zero-filled (the kernel masks
+            // them by `cached`, so their values are never read).
+            for l in 0..nl {
+                for j in 0..n {
+                    if j < lane.cached {
+                        let row = store.read_row(&lane.table, j);
+                        s.cache_k.extend_from_slice(&row[l * d..(l + 1) * d]);
+                        s.cache_v
+                            .extend_from_slice(&row[(nl + l) * d..(nl + l + 1) * d]);
+                    } else {
+                        s.cache_k.resize(s.cache_k.len() + d, 0.0);
+                        s.cache_v.resize(s.cache_v.len() + d, 0.0);
+                    }
+                }
+            }
         }
         // Pad to the executable's batch: PAD tokens, empty row set, zero
         // cache — nrows = 0 masks every active column, so padding cannot
@@ -507,18 +605,26 @@ impl XlaEngine {
         let v_new = vn.to_vec::<f32>()?;
         debug_assert_eq!(logits.len(), b_exec * r * v);
         self.nfe.fetch_add(1, Ordering::Relaxed);
-        // Append the committed rows' K/V to the lane mirrors, then slice
-        // the wanted logit rows (they follow the appends, in order).
+        // Append the committed rows' K/V to the lanes' paged blocks
+        // (copy-on-write protects blocks shared with sealed prefixes),
+        // extend the prefix chains, then slice the wanted logit rows
+        // (they follow the appends, in order).
         let mut out = Vec::with_capacity(specs.len());
         for (i, inc) in specs.iter().enumerate() {
             let app = appended[i];
             let lane = lanes.get_mut(&inc.lane).unwrap();
-            for l in 0..nl {
-                for a in 0..app {
+            for a in 0..app {
+                let j = lane.cached + a;
+                let pos = inc.spec.ord.sigma[j];
+                let row = store.append_row(&mut lane.table, j)?;
+                for l in 0..nl {
                     let src = ((i * nl + l) * r + a) * d;
-                    let dst = (l * n + lane.cached + a) * d;
-                    lane.k[dst..dst + d].copy_from_slice(&k_new[src..src + d]);
-                    lane.v[dst..dst + d].copy_from_slice(&v_new[src..src + d]);
+                    row[l * d..(l + 1) * d].copy_from_slice(&k_new[src..src + d]);
+                    row[(nl + l) * d..(nl + l + 1) * d].copy_from_slice(&v_new[src..src + d]);
+                }
+                if j >= lane.chain.len() {
+                    let prev = lane.chain[j - 1];
+                    lane.chain.push(chain_extend(prev, pos, inc.spec.tokens[pos]));
                 }
             }
             lane.cached = inc.committed;
@@ -861,7 +967,21 @@ impl Engine for XlaEngine {
     }
 
     fn reset_lane(&self, lane: usize) {
-        self.lanes.borrow_mut().remove(&lane);
+        let kv = &mut *self.kv.borrow_mut();
+        if let Some(mut l) = kv.lanes.remove(&lane) {
+            // Retire = seal THEN release: the committed rows stay in the
+            // prefix cache under their chain hashes (ref-counted), the
+            // lane's own references return to the pool.
+            kv.store.seal(&l.table, &l.chain, l.m, l.cached);
+            kv.store.release_table(&mut l.table);
+        }
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        if self.inc_rows == 0 {
+            return None; // no paged cache without the incremental family
+        }
+        Some(self.kv.borrow().store.stats())
     }
 
     fn max_gather_rows(&self) -> usize {

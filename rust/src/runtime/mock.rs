@@ -25,23 +25,34 @@ use anyhow::Result;
 use crate::model::mask::{g_allows, Ordering as GenOrdering};
 use crate::tokenizer::MASK;
 
+use super::paged::{chain_extend, chain_hashes, KvStats, PagedKv, PagedKvConfig, PrefixKey};
 use super::{Engine, ForwardSpec, IncSpec};
 
-/// One incremental cache lane of the mock: the committed ordering and the
-/// committed TOKEN VALUES appended so far. The mock is an analytic model
+/// One incremental cache lane of the mock: the committed ordering plus a
+/// BLOCK TABLE into the shared paged pool. The mock is an analytic model
 /// with no hidden states, so "the K/V of a committed row" degenerates to
-/// its token value — but the cache is REAL: committed columns are read
-/// from the lane, not from the live request buffer, so a scheduler bug
-/// that crosses lanes or skips a reset produces observably different
-/// logits (and trips the debug asserts first).
+/// its token value (one `u32` per order-row) — but the cache is REAL:
+/// committed columns are read from the paged store, not from the live
+/// request buffer, so a scheduler bug that crosses lanes or skips a
+/// reset — or an allocator bug that hands two lanes the same block —
+/// produces observably different logits (and trips the debug asserts
+/// first).
 struct MockLane {
     sigma: Vec<usize>,
     m: usize,
-    /// committed token value per POSITION (only slots whose order is
-    /// `< cached` are meaningful)
-    tokens: Vec<u32>,
+    /// Blocks holding order-rows `0..cached` (row j = order j's token).
+    table: Vec<usize>,
+    /// Per-order prefix chain hashes, `chain.len() == cached`.
+    chain: Vec<PrefixKey>,
     /// orders `< cached` are in the cache
     cached: usize,
+}
+
+/// Pool + lane map behind ONE RefCell so the borrow is taken once per
+/// forward (engines are thread-pinned; never contended).
+struct MockKv {
+    store: PagedKv<u32>,
+    lanes: HashMap<usize, MockLane>,
 }
 
 pub struct MockEngine {
@@ -55,10 +66,9 @@ pub struct MockEngine {
     /// sharpness multiplier: larger -> spikier conditionals
     temp: f32,
     nfe: AtomicU64,
-    /// Incremental cache lanes, allocated on first use. RefCell: engines
-    /// are pinned to one worker thread by construction (`Engine` is not
-    /// Send), so the borrow is never contended.
-    lanes: RefCell<HashMap<usize, MockLane>>,
+    /// Paged cache: block pool + prefix cache + incremental lanes (see
+    /// [`super::paged`]). Lane tables are allocated on first use.
+    kv: RefCell<MockKv>,
     /// Modeled device compute, in "attention cells" (query-row × key-col
     /// pairs over both streams): the hardware-independent cost unit the
     /// `perf_engine` incremental-vs-compact ablation reports. Dense and
@@ -66,19 +76,31 @@ pub struct MockEngine {
     /// (2·N² per sequence — the compact ABI saves traffic, not compute);
     /// the incremental path evaluates only the active rows against
     /// cache + active columns (2·A·(C+A)), plus one N² h-stream prefill
-    /// per lane.
+    /// per lane — a prefill a PREFIX-CACHE HIT SKIPS entirely, which is
+    /// exactly the warm-TTFT win `perf_paged` measures.
     modeled_cells: AtomicU64,
 }
 
 impl MockEngine {
     pub fn new(seed: u64, n: usize, v: usize, temp: f32) -> MockEngine {
+        MockEngine::with_pool(seed, n, v, temp, PagedKvConfig::for_seq_len(n))
+    }
+
+    /// Like [`MockEngine::new`] with explicit pool sizing — the substrate
+    /// for the memory-pressure tests and the `perf_paged` bench (tiny
+    /// pools force eviction; huge pools never evict).
+    pub fn with_pool(seed: u64, n: usize, v: usize, temp: f32, pool: PagedKvConfig) -> MockEngine {
+        let pool = pool.normalized(n);
         MockEngine {
             n,
             v,
             seed,
             temp,
             nfe: AtomicU64::new(0),
-            lanes: RefCell::new(HashMap::new()),
+            kv: RefCell::new(MockKv {
+                store: PagedKv::new(pool, 1),
+                lanes: HashMap::new(),
+            }),
             modeled_cells: AtomicU64::new(0),
         }
     }
@@ -161,7 +183,8 @@ impl MockEngine {
     /// Exact logits for one row on the INCREMENTAL path: same predicate
     /// and same `b = 0..n` accumulation order as [`row_logits_ord`]
     /// (bit-identical f32 sums), but committed columns read their token
-    /// values from the LANE CACHE instead of the live buffer.
+    /// values from `cache_view` — a position-indexed view materialized
+    /// from the lane's PAGED BLOCKS, never from the live buffer.
     ///
     /// [`row_logits_ord`]: MockEngine::row_logits_ord
     fn row_logits_inc(
@@ -170,7 +193,8 @@ impl MockEngine {
         tokens: &[u32],
         ord: &GenOrdering,
         known: usize,
-        lane: &MockLane,
+        cached: usize,
+        cache_view: &[u32],
     ) -> Vec<f32> {
         let mut out = vec![0.0f32; self.v];
         for (t, o) in out.iter_mut().enumerate() {
@@ -179,13 +203,13 @@ impl MockEngine {
         let oa = ord.order[a];
         for b in 0..self.n {
             if b != a && g_allows(oa, ord.order[b], ord.m, known) {
-                let tok = if ord.order[b] < lane.cached {
+                let tok = if ord.order[b] < cached {
                     debug_assert_eq!(
-                        lane.tokens[b], tokens[b],
+                        cache_view[b], tokens[b],
                         "lane cache diverged from the live buffer at position {b} \
-                         (lane crossed or reset skipped?)"
+                         (lane crossed, reset skipped, or prefix hash collided?)"
                     );
-                    lane.tokens[b]
+                    cache_view[b]
                 } else {
                     tokens[b]
                 };
@@ -281,70 +305,100 @@ impl Engine for MockEngine {
         if specs.is_empty() {
             return Ok(vec![]);
         }
-        let mut lanes = self.lanes.borrow_mut();
+        let kv = &mut *self.kv.borrow_mut();
+        let (store, lanes) = (&mut kv.store, &mut kv.lanes);
         let mut cells = 0u64;
-        let out = specs
-            .iter()
-            .map(|inc| {
-                let spec = &inc.spec;
-                assert_eq!(spec.tokens.len(), self.n, "tokens shape");
-                assert_eq!(spec.ord.n(), self.n, "ordering length");
-                assert!(!spec.want.is_empty(), "empty row request");
-                assert!(
-                    spec.ord.m <= inc.committed && inc.committed <= spec.known,
-                    "committed out of range"
-                );
-                let lane = lanes.entry(inc.lane).or_insert_with(|| MockLane {
-                    sigma: vec![],
-                    m: 0,
-                    tokens: vec![MASK; self.n],
-                    cached: 0,
-                });
-                // Invalidation rule (same as XlaEngine): an ordering or
-                // prompt-size change, or a committed count that moved
-                // backwards, means a different request is in the lane —
-                // drop the stale cache and re-seed.
-                if lane.cached > 0
-                    && (lane.sigma != spec.ord.sigma
-                        || lane.m != spec.ord.m
-                        || inc.committed < lane.cached)
-                {
-                    lane.tokens.iter_mut().for_each(|t| *t = MASK);
-                    lane.cached = 0;
+        let mut out = Vec::with_capacity(specs.len());
+        for inc in specs {
+            let spec = &inc.spec;
+            assert_eq!(spec.tokens.len(), self.n, "tokens shape");
+            assert_eq!(spec.ord.n(), self.n, "ordering length");
+            assert!(!spec.want.is_empty(), "empty row request");
+            assert!(
+                spec.ord.m <= inc.committed && inc.committed <= spec.known,
+                "committed out of range"
+            );
+            let lane = lanes.entry(inc.lane).or_insert_with(|| MockLane {
+                sigma: vec![],
+                m: 0,
+                table: vec![],
+                chain: vec![],
+                cached: 0,
+            });
+            // Invalidation rule (same as XlaEngine): an ordering or
+            // prompt-size change, or a committed count that moved
+            // backwards, means a different request is in the lane —
+            // release the stale blocks (unsealed: the lifecycle seam was
+            // skipped, so the content is not trustworthy cache material)
+            // and re-seed.
+            if lane.cached > 0
+                && (lane.sigma != spec.ord.sigma
+                    || lane.m != spec.ord.m
+                    || inc.committed < lane.cached)
+            {
+                store.release_table(&mut lane.table);
+                lane.chain.clear();
+                lane.cached = 0;
+            }
+            if lane.cached == 0 {
+                lane.sigma = spec.ord.sigma.clone();
+                lane.m = spec.ord.m;
+                let chain = chain_hashes(spec.ord, spec.tokens, inc.committed);
+                match store.lookup(&chain, spec.ord.m, inc.committed) {
+                    Some((table, rows)) => {
+                        // Prefix-cache hit: seed the lane from the sealed
+                        // blocks — NO prefill. Rows `rows..committed`
+                        // catch up through the ordinary append path
+                        // below, exactly as on the XLA engine.
+                        lane.table = table;
+                        lane.cached = rows;
+                        lane.chain = chain;
+                    }
+                    None => {
+                        // Modeled prefill: one full h-stream pass seeds
+                        // the cache (the bidirectional prompt block
+                        // cannot be appended causally).
+                        cells += (self.n * self.n) as u64;
+                        lane.chain = chain;
+                    }
                 }
-                if lane.cached == 0 {
-                    lane.sigma = spec.ord.sigma.clone();
-                    lane.m = spec.ord.m;
-                    // Modeled prefill: one full h-stream pass seeds the
-                    // cache (the bidirectional prompt block cannot be
-                    // appended causally).
-                    cells += (self.n * self.n) as u64;
+            }
+            let appended = inc.committed - lane.cached;
+            for j in lane.cached..inc.committed {
+                let pos = lane.sigma[j];
+                let tok = spec.tokens[pos];
+                assert_ne!(tok, MASK, "appending an uncommitted (MASK) row");
+                store.append_row(&mut lane.table, j)?[0] = tok;
+                if j >= lane.chain.len() {
+                    let prev = lane.chain[j - 1];
+                    lane.chain.push(chain_extend(prev, pos, tok));
                 }
-                let appended = inc.committed - lane.cached;
-                for j in lane.cached..inc.committed {
-                    let pos = lane.sigma[j];
-                    let tok = spec.tokens[pos];
-                    assert_ne!(tok, MASK, "appending an uncommitted (MASK) row");
-                    lane.tokens[pos] = tok;
-                }
-                lane.cached = inc.committed;
-                // Incremental step cost: active rows (appends + wants)
-                // against cache + active columns, both streams.
-                let active = appended + spec.want.len();
-                cells += (2 * active * (lane.cached + active)) as u64;
-                let mut rows = Vec::with_capacity(spec.want.len() * self.v);
-                for &pos in spec.want {
-                    rows.extend_from_slice(&self.row_logits_inc(
-                        pos,
-                        spec.tokens,
-                        spec.ord,
-                        spec.known,
-                        lane,
-                    ));
-                }
-                rows
-            })
-            .collect();
+            }
+            lane.cached = inc.committed;
+            // Incremental step cost: active rows (appends + wants)
+            // against cache + active columns, both streams.
+            let active = appended + spec.want.len();
+            cells += (2 * active * (lane.cached + active)) as u64;
+            // Materialize the position-indexed cache view from the paged
+            // blocks (the mock's analogue of the device reading K/V
+            // through the block table).
+            let mut view = vec![MASK; self.n];
+            for j in 0..lane.cached {
+                view[lane.sigma[j]] = store.read_row(&lane.table, j)[0];
+            }
+            let mut rows = Vec::with_capacity(spec.want.len() * self.v);
+            for &pos in spec.want {
+                rows.extend_from_slice(&self.row_logits_inc(
+                    pos,
+                    spec.tokens,
+                    spec.ord,
+                    spec.known,
+                    lane.cached,
+                    &view,
+                ));
+            }
+            out.push(rows);
+        }
         self.nfe.fetch_add(1, Ordering::Relaxed);
         self.modeled_cells.fetch_add(cells, Ordering::Relaxed);
         Ok(out)
@@ -355,7 +409,18 @@ impl Engine for MockEngine {
     }
 
     fn reset_lane(&self, lane: usize) {
-        self.lanes.borrow_mut().remove(&lane);
+        let kv = &mut *self.kv.borrow_mut();
+        if let Some(mut l) = kv.lanes.remove(&lane) {
+            // Retire = seal THEN release: the committed rows stay in the
+            // prefix cache under their chain hashes (ref-counted), the
+            // lane's own references return to the pool.
+            kv.store.seal(&l.table, &l.chain, l.m, l.cached);
+            kv.store.release_table(&mut l.table);
+        }
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        Some(self.kv.borrow().store.stats())
     }
 
     fn nfe(&self) -> u64 {
@@ -420,6 +485,10 @@ impl Engine for SlowEngine {
 
     fn reset_lane(&self, lane: usize) {
         self.inner.reset_lane(lane)
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        self.inner.kv_stats()
     }
 
     fn max_gather_rows(&self) -> usize {
@@ -759,6 +828,152 @@ mod tests {
         }
         // cumulative: prefill amortizes by the second iteration
         assert!(e.modeled_cells() < compact_iter * iter);
+    }
+
+    /// Warm-prefix reuse: after a retire (reset_lane = seal + release), a
+    /// new request with the SAME prompt is seeded from the prefix cache —
+    /// prefill is skipped (no N² term in modeled cells) — and its rows
+    /// are bit-identical to a cold engine's.
+    #[test]
+    fn prefix_hit_skips_prefill_and_stays_bit_identical() {
+        let n = 16;
+        let run = |e: &MockEngine, lane: usize| -> Vec<Vec<f32>> {
+            let ord = Ord::new(lattice_sigma(&[0, 3, 7], n), 3);
+            let mut tokens = vec![MASK; n];
+            tokens[0] = 1;
+            tokens[3] = 2;
+            tokens[7] = 4;
+            let want: Vec<usize> = (3..6).map(|i| ord.sigma[i]).collect();
+            e.forward_inc(&[IncSpec {
+                spec: ForwardSpec {
+                    tokens: &tokens,
+                    ord: &ord,
+                    known: 3,
+                    want: &want,
+                },
+                committed: 3,
+                lane,
+            }])
+            .unwrap()
+        };
+        let e = MockEngine::new(17, n, 5, 1.0);
+        let cold_cells_before = e.modeled_cells();
+        let cold = run(&e, 0);
+        let cold_cells = e.modeled_cells() - cold_cells_before;
+        e.reset_lane(0); // retire: seals the committed prompt
+        let warm_cells_before = e.modeled_cells();
+        let warm = run(&e, 1); // different lane, same prompt
+        let warm_cells = e.modeled_cells() - warm_cells_before;
+        assert_eq!(warm, cold, "warm decode must be bit-identical to cold");
+        let s = e.kv_stats().unwrap();
+        assert_eq!((s.prefix_hits, s.prefix_misses), (1, 1));
+        assert!(
+            warm_cells + ((n * n) as u64) <= cold_cells,
+            "hit must skip the N² prefill: warm {warm_cells} vs cold {cold_cells}"
+        );
+        // And against a fresh engine (no cache at all): still identical.
+        let fresh = MockEngine::new(17, n, 5, 1.0);
+        assert_eq!(run(&fresh, 0), warm);
+    }
+
+    /// The PR 5 seam: reset_lane must RELEASE blocks back to the pool,
+    /// not merely invalidate the lane — a retire → admit cycle leaves no
+    /// lane-held blocks (everything free or sealed+evictable) and the
+    /// re-admitted slot cannot observe stale KV.
+    #[test]
+    fn retire_admit_cycle_releases_blocks_and_never_observes_stale_kv() {
+        let n = 8;
+        let e = MockEngine::new(23, n, 5, 1.0);
+        let run = |e: &MockEngine, prompt_tok: u32| -> Vec<Vec<f32>> {
+            let ord = Ord::new(lattice_sigma(&[0, 3], n), 2);
+            let mut tokens = vec![MASK; n];
+            tokens[0] = prompt_tok;
+            tokens[3] = 2;
+            let want: Vec<usize> = (2..5).map(|i| ord.sigma[i]).collect();
+            e.forward_inc(&[IncSpec {
+                spec: ForwardSpec {
+                    tokens: &tokens,
+                    ord: &ord,
+                    known: 2,
+                    want: &want,
+                },
+                committed: 2,
+                lane: 0,
+            }])
+            .unwrap()
+        };
+        let total = e.kv_stats().unwrap().total_blocks;
+        let first = run(&e, 1);
+        let held = e.kv_stats().unwrap();
+        assert!(held.free_blocks < total, "lane must hold blocks mid-request");
+        e.reset_lane(0); // retire
+        let s = e.kv_stats().unwrap();
+        // No lane refs remain: every non-free block is sealed AND
+        // evictable (its only references are cache entries).
+        assert_eq!(s.free_blocks + s.cached_blocks, total);
+        assert_eq!(s.evictable_blocks, s.cached_blocks);
+        // Re-admit the same slot with a DIFFERENT prompt: stale KV would
+        // change these rows; they must match a fresh engine exactly.
+        let second = run(&e, 4);
+        let fresh = MockEngine::new(23, n, 5, 1.0);
+        assert_eq!(second, run(&fresh, 4));
+        assert_ne!(first, second);
+        e.reset_lane(0);
+        let s = e.kv_stats().unwrap();
+        assert_eq!(s.free_blocks + s.cached_blocks, total, "blocks leaked");
+    }
+
+    /// Memory pressure: a pool sized for ~one sequence forces LRU
+    /// eviction of sealed prefixes on every churn cycle, yet every
+    /// request's rows stay bit-identical to an unpressured engine's.
+    #[test]
+    fn eviction_under_pressure_never_changes_outputs() {
+        let n = 16;
+        let tiny = PagedKvConfig {
+            block_rows: 4,
+            total_blocks: 6, // 1.5 sequences' worth
+        };
+        let e = MockEngine::with_pool(29, n, 5, 1.0, tiny);
+        let roomy = MockEngine::new(29, n, 5, 1.0);
+        let run = |e: &MockEngine, prompt_tok: u32| -> Vec<Vec<f32>> {
+            let ord = Ord::new(lattice_sigma(&[0, 5], n), 2);
+            let mut tokens = vec![MASK; n];
+            tokens[0] = prompt_tok;
+            tokens[5] = 3;
+            // Commit everything: the retire seals a full-sequence prefix.
+            for i in 2..n {
+                tokens[ord.sigma[i]] = (prompt_tok + i as u32) % 5;
+            }
+            let want = [ord.sigma[n - 1]];
+            let rows = e
+                .forward_inc(&[IncSpec {
+                    spec: ForwardSpec {
+                        tokens: &tokens,
+                        ord: &ord,
+                        known: n,
+                        want: &want,
+                    },
+                    committed: n,
+                    lane: 0,
+                }])
+                .unwrap();
+            e.reset_lane(0);
+            rows
+        };
+        for round in 0..6 {
+            let tok = round % 3; // rotating prompts defeat the tiny cache
+            assert_eq!(
+                run(&e, tok),
+                run(&roomy, tok),
+                "round {round}: pressure changed outputs"
+            );
+        }
+        let s = e.kv_stats().unwrap();
+        assert!(s.evictions > 0, "tiny pool must have evicted");
+        assert!(
+            s.cached_blocks <= s.total_blocks,
+            "cache exceeded the pool bound"
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 pub mod engine;
 pub mod mock;
+pub mod paged;
 pub mod pool;
 
 use std::path::Path;
@@ -17,6 +18,7 @@ use anyhow::{Context, Result};
 use crate::model::mask::{draft_masks_into, Ordering};
 
 pub use engine::{TrainOutput, XlaEngine};
+pub use paged::{KvStats, PagedKvConfig};
 pub use pool::{EnginePool, PoolConfig};
 
 /// One sequence's COMPACT forward request: instead of materialized
@@ -152,10 +154,24 @@ pub trait Engine {
         0
     }
 
-    /// Drop a lane's cached state. The scheduler calls this whenever a
-    /// batch slot is assigned to a new request or retired, so a freshly
-    /// admitted slot can never observe a previous occupant's cache.
+    /// Retire a lane: release its cache blocks back to the pool AND, for
+    /// engines with a prefix cache, seal the lane's committed rows so a
+    /// later request with the same prompt prefix can be seeded from them
+    /// (skipping prefill). The scheduler calls this whenever a batch slot
+    /// is assigned to a new request or retired, so a freshly admitted
+    /// slot can never observe a previous occupant's cache — sealed
+    /// prefixes are re-entered only through a chain-hash match, which is
+    /// bit-equivalent to recompute (see [`paged`]).
     fn reset_lane(&self, _lane: usize) {}
+
+    /// Block-pool occupancy + prefix-cache counters for paged engines
+    /// (None when the engine has no paged cache — e.g. the dense-only
+    /// fallback or [`DensePath`]). The scheduler uses
+    /// [`paged::KvStats::lane_budget`] for block-budget admission and
+    /// forwards the counters into `/metrics` and `/replicas`.
+    fn kv_stats(&self) -> Option<paged::KvStats> {
+        None
+    }
 
     /// Number of forward calls so far (NFE accounting — Theorem 1).
     fn nfe(&self) -> u64;

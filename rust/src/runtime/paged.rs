@@ -1,0 +1,857 @@
+//! Paged KV block pool + cross-request prefix cache (vLLM-style).
+//!
+//! PR 5's per-lane cache mirrors were fixed `[L, N, D]` slabs pinned for a
+//! request's whole lifetime, so engine memory scaled with
+//! `lanes × max_seq` and identical prompt prefixes — the common case under
+//! real traffic (shared system prompts, retried infills) — were recomputed
+//! from scratch every time. This module replaces the slabs with:
+//!
+//! * a **block allocator**: cache rows live in fixed-size blocks
+//!   (`block_rows` rows of `row_width` elements each) drawn from one pool;
+//!   a lane holds a *block table* (`Vec<BlockId>`) instead of a slab, so
+//!   memory is bounded by the pool size, not `lanes × max_seq`;
+//! * **ref counts + copy-on-write**: blocks may be shared between lanes
+//!   and cache entries; appending into a shared block first copies it
+//!   (the CoW rule: a block with `refs > 1` is never mutated);
+//! * a **prefix cache**: at lane retirement ([`Engine::reset_lane`]) the
+//!   lane's committed rows are *sealed* — the block table is retained
+//!   ref-counted under a chain hash of the committed (order, token)
+//!   prefix — and a later lane whose prefix hashes to a sealed entry is
+//!   *seeded* from it, skipping prefill entirely;
+//! * **LRU eviction**: when the free list runs dry, sealed entries are
+//!   evicted least-recently-used first. Blocks referenced by an active
+//!   lane always carry a lane ref, so eviction can only ever free
+//!   cache-only blocks — active lanes are structurally evict-proof.
+//!
+//! Why the chain hash is sound (and why it is 128-bit): a cached row
+//! `j`'s K/V is a pure function of `(n, m, sigma[..=j],
+//! tokens[sigma[..=j]])` — prompt rows attend bidirectionally *within the
+//! prompt* and committed target rows attend only to earlier orders
+//! (Lemma 1), so folding exactly those inputs into the hash makes equal
+//! keys imply equal K/V. Keys are 128 bits (two independent splitmix64
+//! lanes) because the serving guarantee is *bit-identity*: at 2^-128
+//! collision odds the cache is indistinguishable from recompute, which
+//! the warm-vs-cold test battery then checks literally.
+//!
+//! A hit is only usable when it covers the whole prompt (`rows >= m`):
+//! prompt rows are bidirectional, so a partial-prompt entry could not be
+//! completed by causal appends. Entries are therefore sealed at every
+//! full-block boundary `> m` plus the boundaries `m` and `cached`, and
+//! lookup walks those same boundaries longest-first.
+//!
+//! The pool is generic over the row payload `T` so the same allocator,
+//! CoW rule, and cache serve both engines: [`MockEngine`] stores one
+//! `u32` token per row (its analytic "K/V"), [`XlaEngine`] stores
+//! `2·L·D` f32s (K then V, all layers, one order-row).
+//!
+//! [`Engine::reset_lane`]: super::Engine::reset_lane
+//! [`MockEngine`]: super::mock::MockEngine
+//! [`XlaEngine`]: super::XlaEngine
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::mask::Ordering;
+
+/// 128-bit prefix chain hash (see module docs for the collision budget).
+pub type PrefixKey = u128;
+
+#[inline]
+fn mix64(x: u64) -> u64 {
+    // splitmix64 finalizer (Steele et al.) — same mixer as util::rng.
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Fold one 64-bit word into a 128-bit chain state: the two halves are
+/// mixed with independent constants so they behave as two independent
+/// 64-bit hashes of the same prefix.
+#[inline]
+pub fn chain_fold(h: PrefixKey, x: u64) -> PrefixKey {
+    let lo = mix64((h as u64) ^ x);
+    let hi = mix64(((h >> 64) as u64) ^ x.wrapping_mul(0xc2b2ae3d27d4eb4f) ^ 0x165667b19e3779f9);
+    ((hi as u128) << 64) | lo as u128
+}
+
+/// Per-order chain hashes for a committed prefix: `out[j]` keys rows
+/// `0..=j`. The seed folds `(n, m)`; each link folds `(sigma[j],
+/// tokens[sigma[j]])` — exactly the inputs a cached row's K/V is a
+/// function of (module docs). `tokens` is position-indexed, as in
+/// [`super::ForwardSpec`].
+pub fn chain_hashes(ord: &Ordering, tokens: &[u32], committed: usize) -> Vec<PrefixKey> {
+    let mut h = chain_fold(chain_fold(0x243f6a8885a308d3, ord.n() as u64), ord.m as u64);
+    let mut out = Vec::with_capacity(committed);
+    for j in 0..committed {
+        let pos = ord.sigma[j];
+        h = chain_fold(chain_fold(h, pos as u64), tokens[pos] as u64);
+        out.push(h);
+    }
+    out
+}
+
+/// Extend a chain by one committed row (used on incremental appends so
+/// the full chain never needs recomputing).
+#[inline]
+pub fn chain_extend(h: PrefixKey, pos: usize, tok: u32) -> PrefixKey {
+    chain_fold(chain_fold(h, pos as u64), tok as u64)
+}
+
+/// Pool sizing knobs (the `--block-size` / `--cache-blocks` serving
+/// flags land here).
+#[derive(Clone, Copy, Debug)]
+pub struct PagedKvConfig {
+    /// Rows (orders) per block. Smaller blocks seal/seed at finer
+    /// granularity but cost more table entries per lane.
+    pub block_rows: usize,
+    /// Total blocks in the pool — THE engine memory bound. Active lanes
+    /// draw from the same pool as sealed prefixes; sizing below
+    /// `lanes × ceil(N / block_rows)` reduces the number of lanes the
+    /// scheduler will admit concurrently (block-budget admission).
+    pub total_blocks: usize,
+}
+
+impl PagedKvConfig {
+    /// Default sizing for a sequence length: blocks of 16 rows, room for
+    /// 8 worst-case lanes (4 active at the default `--max-batch`, the
+    /// rest prefix-cache headroom).
+    pub fn for_seq_len(n: usize) -> PagedKvConfig {
+        PagedKvConfig {
+            block_rows: 0,
+            total_blocks: 0,
+        }
+        .normalized(n)
+    }
+
+    /// Resolve partial sizing against a sequence length: 0 in either
+    /// field derives the [`PagedKvConfig::for_seq_len`] default for `n`
+    /// (so `--block-size` and `--cache-blocks` can be set independently),
+    /// and `block_rows` is clamped to the window — larger blocks would
+    /// only waste payload.
+    pub fn normalized(self, n: usize) -> PagedKvConfig {
+        let block_rows = match self.block_rows {
+            0 => 16.min(n.max(1)),
+            b => b.min(n.max(1)),
+        };
+        let total_blocks = match self.total_blocks {
+            0 => 8 * n.div_ceil(block_rows),
+            t => t,
+        };
+        PagedKvConfig {
+            block_rows,
+            total_blocks,
+        }
+    }
+}
+
+/// Block-pool occupancy + prefix-cache counters, surfaced through
+/// [`super::Engine::kv_stats`] into `/metrics` and `/replicas`, and used
+/// by the scheduler's block-budget admission gate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    pub block_rows: usize,
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    /// Blocks referenced by at least one sealed prefix entry.
+    pub cached_blocks: usize,
+    /// Cached blocks whose ONLY references are sealed entries — what
+    /// eviction could reclaim right now.
+    pub evictable_blocks: usize,
+    /// Live sealed entries.
+    pub sealed_entries: usize,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// Sealed entries evicted under allocation pressure.
+    pub evictions: u64,
+    pub cow_copies: u64,
+}
+
+impl KvStats {
+    /// Worst-case blocks one lane of an `n`-row sequence can hold.
+    pub fn blocks_per_seq(&self, n: usize) -> usize {
+        n.div_ceil(self.block_rows.max(1))
+    }
+
+    /// How many worst-case lanes the pool can back concurrently (>= 1 so
+    /// a deliberately tiny pool degrades to serial serving rather than a
+    /// dead scheduler; a pool smaller than one sequence then fails the
+    /// request with a pool-exhausted error instead).
+    pub fn lane_budget(&self, n: usize) -> usize {
+        (self.total_blocks / self.blocks_per_seq(n).max(1)).max(1)
+    }
+}
+
+/// One sealed prefix entry: a retained block table covering committed
+/// rows `0..rows`, LRU-stamped.
+struct SealedEntry {
+    blocks: Vec<usize>,
+    rows: usize,
+    tick: u64,
+}
+
+/// The paged block pool + prefix cache. One per engine; engines wrap it
+/// in the same `RefCell` discipline as the lane maps (never contended —
+/// engines are thread-pinned).
+pub struct PagedKv<T> {
+    block_rows: usize,
+    row_width: usize,
+    /// `[total_blocks, block_rows, row_width]`, flat.
+    payload: Vec<T>,
+    /// Total references per block: lane tables + sealed entries.
+    refs: Vec<u32>,
+    /// References from sealed entries only (`cache_refs[b] <= refs[b]`);
+    /// a block with `refs == cache_refs > 0` is evictable.
+    cache_refs: Vec<u32>,
+    free: Vec<usize>,
+    sealed: HashMap<PrefixKey, SealedEntry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    cow_copies: u64,
+}
+
+impl<T: Copy + Default> PagedKv<T> {
+    pub fn new(cfg: PagedKvConfig, row_width: usize) -> PagedKv<T> {
+        let block_rows = cfg.block_rows.max(1);
+        let total = cfg.total_blocks.max(1);
+        PagedKv {
+            block_rows,
+            row_width: row_width.max(1),
+            payload: vec![T::default(); total * block_rows * row_width.max(1)],
+            refs: vec![0; total],
+            cache_refs: vec![0; total],
+            // pop() order matches ascending ids for determinism
+            free: (0..total).rev().collect(),
+            sealed: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            cow_copies: 0,
+        }
+    }
+
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    #[inline]
+    fn row_slice(&self, block: usize, slot: usize) -> &[T] {
+        let off = (block * self.block_rows + slot) * self.row_width;
+        &self.payload[off..off + self.row_width]
+    }
+
+    /// Allocate one block, evicting LRU sealed prefixes under pressure.
+    /// Never touches a block with a non-cache reference (active lanes
+    /// keep `refs > cache_refs`).
+    fn alloc_block(&mut self) -> Result<usize> {
+        loop {
+            if let Some(b) = self.free.pop() {
+                debug_assert_eq!(self.refs[b], 0, "free block with live refs");
+                self.refs[b] = 1;
+                return Ok(b);
+            }
+            if !self.evict_lru() {
+                bail!(
+                    "KV block pool exhausted ({} blocks of {} rows, nothing evictable) — \
+                     raise --cache-blocks or lower --max-batch",
+                    self.refs.len(),
+                    self.block_rows
+                );
+            }
+        }
+    }
+
+    /// Evict the least-recently-used sealed entry. Returns false when no
+    /// entry remains. May free zero blocks (all shared with live lanes
+    /// or other entries) — callers loop.
+    fn evict_lru(&mut self) -> bool {
+        let Some(key) = self
+            .sealed
+            .iter()
+            .min_by_key(|(_, e)| e.tick)
+            .map(|(k, _)| *k)
+        else {
+            return false;
+        };
+        let entry = self.sealed.remove(&key).expect("key just observed");
+        for b in entry.blocks {
+            self.cache_refs[b] -= 1;
+            self.release_block(b);
+        }
+        self.evictions += 1;
+        true
+    }
+
+    fn release_block(&mut self, b: usize) {
+        assert!(self.refs[b] > 0, "double-free of block {b}");
+        self.refs[b] -= 1;
+        if self.refs[b] == 0 {
+            debug_assert_eq!(self.cache_refs[b], 0, "cache ref outliving total refs");
+            self.free.push(b);
+        }
+    }
+
+    /// Read row `row` (a committed order index) through a block table.
+    pub fn read_row(&self, table: &[usize], row: usize) -> &[T] {
+        let block = table[row / self.block_rows];
+        self.row_slice(block, row % self.block_rows)
+    }
+
+    /// Get the writable slice for row `row`, extending the table and
+    /// applying copy-on-write as needed. Rows must be appended in order
+    /// (`row < table.len() * block_rows + block_rows`); the CoW rule —
+    /// never mutate a block with `refs > 1` — is enforced here, so
+    /// callers cannot violate it.
+    pub fn append_row(&mut self, table: &mut Vec<usize>, row: usize) -> Result<&mut [T]> {
+        let idx = row / self.block_rows;
+        assert!(
+            idx <= table.len(),
+            "non-contiguous append: row {row} into a {}-block table",
+            table.len()
+        );
+        if idx == table.len() {
+            table.push(self.alloc_block()?);
+        }
+        let mut block = table[idx];
+        if self.refs[block] > 1 {
+            // Shared with a sealed entry (or another lane seeded from the
+            // same prefix): copy before writing.
+            let fresh = self.alloc_block()?;
+            let (src, dst) = (
+                block * self.block_rows * self.row_width,
+                fresh * self.block_rows * self.row_width,
+            );
+            let plane = self.block_rows * self.row_width;
+            self.payload.copy_within(src..src + plane, dst);
+            self.release_block(block);
+            table[idx] = fresh;
+            block = fresh;
+            self.cow_copies += 1;
+        }
+        let off = (block * self.block_rows + row % self.block_rows) * self.row_width;
+        Ok(&mut self.payload[off..off + self.row_width])
+    }
+
+    /// Release a lane's block table back to the pool (blocks shared with
+    /// sealed entries survive under their cache refs).
+    pub fn release_table(&mut self, table: &mut Vec<usize>) {
+        for b in table.drain(..) {
+            self.release_block(b);
+        }
+    }
+
+    /// Seal a retiring lane's committed rows into the prefix cache: one
+    /// entry per usable boundary (full blocks past the prompt, plus the
+    /// prompt boundary `m` and the final `cached` row count). Boundaries
+    /// below `m` are never usable (bidirectional prompt; module docs) so
+    /// they are not sealed. Blocks gain one cache ref per entry.
+    pub fn seal(&mut self, table: &[usize], chain: &[PrefixKey], m: usize, cached: usize) {
+        debug_assert!(chain.len() >= cached, "chain shorter than cached rows");
+        if cached == 0 || m == 0 || cached < m {
+            return; // nothing reusable (m == 0: no prompt to key on)
+        }
+        for b in self.boundaries(m, cached) {
+            let key = chain[b - 1];
+            let tick = self.next_tick();
+            if let Some(e) = self.sealed.get_mut(&key) {
+                // Same prefix already cached (hash-equal => bit-equal
+                // K/V): just refresh recency.
+                e.tick = tick;
+                continue;
+            }
+            let blocks: Vec<usize> = table[..b.div_ceil(self.block_rows)].to_vec();
+            for &blk in &blocks {
+                self.refs[blk] += 1;
+                self.cache_refs[blk] += 1;
+            }
+            self.sealed.insert(key, SealedEntry { blocks, rows: b, tick });
+        }
+    }
+
+    /// Usable seal/lookup boundaries for a (prompt `m`, committed `c`)
+    /// pair, ascending: `m`, every full-block edge in `(m, c)`, and `c`.
+    fn boundaries(&self, m: usize, c: usize) -> Vec<usize> {
+        let mut out = vec![m];
+        let mut b = (m / self.block_rows + 1) * self.block_rows;
+        while b < c {
+            out.push(b);
+            b += self.block_rows;
+        }
+        if c > m {
+            out.push(c);
+        }
+        out
+    }
+
+    /// Look up the longest sealed prefix covering `>= m` of this chain's
+    /// rows. On a hit, returns a retained clone of the entry's block
+    /// table plus the row count it covers — the caller owns the new refs
+    /// and MUST eventually `release_table` them. Counts a hit/miss.
+    pub fn lookup(&mut self, chain: &[PrefixKey], m: usize, committed: usize) -> Option<(Vec<usize>, usize)> {
+        if m == 0 || committed < m {
+            return None; // unkeyable — not a cache decision, no miss count
+        }
+        for b in self.boundaries(m, committed).into_iter().rev() {
+            let tick = self.next_tick();
+            if let Some(entry) = self.sealed.get_mut(&chain[b - 1]) {
+                if entry.rows != b {
+                    continue; // 128-bit collision backstop
+                }
+                entry.tick = tick;
+                let blocks = entry.blocks.clone();
+                for &blk in &blocks {
+                    self.refs[blk] += 1;
+                }
+                self.hits += 1;
+                return Some((blocks, b));
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Drop every sealed entry (param swaps invalidate all cached K/V).
+    pub fn clear_sealed(&mut self) {
+        let keys: Vec<PrefixKey> = self.sealed.keys().copied().collect();
+        for key in keys {
+            let entry = self.sealed.remove(&key).expect("key just listed");
+            for b in entry.blocks {
+                self.cache_refs[b] -= 1;
+                self.release_block(b);
+            }
+        }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    pub fn stats(&self) -> KvStats {
+        let cached = self.cache_refs.iter().filter(|&&c| c > 0).count();
+        let evictable = self
+            .refs
+            .iter()
+            .zip(&self.cache_refs)
+            .filter(|&(&r, &c)| c > 0 && r == c)
+            .count();
+        KvStats {
+            block_rows: self.block_rows,
+            total_blocks: self.refs.len(),
+            free_blocks: self.free.len(),
+            cached_blocks: cached,
+            evictable_blocks: evictable,
+            sealed_entries: self.sealed.len(),
+            prefix_hits: self.hits,
+            prefix_misses: self.misses,
+            evictions: self.evictions,
+            cow_copies: self.cow_copies,
+        }
+    }
+
+    /// Full-pool invariant audit for the property-test battery. `tables`
+    /// is every live lane block table. Checks: no block is both free and
+    /// referenced; refcount(block) == lane references + sealed-entry
+    /// references exactly; free list has no duplicates; every block is
+    /// accounted (free or referenced) — i.e. zero leaks.
+    pub fn check_invariants(&self, tables: &[&[usize]]) -> std::result::Result<(), String> {
+        let total = self.refs.len();
+        let mut expected = vec![0u32; total];
+        let mut expected_cache = vec![0u32; total];
+        for t in tables {
+            for &b in *t {
+                if b >= total {
+                    return Err(format!("table references out-of-range block {b}"));
+                }
+                expected[b] += 1;
+            }
+        }
+        for e in self.sealed.values() {
+            for &b in &e.blocks {
+                expected[b] += 1;
+                expected_cache[b] += 1;
+            }
+        }
+        let mut seen_free = vec![false; total];
+        for &b in &self.free {
+            if seen_free[b] {
+                return Err(format!("block {b} appears twice in the free list"));
+            }
+            seen_free[b] = true;
+        }
+        for b in 0..total {
+            if self.refs[b] != expected[b] {
+                return Err(format!(
+                    "refcount({b}) = {} but {} references exist",
+                    self.refs[b], expected[b]
+                ));
+            }
+            if self.cache_refs[b] != expected_cache[b] {
+                return Err(format!(
+                    "cache_refs({b}) = {} but {} sealed references exist",
+                    self.cache_refs[b], expected_cache[b]
+                ));
+            }
+            if seen_free[b] && self.refs[b] != 0 {
+                return Err(format!("block {b} is free AND referenced"));
+            }
+            if !seen_free[b] && self.refs[b] == 0 {
+                return Err(format!("block {b} leaked (unreferenced, not free)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, rng::Rng};
+
+    fn pool(total: usize, rows: usize) -> PagedKv<u32> {
+        PagedKv::new(
+            PagedKvConfig {
+                block_rows: rows,
+                total_blocks: total,
+            },
+            1,
+        )
+    }
+
+    #[test]
+    fn append_read_roundtrip_across_blocks() {
+        let mut kv = pool(4, 2);
+        let mut table = vec![];
+        for row in 0..7 {
+            kv.append_row(&mut table, row).unwrap()[0] = 100 + row as u32;
+        }
+        assert_eq!(table.len(), 4);
+        for row in 0..7 {
+            assert_eq!(kv.read_row(&table, row)[0], 100 + row as u32);
+        }
+        kv.release_table(&mut table);
+        assert_eq!(kv.stats().free_blocks, 4);
+    }
+
+    #[test]
+    fn pool_exhaustion_errors_instead_of_corrupting() {
+        let mut kv = pool(2, 2);
+        let mut table = vec![];
+        for row in 0..4 {
+            kv.append_row(&mut table, row).unwrap()[0] = row as u32;
+        }
+        let err = kv.append_row(&mut table, 4).unwrap_err().to_string();
+        assert!(err.contains("exhausted"), "got: {err}");
+        // The failed append must not have grown the table.
+        kv.check_invariants(&[&table]).unwrap();
+    }
+
+    #[test]
+    fn cow_preserves_sealed_payload() {
+        let mut kv = pool(8, 4);
+        let ord = Ordering::new((0..8).collect(), 2);
+        let tokens = vec![7u32, 8, 9, 10, 11, 12, 13, 14];
+        let chain = chain_hashes(&ord, &tokens, 2);
+        let mut table = vec![];
+        for row in 0..2 {
+            kv.append_row(&mut table, row).unwrap()[0] = tokens[row];
+        }
+        kv.seal(&table, &chain, 2, 2);
+        kv.release_table(&mut table);
+        // A lane seeded from the sealed entry shares its (partial) block;
+        // appending row 2 lands IN that shared block and must CoW —
+        // never mutate the sealed original.
+        let (mut lane2, rows) = kv.lookup(&chain, 2, 2).expect("hit");
+        assert_eq!(rows, 2);
+        let shared_block = lane2[0];
+        kv.append_row(&mut lane2, 2).unwrap()[0] = 99;
+        assert_ne!(lane2[0], shared_block, "CoW must have replaced the block");
+        assert_eq!(kv.stats().cow_copies, 1);
+        // Sealed payload intact: a second seeded lane still reads 7, 8.
+        let (lane3, _) = kv.lookup(&chain, 2, 2).expect("second hit");
+        assert_eq!(kv.read_row(&lane3, 0)[0], 7);
+        assert_eq!(kv.read_row(&lane3, 1)[0], 8);
+        // And the CoW copy carried the prefix payload over.
+        assert_eq!(kv.read_row(&lane2, 0)[0], 7);
+        assert_eq!(kv.read_row(&lane2, 2)[0], 99);
+        kv.check_invariants(&[&lane2, &lane3]).unwrap();
+    }
+
+    #[test]
+    fn seal_lookup_hit_requires_full_prompt() {
+        let mut kv = pool(8, 4);
+        let ord = Ordering::new((0..8).collect(), 6);
+        let tokens: Vec<u32> = (0..8).map(|i| i as u32 + 1).collect();
+        let chain = chain_hashes(&ord, &tokens, 8);
+        let mut table = vec![];
+        for row in 0..8 {
+            kv.append_row(&mut table, row).unwrap()[0] = tokens[row];
+        }
+        kv.seal(&table, &chain, 6, 8);
+        kv.release_table(&mut table);
+        // Same prompt, fresh request at committed == m == 6: boundary 6
+        // must hit even though 6 is not block-aligned.
+        let (mut t2, rows) = kv.lookup(&chain, 6, 6).expect("prompt-boundary hit");
+        assert_eq!(rows, 6);
+        kv.release_table(&mut t2);
+        // A request whose prompt extends PAST the sealed rows (m = 7
+        // boundary was never sealed under these keys… chain differs at
+        // seed anyway — emulate by asking for m larger than any entry).
+        let ord_b = Ordering::new((0..8).collect(), 7);
+        let chain_b = chain_hashes(&ord_b, &tokens, 8);
+        assert!(kv.lookup(&chain_b, 7, 7).is_none(), "different m must miss");
+        let s = kv.stats();
+        assert_eq!(s.prefix_hits, 1);
+        assert_eq!(s.prefix_misses, 1);
+    }
+
+    #[test]
+    fn eviction_frees_lru_entry_only_and_never_active_blocks() {
+        let mut kv = pool(4, 2);
+        let ord = Ordering::new((0..4).collect(), 2);
+        // Seal two distinct 1-block prompts (m=2, block_rows=2).
+        let mut chains = vec![];
+        for tok0 in [1u32, 2] {
+            let tokens = vec![tok0, 5, 0, 0];
+            let chain = chain_hashes(&ord, &tokens, 2);
+            let mut t = vec![];
+            for row in 0..2 {
+                kv.append_row(&mut t, row).unwrap()[0] = tokens[row];
+            }
+            kv.seal(&t, &chain, 2, 2);
+            kv.release_table(&mut t);
+            chains.push(chain);
+        }
+        assert_eq!(kv.stats().free_blocks, 2);
+        // Touch entry 0 so entry 1 is the LRU.
+        let (mut t0, _) = kv.lookup(&chains[0], 2, 2).expect("hit");
+        // An active 6-row lane needs 3 blocks: 2 from the free list plus
+        // 1 eviction. The evictor must pick entry 1 (the LRU) — and if it
+        // wrongly picked entry 0 first, its block is pinned by t0's
+        // active ref, so a second eviction would show up in the counter.
+        let mut lane = vec![];
+        for row in 0..6 {
+            kv.append_row(&mut lane, row).unwrap()[0] = 9;
+        }
+        let s = kv.stats();
+        assert_eq!(s.evictions, 1, "exactly the LRU entry evicted");
+        // Entry 0's block is still shared with t0 (active ref): it was
+        // NOT freed even if its entry were evicted later.
+        assert!(kv.lookup(&chains[1], 2, 2).is_none(), "LRU entry gone");
+        kv.check_invariants(&[&t0, &lane]).unwrap();
+        kv.release_table(&mut t0);
+        kv.release_table(&mut lane);
+    }
+
+    #[test]
+    fn clear_sealed_releases_everything() {
+        let mut kv = pool(6, 2);
+        let ord = Ordering::new((0..4).collect(), 2);
+        for tok0 in [1u32, 2, 3] {
+            let tokens = vec![tok0, 5, 0, 0];
+            let chain = chain_hashes(&ord, &tokens, 2);
+            let mut t = vec![];
+            for row in 0..2 {
+                kv.append_row(&mut t, row).unwrap()[0] = tokens[row];
+            }
+            kv.seal(&t, &chain, 2, 2);
+            kv.release_table(&mut t);
+        }
+        assert_eq!(kv.stats().sealed_entries, 3);
+        kv.clear_sealed();
+        let s = kv.stats();
+        assert_eq!((s.sealed_entries, s.cached_blocks, s.free_blocks), (0, 0, 6));
+        kv.check_invariants(&[]).unwrap();
+    }
+
+    #[test]
+    fn chain_hash_distinguishes_order_tokens_and_prompt_size() {
+        let sigma: Vec<usize> = (0..6).collect();
+        let sigma_swapped = vec![1usize, 0, 2, 3, 4, 5];
+        let tokens = vec![3u32, 4, 5, 6, 7, 8];
+        let a = chain_hashes(&Ordering::new(sigma.clone(), 2), &tokens, 4);
+        let b = chain_hashes(&Ordering::new(sigma_swapped, 2), &tokens, 4);
+        let c = chain_hashes(&Ordering::new(sigma.clone(), 3), &tokens, 4);
+        let mut t2 = tokens.clone();
+        t2[0] = 9;
+        let d = chain_hashes(&Ordering::new(sigma, 2), &t2, 4);
+        assert_ne!(a[3], b[3], "sigma permutation must change the key");
+        assert_ne!(a[3], c[3], "prompt size must change the key");
+        assert_ne!(a[3], d[3], "token value must change the key");
+        // Deterministic: same inputs, same chain.
+        let a2 = chain_hashes(&Ordering::new((0..6).collect(), 2), &tokens, 4);
+        assert_eq!(a, a2);
+        // chain_extend agrees with the batch recomputation link by link.
+        let mut h = a[0];
+        for j in 1..4 {
+            h = chain_extend(h, j, tokens[j]);
+            assert_eq!(h, a[j]);
+        }
+    }
+
+    /// One step of the random schedule the property battery replays.
+    #[derive(Clone, Debug)]
+    enum Op {
+        /// Append the next row to lane (i % lanes).
+        Append(usize),
+        /// Release lane (i % lanes)'s table without sealing.
+        Free(usize),
+        /// Seal lane (i % lanes) then release it (a retire).
+        SealRetire(usize),
+        /// Fork: look up lane (i % lanes)'s chain from the cache into a
+        /// fresh seeded lane replacing it (tests shared-block refs).
+        Fork(usize),
+    }
+
+    /// Random alloc/fork/append/free schedules uphold the pool
+    /// invariants at EVERY step: no double-free (release_block asserts),
+    /// refcount(block) == number of referencing tables + sealed entries,
+    /// CoW never mutates a shared block (checked via payload probes),
+    /// and the pool leaks zero blocks after full churn.
+    #[test]
+    fn prop_random_schedules_uphold_pool_invariants() {
+        const LANES: usize = 3;
+        propcheck::check(
+            41,
+            60,
+            |r: &mut Rng| {
+                let n_ops = r.range(4, 40);
+                let ops: Vec<Op> = (0..n_ops)
+                    .map(|_| match r.below(8) {
+                        0 | 1 | 2 | 3 => Op::Append(r.below(LANES)),
+                        4 => Op::Free(r.below(LANES)),
+                        5 | 6 => Op::SealRetire(r.below(LANES)),
+                        _ => Op::Fork(r.below(LANES)),
+                    })
+                    .collect();
+                (r.next_u64(), ops)
+            },
+            |(seed, ops)| run_schedule(*seed, ops),
+            |(seed, ops)| {
+                propcheck::shrink_vec(ops)
+                    .into_iter()
+                    .map(|o| (*seed, o))
+                    .collect()
+            },
+        );
+    }
+
+    fn run_schedule(seed: u64, ops: &[Op]) -> std::result::Result<(), String> {
+        const N: usize = 12;
+        const M: usize = 2;
+        let mut kv = pool(10, 3);
+        let ord = Ordering::new((0..N).collect(), M);
+        // Per-lane state: (table, chain, rows, tokens). Tokens are the
+        // lane id hashed with the fork generation so forked prefixes
+        // collide across lanes deliberately.
+        let mut rng = Rng::new(seed);
+        struct Lane {
+            table: Vec<usize>,
+            chain: Vec<PrefixKey>,
+            rows: usize,
+            tokens: Vec<u32>,
+        }
+        let fresh = |rng: &mut Rng| {
+            // Tiny alphabet so independently drawn lanes share prefixes
+            // often — forks then genuinely exercise shared-block refs.
+            let tokens: Vec<u32> = (0..N).map(|_| rng.below(2) as u32).collect();
+            Lane {
+                table: vec![],
+                chain: vec![],
+                rows: 0,
+                tokens,
+            }
+        };
+        let mut lanes: Vec<Lane> = (0..3).map(|_| fresh(&mut rng)).collect();
+        for op in ops {
+            match op {
+                Op::Append(l) => {
+                    let lane = &mut lanes[*l];
+                    if lane.rows >= N {
+                        continue;
+                    }
+                    let row = lane.rows;
+                    let tok = lane.tokens[row];
+                    match kv.append_row(&mut lane.table, row) {
+                        Ok(slice) => slice[0] = tok,
+                        Err(_) => continue, // pool pressure: legitimate
+                    }
+                    // Cross-check the incremental link against the batch
+                    // recomputation while we extend the chain.
+                    let full = chain_hashes(&ord, &lane.tokens, row + 1);
+                    let link = if row == 0 {
+                        full[0]
+                    } else {
+                        chain_extend(lane.chain[row - 1], ord.sigma[row], tok)
+                    };
+                    if link != full[row] {
+                        return Err("chain_extend diverges from chain_hashes".into());
+                    }
+                    lane.chain.push(link);
+                    lane.rows += 1;
+                }
+                Op::Free(l) => {
+                    let lane = &mut lanes[*l];
+                    kv.release_table(&mut lane.table);
+                    lanes[*l] = fresh(&mut rng);
+                }
+                Op::SealRetire(l) => {
+                    let lane = &mut lanes[*l];
+                    kv.seal(&lane.table, &lane.chain, M, lane.rows);
+                    kv.release_table(&mut lane.table);
+                    lanes[*l] = fresh(&mut rng);
+                }
+                Op::Fork(l) => {
+                    let chain = lanes[*l].chain.clone();
+                    let rows = lanes[*l].rows;
+                    let tokens = lanes[*l].tokens.clone();
+                    if let Some((t, covered)) = kv.lookup(&chain, M, rows) {
+                        let old = &mut lanes[*l];
+                        kv.release_table(&mut old.table);
+                        lanes[*l] = Lane {
+                            table: t,
+                            chain: chain[..covered].to_vec(),
+                            rows: covered,
+                            tokens,
+                        };
+                    }
+                }
+            }
+            // CoW probe: every lane's payload must still read back its
+            // own tokens (a CoW bug that mutates a shared block shows up
+            // as another lane's token appearing here).
+            for lane in &lanes {
+                for row in 0..lane.rows {
+                    let got = kv.read_row(&lane.table, row)[0];
+                    if got != lane.tokens[row] {
+                        return Err(format!(
+                            "payload corrupted: row {row} reads {got}, expected {} \
+                             (CoW mutated a shared block?)",
+                            lane.tokens[row]
+                        ));
+                    }
+                }
+            }
+            let tables: Vec<&[usize]> = lanes.iter().map(|l| l.table.as_slice()).collect();
+            kv.check_invariants(&tables)?;
+        }
+        // Full churn: release every lane and drop the cache — the pool
+        // must end exactly full, i.e. zero leaked blocks.
+        for lane in &mut lanes {
+            kv.release_table(&mut lane.table);
+        }
+        kv.clear_sealed();
+        let s = kv.stats();
+        if s.free_blocks != s.total_blocks {
+            return Err(format!(
+                "leak: {} of {} blocks free after full churn",
+                s.free_blocks, s.total_blocks
+            ));
+        }
+        kv.check_invariants(&[])
+    }
+}

@@ -19,7 +19,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use super::{Engine, XlaEngine};
+use super::{Engine, PagedKvConfig, XlaEngine};
 
 /// Sizing knobs for an engine pool.
 ///
@@ -69,8 +69,21 @@ impl EnginePool {
     /// set from `artifacts_dir` (and optional checkpoint). Every replica
     /// compiles its own executables and uploads its own theta.
     pub fn xla(cfg: PoolConfig, artifacts_dir: PathBuf, params_path: Option<PathBuf>) -> EnginePool {
+        Self::xla_with(cfg, artifacts_dir, params_path, None)
+    }
+
+    /// [`EnginePool::xla`] with explicit per-replica K/V pool sizing
+    /// (each replica owns a private block pool + prefix cache — caches
+    /// are never shared across replicas, matching the share-nothing
+    /// contract above). `None` uses the engine's per-seq-len defaults.
+    pub fn xla_with(
+        cfg: PoolConfig,
+        artifacts_dir: PathBuf,
+        params_path: Option<PathBuf>,
+        kv_cfg: Option<PagedKvConfig>,
+    ) -> EnginePool {
         EnginePool::from_fn(cfg, move |_replica| {
-            let e = XlaEngine::load(&artifacts_dir, params_path.as_deref())?;
+            let e = XlaEngine::load_with(&artifacts_dir, params_path.as_deref(), kv_cfg)?;
             Ok(Box::new(e) as Box<dyn Engine>)
         })
     }
