@@ -2,9 +2,10 @@
 #
 # `make verify` is the gate every PR must pass: the tier-1 build + tests
 # (ROADMAP.md) plus the documentation surface — rustdoc with warnings
-# denied and rustfmt in check mode — so docs and formatting cannot rot.
+# denied, rustfmt in check mode, and clippy with warnings denied — so
+# docs, formatting, and lints cannot rot.
 
-.PHONY: all build test doc fmt verify artifacts fixtures models bench bench-smoke
+.PHONY: all build test doc fmt lint verify artifacts fixtures models bench bench-smoke
 
 all: build
 
@@ -22,7 +23,12 @@ doc:
 fmt:
 	cargo fmt --check
 
-verify: build test doc fmt
+# Lints cover every target (benches and examples included) so the perf
+# gates cannot drift out of compilability between bench runs.
+lint:
+	cargo clippy --all-targets -- -D warnings
+
+verify: build test doc fmt lint
 
 # Python runs exactly once: AOT-lower the AS-ARM (Pallas kernels) to HLO
 # text artifacts consumed by the rust runtime (dense fwd_b{B} AND compact
@@ -69,6 +75,14 @@ bench:
 # here) and are COMMITTED, so the perf trajectory is tracked in-tree
 # across PRs instead of living only in CI artifacts: after a bench run
 # with meaningful changes, `git add BENCH_*.json`.
+#
+# perf_streaming and perf_paged additionally dump one traced request
+# each as TRACE_streaming.json / TRACE_paged.json — Chrome trace-event
+# JSON (the same bytes GET /trace/{id} serves), loadable into
+# chrome://tracing or Perfetto. Those are ephemeral inspection aids
+# (uploaded from CI, gitignored here), not committed baselines.
+# perf_coordinator additionally gates tracing overhead: it exits
+# non-zero if tracing-on throughput drops below 0.95x tracing-off.
 bench-smoke:
 	ASARM_BENCH_MOCK=1 ASARM_BENCH_SEQS=2 cargo bench --bench table1_assd
 	ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine

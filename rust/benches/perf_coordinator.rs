@@ -22,6 +22,7 @@ fn run_load(
     max_batch: usize,
     n_requests: usize,
     draft: Option<DraftOptions>,
+    trace: bool,
 ) -> (f64, Metrics) {
     let metrics = Metrics::new();
     // Same seed per replica: share-nothing copies of one model.
@@ -37,6 +38,7 @@ fn run_load(
             // drained, so the bounded admission queue must hold all of it
             // (no shedding in this bench).
             queue_depth: n_requests.max(1),
+            trace,
             ..Default::default()
         },
         metrics.clone(),
@@ -77,7 +79,7 @@ fn main() -> anyhow::Result<()> {
         "mean occupancy",
     ]);
     for &max_batch in &[1usize, 2, 4, 8] {
-        let (wall, metrics) = run_load(1, max_batch, n_requests, None);
+        let (wall, metrics) = run_load(1, max_batch, n_requests, None, true);
         let j = metrics.snapshot_json();
         let p50 = j.get("latency_p50_s").unwrap().as_f64().unwrap() * 1e3;
         let p99 = j.get("latency_p99_s").unwrap().as_f64().unwrap() * 1e3;
@@ -98,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     let mut pool_table = Table::new(&["replicas", "req/s", "speedup", "p99 (ms)"]);
     let mut base_rps = 0.0;
     for &replicas in &[1usize, 4] {
-        let (wall, metrics) = run_load(replicas, 4, n_requests, None);
+        let (wall, metrics) = run_load(replicas, 4, n_requests, None, true);
         let rps = n_requests as f64 / wall;
         if replicas == 1 {
             base_rps = rps;
@@ -132,7 +134,7 @@ fn main() -> anyhow::Result<()> {
             max_len: 5,
             adaptive,
         };
-        let (wall, metrics) = run_load(2, 4, n_requests, Some(draft));
+        let (wall, metrics) = run_load(2, 4, n_requests, Some(draft), true);
         let j = metrics.snapshot_json();
         let accept = j.get("acceptance_rate").unwrap().as_f64().unwrap();
         let nfe = j.get("model_nfe").unwrap().as_f64().unwrap();
@@ -150,5 +152,32 @@ fn main() -> anyhow::Result<()> {
         "(external drafters trade model NFE for aux lookups; adaptive speculation grows the \
          window while acceptance stays high)"
     );
+
+    // --- axis 4: tracing overhead gate ---
+    // Span building is a handful of Instant reads and Vec pushes per
+    // iteration; it must stay invisible next to even a mock forward.
+    // Best-of-3 per mode damps scheduler jitter; the bench exits
+    // non-zero if tracing-on throughput drops below 0.95x off.
+    let best_rps = |trace: bool| -> f64 {
+        (0..3)
+            .map(|_| {
+                let (wall, _) = run_load(2, 4, n_requests, None, trace);
+                n_requests as f64 / wall
+            })
+            .fold(0.0_f64, f64::max)
+    };
+    let off = best_rps(false);
+    let on = best_rps(true);
+    let ratio = on / off;
+    let mut trace_table = Table::new(&["tracing", "req/s (best of 3)", "ratio"]);
+    trace_table.row(&["off".into(), format!("{off:.1}"), "1.00x".into()]);
+    trace_table.row(&["on".into(), format!("{on:.1}"), format!("{ratio:.2}x")]);
+    println!("\n=== perf_coordinator: tracing overhead (replicas=2, max_batch=4) ===");
+    trace_table.print();
+    anyhow::ensure!(
+        ratio >= 0.95,
+        "tracing overhead gate failed: on={on:.1} req/s vs off={off:.1} req/s ({ratio:.2}x < 0.95x)"
+    );
+    println!("(gate: tracing-on must hold >= 0.95x of tracing-off throughput — passed)");
     Ok(())
 }

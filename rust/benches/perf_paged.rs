@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 use asarm::coordinator::SamplerKind;
 use asarm::draft::{DraftKind, DraftOptions};
 use asarm::eval::harness::{build_machine, masked_prose_workload, WorkItem};
+use asarm::obs::{chrome, tap, Rung, SpanKind, TraceBuilder, DEFAULT_SPAN_CAP};
 use asarm::runtime::mock::MockEngine;
 use asarm::runtime::{Engine, IncSpec, PagedKvConfig};
 use asarm::util::bench::Table;
@@ -222,5 +223,84 @@ fn main() -> Result<()> {
     );
     println!("\n=== perf_paged: prefix-cache hit-rate sweep ===");
     sweep_table.print();
+
+    // --- sample trace artifact: one warm request's span timeline -------
+    // Hand-built TraceBuilder around the same drive loop (no scheduler
+    // in this bench): forward/decode/commit spans per iteration with the
+    // actual kernel rung and prefix-probe attribution from the
+    // thread-local taps — the same Chrome trace-event shape
+    // GET /trace/{id} serves from the coordinator.
+    let trace_path = std::env::var("ASARM_TRACE_PAGED_OUT")
+        .unwrap_or_else(|_| "TRACE_paged.json".to_string());
+    let e = MockEngine::new(9, N, V, 1.0);
+    let item = prose_item(43);
+    let mut mf = usize::MAX;
+    // First drive seals the prefix so the traced re-run records a hit.
+    drive_inc(&e, &item, 4400, &mut mf)?;
+    let lane = 0;
+    e.reset_lane(lane);
+    tap::reset();
+    let mut tb = TraceBuilder::new(0, 0, "assd", std::time::Instant::now(), DEFAULT_SPAN_CAP);
+    let mut machine = build_machine(&e, &item, SamplerKind::Assd, opts(), 8, 1.0, 4400);
+    let mut iter = 0u32;
+    while !machine.done() {
+        let committed = machine.incremental();
+        let t_fwd = tb.now_us();
+        let rows = {
+            let req = machine
+                .forward_request()
+                .expect("machine not done but no request");
+            let mut out = match committed {
+                Some(committed) => e.forward_inc(&[IncSpec {
+                    spec: req,
+                    committed,
+                    lane,
+                }])?,
+                None => e.forward_ord(std::slice::from_ref(&req))?,
+            };
+            out.pop().expect("engine returned no row batch")
+        };
+        let rung = tap::take_rung().unwrap_or(Rung::Dense);
+        let mut probes = Vec::new();
+        tap::take_prefix_probes(&mut probes);
+        for (_lane, hit) in probes {
+            tb.note_prefix_probe(hit);
+        }
+        tb.note_rung(rung);
+        tb.push(SpanKind::Forward, iter, t_fwd, rung as u64, 1);
+        let t_dec = tb.now_us();
+        machine.absorb(&rows);
+        tb.push(SpanKind::Decode, iter, t_dec, 0, 0);
+        let t_commit = tb.now_us();
+        let commits = machine.drain_commits();
+        if !commits.is_empty() {
+            tb.push(SpanKind::Commit, iter, t_commit, commits.len() as u64, 0);
+            tb.add_commits(commits.len());
+        }
+        iter += 1;
+    }
+    let s = machine.iter_stats();
+    e.reset_lane(lane);
+    let trace = tb.finish(
+        true,
+        s.model_nfe,
+        s.aux_nfe,
+        s.iterations,
+        s.proposed,
+        s.accepted,
+        "self".to_string(),
+    );
+    if trace.prefix_hits < 1 {
+        bail!("traced warm re-run never hit the prefix cache — probe attribution is broken");
+    }
+    if !trace.theorem2_ok {
+        bail!(
+            "traced request violated Theorem 2: {} model NFE > {} tokens committed",
+            trace.model_nfe,
+            trace.tokens_committed
+        );
+    }
+    std::fs::write(&trace_path, chrome::trace_json(&trace).to_string())?;
+    eprintln!("perf_paged: wrote {trace_path} (load into chrome://tracing)");
     Ok(())
 }

@@ -244,6 +244,31 @@ fn main() -> Result<()> {
     ]);
     std::fs::write(&out_path, report.to_string())?;
     eprintln!("perf_streaming: wrote {out_path}");
+
+    // Sample observability artifact: one traced request's span timeline
+    // as Chrome trace-event JSON (same bytes GET /trace/{id} serves) —
+    // uploadable from CI and loadable into chrome://tracing or Perfetto.
+    let trace_path =
+        std::env::var("ASARM_TRACE_OUT").unwrap_or_else(|_| "TRACE_streaming.json".to_string());
+    let h = spawn_slow(4);
+    let rh = h
+        .submit(request(
+            0,
+            DraftOptions {
+                kind: DraftKind::SelfModel,
+                max_len: 5,
+                adaptive: true,
+            },
+        ))
+        .expect("submit trace sample");
+    let id = rh.request_id();
+    rh.wait().expect("trace sample request");
+    let chrome = h
+        .trace_chrome_json(id)
+        .expect("tracing is on by default; the retired trace must be in the ring");
+    std::fs::write(&trace_path, chrome.to_string())?;
+    eprintln!("perf_streaming: wrote {trace_path} (load into chrome://tracing)");
+
     if regressed {
         bail!("TTFT regression: streaming first-token latency >= blocking total latency");
     }

@@ -11,8 +11,16 @@
 //!                            `done`/`error` event
 //!   GET  /metrics          — pool-aggregate metrics snapshot JSON
 //!                            (incl. TTFT / inter-token latency /
-//!                            cancelled / shed)
+//!                            cancelled / shed); with
+//!                            `Accept: text/plain` the same counters
+//!                            in Prometheus text exposition instead
 //!   GET  /replicas         — per-replica stats JSON array
+//!   GET  /trace/recent     — index of recently retired request
+//!                            traces (one summary object per trace,
+//!                            newest first; `[]` when tracing is off)
+//!   GET  /trace/{id}       — full trace for one request as Chrome
+//!                            trace-event JSON (load into
+//!                            chrome://tracing or Perfetto)
 //!   GET  /healthz          — liveness
 //!
 //! Connections are handled on the thread pool; each request round-trips
@@ -46,6 +54,11 @@ use super::scheduler::{SchedulerHandle, SubmitError};
 /// How long the SSE writer waits for the next event before emitting a
 /// keepalive comment (which doubles as disconnect detection).
 const SSE_KEEPALIVE: Duration = Duration::from_millis(500);
+
+/// How many trace summaries GET /trace/recent returns (newest first).
+/// The full per-replica rings usually hold more; this bounds the
+/// response body, not the retention.
+const TRACE_RECENT_LIMIT: usize = 64;
 
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
@@ -107,7 +120,20 @@ impl HttpServer {
 struct Request {
     method: String,
     path: String,
+    /// Raw `Accept` header value (empty when absent). Only consulted
+    /// for content negotiation on GET /metrics.
+    accept: String,
     body: Vec<u8>,
+}
+
+impl Request {
+    /// Does the client prefer a plain-text body? Deliberately loose
+    /// matching (`text/plain` anywhere in the Accept list) — Prometheus
+    /// scrapers send long q-weighted lists and we only distinguish
+    /// "wants text exposition" from the JSON default.
+    fn wants_text(&self) -> bool {
+        self.accept.to_ascii_lowercase().contains("text/plain")
+    }
 }
 
 fn read_request(stream: &mut TcpStream) -> Result<Request> {
@@ -118,6 +144,7 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let method = parts.next().ok_or_else(|| anyhow!("empty request"))?.to_string();
     let path = parts.next().ok_or_else(|| anyhow!("no path"))?.to_string();
     let mut content_length = 0usize;
+    let mut accept = String::new();
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
@@ -129,6 +156,9 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().context("bad content-length")?;
             }
+            if k.eq_ignore_ascii_case("accept") {
+                accept = v.trim().to_string();
+            }
         }
     }
     if content_length > 1 << 20 {
@@ -136,11 +166,16 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok(Request { method, path, body })
+    Ok(Request {
+        method,
+        path,
+        accept,
+        body,
+    })
 }
 
 fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> Result<()> {
-    write_response_headers(stream, status, reason, &[], body)
+    write_response_typed(stream, status, reason, "application/json", &[], body)
 }
 
 fn write_response_headers(
@@ -150,8 +185,19 @@ fn write_response_headers(
     extra_headers: &[(&str, &str)],
     body: &str,
 ) -> Result<()> {
+    write_response_typed(stream, status, reason, "application/json", extra_headers, body)
+}
+
+fn write_response_typed(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> Result<()> {
     let mut resp = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
     for (k, v) in extra_headers {
@@ -214,10 +260,51 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => write_response(&mut stream, 200, "OK", r#"{"status":"ok"}"#),
         ("GET", "/metrics") => {
-            write_response(&mut stream, 200, "OK", &metrics.snapshot_json().to_string())
+            // Content negotiation: Prometheus scrapers ask for
+            // text/plain and get the text exposition (which folds in
+            // per-replica series); everyone else keeps the JSON
+            // snapshot that PR 1-6 clients already parse.
+            if req.wants_text() {
+                write_response_typed(
+                    &mut stream,
+                    200,
+                    "OK",
+                    crate::obs::prometheus::CONTENT_TYPE,
+                    &[],
+                    &handle.prometheus_text(),
+                )
+            } else {
+                write_response(&mut stream, 200, "OK", &metrics.snapshot_json().to_string())
+            }
         }
         ("GET", "/replicas") => {
             write_response(&mut stream, 200, "OK", &handle.replicas_json().to_string())
+        }
+        ("GET", "/trace/recent") => write_response(
+            &mut stream,
+            200,
+            "OK",
+            &handle.trace_recent_json(TRACE_RECENT_LIMIT).to_string(),
+        ),
+        ("GET", p) if p.starts_with("/trace/") => {
+            match p["/trace/".len()..].parse::<u64>() {
+                Err(_) => {
+                    let body = r#"{"error":"trace id must be a decimal request id"}"#;
+                    write_response(&mut stream, 400, "Bad Request", body)
+                }
+                Ok(id) => match handle.trace_chrome_json(id) {
+                    Some(j) => write_response(&mut stream, 200, "OK", &j.to_string()),
+                    // Distinguishable from the route-miss 404 by body:
+                    // either tracing is off, the id never existed, or
+                    // the ring already evicted it.
+                    None => write_response(
+                        &mut stream,
+                        404,
+                        "Not Found",
+                        r#"{"error":"no trace for that request id (tracing off, or evicted from the ring)"}"#,
+                    ),
+                },
+            }
         }
         ("POST", "/v1/infill") => {
             let infill = match parse_infill(&req.body) {
@@ -448,6 +535,21 @@ pub fn http_post(addr: &std::net::SocketAddr, path: &str, body: &str) -> Result<
 pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
     let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    read_http_response(stream)
+}
+
+/// GET with an explicit `Accept` header (exercises the /metrics content
+/// negotiation the way a Prometheus scraper would).
+pub fn http_get_accept(
+    addr: &std::net::SocketAddr,
+    path: &str,
+    accept: &str,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: {accept}\r\nConnection: close\r\n\r\n"
+    );
     stream.write_all(req.as_bytes())?;
     read_http_response(stream)
 }

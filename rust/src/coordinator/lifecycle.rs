@@ -91,10 +91,14 @@ pub enum Abort {
 
 /// Build the paired emitter/handle for one request. `timeout` starts now
 /// (queue wait counts toward the deadline); `event_capacity` bounds the
-/// event channel (cancel-on-lag backpressure).
+/// event channel (cancel-on-lag backpressure); `request_id` is the
+/// pool-unique id the scheduler assigned at submission (keys the
+/// request's trace — both halves expose it so the SSE surface can
+/// advertise it before the first commit).
 pub fn channel(
     timeout: Option<Duration>,
     event_capacity: usize,
+    request_id: u64,
 ) -> (LifecycleEmitter, RequestHandle) {
     let commit_capacity = event_capacity.max(1);
     // One extra physical slot, never used by commits: the terminal
@@ -112,11 +116,13 @@ pub fn channel(
             deadline,
             submitted: now,
             commit_capacity,
+            request_id,
         },
         RequestHandle {
             events: rx,
             cancel,
             deadline,
+            request_id,
         },
     )
 }
@@ -139,6 +145,8 @@ pub struct LifecycleEmitter {
     /// Commit budget — one less than the physical channel capacity (the
     /// reserved terminal slot).
     commit_capacity: usize,
+    /// Pool-unique id assigned at submission (trace key).
+    request_id: u64,
 }
 
 impl LifecycleEmitter {
@@ -221,6 +229,11 @@ impl LifecycleEmitter {
     pub fn cancel_token(&self) -> CancelToken {
         self.cancel.clone()
     }
+
+    /// Pool-unique id assigned at submission (trace key).
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
 }
 
 /// The client-side half: read events, cancel, or block for the outcome.
@@ -228,9 +241,17 @@ pub struct RequestHandle {
     events: mpmc::Receiver<Event>,
     cancel: CancelToken,
     deadline: Option<Instant>,
+    request_id: u64,
 }
 
 impl RequestHandle {
+    /// Pool-unique id assigned at submission: the key for GET
+    /// /trace/{request_id}, available before the first event arrives (the
+    /// SSE surface advertises it in its opening frame).
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
     /// Flip the cancel token; the worker retires the slot within one
     /// batch iteration and replies with a terminal `Error`.
     pub fn cancel(&self) {
@@ -425,9 +446,10 @@ mod tests {
 
     #[test]
     fn wait_collects_done_through_commits() {
-        let (emitter, handle) = channel(None, 8);
+        let (emitter, handle) = channel(None, 8, 1);
         assert!(emitter.commit(vec![2, 3], vec![97, 98]));
         emitter.finish(Ok(InfillResponse {
+            request_id: 1,
             text: "done".into(),
             model_nfe: 1,
             aux_nfe: 0,
@@ -446,7 +468,7 @@ mod tests {
 
     #[test]
     fn wait_surfaces_error_event() {
-        let (emitter, handle) = channel(None, 8);
+        let (emitter, handle) = channel(None, 8, 1);
         emitter.finish(Err(anyhow!("deadline exceeded after 3/8 tokens")));
         let err = handle.wait().unwrap_err().to_string();
         assert!(err.contains("deadline"), "{err}");
@@ -454,7 +476,7 @@ mod tests {
 
     #[test]
     fn dropped_handle_reports_abandoned() {
-        let (emitter, handle) = channel(None, 8);
+        let (emitter, handle) = channel(None, 8, 1);
         assert!(emitter.abort_reason().is_none());
         drop(handle);
         assert_eq!(emitter.abort_reason(), Some(Abort::Abandoned));
@@ -465,26 +487,26 @@ mod tests {
     fn deadline_wins_over_cancel_for_attribution() {
         // The client-side backstop cancels BECAUSE the deadline passed,
         // so when both flags are up the expiry is the true cause.
-        let (emitter, handle) = channel(Some(Duration::ZERO), 8);
+        let (emitter, handle) = channel(Some(Duration::ZERO), 8, 1);
         handle.cancel();
         std::thread::sleep(Duration::from_millis(1));
         assert_eq!(emitter.abort_reason(), Some(Abort::DeadlineExpired));
         // a plain cancel (no deadline configured) stays a cancel
-        let (emitter, handle) = channel(None, 8);
+        let (emitter, handle) = channel(None, 8, 1);
         handle.cancel();
         assert_eq!(emitter.abort_reason(), Some(Abort::Cancelled));
     }
 
     #[test]
     fn expired_deadline_reports_deadline() {
-        let (emitter, _handle) = channel(Some(Duration::ZERO), 8);
+        let (emitter, _handle) = channel(Some(Duration::ZERO), 8, 1);
         std::thread::sleep(Duration::from_millis(1));
         assert_eq!(emitter.abort_reason(), Some(Abort::DeadlineExpired));
     }
 
     #[test]
     fn lagging_event_channel_flips_cancel() {
-        let (emitter, handle) = channel(None, 1);
+        let (emitter, handle) = channel(None, 1, 1);
         assert!(emitter.commit(vec![0], vec![97]));
         // capacity 1, nothing drained: the next commit must shed the
         // client rather than block the worker
@@ -497,10 +519,11 @@ mod tests {
     /// as a dropped request to a client that drains late.
     #[test]
     fn terminal_event_survives_full_commit_buffer() {
-        let (emitter, handle) = channel(None, 2);
+        let (emitter, handle) = channel(None, 2, 1);
         assert!(emitter.commit(vec![0], vec![97]));
         assert!(emitter.commit(vec![1], vec![98]));
         emitter.finish(Ok(InfillResponse {
+            request_id: 1,
             text: "full".into(),
             model_nfe: 2,
             aux_nfe: 0,

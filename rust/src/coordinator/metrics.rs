@@ -1,6 +1,7 @@
 //! Serving metrics: request counts, latency percentiles, NFE totals,
 //! acceptance rates, throughput. Shared between the scheduler workers and
-//! the HTTP workers; exported as JSON at GET /metrics.
+//! the HTTP workers; exported as JSON at GET /metrics (and as Prometheus
+//! text exposition under `Accept: text/plain` — see [`Metrics::prometheus`]).
 //!
 //! Two granularities:
 //!
@@ -11,11 +12,20 @@
 //!   worker), exported at GET /replicas. Counter invariant, asserted by
 //!   the pool integration tests: the sum of every `ReplicaStats` counter
 //!   equals the corresponding aggregate `Metrics` counter.
+//!
+//! Naming contract (the canonical counter table lives in
+//! docs/ARCHITECTURE.md §Observability & tracing): a counter that exists
+//! on both surfaces uses the SAME snake_case key in both JSON snapshots
+//! and the `asarm_`-prefixed form in Prometheus (`asarm_<key>_total` for
+//! counters); per-replica-only gauges (`kv_blocks_*`) and pool-only
+//! distribution keys (`*_p50_s` etc.) are documented as single-surface.
 
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::obs::prometheus::PromText;
+use crate::obs::{RequestTrace, SpanKind};
 use crate::runtime::KvStats;
 use crate::util::json::Json;
 use crate::util::stats::Histogram;
@@ -60,6 +70,30 @@ struct Inner {
     prefix_misses: u64,
     /// Sealed prefix-cache entries evicted (LRU) under block pressure.
     kv_evictions: u64,
+    /// Copy-on-write block copies (shared cached block mutated by a lane).
+    kv_cow_copies: u64,
+    // --- request-level tracing (docs/ARCHITECTURE.md §Observability &
+    //     tracing). Folded once per retired request from its trace. ---
+    /// Traces published to the per-replica span rings.
+    traces_recorded: u64,
+    /// Spans discarded because a request exceeded its span cap.
+    trace_spans_dropped: u64,
+    /// Completed requests whose trace violated Theorem 2
+    /// (`model_nfe > tokens_committed`) — must stay 0.
+    theorem2_violations: u64,
+    /// Cumulative per-phase wall time (µs), summed over every traced
+    /// request's spans; the per-replica counters fold to these exactly.
+    phase_draft_us: u64,
+    phase_forward_us: u64,
+    phase_verify_us: u64,
+    phase_commit_us: u64,
+    /// Per-iteration phase latency distributions (one sample per span).
+    phase_draft: Histogram,
+    phase_forward: Histogram,
+    phase_verify: Histogram,
+    phase_commit: Histogram,
+    /// Per-request acceptance-rate distribution, keyed by drafter kind.
+    acceptance_by_drafter: Vec<(String, Histogram)>,
 }
 
 impl Default for Metrics {
@@ -91,6 +125,19 @@ impl Metrics {
                 prefix_hits: 0,
                 prefix_misses: 0,
                 kv_evictions: 0,
+                kv_cow_copies: 0,
+                traces_recorded: 0,
+                trace_spans_dropped: 0,
+                theorem2_violations: 0,
+                phase_draft_us: 0,
+                phase_forward_us: 0,
+                phase_verify_us: 0,
+                phase_commit_us: 0,
+                phase_draft: Histogram::latency(),
+                phase_forward: Histogram::latency(),
+                phase_verify: Histogram::latency(),
+                phase_commit: Histogram::latency(),
+                acceptance_by_drafter: vec![],
             })),
         }
     }
@@ -148,15 +195,77 @@ impl Metrics {
 
     /// Fold one worker's prefix-cache activity DELTAS (since its previous
     /// push) into the pool-wide totals. Engine counters are cumulative per
-    /// replica, so workers difference them before recording here.
-    pub fn record_prefix_cache(&self, hits: u64, misses: u64, evictions: u64) {
-        if hits == 0 && misses == 0 && evictions == 0 {
+    /// replica, so workers difference them ([`KvStats::delta`]) before
+    /// recording here.
+    pub fn record_prefix_cache(&self, hits: u64, misses: u64, evictions: u64, cow_copies: u64) {
+        if hits == 0 && misses == 0 && evictions == 0 && cow_copies == 0 {
             return;
         }
         let mut m = self.inner.lock().unwrap();
         m.prefix_hits += hits;
         m.prefix_misses += misses;
         m.kv_evictions += evictions;
+        m.kv_cow_copies += cow_copies;
+    }
+
+    /// Fold one retired request's trace into the pool aggregates: every
+    /// span's duration into its phase histogram (per-ITERATION latency
+    /// distributions) and the phase wall-time totals, the request's
+    /// acceptance rate into its drafter's histogram, and the trace
+    /// bookkeeping counters. One lock per request — nothing on the
+    /// per-iteration path.
+    pub fn record_trace(&self, t: &RequestTrace) {
+        let mut m = self.inner.lock().unwrap();
+        m.traces_recorded += 1;
+        m.trace_spans_dropped += t.dropped_spans;
+        if t.completed && !t.theorem2_ok {
+            m.theorem2_violations += 1;
+        }
+        for s in &t.spans {
+            let secs = s.dur_us as f64 / 1e6;
+            match s.kind {
+                SpanKind::Draft => {
+                    m.phase_draft_us += s.dur_us;
+                    m.phase_draft.record(secs);
+                }
+                SpanKind::Forward => {
+                    m.phase_forward_us += s.dur_us;
+                    m.phase_forward.record(secs);
+                }
+                SpanKind::Verify | SpanKind::Decode => {
+                    m.phase_verify_us += s.dur_us;
+                    m.phase_verify.record(secs);
+                }
+                SpanKind::Commit => {
+                    m.phase_commit_us += s.dur_us;
+                    m.phase_commit.record(secs);
+                }
+                SpanKind::QueueWait | SpanKind::Admit => {}
+            }
+        }
+        if t.completed && !t.draft_kind.is_empty() && t.proposed > 0 {
+            let rate = t.accepted as f64 / t.proposed as f64;
+            match m
+                .acceptance_by_drafter
+                .iter_mut()
+                .find(|(k, _)| k == &t.draft_kind)
+            {
+                Some((_, h)) => h.record(rate),
+                None => {
+                    let mut h = Histogram::unit();
+                    h.record(rate);
+                    m.acceptance_by_drafter.push((t.draft_kind.clone(), h));
+                }
+            }
+        }
+    }
+
+    pub fn traces_recorded(&self) -> u64 {
+        self.inner.lock().unwrap().traces_recorded
+    }
+
+    pub fn theorem2_violations(&self) -> u64 {
+        self.inner.lock().unwrap().theorem2_violations
     }
 
     pub fn prefix_hits(&self) -> u64 {
@@ -240,7 +349,267 @@ impl Metrics {
                 }),
             ),
             ("kv_evictions", Json::num(m.kv_evictions as f64)),
+            ("kv_cow_copies", Json::num(m.kv_cow_copies as f64)),
+            ("traces_recorded", Json::num(m.traces_recorded as f64)),
+            (
+                "trace_spans_dropped",
+                Json::num(m.trace_spans_dropped as f64),
+            ),
+            (
+                "theorem2_violations",
+                Json::num(m.theorem2_violations as f64),
+            ),
+            ("phase_draft_us", Json::num(m.phase_draft_us as f64)),
+            ("phase_forward_us", Json::num(m.phase_forward_us as f64)),
+            ("phase_verify_us", Json::num(m.phase_verify_us as f64)),
+            ("phase_commit_us", Json::num(m.phase_commit_us as f64)),
+            ("phase_draft_p50_s", Json::num(m.phase_draft.quantile(0.5))),
+            ("phase_draft_p95_s", Json::num(m.phase_draft.quantile(0.95))),
+            (
+                "phase_forward_p50_s",
+                Json::num(m.phase_forward.quantile(0.5)),
+            ),
+            (
+                "phase_forward_p95_s",
+                Json::num(m.phase_forward.quantile(0.95)),
+            ),
+            ("phase_verify_p50_s", Json::num(m.phase_verify.quantile(0.5))),
+            (
+                "phase_verify_p95_s",
+                Json::num(m.phase_verify.quantile(0.95)),
+            ),
+            ("phase_commit_p50_s", Json::num(m.phase_commit.quantile(0.5))),
+            (
+                "phase_commit_p95_s",
+                Json::num(m.phase_commit.quantile(0.95)),
+            ),
+            (
+                "acceptance_by_drafter",
+                Json::obj(
+                    m.acceptance_by_drafter
+                        .iter()
+                        .map(|(k, h)| {
+                            (
+                                k.as_str(),
+                                Json::obj(vec![
+                                    ("requests", Json::num(h.count() as f64)),
+                                    ("mean", Json::num(h.mean())),
+                                    ("p50", Json::num(h.quantile(0.5))),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
         ])
+    }
+
+    /// Render the pool aggregate plus per-replica counters as Prometheus
+    /// text exposition (version 0.0.4). Served at GET /metrics under
+    /// `Accept: text/plain`; the JSON snapshot stays the default. Family
+    /// names carry the `asarm_` prefix and otherwise reuse the snapshot's
+    /// snake_case keys (`_total` suffix on counters), so dashboards can
+    /// map between the two surfaces mechanically.
+    pub fn prometheus(&self, replicas: &[ReplicaStats]) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut p = PromText::new();
+        p.gauge(
+            "asarm_uptime_seconds",
+            "Seconds since the pool started.",
+            m.started.elapsed().as_secs_f64(),
+        );
+        p.counter(
+            "asarm_requests_total",
+            "Requests retired (completed or aborted after admission).",
+            m.requests as f64,
+        );
+        p.counter(
+            "asarm_failures_total",
+            "Requests that retired with an error.",
+            m.failures as f64,
+        );
+        p.counter(
+            "asarm_tokens_generated_total",
+            "Tokens committed across all requests.",
+            m.tokens_generated as f64,
+        );
+        p.counter(
+            "asarm_model_nfe_total",
+            "Target-model forward evaluations (Theorem 2 bounds this by tokens generated).",
+            m.model_nfe as f64,
+        );
+        p.counter(
+            "asarm_aux_nfe_total",
+            "Auxiliary (drafter) forward evaluations.",
+            m.aux_nfe as f64,
+        );
+        p.counter(
+            "asarm_proposed_total",
+            "Draft tokens proposed for verification.",
+            m.proposed as f64,
+        );
+        p.counter(
+            "asarm_accepted_total",
+            "Draft tokens accepted by verification.",
+            m.accepted as f64,
+        );
+        p.counter(
+            "asarm_batch_iterations_total",
+            "Scheduler forward iterations across all workers.",
+            m.batch_iterations as f64,
+        );
+        p.counter(
+            "asarm_cancelled_total",
+            "Requests retired early by cancel/disconnect.",
+            m.cancelled as f64,
+        );
+        p.counter(
+            "asarm_deadline_expired_total",
+            "Requests retired early by deadline expiry.",
+            m.deadline_expired as f64,
+        );
+        p.counter(
+            "asarm_shed_total",
+            "Requests refused at admission (queue full).",
+            m.shed as f64,
+        );
+        p.counter(
+            "asarm_prefix_hits_total",
+            "Lane initializations served from the prefix cache.",
+            m.prefix_hits as f64,
+        );
+        p.counter(
+            "asarm_prefix_misses_total",
+            "Lane initializations that prefilled from scratch.",
+            m.prefix_misses as f64,
+        );
+        p.counter(
+            "asarm_kv_evictions_total",
+            "Sealed prefix-cache entries evicted under block pressure.",
+            m.kv_evictions as f64,
+        );
+        p.counter(
+            "asarm_kv_cow_copies_total",
+            "Copy-on-write KV block copies.",
+            m.kv_cow_copies as f64,
+        );
+        p.counter(
+            "asarm_traces_recorded_total",
+            "Request traces published to the span rings.",
+            m.traces_recorded as f64,
+        );
+        p.counter(
+            "asarm_trace_spans_dropped_total",
+            "Spans discarded past the per-request span cap.",
+            m.trace_spans_dropped as f64,
+        );
+        p.counter(
+            "asarm_theorem2_violations_total",
+            "Completed requests with model_nfe > tokens committed (must stay 0).",
+            m.theorem2_violations as f64,
+        );
+        p.histogram(
+            "asarm_request_latency_seconds",
+            "End-to-end request latency.",
+            &[],
+            &m.latency,
+        );
+        p.histogram(
+            "asarm_ttft_seconds",
+            "Time to first committed token.",
+            &[],
+            &m.ttft,
+        );
+        p.histogram(
+            "asarm_itl_seconds",
+            "Inter-token latency per committed token.",
+            &[],
+            &m.itl,
+        );
+        p.header(
+            "asarm_phase_seconds",
+            "Per-iteration phase latency (draft/forward/verify/commit spans).",
+            "histogram",
+        );
+        p.histogram_series("asarm_phase_seconds", &[("phase", "draft")], &m.phase_draft);
+        p.histogram_series(
+            "asarm_phase_seconds",
+            &[("phase", "forward")],
+            &m.phase_forward,
+        );
+        p.histogram_series(
+            "asarm_phase_seconds",
+            &[("phase", "verify")],
+            &m.phase_verify,
+        );
+        p.histogram_series(
+            "asarm_phase_seconds",
+            &[("phase", "commit")],
+            &m.phase_commit,
+        );
+        if !m.acceptance_by_drafter.is_empty() {
+            p.header(
+                "asarm_acceptance_rate",
+                "Per-request draft acceptance rate, by drafter kind.",
+                "histogram",
+            );
+            for (kind, h) in &m.acceptance_by_drafter {
+                p.histogram_series("asarm_acceptance_rate", &[("drafter", kind)], h);
+            }
+        }
+        drop(m);
+        if !replicas.is_empty() {
+            let rep: Vec<String> = (0..replicas.len()).map(|i| i.to_string()).collect();
+            let series = |f: &dyn Fn(&ReplicaStats) -> f64| -> Vec<(Vec<(&str, &str)>, f64)> {
+                replicas
+                    .iter()
+                    .zip(&rep)
+                    .map(|(r, id)| (vec![("replica", id.as_str())], f(r)))
+                    .collect()
+            };
+            let emit = |p: &mut PromText, name: &str, help: &str, kind: &str, f: &dyn Fn(&ReplicaStats) -> f64| {
+                p.header(name, help, kind);
+                for (labels, v) in series(f) {
+                    p.sample(name, &labels, v);
+                }
+            };
+            emit(
+                &mut p,
+                "asarm_replica_requests_total",
+                "Requests retired, per replica.",
+                "counter",
+                &|r| r.requests() as f64,
+            );
+            emit(
+                &mut p,
+                "asarm_replica_tokens_generated_total",
+                "Tokens committed, per replica.",
+                "counter",
+                &|r| r.tokens_generated() as f64,
+            );
+            emit(
+                &mut p,
+                "asarm_replica_model_nfe_total",
+                "Target-model forward evaluations, per replica.",
+                "counter",
+                &|r| r.model_nfe() as f64,
+            );
+            emit(
+                &mut p,
+                "asarm_replica_kv_blocks_free",
+                "Free KV blocks in the replica's block pool.",
+                "gauge",
+                &|r| r.kv_blocks_free() as f64,
+            );
+            emit(
+                &mut p,
+                "asarm_replica_kv_blocks_total",
+                "Total KV blocks in the replica's block pool.",
+                "gauge",
+                &|r| r.kv_blocks_total.load(Ordering::Relaxed) as f64,
+            );
+        }
+        p.finish()
     }
 }
 
@@ -278,6 +647,7 @@ pub struct ReplicaStats {
     failures: AtomicU64,
     tokens_generated: AtomicU64,
     model_nfe: AtomicU64,
+    aux_nfe: AtomicU64,
     proposed: AtomicU64,
     accepted: AtomicU64,
     batch_iterations: AtomicU64,
@@ -298,6 +668,14 @@ pub struct ReplicaStats {
     kv_prefix_misses: AtomicU64,
     kv_evictions: AtomicU64,
     kv_cow_copies: AtomicU64,
+    // --- request-level tracing (folded once per retired request from its
+    //     trace; sums across replicas equal the pool's phase totals). ---
+    phase_draft_us: AtomicU64,
+    phase_forward_us: AtomicU64,
+    phase_verify_us: AtomicU64,
+    phase_commit_us: AtomicU64,
+    traces_recorded: AtomicU64,
+    trace_spans_dropped: AtomicU64,
 }
 
 impl ReplicaStats {
@@ -309,6 +687,7 @@ impl ReplicaStats {
             failures: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             model_nfe: AtomicU64::new(0),
+            aux_nfe: AtomicU64::new(0),
             proposed: AtomicU64::new(0),
             accepted: AtomicU64::new(0),
             batch_iterations: AtomicU64::new(0),
@@ -323,6 +702,12 @@ impl ReplicaStats {
             kv_prefix_misses: AtomicU64::new(0),
             kv_evictions: AtomicU64::new(0),
             kv_cow_copies: AtomicU64::new(0),
+            phase_draft_us: AtomicU64::new(0),
+            phase_forward_us: AtomicU64::new(0),
+            phase_verify_us: AtomicU64::new(0),
+            phase_commit_us: AtomicU64::new(0),
+            traces_recorded: AtomicU64::new(0),
+            trace_spans_dropped: AtomicU64::new(0),
         }
     }
 
@@ -339,12 +724,38 @@ impl ReplicaStats {
         }
     }
 
-    pub fn record_request(&self, tokens: u64, model_nfe: u64, proposed: u64, accepted: u64) {
+    pub fn record_request(
+        &self,
+        tokens: u64,
+        model_nfe: u64,
+        aux_nfe: u64,
+        proposed: u64,
+        accepted: u64,
+    ) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
         self.model_nfe.fetch_add(model_nfe, Ordering::Relaxed);
+        self.aux_nfe.fetch_add(aux_nfe, Ordering::Relaxed);
         self.proposed.fetch_add(proposed, Ordering::Relaxed);
         self.accepted.fetch_add(accepted, Ordering::Relaxed);
+    }
+
+    /// Fold one retired request's trace: phase wall-time totals plus the
+    /// trace bookkeeping counters. Lock-free, called once per request.
+    pub fn record_trace(&self, t: &RequestTrace) {
+        self.traces_recorded.fetch_add(1, Ordering::Relaxed);
+        self.trace_spans_dropped
+            .fetch_add(t.dropped_spans, Ordering::Relaxed);
+        self.phase_draft_us
+            .fetch_add(t.phase_us(SpanKind::Draft), Ordering::Relaxed);
+        self.phase_forward_us
+            .fetch_add(t.phase_us(SpanKind::Forward), Ordering::Relaxed);
+        self.phase_verify_us.fetch_add(
+            t.phase_us(SpanKind::Verify) + t.phase_us(SpanKind::Decode),
+            Ordering::Relaxed,
+        );
+        self.phase_commit_us
+            .fetch_add(t.phase_us(SpanKind::Commit), Ordering::Relaxed);
     }
 
     pub fn record_failure(&self) {
@@ -414,6 +825,14 @@ impl ReplicaStats {
         self.model_nfe.load(Ordering::Relaxed)
     }
 
+    pub fn aux_nfe(&self) -> u64 {
+        self.aux_nfe.load(Ordering::Relaxed)
+    }
+
+    pub fn traces_recorded(&self) -> u64 {
+        self.traces_recorded.load(Ordering::Relaxed)
+    }
+
     pub fn proposed(&self) -> u64 {
         self.proposed.load(Ordering::Relaxed)
     }
@@ -453,6 +872,7 @@ impl ReplicaStats {
                 Json::num(self.tokens_generated() as f64),
             ),
             ("model_nfe", Json::num(self.model_nfe() as f64)),
+            ("aux_nfe", Json::num(self.aux_nfe() as f64)),
             ("proposed", Json::num(proposed as f64)),
             ("accepted", Json::num(self.accepted() as f64)),
             ("acceptance_rate", Json::num(accept_rate)),
@@ -486,6 +906,27 @@ impl ReplicaStats {
                 "kv_cow_copies",
                 Json::num(self.kv_cow_copies.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "phase_draft_us",
+                Json::num(self.phase_draft_us.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "phase_forward_us",
+                Json::num(self.phase_forward_us.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "phase_verify_us",
+                Json::num(self.phase_verify_us.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "phase_commit_us",
+                Json::num(self.phase_commit_us.load(Ordering::Relaxed) as f64),
+            ),
+            ("traces_recorded", Json::num(self.traces_recorded() as f64)),
+            (
+                "trace_spans_dropped",
+                Json::num(self.trace_spans_dropped.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 }
@@ -517,8 +958,8 @@ mod tests {
         let r = ReplicaStats::new(2);
         assert_eq!(r.state(), ReplicaState::Starting);
         r.set_state(ReplicaState::Running);
-        r.record_request(10, 4, 12, 9);
-        r.record_request(6, 3, 8, 6);
+        r.record_request(10, 4, 2, 12, 9);
+        r.record_request(6, 3, 1, 8, 6);
         r.record_failure();
         r.record_batch_iteration(3);
         r.record_batch_iteration(1);
@@ -529,6 +970,7 @@ mod tests {
         assert_eq!(j.get("failures").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("tokens_generated").unwrap().as_f64(), Some(16.0));
         assert_eq!(j.get("model_nfe").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("aux_nfe").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("proposed").unwrap().as_f64(), Some(20.0));
         assert_eq!(j.get("accepted").unwrap().as_f64(), Some(15.0));
         assert_eq!(j.get("acceptance_rate").unwrap().as_f64(), Some(0.75));
@@ -565,12 +1007,13 @@ mod tests {
     #[test]
     fn kv_counters_and_gauges() {
         let m = Metrics::new();
-        m.record_prefix_cache(3, 1, 2);
-        m.record_prefix_cache(0, 0, 0); // delta-free push is a no-op
+        m.record_prefix_cache(3, 1, 2, 4);
+        m.record_prefix_cache(0, 0, 0, 0); // delta-free push is a no-op
         let j = m.snapshot_json();
         assert_eq!(j.get("prefix_hits").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("prefix_misses").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("kv_evictions").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("kv_cow_copies").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("prefix_hit_rate").unwrap().as_f64(), Some(0.75));
         assert_eq!(m.prefix_hits(), 3);
         assert_eq!(m.prefix_misses(), 1);
@@ -603,6 +1046,81 @@ mod tests {
         // gauges overwrite, not accumulate
         r.record_kv(&KvStats { free_blocks: 8, ..s });
         assert_eq!(r.kv_blocks_free(), 8);
+    }
+
+    fn sample_trace(completed: bool, model_nfe: u64, commits: usize) -> RequestTrace {
+        use crate::obs::TraceBuilder;
+        let mut b = TraceBuilder::new(7, 0, "spec", Instant::now(), 64);
+        b.push_at(SpanKind::QueueWait, 0, 0, 120, 0, 0);
+        b.push_at(SpanKind::Draft, 0, 120, 40, 4, 0);
+        b.push_at(SpanKind::Forward, 0, 160, 300, 2, 1);
+        b.push_at(SpanKind::Verify, 0, 460, 25, 3, 4);
+        b.push_at(SpanKind::Commit, 0, 485, 10, commits as u64, 0);
+        b.add_commits(commits);
+        b.finish(completed, model_nfe, 1, 1, 4, 3, "bigram".into())
+    }
+
+    #[test]
+    fn trace_fold_updates_phases_and_acceptance() {
+        let m = Metrics::new();
+        m.record_trace(&sample_trace(true, 2, 4));
+        m.record_trace(&sample_trace(true, 2, 4));
+        let j = m.snapshot_json();
+        assert_eq!(j.get("traces_recorded").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("theorem2_violations").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("phase_draft_us").unwrap().as_f64(), Some(80.0));
+        assert_eq!(j.get("phase_forward_us").unwrap().as_f64(), Some(600.0));
+        assert_eq!(j.get("phase_verify_us").unwrap().as_f64(), Some(50.0));
+        assert_eq!(j.get("phase_commit_us").unwrap().as_f64(), Some(20.0));
+        let by = j.get("acceptance_by_drafter").unwrap();
+        let bigram = by.get("bigram").unwrap();
+        assert_eq!(bigram.get("requests").unwrap().as_f64(), Some(2.0));
+        assert!((bigram.get("mean").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+        // A completed request claiming more model NFEs than commits trips
+        // the Theorem-2 violation counter; an aborted one does not.
+        m.record_trace(&sample_trace(true, 9, 4));
+        m.record_trace(&sample_trace(false, 9, 4));
+        assert_eq!(m.theorem2_violations(), 1);
+        assert_eq!(m.traces_recorded(), 4);
+    }
+
+    #[test]
+    fn replica_trace_fold_sums_phase_walltime() {
+        let r = ReplicaStats::new(0);
+        r.record_trace(&sample_trace(true, 2, 4));
+        let j = r.snapshot_json();
+        assert_eq!(j.get("traces_recorded").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("phase_draft_us").unwrap().as_f64(), Some(40.0));
+        assert_eq!(j.get("phase_forward_us").unwrap().as_f64(), Some(300.0));
+        assert_eq!(j.get("phase_verify_us").unwrap().as_f64(), Some(25.0));
+        assert_eq!(j.get("phase_commit_us").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_covers_pool_and_replicas() {
+        let m = Metrics::new();
+        m.record_request(0.010, 100, 50, 5, 80, 60);
+        m.record_trace(&sample_trace(true, 2, 4));
+        let r = ReplicaStats::new(0);
+        r.record_request(100, 50, 5, 80, 60);
+        let text = m.prometheus(std::slice::from_ref(&r));
+        assert!(text.contains("# TYPE asarm_requests_total counter"));
+        assert!(text.contains("asarm_requests_total 1"));
+        assert!(text.contains("asarm_model_nfe_total 50"));
+        assert!(text.contains("asarm_aux_nfe_total 5"));
+        assert!(text.contains("# TYPE asarm_request_latency_seconds histogram"));
+        assert!(text.contains("asarm_request_latency_seconds_count 1"));
+        assert!(text.contains("asarm_phase_seconds_bucket{phase=\"forward\",le=\"+Inf\"} 1"));
+        assert!(text.contains("asarm_acceptance_rate_bucket{drafter=\"bigram\""));
+        assert!(text.contains("asarm_replica_requests_total{replica=\"0\"} 1"));
+        assert!(text.contains("asarm_theorem2_violations_total 0"));
+        // every line is HELP, TYPE, or a sample — no stray blank lines
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "malformed line: {line:?}"
+            );
+        }
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! * [`http`] — HTTP/1.1 front end over the threadpool substrate,
 //!   including the SSE streaming surface (`POST /infill/stream`)
 //! * [`metrics`] — aggregate counters/latency/TTFT/ITL/acceptance (GET
-//!   /metrics) and per-replica stats (GET /replicas)
+//!   /metrics, JSON or Prometheus text via `Accept: text/plain`) and
+//!   per-replica stats (GET /replicas); per-request span traces live in
+//!   [`crate::obs`] and surface at GET /trace/{id} and /trace/recent
 //!
 //! Request lifecycle (full diagram in docs/ARCHITECTURE.md §Request
 //! lifecycle & streaming): HTTP connection -> JSON decode -> bounded

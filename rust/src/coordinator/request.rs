@@ -206,6 +206,9 @@ impl InfillRequest {
 /// the per-request speculation telemetry.
 #[derive(Clone, Debug)]
 pub struct InfillResponse {
+    /// Pool-unique id assigned at submission; keys the request's trace
+    /// (GET /trace/{request_id}). 0 only in hand-built test fixtures.
+    pub request_id: u64,
     pub text: String,
     pub model_nfe: u64,
     pub aux_nfe: u64,
@@ -225,6 +228,7 @@ pub struct InfillResponse {
 impl InfillResponse {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("request_id", Json::num(self.request_id as f64)),
             ("text", Json::str(self.text.clone())),
             ("model_nfe", Json::num(self.model_nfe as f64)),
             ("aux_nfe", Json::num(self.aux_nfe as f64)),
@@ -374,6 +378,7 @@ mod tests {
     #[test]
     fn response_roundtrips_json() {
         let r = InfillResponse {
+            request_id: 31,
             text: "done".into(),
             model_nfe: 10,
             aux_nfe: 2,
@@ -388,6 +393,7 @@ mod tests {
         };
         let j = r.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("request_id").unwrap().as_f64(), Some(31.0));
         assert_eq!(parsed.get("model_nfe").unwrap().as_f64(), Some(10.0));
         assert_eq!(parsed.get("text").unwrap().as_str(), Some("done"));
         assert_eq!(parsed.get("proposed").unwrap().as_f64(), Some(50.0));

@@ -55,7 +55,7 @@
 //! closes the queue and fails any still-queued jobs so clients get an
 //! error instead of a hang.
 
-use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -66,9 +66,10 @@ use crate::data::masking::lattice_sigma;
 use crate::decode::assd::AssdMachine;
 use crate::decode::diffusion::DiffusionMachine;
 use crate::decode::sequential::SequentialMachine;
-use crate::decode::{DecodeMachine, DecodeOutcome};
+use crate::decode::{DecodeMachine, DecodeOutcome, IterPhase, IterStats};
 use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
+use crate::obs::{chrome, tap, Rung, SpanKind, SpanRecorder, TraceBuilder, DEFAULT_SPAN_CAP};
 use crate::runtime::{Engine, EnginePool, ForwardSpec, IncSpec, KvStats, PoolConfig};
 use crate::tokenizer::{ByteTokenizer, MASK};
 use crate::util::json::Json;
@@ -103,6 +104,14 @@ pub struct SchedulerConfig {
     /// (`--event-buffer`; docs/ARCHITECTURE.md §Request lifecycle &
     /// streaming).
     pub event_capacity: usize,
+    /// Record a per-request trace (spans + NFE accounting) for every
+    /// served request (`--trace`; docs/ARCHITECTURE.md §Observability &
+    /// tracing). Off, requests carry no [`TraceBuilder`] and the only
+    /// residual cost is the engines' thread-local rung/probe notes.
+    pub trace: bool,
+    /// Completed traces retained PER REPLICA in its drop-oldest
+    /// [`SpanRecorder`] ring (`--trace-capacity`).
+    pub trace_capacity: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -113,13 +122,21 @@ impl Default for SchedulerConfig {
             default_draft: DraftOptions::default(),
             queue_depth: 1024,
             event_capacity: 256,
+            trace: true,
+            trace_capacity: 256,
         }
     }
 }
 
+/// Pool-unique request ids, assigned at submission. Process-global so ids
+/// stay unique across schedulers within one process (tests spawn many);
+/// starts at 1 — 0 is reserved for hand-built fixtures.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
 struct Job {
     request: InfillRequest,
     life: LifecycleEmitter,
+    request_id: u64,
 }
 
 /// Submission failure: distinguishes backpressure (the caller should
@@ -139,6 +156,7 @@ pub enum SubmitError {
 pub struct SchedulerHandle {
     tx: mpmc::Sender<Job>,
     replicas: Arc<Vec<ReplicaStats>>,
+    recorders: Arc<Vec<SpanRecorder>>,
     metrics: Metrics,
     queue_depth: usize,
     event_capacity: usize,
@@ -156,8 +174,13 @@ impl SchedulerHandle {
     /// admission queue is at capacity.
     pub fn submit(&self, request: InfillRequest) -> Result<RequestHandle, SubmitError> {
         let timeout = request.timeout_ms.map(Duration::from_millis);
-        let (life, handle) = lifecycle::channel(timeout, self.event_capacity);
-        match self.tx.try_send(Job { request, life }) {
+        let request_id = NEXT_REQUEST_ID.fetch_add(1, AtomicOrdering::Relaxed);
+        let (life, handle) = lifecycle::channel(timeout, self.event_capacity, request_id);
+        match self.tx.try_send(Job {
+            request,
+            life,
+            request_id,
+        }) {
             Ok(()) => Ok(handle),
             Err(mpmc::TrySendError::Full(_)) => {
                 self.metrics.record_shed();
@@ -176,6 +199,38 @@ impl SchedulerHandle {
     pub fn replicas_json(&self) -> Json {
         Json::Arr(self.replicas.iter().map(|r| r.snapshot_json()).collect())
     }
+
+    /// Look up a retired request's trace across every replica's ring.
+    pub fn trace(&self, request_id: u64) -> Option<Arc<crate::obs::RequestTrace>> {
+        self.recorders.iter().find_map(|r| r.get(request_id))
+    }
+
+    /// Chrome trace-event JSON for one request (the GET /trace/{id}
+    /// payload; load it in chrome://tracing or Perfetto).
+    pub fn trace_chrome_json(&self, request_id: u64) -> Option<Json> {
+        self.trace(request_id).map(|t| chrome::trace_json(&t))
+    }
+
+    /// Newest-first index of retained traces, merged across replicas (the
+    /// GET /trace/recent payload): one summary object per trace.
+    pub fn trace_recent_json(&self, limit: usize) -> Json {
+        let mut all: Vec<Arc<crate::obs::RequestTrace>> = self
+            .recorders
+            .iter()
+            .flat_map(|r| r.recent(limit))
+            .collect();
+        // request ids are assigned monotonically at submission, so they
+        // order the merged view by recency
+        all.sort_by(|a, b| b.request_id.cmp(&a.request_id));
+        all.truncate(limit);
+        Json::Arr(all.iter().map(|t| t.summary_json()).collect())
+    }
+
+    /// Prometheus text exposition of the pool aggregate plus per-replica
+    /// counters (the GET /metrics payload under `Accept: text/plain`).
+    pub fn prometheus_text(&self) -> String {
+        self.metrics.prometheus(&self.replicas)
+    }
 }
 
 struct Slot {
@@ -188,6 +243,8 @@ struct Slot {
     committed: usize,
     text_len: usize,
     n_targets: usize,
+    /// Per-request span/counter accumulator; `None` with tracing off.
+    trace: Option<TraceBuilder>,
 }
 
 /// Spawn a single-replica scheduler. `factory` constructs the engine ON
@@ -220,12 +277,18 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
     let (tx, rx) = mpmc::bounded::<Job>(cfg.queue_depth);
     let replicas: Arc<Vec<ReplicaStats>> =
         Arc::new((0..n_workers).map(ReplicaStats::new).collect());
+    let recorders: Arc<Vec<SpanRecorder>> = Arc::new(
+        (0..n_workers)
+            .map(|_| SpanRecorder::new(cfg.trace_capacity))
+            .collect(),
+    );
     let live = Arc::new(AtomicUsize::new(n_workers));
     let pool = Arc::new(pool);
     for id in 0..n_workers {
         let rx = rx.clone();
         let metrics = metrics.clone();
         let replicas = Arc::clone(&replicas);
+        let recorders = Arc::clone(&recorders);
         let live = Arc::clone(&live);
         let pool = Arc::clone(&pool);
         thread::Builder::new()
@@ -240,10 +303,11 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
                     rx: rx.clone(),
                 };
                 let stats = &replicas[id];
+                let recorder = &recorders[id];
                 match pool.provision(id) {
                     Ok(engine) => {
                         stats.set_state(ReplicaState::Running);
-                        run_worker(engine.as_ref(), &rx, cfg, &metrics, stats);
+                        run_worker(engine.as_ref(), &rx, cfg, &metrics, stats, recorder);
                         stats.set_state(ReplicaState::Stopped);
                     }
                     Err(e) => {
@@ -257,6 +321,7 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
     SchedulerHandle {
         tx,
         replicas,
+        recorders,
         metrics,
         queue_depth: cfg.queue_depth,
         event_capacity: cfg.event_capacity,
@@ -299,10 +364,55 @@ fn record_abort(reason: Abort, metrics: &Metrics, stats: &ReplicaStats) -> &'sta
     }
 }
 
+/// Close and publish a slot's trace (if tracing is on). `completed` is
+/// false on every abort path: an aborted request may legitimately sit one
+/// draft NFE ahead of its commits mid-iteration, so the Theorem-2 flag is
+/// only asserted on completed requests.
+fn finish_trace(
+    trace: Option<TraceBuilder>,
+    completed: bool,
+    s: IterStats,
+    draft_kind: String,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+    recorder: &SpanRecorder,
+) {
+    if let Some(b) = trace {
+        let t = b.finish(
+            completed,
+            s.model_nfe,
+            s.aux_nfe,
+            s.iterations,
+            s.proposed,
+            s.accepted,
+            draft_kind,
+        );
+        metrics.record_trace(&t);
+        stats.record_trace(&t);
+        recorder.record(t);
+    }
+}
+
 /// Retire a slot whose lifecycle ended before the decode finished: book
 /// the right counter and send the terminal error (with partial progress).
-fn abort_slot(slot: Slot, reason: Abort, metrics: &Metrics, stats: &ReplicaStats) {
+fn abort_slot(
+    mut slot: Slot,
+    reason: Abort,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+    recorder: &SpanRecorder,
+) {
     let what = record_abort(reason, metrics, stats);
+    let s = slot.machine.iter_stats();
+    finish_trace(
+        slot.trace.take(),
+        false,
+        s,
+        String::new(),
+        metrics,
+        stats,
+        recorder,
+    );
     slot.life.finish(Err(anyhow!(
         "{what} after {}/{} tokens",
         slot.committed,
@@ -321,12 +431,70 @@ fn push_kv_stats(
 ) {
     if let Some(s) = engine.kv_stats() {
         stats.record_kv(&s);
-        metrics.record_prefix_cache(
-            s.prefix_hits.saturating_sub(last.prefix_hits),
-            s.prefix_misses.saturating_sub(last.prefix_misses),
-            s.evictions.saturating_sub(last.evictions),
-        );
+        let d = s.delta(last);
+        metrics.record_prefix_cache(d.prefix_hits, d.prefix_misses, d.evictions, d.cow_copies);
         *last = s;
+    }
+}
+
+/// Absorb one slot's forward rows, recording the iteration's spans: the
+/// shared batched-forward span (the measured engine-call duration, tagged
+/// with the rung the engine actually executed), then the machine-local
+/// phase span — Draft/Verify for ASSD, Decode for the baselines — labeled
+/// from the counter DELTAS around the absorb. The machine's own state is
+/// read through the read-only [`DecodeMachine::phase`]/
+/// [`DecodeMachine::iter_stats`] hooks, so tracing cannot perturb decode
+/// outputs (enforced by the bit-identity tests below).
+fn absorb_traced(
+    slot: &mut Slot,
+    rows: &[Vec<f32>],
+    fwd_dur_us: u64,
+    rung: Option<Rung>,
+    batch: usize,
+) {
+    let pre = slot.machine.iter_stats();
+    let phase = slot.machine.phase();
+    if let Some(tb) = slot.trace.as_mut() {
+        let now = tb.now_us();
+        tb.push_at(
+            SpanKind::Forward,
+            pre.iterations as u32,
+            now.saturating_sub(fwd_dur_us),
+            fwd_dur_us,
+            rung.map(|r| r as u64).unwrap_or(Rung::Dense as u64),
+            batch as u64,
+        );
+        if let Some(r) = rung {
+            tb.note_rung(r);
+        }
+    }
+    let t = Instant::now();
+    slot.machine.absorb(rows);
+    let dur = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+    let post = slot.machine.iter_stats();
+    if let Some(tb) = slot.trace.as_mut() {
+        let (kind, a, b) = match phase {
+            IterPhase::Draft => (
+                SpanKind::Draft,
+                post.draft_len as u64,
+                post.aux_nfe.saturating_sub(pre.aux_nfe),
+            ),
+            IterPhase::Verify => (
+                SpanKind::Verify,
+                post.accepted.saturating_sub(pre.accepted),
+                post.proposed.saturating_sub(pre.proposed),
+            ),
+            IterPhase::Decode => (
+                SpanKind::Decode,
+                post.model_nfe.saturating_sub(pre.model_nfe),
+                0,
+            ),
+        };
+        let now = tb.now_us();
+        tb.push_at(kind, pre.iterations as u32, now.saturating_sub(dur), dur, a, b);
+        if post.draft_len > 0 {
+            tb.note_window(post.draft_len);
+        }
     }
 }
 
@@ -337,8 +505,14 @@ fn run_worker(
     cfg: SchedulerConfig,
     metrics: &Metrics,
     stats: &ReplicaStats,
+    recorder: &SpanRecorder,
 ) {
     let tok = ByteTokenizer::new();
+    // Engines record rung/prefix-probe notes into thread-locals (each
+    // engine is owned by exactly this thread); start from a clean slate
+    // so a prior occupant of the thread cannot leak notes into our first
+    // iteration.
+    tap::reset();
     // BLOCK-BUDGET ADMISSION: on a paged-KV engine, concurrency is capped
     // by memory, not just `max_batch` — admit only as many lanes as the
     // block pool can back at their worst case (every lane growing to the
@@ -394,6 +568,24 @@ fn run_worker(
                 job.life.finish(Err(anyhow!("{what} while queued")));
                 continue;
             }
+            // Trace epoch = submission (matches the TTFT/deadline clock),
+            // so queue wait is span [0, now) and every later span's ts is
+            // monotone µs-since-submit.
+            let sampler = job.request.sampler.name();
+            let submitted = job.life.submitted_at();
+            let t_admit = Instant::now();
+            let queue_us = (t_admit - submitted).as_micros().min(u128::from(u64::MAX)) as u64;
+            let mut trace = cfg.trace.then(|| {
+                let mut b = TraceBuilder::new(
+                    job.request_id,
+                    stats.id,
+                    sampler,
+                    submitted,
+                    DEFAULT_SPAN_CAP,
+                );
+                b.push_at(SpanKind::QueueWait, 0, 0, queue_us, 0, 0);
+                b
+            });
             match admit(engine, &tok, job.request, cfg.default_draft) {
                 Ok(AdmitResult::Slot(machine, text_len, n_targets)) => {
                     let lane = lanes
@@ -404,6 +596,9 @@ fn run_worker(
                     // the engine-side cache is dropped BEFORE the new
                     // request can issue a forward from this lane.
                     engine.reset_lane(lane);
+                    if let Some(b) = trace.as_mut() {
+                        b.push(SpanKind::Admit, 0, queue_us, n_targets as u64, lane as u64);
+                    }
                     // TTFT and latency_s run from SUBMISSION, the same
                     // clock the deadline uses — queue wait counts.
                     let t0 = job.life.submitted_at();
@@ -415,14 +610,37 @@ fn run_worker(
                         committed: 0,
                         text_len,
                         n_targets,
+                        trace,
                     });
                 }
-                Ok(AdmitResult::Immediate(resp)) => {
+                Ok(AdmitResult::Immediate(mut resp)) => {
+                    resp.request_id = job.request_id;
+                    if let Some(b) = trace.as_mut() {
+                        b.push(SpanKind::Admit, 0, queue_us, 0, 0);
+                    }
+                    finish_trace(
+                        trace,
+                        true,
+                        IterStats::default(),
+                        String::new(),
+                        metrics,
+                        stats,
+                        recorder,
+                    );
                     job.life.finish(Ok(resp));
                 }
                 Err(e) => {
                     metrics.record_failure();
                     stats.record_failure();
+                    finish_trace(
+                        trace,
+                        false,
+                        IterStats::default(),
+                        String::new(),
+                        metrics,
+                        stats,
+                        recorder,
+                    );
                     job.life.finish(Err(e));
                 }
             }
@@ -438,7 +656,7 @@ fn run_worker(
             if let Some(reason) = aborted {
                 let slot = lanes[lane].take().expect("checked above");
                 engine.reset_lane(lane);
-                abort_slot(slot, reason, metrics, stats);
+                abort_slot(slot, reason, metrics, stats, recorder);
             }
         }
         let b = active(&lanes);
@@ -458,6 +676,14 @@ fn run_worker(
         metrics.record_batch_iteration(b);
         stats.record_batch_iteration(b);
         let native_inc = engine.inc_lanes() > 0;
+        // Forward durations and actual execution rungs, per batched call
+        // (the engines note the weakest rung they actually took into a
+        // thread-local tap; exact because each engine is thread-pinned).
+        let mut inc_dur_us = 0u64;
+        let mut ord_dur_us = 0u64;
+        let mut inc_rung = None;
+        let mut ord_rung = None;
+        let mut probes: Vec<(usize, bool)> = Vec::new();
         let (inc_idx, ord_idx, result) = {
             let mut inc_specs: Vec<IncSpec<'_>> = Vec::new();
             let mut inc_idx: Vec<usize> = Vec::new();
@@ -491,12 +717,21 @@ fn run_worker(
                 let inc_rows = if inc_specs.is_empty() {
                     vec![]
                 } else {
-                    engine.forward_inc(&inc_specs)?
+                    let t = Instant::now();
+                    let rows = engine.forward_inc(&inc_specs)?;
+                    inc_dur_us = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+                    inc_rung = tap::take_rung();
+                    tap::take_prefix_probes(&mut probes);
+                    rows
                 };
                 let ord_rows = if ord_specs.is_empty() {
                     vec![]
                 } else {
-                    engine.forward_ord(&ord_specs)?
+                    let t = Instant::now();
+                    let rows = engine.forward_ord(&ord_specs)?;
+                    ord_dur_us = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+                    ord_rung = tap::take_rung();
+                    rows
                 };
                 Ok((inc_rows, ord_rows))
             })();
@@ -506,12 +741,24 @@ fn run_worker(
             Ok(r) => r,
             Err(e) => {
                 // Engine failure: fail this worker's active requests; the
-                // queue (and other replicas) keep serving.
+                // queue (and other replicas) keep serving. Clear the taps
+                // so a half-executed batch cannot leak notes forward.
+                tap::reset();
                 for (lane, cell) in lanes.iter_mut().enumerate() {
-                    if let Some(slot) = cell.take() {
+                    if let Some(mut slot) = cell.take() {
                         engine.reset_lane(lane);
                         metrics.record_failure();
                         stats.record_failure();
+                        let s = slot.machine.iter_stats();
+                        finish_trace(
+                            slot.trace.take(),
+                            false,
+                            s,
+                            String::new(),
+                            metrics,
+                            stats,
+                            recorder,
+                        );
                         slot.life.finish(Err(anyhow!("engine error: {e:#}")));
                     }
                 }
@@ -519,18 +766,39 @@ fn run_worker(
             }
         };
         debug_assert_eq!(inc_rows.len() + ord_rows.len(), b);
+        // Prefix-probe attribution: the engine noted (lane, hit) at every
+        // prefix-cache lookup this batch; fold each into its slot's trace.
+        for (lane, hit) in probes.drain(..) {
+            if let Some(tb) = lanes
+                .get_mut(lane)
+                .and_then(|s| s.as_mut())
+                .and_then(|s| s.trace.as_mut())
+            {
+                tb.note_prefix_probe(hit);
+            }
+        }
         for (seq_rows, &lane) in inc_rows.iter().zip(&inc_idx) {
-            lanes[lane].as_mut().expect("routed lane").machine.absorb(seq_rows);
+            let slot = lanes[lane].as_mut().expect("routed lane");
+            absorb_traced(slot, seq_rows, inc_dur_us, inc_rung, inc_idx.len());
         }
         for (seq_rows, &lane) in ord_rows.iter().zip(&ord_idx) {
-            lanes[lane].as_mut().expect("routed lane").machine.absorb(seq_rows);
+            let slot = lanes[lane].as_mut().expect("routed lane");
+            absorb_traced(slot, seq_rows, ord_dur_us, ord_rung, ord_idx.len());
         }
 
         // --- stream freshly accepted tokens (TTFT/ITL bookkeeping) ---
         for slot in lanes.iter_mut().flatten() {
+            let t_commit = Instant::now();
             let commits = slot.machine.drain_commits();
             if commits.is_empty() {
                 continue;
+            }
+            if let Some(tb) = slot.trace.as_mut() {
+                let dur = t_commit.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+                let iter = slot.machine.iter_stats().iterations as u32;
+                let start = tb.now_us().saturating_sub(dur);
+                tb.push_at(SpanKind::Commit, iter, start, dur, commits.len() as u64, 0);
+                tb.add_commits(commits.len());
             }
             let now = Instant::now();
             if slot.committed == 0 {
@@ -553,7 +821,7 @@ fn run_worker(
             if !done {
                 continue;
             }
-            let slot = lanes[lane].take().expect("checked above");
+            let mut slot = lanes[lane].take().expect("checked above");
             engine.reset_lane(lane);
             // A machine can finish on the very iteration its client
             // lagged (final commit dropped, cancel flipped) or
@@ -565,12 +833,31 @@ fn run_worker(
             // abort_reason, so an expired deadline cannot mask a
             // broken stream here).
             if let Some(reason) = slot.life.stream_broken() {
-                abort_slot(slot, reason, metrics, stats);
+                abort_slot(slot, reason, metrics, stats, recorder);
                 continue;
             }
             let latency = slot.t0.elapsed().as_secs_f64();
+            let trace = slot.trace.take();
             let outcome = slot.machine.outcome();
-            let resp = outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
+            let mut resp =
+                outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
+            resp.request_id = slot.life.request_id();
+            finish_trace(
+                trace,
+                true,
+                IterStats {
+                    model_nfe: resp.model_nfe,
+                    aux_nfe: resp.aux_nfe,
+                    iterations: resp.iterations,
+                    proposed: resp.proposed,
+                    accepted: resp.accepted,
+                    draft_len: resp.draft_len,
+                },
+                resp.draft_kind.clone(),
+                metrics,
+                stats,
+                recorder,
+            );
             metrics.record_request(
                 latency,
                 resp.n_generated as u64,
@@ -582,6 +869,7 @@ fn run_worker(
             stats.record_request(
                 resp.n_generated as u64,
                 resp.model_nfe,
+                resp.aux_nfe,
                 resp.proposed,
                 resp.accepted,
             );
@@ -640,6 +928,7 @@ fn admit(
     }
     if n_targets == 0 {
         return Ok(AdmitResult::Immediate(InfillResponse {
+            request_id: 0, // stamped by the worker from the job
             text: req.text,
             model_nfe: 0,
             aux_nfe: 0,
@@ -703,6 +992,7 @@ fn outcome_to_response(
     // the decoded string could split a multi-byte char).
     let text = tok.decode(&outcome.tokens[..text_len.min(outcome.tokens.len())]);
     InfillResponse {
+        request_id: 0, // stamped by the worker from the slot's lifecycle
         text,
         model_nfe: outcome.model_nfe,
         aux_nfe: outcome.aux_nfe,
@@ -1454,5 +1744,175 @@ mod tests {
             other => panic!("expected QueueFull, got {:?}", other.err()),
         }
         assert_eq!(metrics.shed(), 1);
+    }
+
+    // --- request-level tracing -------------------------------------------
+
+    fn traced_handle(trace: bool, trace_capacity: usize) -> (SchedulerHandle, Metrics) {
+        let metrics = Metrics::new();
+        let h = spawn(
+            move || Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>),
+            SchedulerConfig {
+                max_batch: 2,
+                idle_poll: Duration::from_millis(5),
+                trace,
+                trace_capacity,
+                ..Default::default()
+            },
+            metrics.clone(),
+        );
+        (h, metrics)
+    }
+
+    /// Tracing must be a pure observer: for every machine x drafter
+    /// combination, a tracing-on scheduler and a tracing-off scheduler
+    /// produce bit-identical text for the same seed — and the off pool
+    /// records no traces at all.
+    #[test]
+    fn tracing_on_vs_off_outputs_bit_identical() {
+        let (on, on_metrics) = traced_handle(true, 256);
+        let (off, off_metrics) = traced_handle(false, 256);
+        for sampler in SamplerKind::ALL {
+            for kind in DraftKind::ALL {
+                let req = |seed| InfillRequest {
+                    text: "ab______cd".into(),
+                    sampler,
+                    draft: DraftSpec::from_options(DraftOptions {
+                        kind,
+                        max_len: 4,
+                        adaptive: true,
+                    }),
+                    seed,
+                    ..Default::default()
+                };
+                assert_eq!(
+                    on.infill(req(33)).unwrap().text,
+                    off.infill(req(33)).unwrap().text,
+                    "{} x {}",
+                    sampler.name(),
+                    kind.name()
+                );
+            }
+        }
+        assert!(on_metrics.traces_recorded() > 0);
+        assert_eq!(
+            off_metrics.traces_recorded(),
+            0,
+            "tracing off must record nothing"
+        );
+        assert!(off.trace_recent_json(10).to_string().contains("[]"));
+    }
+
+    /// Every completed request's trace covers the full lifecycle (queue
+    /// wait, admission, forwards, commits), satisfies Theorem 2
+    /// (`model_nfe <= tokens_committed`), matches the response's counters,
+    /// and renders as Chrome trace-event JSON.
+    #[test]
+    fn completed_traces_cover_lifecycle_and_respect_theorem2() {
+        let (h, metrics) = traced_handle(true, 256);
+        for (i, sampler) in SamplerKind::ALL.into_iter().enumerate() {
+            let resp = h
+                .infill(InfillRequest {
+                    text: "ab______cd".into(),
+                    sampler,
+                    seed: 40 + i as u64,
+                    ..Default::default()
+                })
+                .unwrap();
+            assert!(resp.request_id > 0, "response must carry its trace key");
+            let t = h.trace(resp.request_id).expect("trace retained");
+            assert!(t.completed);
+            assert!(t.theorem2_ok, "{}: Theorem 2 violated", sampler.name());
+            assert!(t.model_nfe <= t.tokens_committed);
+            assert_eq!(t.model_nfe, resp.model_nfe);
+            assert_eq!(t.tokens_committed, resp.n_generated as u64);
+            for kind in [
+                SpanKind::QueueWait,
+                SpanKind::Admit,
+                SpanKind::Forward,
+                SpanKind::Commit,
+            ] {
+                assert!(
+                    t.spans.iter().any(|s| s.kind == kind),
+                    "{}: missing {} span",
+                    sampler.name(),
+                    kind.name()
+                );
+            }
+            let chrome = h.trace_chrome_json(resp.request_id).unwrap();
+            let parsed = Json::parse(&chrome.to_string()).unwrap();
+            assert!(
+                matches!(parsed.get("traceEvents"), Some(Json::Arr(_))),
+                "chrome export must parse back with a traceEvents array"
+            );
+        }
+        assert_eq!(metrics.theorem2_violations(), 0);
+        let recent = h.trace_recent_json(10).to_string();
+        assert!(recent.contains("\"request_id\""), "{recent}");
+    }
+
+    /// The per-replica trace ring drops oldest under churn: run more
+    /// requests than the ring holds, and only the newest survive.
+    #[test]
+    fn trace_ring_drops_oldest_under_churn() {
+        let (h, _) = traced_handle(true, 3);
+        let ids: Vec<u64> = (0..8)
+            .map(|i| {
+                h.infill(InfillRequest {
+                    text: "ab____cd".into(),
+                    seed: 60 + i,
+                    ..Default::default()
+                })
+                .unwrap()
+                .request_id
+            })
+            .collect();
+        for id in &ids[..5] {
+            assert!(h.trace(*id).is_none(), "evicted trace {id} still readable");
+        }
+        for id in &ids[5..] {
+            assert!(h.trace(*id).is_some(), "recent trace {id} evicted");
+        }
+        if let Json::Arr(recent) = h.trace_recent_json(10) {
+            assert_eq!(recent.len(), 3);
+        } else {
+            panic!("trace_recent_json must be an array");
+        }
+    }
+
+    /// An aborted request still publishes a trace, marked incomplete (the
+    /// Theorem-2 flag is only asserted on completed requests, so a decode
+    /// cancelled mid-iteration can never trip the violation counter).
+    #[test]
+    fn aborted_request_trace_is_not_marked_completed() {
+        let (h, _) = slow_handle(1, 16, 3);
+        let rh = h
+            .submit(InfillRequest {
+                text: format!("ab{}cd", "_".repeat(12)),
+                seed: 7,
+                sampler: SamplerKind::Sequential,
+                ..Default::default()
+            })
+            .unwrap();
+        let id = rh.request_id();
+        match rh.next_event() {
+            Some(Event::Committed { .. }) => {}
+            other => panic!("expected a commit first, got {other:?}"),
+        }
+        rh.cancel();
+        let _ = rh.wait();
+        // the worker publishes the trace when it observes the cancel at
+        // its next iteration boundary
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let t = loop {
+            if let Some(t) = h.trace(id) {
+                break t;
+            }
+            assert!(Instant::now() < deadline, "aborted trace never published");
+            thread::sleep(Duration::from_millis(5));
+        };
+        assert!(!t.completed);
+        assert!(t.theorem2_ok, "incomplete traces never flag Theorem 2");
+        assert!(t.tokens_committed >= 1, "partial progress folded in");
     }
 }

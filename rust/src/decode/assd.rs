@@ -366,6 +366,25 @@ impl DecodeMachine for AssdMachine {
         Some(self.n)
     }
 
+    fn phase(&self) -> super::IterPhase {
+        match self.phase {
+            Phase::Draft => super::IterPhase::Draft,
+            Phase::Verify => super::IterPhase::Verify,
+            Phase::Done => super::IterPhase::Decode,
+        }
+    }
+
+    fn iter_stats(&self) -> super::IterStats {
+        super::IterStats {
+            model_nfe: self.model_nfe,
+            aux_nfe: self.aux_nfe,
+            iterations: self.iterations,
+            proposed: self.proposed,
+            accepted: self.accepted,
+            draft_len: self.spec.current(),
+        }
+    }
+
     fn outcome(self: Box<Self>) -> DecodeOutcome {
         assert!(self.done());
         DecodeOutcome {

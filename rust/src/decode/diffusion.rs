@@ -138,6 +138,14 @@ impl DecodeMachine for DiffusionMachine {
         None
     }
 
+    fn iter_stats(&self) -> super::IterStats {
+        super::IterStats {
+            model_nfe: self.model_nfe,
+            iterations: self.iterations,
+            ..Default::default()
+        }
+    }
+
     fn outcome(self: Box<Self>) -> DecodeOutcome {
         assert!(self.done());
         DecodeOutcome {

@@ -66,6 +66,34 @@ impl DecodeOutcome {
     }
 }
 
+/// Which stage a machine is about to run — the observability label for
+/// the NEXT `forward_request`/`absorb` pair. `Draft`/`Verify` are ASSD's
+/// two passes (Algorithm 1); non-speculative machines report `Decode`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IterPhase {
+    Draft,
+    Verify,
+    Decode,
+}
+
+/// Live counter snapshot of a machine, readable mid-decode — the tracing
+/// hook at the `absorb`/`finish_iteration` choke points. The scheduler
+/// samples this before and after each absorb and records the DELTAS as
+/// span args, so the machines stay pure (tracing never branches inside
+/// the sampling path — bit-identity by construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IterStats {
+    pub model_nfe: u64,
+    pub aux_nfe: u64,
+    pub iterations: u64,
+    pub proposed: u64,
+    pub accepted: u64,
+    /// Current speculation window (0 for non-speculative machines) —
+    /// sampled per iteration, this is the adaptive controller's
+    /// trajectory.
+    pub draft_len: usize,
+}
+
 /// A decoder state machine. Drive with:
 /// `while !done() { if let Some(req)=forward_request() { absorb(rows) } }`
 pub trait DecodeMachine {
@@ -109,6 +137,20 @@ pub trait DecodeMachine {
     /// ordering every step).
     fn incremental(&self) -> Option<usize> {
         None
+    }
+
+    /// The stage the next `forward_request`/`absorb` pair serves — the
+    /// span label the scheduler's tracer uses. Defaults to the generic
+    /// `Decode` (correct for non-speculative machines).
+    fn phase(&self) -> IterPhase {
+        IterPhase::Decode
+    }
+
+    /// Live counter snapshot (see [`IterStats`]). Defaults to zeros so
+    /// ad-hoc machines stay trivially implementable; the three shipped
+    /// machines report their real counters.
+    fn iter_stats(&self) -> IterStats {
+        IterStats::default()
     }
 
     /// Consume the machine and return the outcome (panics if !done()).

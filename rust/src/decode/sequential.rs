@@ -100,6 +100,14 @@ impl DecodeMachine for SequentialMachine {
         Some(self.n)
     }
 
+    fn iter_stats(&self) -> super::IterStats {
+        super::IterStats {
+            model_nfe: self.model_nfe,
+            iterations: self.model_nfe,
+            ..Default::default()
+        }
+    }
+
     fn outcome(self: Box<Self>) -> DecodeOutcome {
         assert!(self.done());
         DecodeOutcome {

@@ -14,8 +14,10 @@
 //!   continuous-batching coordinator (bounded admission queue with load
 //!   shedding, one worker per replica, per-request lifecycle: streamed
 //!   token commits, cancellation, deadlines) with an HTTP + SSE front
-//!   end, the rust training loop, and the evaluation/benchmark harness
-//!   reproducing every table and figure of the paper.
+//!   end, per-request tracing with Chrome-trace export and Prometheus
+//!   exposition (`obs`), the rust training loop, and the
+//!   evaluation/benchmark harness reproducing every table and figure of
+//!   the paper.
 //!
 //! See README.md for how to run everything and docs/ARCHITECTURE.md for
 //! the serving architecture (request lifecycle, engine pool, batching
@@ -27,6 +29,7 @@ pub mod decode;
 pub mod draft;
 pub mod eval;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod tokenizer;
 pub mod train;

@@ -33,6 +33,11 @@ const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
          --cache-blocks N     (per-replica K/V block-pool size; bounds
          engine cache memory and caps concurrent lanes — default
          8 x blocks-per-sequence. Both unset => engine defaults)
+         --trace on|off       (request tracing: per-request span
+         timelines at GET /trace/{id}, index at /trace/recent.
+         Default on; 'off' drops the builders for zero overhead)
+         --trace-capacity 256 (retired traces retained per replica;
+         the ring drops oldest first)
   train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
          --protocol lattice|permutation --prompt-lo F --prompt-hi F
          --out CKPT.bin --seed S
@@ -102,6 +107,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             default_draft: draft_options(args, "draft-max-len")?,
             queue_depth: args.usize("queue-depth", 1024).max(1),
             event_capacity: args.usize("event-buffer", 256).max(8),
+            trace: args.str("trace", "on") != "off",
+            trace_capacity: args.usize("trace-capacity", 256).max(1),
             ..Default::default()
         },
         metrics.clone(),
@@ -117,6 +124,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "  POST /v1/infill   POST /infill/stream (SSE)   GET /metrics   GET /replicas   GET /healthz"
+    );
+    println!(
+        "  GET /trace/{{id}}   GET /trace/recent   GET /metrics (Accept: text/plain => Prometheus)"
     );
     server.serve()
 }

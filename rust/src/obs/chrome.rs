@@ -1,0 +1,158 @@
+//! Chrome trace-event-format export.
+//!
+//! `GET /trace/{request_id}` returns the JSON object form of the format
+//! (`{"traceEvents": [...]}`) so it loads directly in `chrome://tracing`
+//! and Perfetto's legacy importer. Every span becomes a complete event
+//! (`"ph": "X"`) with microsecond `ts`/`dur` relative to the request's
+//! submit instant; the request is one process (`pid` = request id) with
+//! a single track (`tid` 0), so `ts` is monotone per track by
+//! construction — the worker records stages in execution order.
+
+use crate::util::json::Json;
+
+use super::{rungs_str, RequestTrace, Rung, Span, SpanKind};
+
+fn span_args(s: &Span) -> Json {
+    let mut pairs = vec![("iter", Json::num(s.iter as f64))];
+    match s.kind {
+        SpanKind::Forward => {
+            let rung = match s.a {
+                x if x == Rung::Inc as u64 => Rung::Inc,
+                x if x == Rung::Ord as u64 => Rung::Ord,
+                _ => Rung::Dense,
+            };
+            pairs.push(("rung", Json::str(rung.name())));
+            pairs.push(("batch", Json::num(s.b as f64)));
+        }
+        SpanKind::Draft => {
+            pairs.push(("window", Json::num(s.a as f64)));
+            pairs.push(("aux_nfe", Json::num(s.b as f64)));
+        }
+        SpanKind::Verify => {
+            pairs.push(("accepted", Json::num(s.a as f64)));
+            pairs.push(("proposed", Json::num(s.b as f64)));
+        }
+        SpanKind::Decode | SpanKind::Commit => {
+            pairs.push(("tokens", Json::num(s.a as f64)));
+        }
+        SpanKind::Admit => {
+            pairs.push(("n_targets", Json::num(s.a as f64)));
+        }
+        SpanKind::QueueWait => {}
+    }
+    Json::obj(pairs)
+}
+
+/// Render one request's trace as a Chrome trace-event JSON object.
+pub fn trace_json(t: &RequestTrace) -> Json {
+    let pid = t.request_id as f64;
+    let mut events: Vec<Json> = Vec::with_capacity(t.spans.len() + 2);
+    // Metadata events name the process/track in the viewer UI.
+    events.push(Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(0.0)),
+        (
+            "args",
+            Json::obj(vec![(
+                "name",
+                Json::str(format!("request {} ({})", t.request_id, t.sampler)),
+            )]),
+        ),
+    ]));
+    events.push(Json::obj(vec![
+        ("name", Json::str("thread_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(0.0)),
+        (
+            "args",
+            Json::obj(vec![("name", Json::str(format!("replica {}", t.replica)))]),
+        ),
+    ]));
+    for s in &t.spans {
+        events.push(Json::obj(vec![
+            ("name", Json::str(s.kind.name())),
+            ("cat", Json::str("request")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(s.start_us as f64)),
+            ("dur", Json::num(s.dur_us as f64)),
+            ("pid", Json::num(pid)),
+            ("tid", Json::num(0.0)),
+            ("args", span_args(s)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("otherData", t.summary_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceBuilder;
+    use std::time::Instant;
+
+    fn sample_trace() -> RequestTrace {
+        let mut b = TraceBuilder::new(42, 1, "assd", Instant::now(), 32);
+        b.push_at(SpanKind::QueueWait, 0, 0, 120, 0, 0);
+        b.push_at(SpanKind::Admit, 0, 120, 30, 8, 0);
+        b.push_at(SpanKind::Forward, 1, 150, 400, Rung::Inc as u64, 2);
+        b.push_at(SpanKind::Draft, 1, 550, 25, 5, 0);
+        b.push_at(SpanKind::Forward, 1, 575, 380, Rung::Inc as u64, 2);
+        b.push_at(SpanKind::Verify, 1, 955, 40, 4, 5);
+        b.push_at(SpanKind::Commit, 1, 995, 5, 5, 0);
+        b.note_rung(Rung::Inc);
+        b.add_commits(5);
+        b.finish(true, 2, 0, 1, 5, 4, "self".to_string())
+    }
+
+    #[test]
+    fn output_is_valid_json_with_trace_events() {
+        let t = sample_trace();
+        let s = trace_json(&t).to_string();
+        let parsed = Json::parse(&s).expect("chrome trace must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata events + 7 spans.
+        assert_eq!(events.len(), 9);
+        assert_eq!(
+            parsed.get("otherData").unwrap().get("model_nfe").unwrap().as_f64(),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn ts_is_monotone_per_track() {
+        let t = sample_trace();
+        let rendered = trace_json(&t);
+        let events = rendered.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last_ts = f64::NEG_INFINITY;
+        for e in events {
+            if e.get("ph").unwrap().as_str() == Some("M") {
+                continue;
+            }
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts, "ts regressed: {ts} < {last_ts}");
+            last_ts = ts;
+        }
+    }
+
+    #[test]
+    fn forward_spans_carry_rung_names() {
+        let t = sample_trace();
+        let rendered = trace_json(&t);
+        let events = rendered.get("traceEvents").unwrap().as_arr().unwrap();
+        let fwd: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str() == Some("forward"))
+            .collect();
+        assert_eq!(fwd.len(), 2);
+        for f in fwd {
+            assert_eq!(f.get("args").unwrap().get("rung").unwrap().as_str(), Some("inc"));
+        }
+        assert_eq!(rungs_str(t.rungs), "inc");
+    }
+}

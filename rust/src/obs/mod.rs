@@ -1,0 +1,493 @@
+//! Observability substrate: per-request tracing and NFE accounting.
+//!
+//! The serving claims of the paper are *per-request* quantities — Theorem
+//! 2's NFE bound, the adaptive window's trajectory, the prefix cache's
+//! hit economics — but pool-wide averages (the `/metrics` endpoint) erase
+//! exactly the granularity where they are decided. This module records a
+//! typed span timeline per request and keeps the last N completed traces
+//! per replica in a fixed-capacity ring, exported as Chrome
+//! trace-event-format JSON (`GET /trace/{request_id}`, loadable in
+//! `chrome://tracing` / Perfetto) and folded into Prometheus text
+//! exposition on `/metrics`.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero hot-path allocation.** A [`TraceBuilder`] pre-allocates its
+//!    span buffer at admission; once the cap is reached further spans are
+//!    counted as dropped, never reallocated. The scheduler worker is the
+//!    only writer, so the builder needs no locks at all.
+//! 2. **Lock-light publication.** The per-replica [`SpanRecorder`] ring
+//!    takes its mutex exactly twice per request lifetime: once when the
+//!    finished trace is pushed, and once per HTTP read. Nothing on the
+//!    per-iteration path touches it.
+//! 3. **Bit-identity.** Tracing only *observes* — timers and counters
+//!    around the decode loop, never inside the sampling path — so traced
+//!    and untraced runs produce identical tokens, NFE, and speculation
+//!    counters (proven by `tracing_on_vs_off_bit_identity` in the
+//!    scheduler tests).
+//!
+//! Engine-side attribution (which fallback rung actually ran, whether a
+//! lane's first forward hit the prefix cache) flows through the
+//! thread-local taps in [`tap`] — engines are thread-pinned (the PJRT
+//! client is single-threaded), so a thread-local written by the engine
+//! and drained by the scheduler worker on the same thread is exact.
+
+pub mod chrome;
+pub mod prometheus;
+pub mod tap;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Which rung of the inc→ord→dense forward fallback ladder actually
+/// served a batched call. Ordered weakest-first so a mixed call (part of
+/// the batch routed to the dense fallback) reports the weakest rung that
+/// ran — the pessimistic answer is the one worth alerting on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rung {
+    /// Full-grid dense fallback (`forward_ord_dense`): O(N²) mask traffic.
+    Dense = 0,
+    /// Compact path (`forward_ord`): indices over, gathered rows back.
+    Ord = 1,
+    /// Incremental path (`forward_inc`): persistent per-lane K/V cache.
+    Inc = 2,
+}
+
+impl Rung {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rung::Dense => "dense",
+            Rung::Ord => "ord",
+            Rung::Inc => "inc",
+        }
+    }
+
+    /// Bitmask bit for [`RequestTrace::rungs`].
+    pub fn bit(&self) -> u8 {
+        1 << (*self as u8)
+    }
+}
+
+/// Span taxonomy — one variant per request lifecycle stage. The `a`/`b`
+/// argument slots of [`Span`] are kind-specific (documented per variant)
+/// so a span stays a fixed-size `Copy` record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Submit → admission. No args.
+    QueueWait,
+    /// Tokenize + ordering + machine construction. `a` = target count.
+    Admit,
+    /// One batched engine call this request rode in. `a` = [`Rung`] as
+    /// u64, `b` = batch size (the duration is the whole batched call —
+    /// batch-mates share it).
+    Forward,
+    /// Draft-phase absorb: window sampling + proposal. `a` = speculation
+    /// window length, `b` = aux-NFE delta (external drafters).
+    Draft,
+    /// Verify-phase absorb: accept/reject + residual resample. `a` =
+    /// accepted this iteration, `b` = proposed this iteration.
+    Verify,
+    /// Generic absorb for non-speculative machines (sequential,
+    /// diffusion). `a` = tokens sampled this step.
+    Decode,
+    /// Commit drain + lifecycle event emission. `a` = tokens committed.
+    Commit,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Admit => "admit",
+            SpanKind::Forward => "forward",
+            SpanKind::Draft => "draft",
+            SpanKind::Verify => "verify",
+            SpanKind::Decode => "decode",
+            SpanKind::Commit => "commit",
+        }
+    }
+}
+
+/// One timed stage. Timestamps are microseconds since the request was
+/// submitted (so every trace starts at ts 0 and is monotone by
+/// construction: the single worker thread records stages in the order it
+/// executes them).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Decode-loop iteration this span belongs to (0 for pre-loop spans).
+    pub iter: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific args — see [`SpanKind`].
+    pub a: u64,
+    pub b: u64,
+}
+
+/// A completed (or aborted) request's trace: the span timeline plus the
+/// per-request counters that make the paper's invariants observable.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub request_id: u64,
+    pub replica: usize,
+    pub sampler: &'static str,
+    pub draft_kind: String,
+    pub spans: Vec<Span>,
+    /// Spans beyond the pre-allocated cap (counted, never stored — the
+    /// no-hot-path-allocation contract).
+    pub dropped_spans: u64,
+    pub tokens_committed: u64,
+    pub model_nfe: u64,
+    pub aux_nfe: u64,
+    pub iterations: u64,
+    pub proposed: u64,
+    pub accepted: u64,
+    /// Adaptive-window trajectory summary (full trajectory lives in the
+    /// Draft spans' `a` args): min/max/final window over the request.
+    pub window_min: u64,
+    pub window_max: u64,
+    pub window_last: u64,
+    /// Prefix-cache attribution for this request's lane seeding.
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// Bitmask of [`Rung::bit`]s observed across the request's forwards.
+    pub rungs: u8,
+    /// False when the request was aborted (cancel/deadline/disconnect/
+    /// engine failure) before decoding finished.
+    pub completed: bool,
+    /// Theorem 2, checked per request: `model_nfe <= tokens_committed`.
+    /// Only meaningful for completed requests (a request aborted between
+    /// a draft forward and its commits legitimately sits one NFE ahead).
+    pub theorem2_ok: bool,
+    /// Submit → retirement, microseconds.
+    pub total_us: u64,
+}
+
+impl RequestTrace {
+    /// Wall-clock totals per phase (microseconds) — the per-request view
+    /// the pool-level phase histograms aggregate.
+    pub fn phase_us(&self, kind: SpanKind) -> u64 {
+        self.spans
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.dur_us)
+            .sum()
+    }
+
+    /// One-line index entry for `GET /trace/recent`.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("request_id", Json::num(self.request_id as f64)),
+            ("replica", Json::num(self.replica as f64)),
+            ("sampler", Json::str(self.sampler)),
+            ("draft", Json::str(self.draft_kind.clone())),
+            ("completed", Json::Bool(self.completed)),
+            ("tokens_committed", Json::num(self.tokens_committed as f64)),
+            ("model_nfe", Json::num(self.model_nfe as f64)),
+            ("aux_nfe", Json::num(self.aux_nfe as f64)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("proposed", Json::num(self.proposed as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
+            ("theorem2_ok", Json::Bool(self.theorem2_ok)),
+            ("prefix_hits", Json::num(self.prefix_hits as f64)),
+            ("prefix_misses", Json::num(self.prefix_misses as f64)),
+            ("rungs", Json::str(rungs_str(self.rungs))),
+            ("spans", Json::num(self.spans.len() as f64)),
+            ("dropped_spans", Json::num(self.dropped_spans as f64)),
+            ("total_us", Json::num(self.total_us as f64)),
+        ])
+    }
+}
+
+/// Human form of the rung bitmask ("inc", "inc|dense", "-" when no
+/// forward ran).
+pub fn rungs_str(mask: u8) -> String {
+    let mut parts = vec![];
+    for r in [Rung::Inc, Rung::Ord, Rung::Dense] {
+        if mask & r.bit() != 0 {
+            parts.push(r.name());
+        }
+    }
+    if parts.is_empty() {
+        "-".to_string()
+    } else {
+        parts.join("|")
+    }
+}
+
+/// Per-request span cap: enough for queue/admit plus ~4 spans per
+/// iteration over a full window-1 decode of the largest artifact window,
+/// without ever growing mid-request.
+pub const DEFAULT_SPAN_CAP: usize = 2048;
+
+/// The hot-path trace writer owned by a scheduler slot. Single-threaded
+/// by construction (one worker drives one slot); all buffers are
+/// pre-allocated in `new`.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    trace: RequestTrace,
+    epoch: Instant,
+    span_cap: usize,
+}
+
+impl TraceBuilder {
+    /// `submitted` anchors ts 0 (queue wait is part of the trace).
+    pub fn new(
+        request_id: u64,
+        replica: usize,
+        sampler: &'static str,
+        submitted: Instant,
+        span_cap: usize,
+    ) -> Self {
+        TraceBuilder {
+            trace: RequestTrace {
+                request_id,
+                replica,
+                sampler,
+                draft_kind: String::new(),
+                spans: Vec::with_capacity(span_cap),
+                dropped_spans: 0,
+                tokens_committed: 0,
+                model_nfe: 0,
+                aux_nfe: 0,
+                iterations: 0,
+                proposed: 0,
+                accepted: 0,
+                window_min: u64::MAX,
+                window_max: 0,
+                window_last: 0,
+                prefix_hits: 0,
+                prefix_misses: 0,
+                rungs: 0,
+                completed: false,
+                theorem2_ok: true,
+                total_us: 0,
+            },
+            epoch: submitted,
+            span_cap,
+        }
+    }
+
+    pub fn request_id(&self) -> u64 {
+        self.trace.request_id
+    }
+
+    /// Microseconds since submit (the trace's clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros().min(u128::from(u64::MAX)) as u64
+    }
+
+    /// Record a span that ends now.
+    pub fn push(&mut self, kind: SpanKind, iter: u32, start_us: u64, a: u64, b: u64) {
+        let dur = self.now_us().saturating_sub(start_us);
+        self.push_at(kind, iter, start_us, dur, a, b);
+    }
+
+    /// Record a span with an explicit duration (batched forward spans
+    /// share one measured duration across batch-mates).
+    pub fn push_at(&mut self, kind: SpanKind, iter: u32, start_us: u64, dur_us: u64, a: u64, b: u64) {
+        if self.trace.spans.len() >= self.span_cap {
+            self.trace.dropped_spans += 1;
+            return;
+        }
+        self.trace.spans.push(Span {
+            kind,
+            iter,
+            start_us,
+            dur_us,
+            a,
+            b,
+        });
+    }
+
+    pub fn note_rung(&mut self, r: Rung) {
+        self.trace.rungs |= r.bit();
+    }
+
+    pub fn note_window(&mut self, w: usize) {
+        let w = w as u64;
+        self.trace.window_min = self.trace.window_min.min(w);
+        self.trace.window_max = self.trace.window_max.max(w);
+        self.trace.window_last = w;
+    }
+
+    pub fn note_prefix_probe(&mut self, hit: bool) {
+        if hit {
+            self.trace.prefix_hits += 1;
+        } else {
+            self.trace.prefix_misses += 1;
+        }
+    }
+
+    pub fn add_commits(&mut self, n: usize) {
+        self.trace.tokens_committed += n as u64;
+    }
+
+    pub fn tokens_committed(&self) -> u64 {
+        self.trace.tokens_committed
+    }
+
+    /// Close the trace with the final counters. `completed` = false for
+    /// aborted requests; the Theorem-2 flag is only asserted on completed
+    /// ones (see [`RequestTrace::theorem2_ok`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn finish(
+        mut self,
+        completed: bool,
+        model_nfe: u64,
+        aux_nfe: u64,
+        iterations: u64,
+        proposed: u64,
+        accepted: u64,
+        draft_kind: String,
+    ) -> RequestTrace {
+        self.trace.total_us = self.now_us();
+        self.trace.completed = completed;
+        self.trace.model_nfe = model_nfe;
+        self.trace.aux_nfe = aux_nfe;
+        self.trace.iterations = iterations;
+        self.trace.proposed = proposed;
+        self.trace.accepted = accepted;
+        self.trace.draft_kind = draft_kind;
+        if self.trace.window_min == u64::MAX {
+            self.trace.window_min = 0;
+        }
+        self.trace.theorem2_ok = !completed || model_nfe <= self.trace.tokens_committed;
+        self.trace
+    }
+}
+
+/// Fixed-capacity, drop-oldest ring of completed request traces — one per
+/// replica, shared with the HTTP layer behind a mutex that is only taken
+/// at request completion and on reads.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    inner: Mutex<VecDeque<Arc<RequestTrace>>>,
+    capacity: usize,
+}
+
+impl SpanRecorder {
+    pub fn new(capacity: usize) -> Self {
+        SpanRecorder {
+            inner: Mutex::new(VecDeque::with_capacity(capacity.max(1))),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Publish a finished trace, evicting the oldest at capacity.
+    pub fn record(&self, t: RequestTrace) {
+        let mut ring = self.inner.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(Arc::new(t));
+    }
+
+    pub fn get(&self, request_id: u64) -> Option<Arc<RequestTrace>> {
+        let ring = self.inner.lock().unwrap();
+        ring.iter().rev().find(|t| t.request_id == request_id).cloned()
+    }
+
+    /// Newest-first, at most `limit`.
+    pub fn recent(&self, limit: usize) -> Vec<Arc<RequestTrace>> {
+        let ring = self.inner.lock().unwrap();
+        ring.iter().rev().take(limit).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finished(id: u64, committed: u64, nfe: u64) -> RequestTrace {
+        let mut b = TraceBuilder::new(id, 0, "assd", Instant::now(), 16);
+        let t0 = b.now_us();
+        b.push(SpanKind::QueueWait, 0, 0, 0, 0);
+        b.push(SpanKind::Admit, 0, t0, 4, 0);
+        b.add_commits(committed as usize);
+        b.finish(true, nfe, 0, 1, 0, 0, "self".to_string())
+    }
+
+    #[test]
+    fn builder_caps_spans_without_growing() {
+        let mut b = TraceBuilder::new(1, 0, "assd", Instant::now(), 4);
+        let cap_before = b.trace.spans.capacity();
+        for i in 0..10 {
+            b.push(SpanKind::Forward, i, 0, 0, 0);
+        }
+        assert_eq!(b.trace.spans.len(), 4);
+        assert_eq!(b.trace.dropped_spans, 6);
+        assert_eq!(b.trace.spans.capacity(), cap_before, "no reallocation past the cap");
+    }
+
+    #[test]
+    fn theorem2_flag_checks_completed_requests_only() {
+        assert!(finished(1, 10, 10).theorem2_ok, "equality is within the bound");
+        assert!(!finished(2, 3, 9).theorem2_ok, "NFE above commits must flag");
+        // Aborted mid-iteration: one draft NFE ahead of commits is legal.
+        let b = TraceBuilder::new(3, 0, "assd", Instant::now(), 4);
+        let t = b.finish(false, 1, 0, 0, 0, 0, String::new());
+        assert!(t.theorem2_ok, "aborted requests are not held to the bound");
+        assert!(!t.completed);
+    }
+
+    #[test]
+    fn ring_drops_oldest_under_churn() {
+        let rec = SpanRecorder::new(3);
+        for id in 1..=10u64 {
+            rec.record(finished(id, 5, 5));
+        }
+        assert_eq!(rec.len(), 3);
+        assert!(rec.get(7).is_none(), "evicted");
+        for id in 8..=10 {
+            assert!(rec.get(id).is_some(), "id {id} retained");
+        }
+        let recent = rec.recent(10);
+        let ids: Vec<u64> = recent.iter().map(|t| t.request_id).collect();
+        assert_eq!(ids, vec![10, 9, 8], "newest first");
+    }
+
+    #[test]
+    fn window_and_rung_notes_fold_into_summary() {
+        let mut b = TraceBuilder::new(9, 1, "assd", Instant::now(), 8);
+        b.note_window(5);
+        b.note_window(2);
+        b.note_window(3);
+        b.note_rung(Rung::Inc);
+        b.note_rung(Rung::Dense);
+        b.note_prefix_probe(true);
+        let t = b.finish(true, 0, 0, 3, 0, 0, "self".to_string());
+        assert_eq!((t.window_min, t.window_max, t.window_last), (2, 5, 3));
+        assert_eq!(t.rungs, Rung::Inc.bit() | Rung::Dense.bit());
+        assert_eq!(rungs_str(t.rungs), "inc|dense");
+        assert_eq!((t.prefix_hits, t.prefix_misses), (1, 0));
+        assert!(t.summary_json().get("theorem2_ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn phase_us_sums_by_kind() {
+        let mut b = TraceBuilder::new(4, 0, "seq", Instant::now(), 8);
+        b.push_at(SpanKind::Forward, 0, 0, 100, 0, 1);
+        b.push_at(SpanKind::Forward, 1, 200, 50, 0, 1);
+        b.push_at(SpanKind::Commit, 1, 260, 10, 2, 0);
+        let t = b.finish(true, 2, 0, 2, 0, 0, String::new());
+        assert_eq!(t.phase_us(SpanKind::Forward), 150);
+        assert_eq!(t.phase_us(SpanKind::Commit), 10);
+        assert_eq!(t.phase_us(SpanKind::Draft), 0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Prometheus text exposition (format 0.0.4) without a client library.
+//!
+//! `GET /metrics` with `Accept: text/plain` renders the pool counters,
+//! per-replica counters (labelled `{replica="i"}`), and the latency /
+//! per-phase / acceptance histograms in the plain-text scrape format.
+//! The writer is append-only over one `String`; metric families follow
+//! the Prometheus naming conventions (`_total` counters, `_seconds`
+//! histograms, base units).
+
+use crate::util::stats::Histogram;
+
+/// Content-Type for the 0.0.4 text exposition format.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Append-only text-format writer.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        PromText { out: String::new() }
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{v}\""));
+            }
+            self.out.push('}');
+        }
+        if value.fract() == 0.0 && value.abs() < 1e15 {
+            self.out.push_str(&format!(" {}\n", value as i64));
+        } else {
+            self.out.push_str(&format!(" {value}\n"));
+        }
+    }
+
+    /// A counter family with a single unlabelled sample.
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "counter");
+        self.sample(name, &[], value);
+    }
+
+    /// A gauge family with a single unlabelled sample.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, &[], value);
+    }
+
+    /// A counter family where every sample carries labels (e.g. one
+    /// sample per replica). `samples` = (labels, value).
+    pub fn labeled_counter(&mut self, name: &str, help: &str, samples: &[(&[(&str, &str)], f64)]) {
+        self.header(name, help, "counter");
+        for (labels, v) in samples {
+            self.sample(name, labels, *v);
+        }
+    }
+
+    /// Render a [`Histogram`] as a Prometheus histogram family:
+    /// cumulative `_bucket{le=...}` samples, `_sum`, `_count`. Extra
+    /// labels (e.g. `drafter="bigram"`) are prepended before `le`.
+    pub fn histogram(&mut self, name: &str, help: &str, labels: &[(&str, &str)], h: &Histogram) {
+        self.header(name, help, "histogram");
+        self.histogram_series(name, labels, h);
+    }
+
+    /// Continue an already-opened histogram family with another labelled
+    /// series (Prometheus allows one HELP/TYPE header per family).
+    pub fn histogram_series(&mut self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let bucket = format!("{name}_bucket");
+        let mut cum = 0u64;
+        let mut owned: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        owned.push(("le".to_string(), String::new()));
+        let le_idx = owned.len() - 1;
+        for (i, &b) in h.bounds().iter().enumerate() {
+            cum += h.counts()[i];
+            owned[le_idx].1 = format!("{b}");
+            let refs: Vec<(&str, &str)> = owned.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            self.sample(&bucket, &refs, cum as f64);
+        }
+        owned[le_idx].1 = "+Inf".to_string();
+        let refs: Vec<(&str, &str)> = owned.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        self.sample(&bucket, &refs, h.count() as f64);
+        self.sample(&format!("{name}_sum"), labels, h.sum());
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_in_text_format() {
+        let mut w = PromText::new();
+        w.counter("asarm_requests_total", "Completed requests.", 12.0);
+        w.gauge("asarm_kv_blocks_free", "Free KV blocks.", 7.0);
+        let s = w.finish();
+        assert!(s.contains("# TYPE asarm_requests_total counter\n"));
+        assert!(s.contains("asarm_requests_total 12\n"));
+        assert!(s.contains("# TYPE asarm_kv_blocks_free gauge\n"));
+        assert!(s.contains("asarm_kv_blocks_free 7\n"));
+    }
+
+    #[test]
+    fn labeled_counter_emits_one_sample_per_label_set() {
+        let mut w = PromText::new();
+        let r0: &[(&str, &str)] = &[("replica", "0")];
+        let r1: &[(&str, &str)] = &[("replica", "1")];
+        w.labeled_counter(
+            "asarm_replica_requests_total",
+            "Per-replica completed requests.",
+            &[(r0, 3.0), (r1, 4.0)],
+        );
+        let s = w.finish();
+        assert!(s.contains("asarm_replica_requests_total{replica=\"0\"} 3\n"));
+        assert!(s.contains("asarm_replica_requests_total{replica=\"1\"} 4\n"));
+        assert_eq!(s.matches("# TYPE").count(), 1, "one header per family");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_in_inf() {
+        let mut h = Histogram::with_bounds(vec![0.1, 1.0, 10.0]);
+        h.record(0.05);
+        h.record(0.5);
+        h.record(0.5);
+        h.record(100.0); // overflow bucket
+        let mut w = PromText::new();
+        w.histogram("asarm_latency_seconds", "Request latency.", &[], &h);
+        let s = w.finish();
+        assert!(s.contains("asarm_latency_seconds_bucket{le=\"0.1\"} 1\n"));
+        assert!(s.contains("asarm_latency_seconds_bucket{le=\"1\"} 3\n"));
+        assert!(s.contains("asarm_latency_seconds_bucket{le=\"10\"} 3\n"));
+        assert!(s.contains("asarm_latency_seconds_bucket{le=\"+Inf\"} 4\n"));
+        assert!(s.contains("asarm_latency_seconds_count 4\n"));
+    }
+
+    #[test]
+    fn histogram_series_shares_the_family_header() {
+        let mut a = Histogram::unit();
+        a.record(0.5);
+        let mut b = Histogram::unit();
+        b.record(0.9);
+        let mut w = PromText::new();
+        w.histogram(
+            "asarm_acceptance_rate",
+            "Per-request acceptance rate by drafter.",
+            &[("drafter", "self")],
+            &a,
+        );
+        w.histogram_series("asarm_acceptance_rate", &[("drafter", "bigram")], &b);
+        let s = w.finish();
+        assert_eq!(s.matches("# TYPE asarm_acceptance_rate histogram").count(), 1);
+        assert!(s.contains("drafter=\"self\""));
+        assert!(s.contains("drafter=\"bigram\""));
+    }
+}

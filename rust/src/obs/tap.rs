@@ -1,0 +1,97 @@
+//! Thread-local attribution taps between the engines and the scheduler.
+//!
+//! Engines are thread-pinned (the PJRT client is single-threaded, so a
+//! replica's engine lives and dies on its worker thread) — which makes a
+//! thread-local the *exact* channel for per-call attribution: the engine
+//! writes during a batched forward, the scheduler worker drains right
+//! after the call returns, and no other thread can interleave.
+//!
+//! Two taps:
+//!
+//! - **Fallback rung** — `forward_ord_dense`, the native `forward_ord`
+//!   paths, and the native `forward_inc` paths each note which rung of
+//!   the inc→ord→dense ladder actually executed. A mixed batch (some
+//!   specs routed down a rung) reports the WEAKEST rung that ran, which
+//!   is the one that set the call's cost.
+//! - **Prefix probes** — when a fresh lane's first incremental forward
+//!   consults the prefix cache, the engine notes `(lane, hit)`, letting
+//!   the scheduler attribute warm/cold admission to the exact request
+//!   pinned to that lane (the pool-level counters cannot: they are
+//!   cumulative across all lanes).
+//!
+//! Both taps are written unconditionally (a `Cell` store is a few ns) so
+//! the engines stay tracing-agnostic; with tracing off the scheduler
+//! simply never drains them and `reset` clears any residue at admission.
+
+use std::cell::{Cell, RefCell};
+
+use super::Rung;
+
+thread_local! {
+    static RUNG: Cell<Option<Rung>> = const { Cell::new(None) };
+    static PROBES: RefCell<Vec<(usize, bool)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Note that rung `r` served (part of) the current batched call. Keeps
+/// the weakest rung seen since the last [`take_rung`].
+pub fn note_rung(r: Rung) {
+    RUNG.with(|c| {
+        let weakest = match c.get() {
+            None => r,
+            Some(prev) => prev.min(r),
+        };
+        c.set(Some(weakest));
+    });
+}
+
+/// Drain the rung tap (None when no forward ran since the last drain).
+pub fn take_rung() -> Option<Rung> {
+    RUNG.with(|c| c.take())
+}
+
+/// Note a prefix-cache probe for `lane`'s first incremental forward.
+pub fn note_prefix_probe(lane: usize, hit: bool) {
+    PROBES.with(|p| p.borrow_mut().push((lane, hit)));
+}
+
+/// Drain pending probes into `into` (appends; the caller owns the scratch
+/// buffer so steady-state draining allocates nothing).
+pub fn take_prefix_probes(into: &mut Vec<(usize, bool)>) {
+    PROBES.with(|p| into.append(&mut p.borrow_mut()));
+}
+
+/// Clear both taps (scheduler calls this before timed sections so stale
+/// notes from untraced paths cannot leak into a trace).
+pub fn reset() {
+    RUNG.with(|c| c.set(None));
+    PROBES.with(|p| p.borrow_mut().clear());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rung_tap_keeps_weakest_and_drains() {
+        reset();
+        assert_eq!(take_rung(), None);
+        note_rung(Rung::Inc);
+        note_rung(Rung::Dense);
+        note_rung(Rung::Ord);
+        assert_eq!(take_rung(), Some(Rung::Dense), "weakest rung wins");
+        assert_eq!(take_rung(), None, "drained");
+    }
+
+    #[test]
+    fn probe_tap_appends_into_caller_scratch() {
+        reset();
+        let mut scratch = vec![];
+        note_prefix_probe(3, true);
+        note_prefix_probe(5, false);
+        take_prefix_probes(&mut scratch);
+        assert_eq!(scratch, vec![(3, true), (5, false)]);
+        scratch.clear();
+        take_prefix_probes(&mut scratch);
+        assert!(scratch.is_empty(), "drained");
+    }
+}

@@ -469,7 +469,11 @@ impl XlaEngine {
                 lane.m = spec.ord.m;
                 if inc.committed > 0 {
                     let chain = chain_hashes(spec.ord, spec.tokens, inc.committed);
-                    match store.lookup(&chain, spec.ord.m, inc.committed) {
+                    let looked = store.lookup(&chain, spec.ord.m, inc.committed);
+                    // Attribution tap: the request pinned to this lane
+                    // either seeded warm (hit) or pays prefill (miss).
+                    crate::obs::tap::note_prefix_probe(inc.lane, looked.is_some());
+                    match looked {
                         Some((table, rows)) => {
                             // Warm prefix: seed from the sealed blocks.
                             // Rows `rows..committed` are causal target
@@ -764,6 +768,10 @@ impl Engine for XlaEngine {
         if self.fwd_ord.is_empty() {
             return forward_ord_dense(self, specs);
         }
+        // Attribution tap: the compact rung is serving (part of) this
+        // call. A mixed batch that also routes rows to the dense
+        // fallback tags Dense too, and the weakest rung wins.
+        crate::obs::tap::note_rung(crate::obs::Rung::Ord);
         // Mixed batches: a request wanting more rows than the compiled
         // gather width (rare — deep diffusion steps) takes the dense
         // fallback ALONE; its batch-mates stay on the compact path
@@ -907,6 +915,10 @@ impl Engine for XlaEngine {
             let plain: Vec<ForwardSpec<'_>> = specs.iter().map(|s| s.spec).collect();
             return self.forward_ord(&plain);
         }
+        // Attribution tap: the incremental rung is serving (part of)
+        // this call; oversized specs routed to the compact path tag Ord
+        // themselves and the weakest rung wins.
+        crate::obs::tap::note_rung(crate::obs::Rung::Inc);
         let r = self.inc_rows;
         if specs.iter().any(|s| s.spec.want.len() > r) {
             let mut small = Vec::new();

@@ -267,6 +267,9 @@ impl Engine for MockEngine {
         if specs.is_empty() {
             return Ok(vec![]);
         }
+        // Attribution tap: the mock's compact rung, same contract as
+        // XlaEngine's (the scheduler drains per batched call).
+        crate::obs::tap::note_rung(crate::obs::Rung::Ord);
         let out = specs
             .iter()
             .map(|spec| {
@@ -305,6 +308,8 @@ impl Engine for MockEngine {
         if specs.is_empty() {
             return Ok(vec![]);
         }
+        // Attribution tap: the incremental rung is serving this call.
+        crate::obs::tap::note_rung(crate::obs::Rung::Inc);
         let kv = &mut *self.kv.borrow_mut();
         let (store, lanes) = (&mut kv.store, &mut kv.lanes);
         let mut cells = 0u64;
@@ -344,7 +349,11 @@ impl Engine for MockEngine {
                 lane.sigma = spec.ord.sigma.clone();
                 lane.m = spec.ord.m;
                 let chain = chain_hashes(spec.ord, spec.tokens, inc.committed);
-                match store.lookup(&chain, spec.ord.m, inc.committed) {
+                let looked = store.lookup(&chain, spec.ord.m, inc.committed);
+                // Attribution tap: warm (hit) vs cold (prefill) lane
+                // seeding, attributed to the request pinned here.
+                crate::obs::tap::note_prefix_probe(inc.lane, looked.is_some());
+                match looked {
                     Some((table, rows)) => {
                         // Prefix-cache hit: seed the lane from the sealed
                         // blocks — NO prefill. Rows `rows..committed`

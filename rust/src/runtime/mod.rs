@@ -213,6 +213,10 @@ pub fn forward_ord_dense<E: Engine + ?Sized>(
     if specs.is_empty() {
         return Ok(vec![]);
     }
+    // Attribution tap: whatever routed here, the call is now paying the
+    // dense O(N²) mask traffic — the weakest fallback rung (engines are
+    // thread-pinned, so the scheduler drains this on the same thread).
+    crate::obs::tap::note_rung(crate::obs::Rung::Dense);
     let n = engine.seq_len();
     let v = engine.vocab();
     let b = specs.len();

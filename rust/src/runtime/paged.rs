@@ -181,6 +181,22 @@ impl KvStats {
     pub fn lane_budget(&self, n: usize) -> usize {
         (self.total_blocks / self.blocks_per_seq(n).max(1)).max(1)
     }
+
+    /// Difference of the MONOTONE counters against an earlier snapshot
+    /// (gauges are copied through unchanged). This is the delta-fold
+    /// seam the scheduler uses to turn engine-cumulative counters into
+    /// pool-level increments without double counting across replicas —
+    /// the same snapshot `prev` must be updated to `self` by the caller
+    /// after folding.
+    pub fn delta(&self, prev: &KvStats) -> KvStats {
+        KvStats {
+            prefix_hits: self.prefix_hits - prev.prefix_hits,
+            prefix_misses: self.prefix_misses - prev.prefix_misses,
+            evictions: self.evictions - prev.evictions,
+            cow_copies: self.cow_copies - prev.cow_copies,
+            ..*self
+        }
+    }
 }
 
 /// One sealed prefix entry: a retained block table covering committed

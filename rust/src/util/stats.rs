@@ -114,6 +114,18 @@ impl Histogram {
             bounds.push(b);
             b *= 1.5;
         }
+        Histogram::with_bounds(bounds)
+    }
+
+    /// Explicit strictly-ascending bucket upper bounds. One extra
+    /// overflow bucket (samples above the last bound) is appended
+    /// internally.
+    pub fn with_bounds(bounds: Vec<f64>) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "bounds must be strictly ascending"
+        );
         let n = bounds.len();
         Histogram {
             bounds,
@@ -121,6 +133,44 @@ impl Histogram {
             total: 0,
             sum: 0.0,
         }
+    }
+
+    /// Linear buckets over [0, 1] in 0.05 steps — for rates (e.g. the
+    /// per-request acceptance-rate histograms).
+    pub fn unit() -> Self {
+        Histogram::with_bounds((1..=20).map(|i| i as f64 * 0.05).collect())
+    }
+
+    /// Bucket upper bounds (the Prometheus `le` values, `+Inf` implied).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; `counts()[bounds().len()]` is the overflow
+    /// bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Sum of all recorded samples (the Prometheus `_sum`).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Fold `other` into `self` bucket-wise. Both histograms must share
+    /// the same bounds (they are built by the same constructor in
+    /// practice); merging mismatched layouts would silently misbucket,
+    /// so it panics instead.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "merging histograms with different bucket layouts"
+        );
+        for (c, &o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
     }
 
     pub fn record(&mut self, x: f64) {
@@ -199,6 +249,78 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
         assert!((percentile(&xs, 95.0) - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_empty_quantile_is_zero() {
+        let h = Histogram::latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_sample_quantiles_bracket_it() {
+        let mut h = Histogram::latency();
+        h.record(0.01);
+        for q in [0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            // Every quantile lands on the sample's bucket bound: the
+            // first bound at or above 0.01 under the 1.5x lattice.
+            assert!(
+                v >= 0.01 && v < 0.02,
+                "q={q} gave {v}, expected the 0.01 sample's bucket"
+            );
+        }
+        assert_eq!(h.mean(), 0.01);
+    }
+
+    #[test]
+    fn histogram_all_samples_in_overflow_bucket() {
+        let mut h = Histogram::with_bounds(vec![1.0, 2.0]);
+        for _ in 0..5 {
+            h.record(1e6);
+        }
+        assert_eq!(h.counts(), &[0, 0, 5]);
+        // Quantiles clamp to the last finite bound — the histogram
+        // cannot resolve beyond its lattice.
+        assert_eq!(h.quantile(0.5), 2.0);
+        assert_eq!(h.quantile(1.0), 2.0);
+        assert_eq!(h.mean(), 1e6);
+    }
+
+    #[test]
+    fn histogram_merge_matches_sequential_records() {
+        let xs: Vec<f64> = (1..=50).map(|i| i as f64 * 1e-3).collect();
+        let ys: Vec<f64> = (1..=50).map(|i| i as f64 * 1e-2).collect();
+        let mut both = Histogram::latency();
+        for &x in xs.iter().chain(ys.iter()) {
+            both.record(x);
+        }
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        for &x in &xs {
+            a.record(x);
+        }
+        for &y in &ys {
+            b.record(y);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.counts(), both.counts());
+        assert!((a.sum() - both.sum()).abs() < 1e-12);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different bucket layouts")]
+    fn histogram_merge_rejects_mismatched_bounds() {
+        let mut a = Histogram::with_bounds(vec![1.0]);
+        let b = Histogram::unit();
+        a.merge(&b);
     }
 
     #[test]

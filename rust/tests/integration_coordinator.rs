@@ -7,7 +7,7 @@
 use std::time::Duration;
 
 use anyhow::bail;
-use asarm::coordinator::http::{http_get, http_post, http_post_stream, HttpServer};
+use asarm::coordinator::http::{http_get, http_get_accept, http_post, http_post_stream, HttpServer};
 use asarm::coordinator::lifecycle::Event;
 use asarm::coordinator::scheduler::{spawn, spawn_pool, SchedulerConfig, SchedulerHandle};
 use asarm::coordinator::{InfillRequest, Metrics, ReplicaState};
@@ -347,6 +347,96 @@ fn replicas_endpoint_reports_per_worker_stats() {
         .map(|r| r.get("requests").unwrap().as_f64().unwrap())
         .sum();
     assert_eq!(served, 1.0);
+}
+
+// --- observability surfaces over a real socket -------------------------
+
+/// GET /metrics content negotiation: `Accept: text/plain` serves the
+/// Prometheus text exposition (pool counters AND per-replica series);
+/// no Accept header keeps serving the JSON snapshot unchanged.
+#[test]
+fn metrics_content_negotiation_serves_prometheus_text() {
+    let (addr, _) = mock_server(2);
+    let body = r#"{"text":"ab____cd","seed":11}"#;
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    // Default stays JSON — existing dashboards parse this.
+    let (code, json_body) = http_get(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert!(Json::parse(&json_body).is_ok(), "JSON default broke");
+    // A scraper's Accept list flips the representation.
+    let (code, text) =
+        http_get_accept(&addr, "/metrics", "text/plain;version=0.0.4, */*;q=0.1").unwrap();
+    assert_eq!(code, 200);
+    assert!(
+        text.contains("# TYPE asarm_requests_total counter"),
+        "missing TYPE line:\n{text}"
+    );
+    assert!(text.contains("asarm_requests_total 1"), "{text}");
+    assert!(text.contains("asarm_tokens_generated_total 4"), "{text}");
+    // Per-phase latency series and per-replica series are present.
+    assert!(text.contains(r#"asarm_phase_seconds_count{phase="forward"}"#), "{text}");
+    assert!(
+        text.contains(r#"asarm_replica_requests_total{replica="0"} 1"#),
+        "{text}"
+    );
+    // Every sample line is `name[{labels}] value` — no JSON leakage.
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        assert!(
+            line.starts_with("asarm_") && line.rsplit(' ').next().unwrap().parse::<f64>().is_ok(),
+            "malformed exposition line: {line:?}"
+        );
+    }
+}
+
+/// GET /trace/{id} serves Chrome trace-event JSON for a finished
+/// request; /trace/recent indexes it; unknown ids 404 and junk ids 400.
+#[test]
+fn trace_endpoints_serve_chrome_json_and_index() {
+    let (addr, _) = mock_server(2);
+    let body = r#"{"text":"ab________cd","sampler":"assd","seed":21,
+                   "draft":{"kind":"bigram","max_len":4}}"#;
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let id = Json::parse(&resp)
+        .unwrap()
+        .get("request_id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+    assert!(id > 0, "response must carry the trace key");
+
+    let (code, trace) = http_get(&addr, &format!("/trace/{id}")).unwrap();
+    assert_eq!(code, 200, "{trace}");
+    let j = Json::parse(&trace).expect("chrome trace must be valid JSON");
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    // Duration events must carry monotone non-negative timestamps.
+    let mut saw_forward = false;
+    for ev in events {
+        if ev.get("ph").unwrap().as_str() == Some("X") {
+            assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            if ev.get("name").unwrap().as_str() == Some("forward") {
+                saw_forward = true;
+            }
+        }
+    }
+    assert!(saw_forward, "no forward span in {trace}");
+
+    let (code, recent) = http_get(&addr, "/trace/recent").unwrap();
+    assert_eq!(code, 200);
+    let arr = Json::parse(&recent).unwrap();
+    let arr = arr.as_arr().unwrap();
+    assert!(arr
+        .iter()
+        .any(|t| t.get("request_id").unwrap().as_f64() == Some(id as f64)));
+
+    let (code, miss) = http_get(&addr, "/trace/18446744073709551614").unwrap();
+    assert_eq!(code, 404, "{miss}");
+    assert!(miss.contains("no trace"), "{miss}");
+    let (code, junk) = http_get(&addr, "/trace/not-a-number").unwrap();
+    assert_eq!(code, 400, "{junk}");
 }
 
 // --- streaming lifecycle over a real socket ----------------------------
