@@ -5,7 +5,7 @@
 # denied, rustfmt in check mode, and clippy with warnings denied — so
 # docs, formatting, and lints cannot rot.
 
-.PHONY: all build test doc fmt lint verify artifacts fixtures models bench bench-smoke
+.PHONY: all build test doc fmt lint verify artifacts fixtures models bench bench-smoke chaos
 
 all: build
 
@@ -88,3 +88,15 @@ bench-smoke:
 	ASARM_BENCH_MOCK=1 cargo bench --bench perf_engine
 	cargo bench --bench perf_streaming
 	cargo bench --bench perf_paged
+
+# Deterministic chaos soak (docs/ARCHITECTURE.md §Fault tolerance &
+# supervision): seeded fault injection across every decode mode,
+# asserting bit-identity with the fault-free run, intact NFE bounds,
+# and supervised replica restart. The seed is pinned so CI and local
+# runs see the same fault schedule; override to explore:
+#   make chaos ASARM_CHAOS_SEED=12345
+# On divergence the suite leaves TRACE_chaos.json (Chrome trace of the
+# last chaos request) at the repo root for CI to upload.
+ASARM_CHAOS_SEED ?= 20260808
+chaos:
+	ASARM_CHAOS_SEED=$(ASARM_CHAOS_SEED) cargo test --release --test chaos_soak -- --nocapture

@@ -21,7 +21,10 @@
 //!   GET  /trace/{id}       — full trace for one request as Chrome
 //!                            trace-event JSON (load into
 //!                            chrome://tracing or Perfetto)
-//!   GET  /healthz          — liveness
+//!   GET  /healthz          — pool liveness: 200 while any replica is
+//!                            serving (or restarting under supervision),
+//!                            503 once every replica is Stopped/Failed;
+//!                            body carries per-replica states
 //!
 //! Connections are handled on the thread pool; each request round-trips
 //! through the scheduler handle (the engines themselves stay on their
@@ -233,6 +236,19 @@ fn unavailable_response(stream: &mut TcpStream) -> Result<()> {
     )
 }
 
+/// Every replica died beyond the supervisor's restart budget: the same
+/// 503 + Retry-After as an orderly shutdown (load balancers treat both
+/// as "stop routing here"), but the body names the fault for operators.
+fn replicas_lost_response(stream: &mut TcpStream) -> Result<()> {
+    write_response_headers(
+        stream,
+        503,
+        "Service Unavailable",
+        &[("Retry-After", "5")],
+        r#"{"error":"all replicas lost; request cannot be served"}"#,
+    )
+}
+
 /// One HTTP chunk (`Transfer-Encoding: chunked`), flushed immediately so
 /// SSE events reach the client as they happen.
 fn write_chunk(stream: &mut TcpStream, payload: &str) -> Result<()> {
@@ -258,7 +274,25 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
         }
     };
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => write_response(&mut stream, 200, "OK", r#"{"status":"ok"}"#),
+        ("GET", "/healthz") => {
+            // Liveness is pool-level: 200 while any replica serves or
+            // will serve again (Starting/Running/Degraded/Quarantined-
+            // pending-restart), 503 once every replica is permanently
+            // Stopped or Failed. Load balancers key on the status code;
+            // the JSON body carries the per-replica detail.
+            let body = handle.healthz_json().to_string();
+            if handle.healthy() {
+                write_response(&mut stream, 200, "OK", &body)
+            } else {
+                write_response_headers(
+                    &mut stream,
+                    503,
+                    "Service Unavailable",
+                    &[("Retry-After", "5")],
+                    &body,
+                )
+            }
+        }
         ("GET", "/metrics") => {
             // Content negotiation: Prometheus scrapers ask for
             // text/plain and get the text exposition (which folds in
@@ -314,6 +348,7 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
             match handle.submit(infill) {
                 Err(SubmitError::QueueFull(_)) => shed_response(&mut stream),
                 Err(SubmitError::ShutDown) => unavailable_response(&mut stream),
+                Err(SubmitError::ReplicaLost) => replicas_lost_response(&mut stream),
                 Ok(rh) => match wait_watching_socket(rh, &stream) {
                     Some(Ok(resp)) => {
                         write_response(&mut stream, 200, "OK", &resp.to_json().to_string())
@@ -418,6 +453,7 @@ fn handle_stream(mut stream: TcpStream, handle: SchedulerHandle, body: &[u8]) ->
     let rh = match handle.submit(infill) {
         Err(SubmitError::QueueFull(_)) => return shed_response(&mut stream),
         Err(SubmitError::ShutDown) => return unavailable_response(&mut stream),
+        Err(SubmitError::ReplicaLost) => return replicas_lost_response(&mut stream),
         Ok(rh) => rh,
     };
     let cancel = rh.cancel_token();

@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use crate::obs::prometheus::PromText;
 use crate::obs::{RequestTrace, SpanKind};
-use crate::runtime::KvStats;
+use crate::runtime::{ErrorClass, KvStats};
 use crate::util::json::Json;
 use crate::util::stats::Histogram;
 
@@ -94,6 +94,21 @@ struct Inner {
     phase_commit: Histogram,
     /// Per-request acceptance-rate distribution, keyed by drafter kind.
     acceptance_by_drafter: Vec<(String, Histogram)>,
+    // --- fault tolerance (docs/ARCHITECTURE.md §Fault tolerance &
+    //     supervision) ---
+    /// Batched/retry forward calls that returned a typed engine error,
+    /// by class (transient / lane_corrupt / fatal).
+    engine_errors_transient: u64,
+    engine_errors_lane_corrupt: u64,
+    engine_errors_fatal: u64,
+    /// Per-slot recovery forwards issued after a failed batched call.
+    forward_retries: u64,
+    /// Engine incarnations re-provisioned by the replica supervisor.
+    replica_restarts: u64,
+    /// Requests failed by the fault-isolation layer (retry budget
+    /// exhausted, fatal engine error, contained panic, or replica loss)
+    /// — a subset of `failures` excluding client-caused retires.
+    requests_failed: u64,
 }
 
 impl Default for Metrics {
@@ -138,6 +153,12 @@ impl Metrics {
                 phase_verify: Histogram::latency(),
                 phase_commit: Histogram::latency(),
                 acceptance_by_drafter: vec![],
+                engine_errors_transient: 0,
+                engine_errors_lane_corrupt: 0,
+                engine_errors_fatal: 0,
+                forward_retries: 0,
+                replica_restarts: 0,
+                requests_failed: 0,
             })),
         }
     }
@@ -163,6 +184,33 @@ impl Metrics {
 
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failures += 1;
+    }
+
+    /// One typed engine error observed on the forward surface (counted
+    /// once per failed CALL, batched or retry).
+    pub fn record_engine_error(&self, class: ErrorClass) {
+        let mut m = self.inner.lock().unwrap();
+        match class {
+            ErrorClass::Transient => m.engine_errors_transient += 1,
+            ErrorClass::LaneCorrupt => m.engine_errors_lane_corrupt += 1,
+            ErrorClass::Fatal => m.engine_errors_fatal += 1,
+        }
+    }
+
+    /// One per-slot recovery forward issued after a failed batched call.
+    pub fn record_forward_retry(&self) {
+        self.inner.lock().unwrap().forward_retries += 1;
+    }
+
+    /// One engine incarnation re-provisioned by the supervisor.
+    pub fn record_replica_restart(&self) {
+        self.inner.lock().unwrap().replica_restarts += 1;
+    }
+
+    /// One request failed by the fault-isolation layer (this is IN
+    /// ADDITION to `record_failure`, which counts every errored retire).
+    pub fn record_request_failed(&self) {
+        self.inner.lock().unwrap().requests_failed += 1;
     }
 
     pub fn record_batch_iteration(&self, occupancy: usize) {
@@ -296,6 +344,28 @@ impl Metrics {
         self.inner.lock().unwrap().shed
     }
 
+    /// Engine errors by class: (transient, lane_corrupt, fatal).
+    pub fn engine_errors(&self) -> (u64, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (
+            m.engine_errors_transient,
+            m.engine_errors_lane_corrupt,
+            m.engine_errors_fatal,
+        )
+    }
+
+    pub fn forward_retries(&self) -> u64 {
+        self.inner.lock().unwrap().forward_retries
+    }
+
+    pub fn replica_restarts(&self) -> u64 {
+        self.inner.lock().unwrap().replica_restarts
+    }
+
+    pub fn requests_failed(&self) -> u64 {
+        self.inner.lock().unwrap().requests_failed
+    }
+
     pub fn snapshot_json(&self) -> Json {
         let m = self.inner.lock().unwrap();
         let elapsed = m.started.elapsed().as_secs_f64();
@@ -383,6 +453,21 @@ impl Metrics {
                 "phase_commit_p95_s",
                 Json::num(m.phase_commit.quantile(0.95)),
             ),
+            (
+                "engine_errors_transient",
+                Json::num(m.engine_errors_transient as f64),
+            ),
+            (
+                "engine_errors_lane_corrupt",
+                Json::num(m.engine_errors_lane_corrupt as f64),
+            ),
+            (
+                "engine_errors_fatal",
+                Json::num(m.engine_errors_fatal as f64),
+            ),
+            ("forward_retries", Json::num(m.forward_retries as f64)),
+            ("replica_restarts", Json::num(m.replica_restarts as f64)),
+            ("requests_failed", Json::num(m.requests_failed as f64)),
             (
                 "acceptance_by_drafter",
                 Json::obj(
@@ -508,6 +593,41 @@ impl Metrics {
             "Completed requests with model_nfe > tokens committed (must stay 0).",
             m.theorem2_violations as f64,
         );
+        p.header(
+            "asarm_engine_errors_total",
+            "Typed engine errors on the forward surface, by class.",
+            "counter",
+        );
+        p.sample(
+            "asarm_engine_errors_total",
+            &[("class", ErrorClass::Transient.as_str())],
+            m.engine_errors_transient as f64,
+        );
+        p.sample(
+            "asarm_engine_errors_total",
+            &[("class", ErrorClass::LaneCorrupt.as_str())],
+            m.engine_errors_lane_corrupt as f64,
+        );
+        p.sample(
+            "asarm_engine_errors_total",
+            &[("class", ErrorClass::Fatal.as_str())],
+            m.engine_errors_fatal as f64,
+        );
+        p.counter(
+            "asarm_forward_retries_total",
+            "Per-slot recovery forwards after a failed batched call.",
+            m.forward_retries as f64,
+        );
+        p.counter(
+            "asarm_replica_restarts_total",
+            "Engine incarnations re-provisioned by the supervisor.",
+            m.replica_restarts as f64,
+        );
+        p.counter(
+            "asarm_requests_failed_total",
+            "Requests failed by the fault-isolation layer.",
+            m.requests_failed as f64,
+        );
         p.histogram(
             "asarm_request_latency_seconds",
             "End-to-end request latency.",
@@ -616,24 +736,47 @@ impl Metrics {
 /// Lifecycle of one scheduler worker / engine replica.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReplicaState {
-    /// Worker spawned; engine not yet provisioned.
+    /// Worker spawned; engine not yet provisioned (also shown while the
+    /// supervisor re-provisions a dead incarnation).
     Starting,
     /// Engine loaded; draining the admission queue.
     Running,
-    /// Engine provisioning failed; worker exited without serving.
+    /// Engine provisioning failed beyond the supervisor's restart
+    /// budget; worker exited without (further) serving.
     Failed,
     /// Worker drained its slots and exited cleanly.
     Stopped,
+    /// Serving, but its health tracker crossed the degrade threshold
+    /// (consecutive forward errors; recovers to Running on success).
+    Degraded,
+    /// Health tracker crossed the quarantine threshold: the worker
+    /// stopped serving on this engine incarnation and handed it to the
+    /// supervisor (transient — Starting/Running follow on restart).
+    Quarantined,
 }
 
 impl ReplicaState {
-    fn as_str(self) -> &'static str {
+    pub fn as_str(self) -> &'static str {
         match self {
             ReplicaState::Starting => "starting",
             ReplicaState::Running => "running",
             ReplicaState::Failed => "failed",
             ReplicaState::Stopped => "stopped",
+            ReplicaState::Degraded => "degraded",
+            ReplicaState::Quarantined => "quarantined",
         }
+    }
+
+    /// True while the worker loop is (or will again be) serving
+    /// requests — the `/healthz` liveness criterion.
+    pub fn is_serving(self) -> bool {
+        matches!(
+            self,
+            ReplicaState::Starting
+                | ReplicaState::Running
+                | ReplicaState::Degraded
+                | ReplicaState::Quarantined
+        )
     }
 }
 
@@ -676,6 +819,12 @@ pub struct ReplicaStats {
     phase_commit_us: AtomicU64,
     traces_recorded: AtomicU64,
     trace_spans_dropped: AtomicU64,
+    // --- fault tolerance (sums across replicas equal the pool
+    //     counters). ---
+    engine_errors: AtomicU64,
+    forward_retries: AtomicU64,
+    restarts: AtomicU64,
+    requests_failed: AtomicU64,
 }
 
 impl ReplicaStats {
@@ -708,6 +857,10 @@ impl ReplicaStats {
             phase_commit_us: AtomicU64::new(0),
             traces_recorded: AtomicU64::new(0),
             trace_spans_dropped: AtomicU64::new(0),
+            engine_errors: AtomicU64::new(0),
+            forward_retries: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            requests_failed: AtomicU64::new(0),
         }
     }
 
@@ -720,6 +873,8 @@ impl ReplicaStats {
             x if x == ReplicaState::Starting as u8 => ReplicaState::Starting,
             x if x == ReplicaState::Running as u8 => ReplicaState::Running,
             x if x == ReplicaState::Failed as u8 => ReplicaState::Failed,
+            x if x == ReplicaState::Degraded as u8 => ReplicaState::Degraded,
+            x if x == ReplicaState::Quarantined as u8 => ReplicaState::Quarantined,
             _ => ReplicaState::Stopped,
         }
     }
@@ -760,6 +915,38 @@ impl ReplicaStats {
 
     pub fn record_failure(&self) {
         self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_engine_error(&self) {
+        self.engine_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_forward_retry(&self) {
+        self.forward_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_request_failed(&self) {
+        self.requests_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn engine_errors(&self) -> u64 {
+        self.engine_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn forward_retries(&self) -> u64 {
+        self.forward_retries.load(Ordering::Relaxed)
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_failed(&self) -> u64 {
+        self.requests_failed.load(Ordering::Relaxed)
     }
 
     pub fn record_cancelled(&self) {
@@ -927,6 +1114,10 @@ impl ReplicaStats {
                 "trace_spans_dropped",
                 Json::num(self.trace_spans_dropped.load(Ordering::Relaxed) as f64),
             ),
+            ("engine_errors", Json::num(self.engine_errors() as f64)),
+            ("forward_retries", Json::num(self.forward_retries() as f64)),
+            ("restarts", Json::num(self.restarts() as f64)),
+            ("requests_failed", Json::num(self.requests_failed() as f64)),
         ])
     }
 }
@@ -1121,6 +1312,54 @@ mod tests {
                 "malformed line: {line:?}"
             );
         }
+    }
+
+    #[test]
+    fn fault_counters_on_both_surfaces() {
+        let m = Metrics::new();
+        m.record_engine_error(ErrorClass::Transient);
+        m.record_engine_error(ErrorClass::Transient);
+        m.record_engine_error(ErrorClass::LaneCorrupt);
+        m.record_engine_error(ErrorClass::Fatal);
+        m.record_forward_retry();
+        m.record_replica_restart();
+        m.record_request_failed();
+        assert_eq!(m.engine_errors(), (2, 1, 1));
+        let j = m.snapshot_json();
+        assert_eq!(j.get("engine_errors_transient").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            j.get("engine_errors_lane_corrupt").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(j.get("engine_errors_fatal").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("forward_retries").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("replica_restarts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("requests_failed").unwrap().as_f64(), Some(1.0));
+        let text = m.prometheus(&[]);
+        assert!(text.contains("asarm_engine_errors_total{class=\"transient\"} 2"));
+        assert!(text.contains("asarm_engine_errors_total{class=\"lane_corrupt\"} 1"));
+        assert!(text.contains("asarm_engine_errors_total{class=\"fatal\"} 1"));
+        assert!(text.contains("asarm_forward_retries_total 1"));
+        assert!(text.contains("asarm_replica_restarts_total 1"));
+        assert!(text.contains("asarm_requests_failed_total 1"));
+
+        let r = ReplicaStats::new(0);
+        r.record_engine_error();
+        r.record_forward_retry();
+        r.record_restart();
+        r.record_request_failed();
+        r.set_state(ReplicaState::Degraded);
+        let j = r.snapshot_json();
+        assert_eq!(j.get("state").unwrap().as_str(), Some("degraded"));
+        assert_eq!(j.get("engine_errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("forward_retries").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("restarts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("requests_failed").unwrap().as_f64(), Some(1.0));
+        r.set_state(ReplicaState::Quarantined);
+        assert_eq!(r.state(), ReplicaState::Quarantined);
+        assert!(r.state().is_serving());
+        r.set_state(ReplicaState::Failed);
+        assert!(!r.state().is_serving());
     }
 
     #[test]

@@ -54,7 +54,29 @@
 //! worker dies (e.g. all replicas fail to provision), the LAST one out
 //! closes the queue and fails any still-queued jobs so clients get an
 //! error instead of a hang.
+//!
+//! FAULT TOLERANCE (docs/ARCHITECTURE.md §Fault tolerance & supervision):
+//! the forward surface returns typed [`EngineError`]s, and a failed
+//! batched call no longer unwinds the worker. Transient and lane-corrupt
+//! failures put each slot the call was carrying through a per-slot retry
+//! ladder — lane reset + single-spec COMPACT relaunch of the same
+//! idempotent forward request, bit-identical because the failed call
+//! never reached the machine — spending a per-request retry budget whose
+//! exhaustion retires just that request with a typed error while
+//! batch-mates proceed; per-slot decode panics are contained the same
+//! way. A worker-local [`HealthTracker`] escalates consecutive failed
+//! batched calls Healthy → Degraded → Quarantined; a fatal error or a
+//! quarantine ends the engine INCARNATION — active slots get typed
+//! errors, queued requests stay queued — and the supervisor loop in
+//! [`spawn_pool`] re-provisions the replica through the pool factory (up
+//! to [`SupervisorPolicy::max_restarts`]) before declaring it Failed.
+//! Once every replica is lost, submission reports
+//! [`SubmitError::ReplicaLost`] and reclaims queued jobs with typed
+//! errors instead of stranding them. Deterministic fault injection for
+//! all of the above lives in [`crate::runtime::ChaosEngine`]
+//! (`--chaos-seed`/`--chaos-rate`).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -70,7 +92,10 @@ use crate::decode::{DecodeMachine, DecodeOutcome, IterPhase, IterStats};
 use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
 use crate::obs::{chrome, tap, Rung, SpanKind, SpanRecorder, TraceBuilder, DEFAULT_SPAN_CAP};
-use crate::runtime::{Engine, EnginePool, ForwardSpec, IncSpec, KvStats, PoolConfig};
+use crate::runtime::{
+    ChaosConfig, ChaosEngine, Engine, EngineError, EnginePool, ErrorClass, ForwardSpec, Health,
+    HealthPolicy, HealthTracker, IncSpec, KvStats, PoolConfig, SupervisorPolicy,
+};
 use crate::tokenizer::{ByteTokenizer, MASK};
 use crate::util::json::Json;
 use crate::util::mpmc;
@@ -112,6 +137,21 @@ pub struct SchedulerConfig {
     /// Completed traces retained PER REPLICA in its drop-oldest
     /// [`SpanRecorder`] ring (`--trace-capacity`).
     pub trace_capacity: usize,
+    /// Deterministic fault injection wrapped around every replica's
+    /// engine at provision time (`--chaos-seed`/`--chaos-rate`; docs/
+    /// ARCHITECTURE.md §Fault tolerance & supervision). The default zero
+    /// rate skips the wrapper entirely — no proxy on the hot path.
+    pub chaos: ChaosConfig,
+    /// Single-spec retry launches a request may spend over its lifetime
+    /// recovering from failed batched forwards; exhaustion retires the
+    /// request with a typed error while batch-mates proceed.
+    pub retry_budget: u32,
+    /// Consecutive-failure thresholds for the per-incarnation replica
+    /// health state machine (Healthy → Degraded → Quarantined).
+    pub health: HealthPolicy,
+    /// Re-provisioning budget and backoff for dead engine incarnations
+    /// (fatal errors, quarantines, worker panics, failed provisions).
+    pub supervisor: SupervisorPolicy,
 }
 
 impl Default for SchedulerConfig {
@@ -124,6 +164,10 @@ impl Default for SchedulerConfig {
             event_capacity: 256,
             trace: true,
             trace_capacity: 256,
+            chaos: ChaosConfig::default(),
+            retry_budget: 8,
+            health: HealthPolicy::default(),
+            supervisor: SupervisorPolicy::default(),
         }
     }
 }
@@ -149,6 +193,13 @@ pub enum SubmitError {
     /// The pool is gone; no request will ever be served again.
     #[error("scheduler shut down")]
     ShutDown,
+    /// Every replica DIED (provisioning and restart budgets exhausted)
+    /// rather than draining after an orderly shutdown; queued requests
+    /// were reclaimed and failed with typed errors instead of being
+    /// silently stranded. A server fault, unlike
+    /// [`SubmitError::ShutDown`] — but equally terminal for this pool.
+    #[error("all replicas lost; request cannot be served")]
+    ReplicaLost,
 }
 
 /// Cloneable handle for submitting requests to the worker pool.
@@ -186,7 +237,23 @@ impl SchedulerHandle {
                 self.metrics.record_shed();
                 Err(SubmitError::QueueFull(self.queue_depth))
             }
-            Err(mpmc::TrySendError::Closed(_)) => Err(SubmitError::ShutDown),
+            Err(mpmc::TrySendError::Closed(_)) => {
+                if self.tx.is_lost() {
+                    // The last receiver was DROPPED (every worker died)
+                    // rather than explicitly closed and drained: reclaim
+                    // whatever the dead pool left queued and fail each
+                    // job typed, so no client blocks on a reply that can
+                    // never come.
+                    for job in self.tx.reclaim() {
+                        self.metrics.record_request_failed();
+                        job.life
+                            .finish(Err(anyhow::Error::new(SubmitError::ReplicaLost)));
+                    }
+                    Err(SubmitError::ReplicaLost)
+                } else {
+                    Err(SubmitError::ShutDown)
+                }
+            }
         }
     }
 
@@ -231,6 +298,41 @@ impl SchedulerHandle {
     pub fn prometheus_text(&self) -> String {
         self.metrics.prometheus(&self.replicas)
     }
+
+    /// Pool liveness — the GET /healthz criterion: true while at least
+    /// one replica is serving or will serve again (Starting, Running,
+    /// Degraded, or Quarantined-pending-restart); false once every
+    /// replica is Stopped or Failed for good.
+    pub fn healthy(&self) -> bool {
+        self.replicas.iter().any(|r| r.state().is_serving())
+    }
+
+    /// The GET /healthz payload: overall status plus per-replica states
+    /// (the detail behind the 200/503 status code).
+    pub fn healthz_json(&self) -> Json {
+        let serving = self
+            .replicas
+            .iter()
+            .filter(|r| r.state().is_serving())
+            .count();
+        Json::obj(vec![
+            (
+                "status",
+                Json::str(if serving > 0 { "ok" } else { "unavailable" }),
+            ),
+            ("replicas_serving", Json::num(serving as f64)),
+            ("replicas_total", Json::num(self.replicas.len() as f64)),
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| Json::str(r.state().as_str()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 struct Slot {
@@ -245,6 +347,10 @@ struct Slot {
     n_targets: usize,
     /// Per-request span/counter accumulator; `None` with tracing off.
     trace: Option<TraceBuilder>,
+    /// Remaining single-spec retry launches for fault recovery
+    /// ([`SchedulerConfig::retry_budget`]); decremented per attempt,
+    /// never replenished.
+    retries: u32,
 }
 
 /// Spawn a single-replica scheduler. `factory` constructs the engine ON
@@ -257,12 +363,15 @@ where
     let cell = Mutex::new(Some(factory));
     spawn_pool(
         EnginePool::from_fn(PoolConfig { replicas: 1 }, move |_| {
-            let f = cell
-                .lock()
-                .unwrap()
-                .take()
-                .expect("single-replica factory invoked twice");
-            f()
+            // A second provision means the sole incarnation died; a
+            // FnOnce factory cannot rebuild it, so report an ordinary
+            // provisioning failure and let the supervisor retire the
+            // replica (panicking here would kill the worker thread
+            // mid-supervision and strand the queue).
+            match cell.lock().unwrap().take() {
+                Some(f) => f(),
+                None => bail!("single-replica factory already consumed"),
+            }
         }),
         cfg,
         metrics,
@@ -304,16 +413,52 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
                 };
                 let stats = &replicas[id];
                 let recorder = &recorders[id];
-                match pool.provision(id) {
-                    Ok(engine) => {
-                        stats.set_state(ReplicaState::Running);
-                        run_worker(engine.as_ref(), &rx, cfg, &metrics, stats, recorder);
-                        stats.set_state(ReplicaState::Stopped);
-                    }
-                    Err(e) => {
-                        eprintln!("scheduler-{id}: engine init failed: {e:#}");
+                // SUPERVISION: each pass provisions one engine
+                // INCARNATION and serves on it until the queue closes
+                // (orderly exit) or the incarnation dies — a fatal engine
+                // error, a health quarantine, a worker panic, or a failed
+                // provision. Dead incarnations are re-provisioned through
+                // the pool factory up to the restart budget; the
+                // admission queue survives every death, so queued
+                // requests simply wait for the next incarnation (or get
+                // picked up by a pool-mate).
+                let mut restarts_left = cfg.supervisor.max_restarts;
+                loop {
+                    let died = match pool.provision(id) {
+                        Ok(engine) => {
+                            let engine = ChaosEngine::wrap(engine, cfg.chaos);
+                            stats.set_state(ReplicaState::Running);
+                            match catch_unwind(AssertUnwindSafe(|| {
+                                run_worker(engine.as_ref(), &rx, cfg, &metrics, stats, recorder)
+                            })) {
+                                Ok(WorkerExit::Drained) => {
+                                    stats.set_state(ReplicaState::Stopped);
+                                    return;
+                                }
+                                Ok(WorkerExit::EngineDead) => "engine incarnation died",
+                                Err(_) => "worker panicked",
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("scheduler-{id}: engine init failed: {e:#}");
+                            "engine provisioning failed"
+                        }
+                    };
+                    if restarts_left == 0 {
+                        eprintln!(
+                            "scheduler-{id}: {died}; restart budget exhausted, replica failed"
+                        );
                         stats.set_state(ReplicaState::Failed);
+                        return;
                     }
+                    restarts_left -= 1;
+                    eprintln!(
+                        "scheduler-{id}: {died}; re-provisioning ({restarts_left} restarts left)"
+                    );
+                    metrics.record_replica_restart();
+                    stats.record_restart();
+                    stats.set_state(ReplicaState::Starting);
+                    thread::sleep(cfg.supervisor.restart_backoff);
                 }
             })
             .expect("spawn scheduler worker");
@@ -447,7 +592,7 @@ fn push_kv_stats(
 /// outputs (enforced by the bit-identity tests below).
 fn absorb_traced(
     slot: &mut Slot,
-    rows: &[Vec<f32>],
+    rows: &[f32],
     fwd_dur_us: u64,
     rung: Option<Rung>,
     batch: usize,
@@ -498,6 +643,214 @@ fn absorb_traced(
     }
 }
 
+/// Why [`run_worker`] returned control to the supervisor.
+enum WorkerExit {
+    /// The admission queue closed and every slot drained: orderly exit,
+    /// the replica is done for good.
+    Drained,
+    /// The engine incarnation died (fatal forward error or health
+    /// quarantine); active slots were failed typed, queued requests are
+    /// untouched, and the supervisor decides whether to re-provision.
+    EngineDead,
+}
+
+/// Retire a slot that failed SERVER-SIDE (retry exhaustion, wedged
+/// machine, contained decode panic, incarnation death): book the failure
+/// on both metric surfaces, publish the partial trace, and deliver the
+/// typed error with progress context. The `EngineError` root (when there
+/// is one) stays downcastable through the added context.
+fn retire_failed(
+    mut slot: Slot,
+    err: anyhow::Error,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+    recorder: &SpanRecorder,
+) {
+    metrics.record_failure();
+    stats.record_failure();
+    metrics.record_request_failed();
+    stats.record_request_failed();
+    let s = slot.machine.iter_stats();
+    finish_trace(
+        slot.trace.take(),
+        false,
+        s,
+        String::new(),
+        metrics,
+        stats,
+        recorder,
+    );
+    let (committed, targets) = (slot.committed, slot.n_targets);
+    slot.life.finish(Err(err.context(format!(
+        "request failed after {committed}/{targets} tokens"
+    ))));
+}
+
+/// How one slot's retry ladder ended.
+enum SlotRecovery {
+    /// A retry launch delivered rows and the machine absorbed them; the
+    /// slot continues exactly as if the batched call had served it.
+    Recovered,
+    /// The retry budget ran out (or the machine wedged mid-recovery);
+    /// retire the slot with this typed error.
+    Exhausted(EngineError),
+    /// A retry surfaced a fatal error: the incarnation is dead.
+    Fatal(EngineError),
+}
+
+/// Retry one slot after its batched forward failed, down the ladder:
+/// reset the (possibly corrupt) lane, re-issue the SAME forward request
+/// as a single-spec COMPACT launch, absorb on success. The failed batched
+/// call never reached the machine (faults are injected/raised before any
+/// absorb), and `DecodeMachine::forward_request` is idempotent between
+/// absorbs, so a successful retry yields exactly the rows the batched
+/// call would have — recovery is bit-identical, and Theorem-2 NFE
+/// accounting is untouched (machine NFE counts absorbs, not launches).
+/// The lane reset is safe mid-request: the incremental path rebuilds the
+/// lane by catch-up on its next iteration, and sealed prefixes are
+/// bit-equivalent to recompute (docs/ARCHITECTURE.md §Paged KV & prefix
+/// cache).
+fn recover_slot(
+    engine: &dyn Engine,
+    lane: usize,
+    slot: &mut Slot,
+    cause: &EngineError,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+) -> SlotRecovery {
+    let mut last = cause.clone();
+    loop {
+        if slot.retries == 0 {
+            return SlotRecovery::Exhausted(last);
+        }
+        slot.retries -= 1;
+        metrics.record_forward_retry();
+        stats.record_forward_retry();
+        // Drop whatever the failed call (or the fault itself) left in
+        // this lane's cache; the compact retry reads no lane state.
+        engine.reset_lane(lane);
+        let (result, dur_us) = {
+            let Some(spec) = slot.machine.forward_request() else {
+                // An active machine stopped requesting work mid-recovery:
+                // its state machine is wedged — retire it, not the worker.
+                return SlotRecovery::Exhausted(EngineError::lane_corrupt(
+                    lane,
+                    "machine stopped requesting forwards during recovery",
+                ));
+            };
+            let t = Instant::now();
+            let rows = engine.forward_ord(std::slice::from_ref(&spec));
+            (
+                rows,
+                t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64,
+            )
+        };
+        match result {
+            Ok(rows) => match rows.into_iter().next() {
+                Some(seq_rows) => {
+                    let rung = tap::take_rung();
+                    absorb_traced(slot, &seq_rows, dur_us, rung, 1);
+                    return SlotRecovery::Recovered;
+                }
+                None => {
+                    tap::reset();
+                    last = EngineError::transient("retry launch returned no rows");
+                }
+            },
+            Err(e) => {
+                tap::reset();
+                metrics.record_engine_error(e.class());
+                stats.record_engine_error();
+                if e.class() == ErrorClass::Fatal {
+                    return SlotRecovery::Fatal(e);
+                }
+                last = e;
+            }
+        }
+    }
+}
+
+/// Put every slot a failed batched call was carrying through the retry
+/// ladder. Recovered slots continue in place; exhausted ones retire with
+/// the typed error; a fatal retry error aborts the sweep and marks the
+/// incarnation dead (remaining slots are failed by the teardown path).
+#[allow(clippy::too_many_arguments)]
+fn recover_lanes(
+    engine: &dyn Engine,
+    lanes: &mut [Option<Slot>],
+    idx: &[usize],
+    cause: &EngineError,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+    recorder: &SpanRecorder,
+    engine_dead: &mut Option<EngineError>,
+) {
+    for &lane in idx {
+        if engine_dead.is_some() {
+            return;
+        }
+        let outcome = match lanes[lane].as_mut() {
+            Some(slot) => recover_slot(engine, lane, slot, cause, metrics, stats),
+            None => continue,
+        };
+        match outcome {
+            SlotRecovery::Recovered => {}
+            SlotRecovery::Exhausted(e) => {
+                if let Some(slot) = lanes[lane].take() {
+                    engine.reset_lane(lane);
+                    retire_failed(
+                        slot,
+                        anyhow::Error::new(e).context("retry budget exhausted"),
+                        metrics,
+                        stats,
+                        recorder,
+                    );
+                }
+            }
+            SlotRecovery::Fatal(e) => *engine_dead = Some(e),
+        }
+    }
+}
+
+/// Absorb one slot's rows with PANIC CONTAINMENT: a decode-machine panic
+/// is a bug in that request's state machine, not in its batch-mates — the
+/// slot is retired with a typed error and the worker (and every other
+/// lane) keeps serving. `AssertUnwindSafe` is sound because the panicking
+/// slot is retired immediately: its possibly-inconsistent machine state
+/// is never observed again.
+#[allow(clippy::too_many_arguments)]
+fn absorb_contained(
+    engine: &dyn Engine,
+    lanes: &mut [Option<Slot>],
+    lane: usize,
+    rows: &[f32],
+    dur_us: u64,
+    rung: Option<Rung>,
+    batch: usize,
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+    recorder: &SpanRecorder,
+) {
+    let Some(slot) = lanes[lane].as_mut() else {
+        return;
+    };
+    let absorbed = catch_unwind(AssertUnwindSafe(|| {
+        absorb_traced(slot, rows, dur_us, rung, batch)
+    }));
+    if absorbed.is_err() {
+        if let Some(slot) = lanes[lane].take() {
+            engine.reset_lane(lane);
+            retire_failed(
+                slot,
+                anyhow::Error::new(EngineError::lane_corrupt(lane, "decode step panicked")),
+                metrics,
+                stats,
+                recorder,
+            );
+        }
+    }
+}
+
 /// One worker's continuous-batching loop over its private engine replica.
 fn run_worker(
     engine: &dyn Engine,
@@ -506,8 +859,12 @@ fn run_worker(
     metrics: &Metrics,
     stats: &ReplicaStats,
     recorder: &SpanRecorder,
-) {
+) -> WorkerExit {
     let tok = ByteTokenizer::new();
+    // Health is per-incarnation: a fresh tracker each time the supervisor
+    // provisions an engine, so a past incarnation's error streak cannot
+    // poison its replacement.
+    let mut health = HealthTracker::new(cfg.health);
     // Engines record rung/prefix-probe notes into thread-locals (each
     // engine is owned by exactly this thread); start from a clean slate
     // so a prior occupant of the thread cannot leak notes into our first
@@ -588,10 +945,28 @@ fn run_worker(
             });
             match admit(engine, &tok, job.request, cfg.default_draft) {
                 Ok(AdmitResult::Slot(machine, text_len, n_targets)) => {
-                    let lane = lanes
-                        .iter()
-                        .position(|s| s.is_none())
-                        .expect("admission loop guarantees a free lane");
+                    // The admission loop's guard guarantees a free lane;
+                    // if that invariant ever breaks, it must cost this
+                    // one request a typed error, not the worker its life
+                    // (the old `.expect` here unwound the whole replica).
+                    let Some(lane) = lanes.iter().position(|s| s.is_none()) else {
+                        metrics.record_failure();
+                        stats.record_failure();
+                        metrics.record_request_failed();
+                        stats.record_request_failed();
+                        finish_trace(
+                            trace,
+                            false,
+                            IterStats::default(),
+                            String::new(),
+                            metrics,
+                            stats,
+                            recorder,
+                        );
+                        job.life
+                            .finish(Err(anyhow!("internal: no free lane at admission")));
+                        continue;
+                    };
                     // Lane handoff: whatever the previous occupant left in
                     // the engine-side cache is dropped BEFORE the new
                     // request can issue a forward from this lane.
@@ -611,6 +986,7 @@ fn run_worker(
                         text_len,
                         n_targets,
                         trace,
+                        retries: cfg.retry_budget,
                     });
                 }
                 Ok(AdmitResult::Immediate(mut resp)) => {
@@ -654,7 +1030,7 @@ fn run_worker(
         for lane in 0..lanes.len() {
             let aborted = lanes[lane].as_ref().and_then(|s| s.life.abort_reason());
             if let Some(reason) = aborted {
-                let slot = lanes[lane].take().expect("checked above");
+                let Some(slot) = lanes[lane].take() else { continue };
                 engine.reset_lane(lane);
                 abort_slot(slot, reason, metrics, stats, recorder);
             }
@@ -684,20 +1060,26 @@ fn run_worker(
         let mut inc_rung = None;
         let mut ord_rung = None;
         let mut probes: Vec<(usize, bool)> = Vec::new();
-        let (inc_idx, ord_idx, result) = {
+        let mut batch_errors = 0u32;
+        let (inc_idx, ord_idx, wedged, inc_result, ord_result) = {
             let mut inc_specs: Vec<IncSpec<'_>> = Vec::new();
             let mut inc_idx: Vec<usize> = Vec::new();
             let mut ord_specs: Vec<ForwardSpec<'_>> = Vec::new();
             let mut ord_idx: Vec<usize> = Vec::new();
+            let mut wedged: Vec<usize> = Vec::new();
             for (lane, slot) in lanes.iter_mut().enumerate() {
                 let Some(slot) = slot.as_mut() else { continue };
                 // Read the commit level BEFORE the request borrows the
                 // machine (it describes the state the request is from).
                 let committed = slot.machine.incremental();
-                let spec = slot
-                    .machine
-                    .forward_request()
-                    .expect("active machine must request a forward");
+                // An active, un-done machine that requests no forward is
+                // WEDGED (a DecodeMachine contract violation): retire
+                // just that slot below — the old `.expect` here took the
+                // whole worker, and every batch-mate, down with it.
+                let Some(spec) = slot.machine.forward_request() else {
+                    wedged.push(lane);
+                    continue;
+                };
                 match committed {
                     Some(committed) if native_inc => {
                         inc_idx.push(lane);
@@ -713,59 +1095,167 @@ fn run_worker(
                     }
                 }
             }
-            let result = (|| -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
-                let inc_rows = if inc_specs.is_empty() {
-                    vec![]
-                } else {
-                    let t = Instant::now();
-                    let rows = engine.forward_inc(&inc_specs)?;
-                    inc_dur_us = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
-                    inc_rung = tap::take_rung();
-                    tap::take_prefix_probes(&mut probes);
-                    rows
-                };
-                let ord_rows = if ord_specs.is_empty() {
-                    vec![]
-                } else {
-                    let t = Instant::now();
-                    let rows = engine.forward_ord(&ord_specs)?;
-                    ord_dur_us = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
-                    ord_rung = tap::take_rung();
-                    rows
-                };
-                Ok((inc_rows, ord_rows))
-            })();
-            (inc_idx, ord_idx, result)
+            // The two batched calls run — and fail — INDEPENDENTLY: a
+            // fault on the incremental path must not cost the compact
+            // path its launch (or vice versa). Fault isolation starts at
+            // the call boundary.
+            let inc_result = if inc_specs.is_empty() {
+                Ok(Vec::new())
+            } else {
+                let t = Instant::now();
+                let rows = engine.forward_inc(&inc_specs);
+                inc_dur_us = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+                match &rows {
+                    Ok(_) => {
+                        inc_rung = tap::take_rung();
+                        tap::take_prefix_probes(&mut probes);
+                    }
+                    // A half-executed call may have left rung/probe
+                    // notes; drop them so they cannot attach to the next
+                    // launch's spans.
+                    Err(_) => tap::reset(),
+                }
+                rows
+            };
+            let ord_result = if ord_specs.is_empty() {
+                Ok(Vec::new())
+            } else {
+                let t = Instant::now();
+                let rows = engine.forward_ord(&ord_specs);
+                ord_dur_us = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+                match &rows {
+                    Ok(_) => ord_rung = tap::take_rung(),
+                    Err(_) => tap::reset(),
+                }
+                rows
+            };
+            (inc_idx, ord_idx, wedged, inc_result, ord_result)
         };
-        let (inc_rows, ord_rows) = match result {
-            Ok(r) => r,
+        // Wedged machines retire alone; their batch-mates proceed.
+        for lane in wedged {
+            if let Some(slot) = lanes[lane].take() {
+                engine.reset_lane(lane);
+                retire_failed(
+                    slot,
+                    anyhow::Error::new(EngineError::lane_corrupt(
+                        lane,
+                        "active machine is neither done nor requesting a forward",
+                    )),
+                    metrics,
+                    stats,
+                    recorder,
+                );
+            }
+        }
+        // --- fault isolation: a failed batched call no longer unwinds
+        //     the worker (or its batch-mates). Transient and lane-corrupt
+        //     failures put every slot the call carried through the
+        //     per-slot retry ladder; a fatal failure (or a quarantine,
+        //     below) ends the incarnation and hands the replica to the
+        //     supervisor. ---
+        let mut engine_dead: Option<EngineError> = None;
+        let inc_rows = match inc_result {
+            Ok(rows) => rows,
             Err(e) => {
-                // Engine failure: fail this worker's active requests; the
-                // queue (and other replicas) keep serving. Clear the taps
-                // so a half-executed batch cannot leak notes forward.
-                tap::reset();
-                for (lane, cell) in lanes.iter_mut().enumerate() {
-                    if let Some(mut slot) = cell.take() {
-                        engine.reset_lane(lane);
-                        metrics.record_failure();
-                        stats.record_failure();
-                        let s = slot.machine.iter_stats();
-                        finish_trace(
-                            slot.trace.take(),
-                            false,
-                            s,
-                            String::new(),
+                batch_errors += 1;
+                metrics.record_engine_error(e.class());
+                stats.record_engine_error();
+                if e.class() == ErrorClass::Fatal {
+                    engine_dead = Some(e);
+                } else {
+                    recover_lanes(
+                        engine,
+                        &mut lanes,
+                        &inc_idx,
+                        &e,
+                        metrics,
+                        stats,
+                        recorder,
+                        &mut engine_dead,
+                    );
+                }
+                Vec::new()
+            }
+        };
+        let ord_rows = match ord_result {
+            Ok(rows) => {
+                if engine_dead.is_some() {
+                    // A fatal error on the other path killed the
+                    // incarnation; these rows die with it (their slots
+                    // are failed typed by the teardown below).
+                    Vec::new()
+                } else {
+                    rows
+                }
+            }
+            Err(e) => {
+                batch_errors += 1;
+                metrics.record_engine_error(e.class());
+                stats.record_engine_error();
+                if engine_dead.is_none() {
+                    if e.class() == ErrorClass::Fatal {
+                        engine_dead = Some(e);
+                    } else {
+                        recover_lanes(
+                            engine,
+                            &mut lanes,
+                            &ord_idx,
+                            &e,
                             metrics,
                             stats,
                             recorder,
+                            &mut engine_dead,
                         );
-                        slot.life.finish(Err(anyhow!("engine error: {e:#}")));
                     }
                 }
-                continue;
+                Vec::new()
             }
         };
-        debug_assert_eq!(inc_rows.len() + ord_rows.len(), b);
+        // --- health: consecutive failed batched calls escalate
+        //     Healthy → Degraded → Quarantined; any clean iteration
+        //     recovers the streak. Mirrored into the shared replica
+        //     state for GET /healthz and GET /replicas. ---
+        if batch_errors == 0 {
+            health.record_success();
+        } else {
+            for _ in 0..batch_errors {
+                health.record_error();
+            }
+        }
+        match health.health() {
+            Health::Healthy => stats.set_state(ReplicaState::Running),
+            Health::Degraded => stats.set_state(ReplicaState::Degraded),
+            Health::Quarantined => {
+                if engine_dead.is_none() {
+                    engine_dead = Some(EngineError::fatal(
+                        "replica quarantined: consecutive batched-forward failures \
+                         crossed the health policy's quarantine threshold",
+                    ));
+                }
+            }
+        }
+        if let Some(cause) = engine_dead {
+            // The incarnation is gone: fail the slots it was carrying
+            // (typed, with partial progress), clear the taps, and hand
+            // the replica to the supervisor. Queued requests are
+            // untouched — the next incarnation (or a pool-mate) admits
+            // them.
+            tap::reset();
+            stats.set_state(ReplicaState::Quarantined);
+            for (lane, cell) in lanes.iter_mut().enumerate() {
+                if let Some(slot) = cell.take() {
+                    engine.reset_lane(lane);
+                    retire_failed(
+                        slot,
+                        anyhow::Error::new(cause.clone()).context("engine incarnation lost"),
+                        metrics,
+                        stats,
+                        recorder,
+                    );
+                }
+            }
+            return WorkerExit::EngineDead;
+        }
         // Prefix-probe attribution: the engine noted (lane, hit) at every
         // prefix-cache lookup this batch; fold each into its slot's trace.
         for (lane, hit) in probes.drain(..) {
@@ -778,12 +1268,32 @@ fn run_worker(
             }
         }
         for (seq_rows, &lane) in inc_rows.iter().zip(&inc_idx) {
-            let slot = lanes[lane].as_mut().expect("routed lane");
-            absorb_traced(slot, seq_rows, inc_dur_us, inc_rung, inc_idx.len());
+            absorb_contained(
+                engine,
+                &mut lanes,
+                lane,
+                seq_rows,
+                inc_dur_us,
+                inc_rung,
+                inc_idx.len(),
+                metrics,
+                stats,
+                recorder,
+            );
         }
         for (seq_rows, &lane) in ord_rows.iter().zip(&ord_idx) {
-            let slot = lanes[lane].as_mut().expect("routed lane");
-            absorb_traced(slot, seq_rows, ord_dur_us, ord_rung, ord_idx.len());
+            absorb_contained(
+                engine,
+                &mut lanes,
+                lane,
+                seq_rows,
+                ord_dur_us,
+                ord_rung,
+                ord_idx.len(),
+                metrics,
+                stats,
+                recorder,
+            );
         }
 
         // --- stream freshly accepted tokens (TTFT/ITL bookkeeping) ---
@@ -821,7 +1331,9 @@ fn run_worker(
             if !done {
                 continue;
             }
-            let mut slot = lanes[lane].take().expect("checked above");
+            let Some(mut slot) = lanes[lane].take() else {
+                continue;
+            };
             engine.reset_lane(lane);
             // A machine can finish on the very iteration its client
             // lagged (final commit dropped, cancel flipped) or
@@ -882,6 +1394,7 @@ fn run_worker(
         //     closing seal (prefix-cache insert) is visible immediately.
         push_kv_stats(engine, metrics, stats, &mut last_kv);
     }
+    WorkerExit::Drained
 }
 
 enum AdmitResult {
@@ -1914,5 +2427,317 @@ mod tests {
         assert!(!t.completed);
         assert!(t.theorem2_ok, "incomplete traces never flag Theorem 2");
         assert!(t.tokens_committed >= 1, "partial progress folded in");
+    }
+
+    // --- fault tolerance: retries, budgets, supervision -------------------
+
+    use crate::runtime::EngineResult;
+
+    /// An engine that fails every forward with a TRANSIENT error; used to
+    /// drive the retry ladder to exhaustion without killing the worker.
+    struct BrokenEngine;
+
+    impl Engine for BrokenEngine {
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn vocab(&self) -> usize {
+            258
+        }
+        fn forward(
+            &self,
+            _batch: usize,
+            _tokens: &[u32],
+            _mask_h: &[f32],
+            _mask_g: &[f32],
+        ) -> EngineResult<Vec<f32>> {
+            Err(EngineError::transient("broken by construction"))
+        }
+        fn forward_ord(&self, _specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+            Err(EngineError::transient("broken by construction"))
+        }
+        fn nfe(&self) -> u64 {
+            0
+        }
+    }
+
+    /// An engine that fails every forward FATALLY: the incarnation dies
+    /// on first use and the supervisor takes over.
+    struct FatalEngine;
+
+    impl Engine for FatalEngine {
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn vocab(&self) -> usize {
+            258
+        }
+        fn forward(
+            &self,
+            _batch: usize,
+            _tokens: &[u32],
+            _mask_h: &[f32],
+            _mask_g: &[f32],
+        ) -> EngineResult<Vec<f32>> {
+            Err(EngineError::fatal("device lost (test)"))
+        }
+        fn forward_ord(&self, _specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+            Err(EngineError::fatal("device lost (test)"))
+        }
+        fn nfe(&self) -> u64 {
+            0
+        }
+    }
+
+    #[test]
+    fn healthz_reports_serving_pool() {
+        let (h, _) = mock_handle(1);
+        assert!(h.healthy());
+        let j = h.healthz_json();
+        assert_eq!(j.get("replicas_total").and_then(|v| v.as_f64()), Some(1.0));
+        let body = j.to_string();
+        assert!(body.contains("ok"), "{body}");
+    }
+
+    /// THE HEADLINE PROPERTY: under injected transient faults every
+    /// request completes BIT-IDENTICAL to the fault-free run, machine
+    /// NFE accounting (the Theorem-2 bound) is untouched by retries, all
+    /// failures are typed and counted, and no worker dies. Deterministic:
+    /// the chaos schedule is a pure function of (seed, call index) and
+    /// requests are serialized, so a green run can never flake.
+    #[test]
+    fn injected_faults_recover_bit_identical_with_typed_counters() {
+        let handle_at = |rate: f64| {
+            let metrics = Metrics::new();
+            let h = spawn(
+                move || Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>),
+                SchedulerConfig {
+                    max_batch: 2,
+                    idle_poll: Duration::from_millis(5),
+                    chaos: ChaosConfig {
+                        seed: 71,
+                        rate,
+                        spike: Duration::from_micros(50),
+                    },
+                    retry_budget: 64,
+                    // Supervision is covered by its own tests; here the
+                    // incarnation must survive the whole soak.
+                    health: HealthPolicy {
+                        degrade_after: 3,
+                        quarantine_after: 1_000_000,
+                    },
+                    ..Default::default()
+                },
+                metrics.clone(),
+            );
+            (h, metrics)
+        };
+        let (clean, _) = handle_at(0.0);
+        let (chaos, metrics) = handle_at(0.35);
+        for sampler in SamplerKind::ALL {
+            for seed in [1u64, 2, 3] {
+                let req = || InfillRequest {
+                    text: "ab______cd".into(),
+                    sampler,
+                    seed,
+                    ..Default::default()
+                };
+                let want = clean.infill(req()).unwrap();
+                let got = chaos.infill(req()).unwrap();
+                assert_eq!(
+                    got.text,
+                    want.text,
+                    "{} seed {seed}: recovery must be bit-identical",
+                    sampler.name()
+                );
+                assert_eq!(
+                    got.model_nfe, want.model_nfe,
+                    "machine NFE accounting must ignore failed launches"
+                );
+            }
+        }
+        let (transient, lane_corrupt, fatal) = metrics.engine_errors();
+        assert!(transient + lane_corrupt > 0, "rate-0.35 chaos never injected");
+        assert_eq!(fatal, 0);
+        assert!(metrics.forward_retries() > 0, "no retry ever ran");
+        assert_eq!(metrics.requests_failed(), 0, "a retry budget exhausted");
+        assert_eq!(metrics.replica_restarts(), 0, "a worker died under chaos");
+        assert_eq!(metrics.theorem2_violations(), 0);
+    }
+
+    /// Retry-budget exhaustion retires the REQUEST (typed error, counted)
+    /// while the worker survives to serve — and report health for — the
+    /// next request.
+    #[test]
+    fn retry_budget_exhaustion_fails_request_typed_and_worker_survives() {
+        let metrics = Metrics::new();
+        let h = spawn(
+            || Ok(Box::new(BrokenEngine) as Box<dyn Engine>),
+            SchedulerConfig {
+                max_batch: 2,
+                idle_poll: Duration::from_millis(5),
+                retry_budget: 2,
+                health: HealthPolicy {
+                    degrade_after: 2,
+                    quarantine_after: 1_000_000,
+                },
+                ..Default::default()
+            },
+            metrics.clone(),
+        );
+        let req = || InfillRequest {
+            text: "ab____cd".into(),
+            seed: 9,
+            ..Default::default()
+        };
+        let err = format!("{:#}", h.infill(req()).unwrap_err());
+        assert!(err.contains("retry budget exhausted"), "{err}");
+        assert!(err.contains("transient"), "typed root lost: {err}");
+        // 1 batched failure + 2 failed retries, all transient.
+        assert_eq!(metrics.engine_errors(), (3, 0, 0));
+        assert_eq!(metrics.forward_retries(), 2);
+        assert_eq!(metrics.requests_failed(), 1);
+        // The worker is still alive and keeps serving (and failing)…
+        assert!(h.infill(req()).is_err());
+        assert_eq!(metrics.requests_failed(), 2);
+        assert_eq!(metrics.replica_restarts(), 0);
+        // …and two consecutive failed batched calls surface as Degraded.
+        assert_eq!(h.replica_stats()[0].state().as_str(), "degraded");
+        assert!(h.healthy(), "degraded still serves");
+    }
+
+    /// Supervised restart: a fatally dying first incarnation fails its
+    /// in-flight request typed, then the supervisor re-provisions through
+    /// the pool factory and the NEXT request succeeds end to end.
+    #[test]
+    fn fatal_engine_death_triggers_supervised_restart_and_recovery() {
+        let metrics = Metrics::new();
+        let built = Arc::new(AtomicUsize::new(0));
+        let b2 = Arc::clone(&built);
+        let pool = EnginePool::from_fn(PoolConfig { replicas: 1 }, move |_| {
+            if b2.fetch_add(1, AtomicOrdering::SeqCst) == 0 {
+                Ok(Box::new(FatalEngine) as Box<dyn Engine>)
+            } else {
+                Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>)
+            }
+        });
+        let h = spawn_pool(
+            pool,
+            SchedulerConfig {
+                max_batch: 2,
+                idle_poll: Duration::from_millis(5),
+                ..Default::default()
+            },
+            metrics.clone(),
+        );
+        let req = || InfillRequest {
+            text: "ab____cd".into(),
+            seed: 4,
+            ..Default::default()
+        };
+        let err = format!("{:#}", h.infill(req()).unwrap_err());
+        assert!(err.contains("engine incarnation lost"), "{err}");
+        assert!(err.contains("fatal"), "typed root lost: {err}");
+        // The supervisor re-provisions; incarnation 2 serves normally.
+        let resp = h.infill(req()).unwrap();
+        assert!(!resp.text.contains('_'), "unfilled masks: {}", resp.text);
+        assert_eq!(built.load(AtomicOrdering::SeqCst), 2);
+        assert_eq!(metrics.replica_restarts(), 1);
+        assert_eq!(h.replica_stats()[0].restarts(), 1);
+        assert!(h.healthy());
+    }
+
+    /// When every replica is permanently lost, submission surfaces the
+    /// typed [`SubmitError::ReplicaLost`] (not a generic shutdown, never
+    /// a hang) and /healthz goes unhealthy.
+    #[test]
+    fn pool_death_surfaces_replica_lost() {
+        let metrics = Metrics::new();
+        let pool = EnginePool::from_fn(PoolConfig { replicas: 2 }, |id| {
+            bail!("replica {id} down")
+        });
+        let h = spawn_pool(
+            pool,
+            SchedulerConfig {
+                supervisor: SupervisorPolicy {
+                    max_restarts: 0,
+                    restart_backoff: Duration::from_millis(1),
+                },
+                ..Default::default()
+            },
+            metrics,
+        );
+        let req = || InfillRequest {
+            text: "ab__".into(),
+            ..Default::default()
+        };
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match h.submit(req()) {
+                Err(SubmitError::ReplicaLost) => break,
+                // Submitted before the pool finished dying: the last
+                // guard drains it with an error. ShutDown can only show
+                // in the instants between the explicit close and the
+                // final receiver drop — keep polling through both.
+                Ok(handle) => {
+                    let _ = handle.wait();
+                }
+                Err(SubmitError::ShutDown) => {}
+                Err(SubmitError::QueueFull(_)) => {}
+            }
+            assert!(Instant::now() < deadline, "never observed ReplicaLost");
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!h.healthy(), "a dead pool must report unhealthy");
+        let body = h.healthz_json().to_string();
+        assert!(body.contains("unavailable"), "{body}");
+    }
+
+    /// A decode-machine panic is contained to its own slot: the slot is
+    /// retired with a typed error, counters tick, and the lane frees —
+    /// nothing unwinds past the absorb.
+    #[test]
+    fn machine_panic_is_contained_to_its_slot() {
+        struct PanicMachine;
+        impl DecodeMachine for PanicMachine {
+            fn done(&self) -> bool {
+                false
+            }
+            fn forward_request(&mut self) -> Option<crate::decode::ForwardRequest<'_>> {
+                None
+            }
+            fn absorb(&mut self, _logits: &[f32]) {
+                panic!("machine bug (test)");
+            }
+            fn outcome(self: Box<Self>) -> DecodeOutcome {
+                unreachable!("a panicked machine is never asked for its outcome")
+            }
+        }
+        let engine = MockEngine::new(3, 16, 258, 1.0);
+        let metrics = Metrics::new();
+        let stats = ReplicaStats::new(0);
+        let recorder = SpanRecorder::new(8);
+        let (life, handle) = lifecycle::channel(None, 16, 1);
+        let t0 = Instant::now();
+        let mut lanes: Vec<Option<Slot>> = vec![Some(Slot {
+            machine: Box::new(PanicMachine),
+            life,
+            t0,
+            last_commit: t0,
+            committed: 0,
+            text_len: 4,
+            n_targets: 2,
+            trace: None,
+            retries: 0,
+        })];
+        let rows = vec![0.0f32; 258];
+        absorb_contained(
+            &engine, &mut lanes, 0, &rows, 0, None, 1, &metrics, &stats, &recorder,
+        );
+        assert!(lanes[0].is_none(), "panicking slot must be retired");
+        let err = format!("{:#}", handle.wait().unwrap_err());
+        assert!(err.contains("panicked"), "{err}");
+        assert_eq!(metrics.requests_failed(), 1);
+        assert_eq!(stats.requests_failed(), 1);
     }
 }

@@ -16,7 +16,7 @@ use asarm::data::masking::{MaskRateSchedule, OrderProtocol, PromptDist};
 use asarm::data::{pack_chunks, split_chunks, stories};
 use asarm::draft::{DraftKind, DraftOptions};
 use asarm::runtime::engine::TrainRunner;
-use asarm::runtime::{PagedKvConfig, PoolConfig, XlaEngine};
+use asarm::runtime::{ChaosConfig, PagedKvConfig, PoolConfig, XlaEngine};
 use asarm::train::TrainConfig;
 use asarm::util::args::Args;
 use asarm::util::rng::Rng;
@@ -38,6 +38,11 @@ const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
          Default on; 'off' drops the builders for zero overhead)
          --trace-capacity 256 (retired traces retained per replica;
          the ring drops oldest first)
+         --chaos-rate 0.0     (deterministic fault injection: per-call
+         fault probability wrapped around every replica's engine;
+         0 disables. For chaos drills, not production)
+         --chaos-seed 0       (fault-schedule seed; same seed + rate
+         = same fault sequence)
   train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
          --protocol lattice|permutation --prompt-lo F --prompt-hi F
          --out CKPT.bin --seed S
@@ -109,6 +114,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             event_capacity: args.usize("event-buffer", 256).max(8),
             trace: args.str("trace", "on") != "off",
             trace_capacity: args.usize("trace-capacity", 256).max(1),
+            chaos: ChaosConfig {
+                seed: args.u64("chaos-seed", 0),
+                rate: args.f64("chaos-rate", 0.0),
+                ..Default::default()
+            },
             ..Default::default()
         },
         metrics.clone(),

@@ -1,0 +1,343 @@
+//! Deterministic chaos injection around any [`Engine`].
+//!
+//! [`ChaosEngine`] wraps an inner engine and injects a SEEDED fault
+//! schedule into the forward surface: transient failures, latency
+//! spikes, lane-cache invalidation, and allocation exhaustion (the
+//! [`FaultKind`] taxonomy). The schedule is a pure function of
+//! `(seed, call index)` — no wall clock, no global RNG — so a soak run
+//! is exactly reproducible from its seed, and the scheduler's recovery
+//! ladder can be asserted BIT-IDENTICAL against a fault-free reference
+//! run (`rust/tests/chaos_soak.rs`).
+//!
+//! Faults are injected BEFORE delegating to the inner engine, so a
+//! failed call leaves inner state (NFE counters, cache lanes) exactly
+//! as it was — the property that makes retries bit-identical and keeps
+//! Theorem-2 NFE accounting honest. The two exceptions are deliberate:
+//! a latency spike sleeps and then serves the call normally (the output
+//! must be unaffected), and a lane invalidation resets the victim lane
+//! through the inner engine's own `reset_lane` (a legitimate retire:
+//! sealed prefixes stay bit-equivalent to recompute) before failing the
+//! call with [`EngineError::LaneCorrupt`].
+//!
+//! Enabled in the serve binary via `--chaos-seed S --chaos-rate F`.
+
+use std::cell::Cell;
+use std::time::Duration;
+
+use crate::util::rng::splitmix64;
+
+use super::error::{EngineError, EngineResult, FaultKind};
+use super::paged::KvStats;
+use super::{Engine, ForwardSpec, IncSpec};
+
+/// Seeded fault-schedule parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    /// Schedule seed: same seed + same call sequence = same faults.
+    pub seed: u64,
+    /// Per-forward-call fault probability in `[0, 1]`; `0.0` disables
+    /// injection entirely (the wrapper becomes a transparent proxy).
+    pub rate: f64,
+    /// Sleep length for [`FaultKind::LatencySpike`] faults.
+    pub spike: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0,
+            rate: 0.0,
+            spike: Duration::from_millis(1),
+        }
+    }
+}
+
+impl ChaosConfig {
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+}
+
+/// An [`Engine`] wrapper that injects the seeded fault schedule of its
+/// [`ChaosConfig`] into every forward call. All non-forward methods
+/// delegate untouched. Thread-pinned like every engine (`Cell`, not
+/// atomics, for the call counter).
+pub struct ChaosEngine {
+    inner: Box<dyn Engine>,
+    cfg: ChaosConfig,
+    /// Forward calls seen so far — the schedule's clock.
+    calls: Cell<u64>,
+    /// Faults injected so far, indexed by [`FaultKind`] discriminant
+    /// (transient, spike, lane, alloc).
+    injected: Cell<[u64; 4]>,
+}
+
+impl ChaosEngine {
+    pub fn new(inner: Box<dyn Engine>, cfg: ChaosConfig) -> ChaosEngine {
+        ChaosEngine {
+            inner,
+            cfg,
+            calls: Cell::new(0),
+            injected: Cell::new([0; 4]),
+        }
+    }
+
+    /// Wrap only when the config injects anything; a zero rate returns
+    /// the inner engine unchanged (no proxy overhead on the hot path).
+    pub fn wrap(inner: Box<dyn Engine>, cfg: ChaosConfig) -> Box<dyn Engine> {
+        if cfg.enabled() {
+            Box::new(ChaosEngine::new(inner, cfg))
+        } else {
+            inner
+        }
+    }
+
+    /// Total faults injected so far (all kinds).
+    pub fn faults_injected(&self) -> u64 {
+        self.injected.get().iter().sum()
+    }
+
+    /// The fault (if any) scheduled for call index `call` — a pure
+    /// function of `(cfg.seed, call)`.
+    pub fn fault_at(&self, call: u64) -> Option<FaultKind> {
+        if self.cfg.rate <= 0.0 {
+            return None;
+        }
+        let mut s = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(call)
+            .wrapping_mul(0xbf58476d1ce4e5b9)
+            .wrapping_add(1);
+        // 53-bit uniform in [0, 1) — the standard f64 construction.
+        let u = (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u >= self.cfg.rate {
+            return None;
+        }
+        Some(match splitmix64(&mut s) % 4 {
+            0 => FaultKind::TransientFailure,
+            1 => FaultKind::LatencySpike {
+                delay: self.cfg.spike,
+            },
+            2 => FaultKind::LaneInvalidation,
+            _ => FaultKind::AllocExhausted,
+        })
+    }
+
+    /// Advance the schedule clock and return this call's fault.
+    fn tick(&self) -> Option<FaultKind> {
+        let call = self.calls.get();
+        self.calls.set(call + 1);
+        let fault = self.fault_at(call)?;
+        let mut counts = self.injected.get();
+        counts[match fault {
+            FaultKind::TransientFailure => 0,
+            FaultKind::LatencySpike { .. } => 1,
+            FaultKind::LaneInvalidation => 2,
+            FaultKind::AllocExhausted => 3,
+        }] += 1;
+        self.injected.set(counts);
+        Some(fault)
+    }
+
+    /// Resolve a scheduled fault on a LANE-LESS call (dense / compact
+    /// paths): lane invalidation has no victim, so it degrades to a
+    /// transient failure; a spike sleeps and lets the call proceed.
+    /// Returns the error to fail with, or None to serve normally.
+    fn resolve_laneless(&self, fault: FaultKind, call: u64) -> Option<EngineError> {
+        match fault {
+            FaultKind::LatencySpike { delay } => {
+                std::thread::sleep(delay);
+                None
+            }
+            FaultKind::AllocExhausted => Some(EngineError::transient(format!(
+                "chaos: allocation exhausted (injected, call {call})"
+            ))),
+            FaultKind::TransientFailure | FaultKind::LaneInvalidation => Some(
+                EngineError::transient(format!("chaos: injected transient fault (call {call})")),
+            ),
+        }
+    }
+}
+
+impl Engine for ChaosEngine {
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> EngineResult<Vec<f32>> {
+        let call = self.calls.get();
+        if let Some(fault) = self.tick() {
+            if let Some(err) = self.resolve_laneless(fault, call) {
+                return Err(err);
+            }
+        }
+        self.inner.forward(batch, tokens, mask_h, mask_g)
+    }
+
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        let call = self.calls.get();
+        if let Some(fault) = self.tick() {
+            if let Some(err) = self.resolve_laneless(fault, call) {
+                return Err(err);
+            }
+        }
+        self.inner.forward_ord(specs)
+    }
+
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        let call = self.calls.get();
+        if let Some(fault) = self.tick() {
+            match fault {
+                FaultKind::LaneInvalidation => {
+                    // Invalidate the first lane named by the call, then
+                    // fail typed so the scheduler resets + recomputes.
+                    let lane = specs.first().map(|s| s.lane).unwrap_or(0);
+                    self.inner.reset_lane(lane);
+                    return Err(EngineError::lane_corrupt(
+                        lane,
+                        format!("chaos: lane cache invalidated (injected, call {call})"),
+                    ));
+                }
+                other => {
+                    if let Some(err) = self.resolve_laneless(other, call) {
+                        return Err(err);
+                    }
+                }
+            }
+        }
+        self.inner.forward_inc(specs)
+    }
+
+    fn max_gather_rows(&self) -> usize {
+        self.inner.max_gather_rows()
+    }
+
+    fn inc_lanes(&self) -> usize {
+        self.inner.inc_lanes()
+    }
+
+    fn reset_lane(&self, lane: usize) {
+        self.inner.reset_lane(lane)
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        self.inner.kv_stats()
+    }
+
+    fn nfe(&self) -> u64 {
+        self.inner.nfe()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mock::MockEngine;
+    use super::*;
+    use crate::model::mask::Ordering as GenOrdering;
+
+    fn chaos(rate: f64, seed: u64) -> ChaosEngine {
+        ChaosEngine::new(
+            Box::new(MockEngine::new(3, 16, 258, 1.0)),
+            ChaosConfig {
+                seed,
+                rate,
+                spike: Duration::from_micros(10),
+            },
+        )
+    }
+
+    #[test]
+    fn schedule_is_deterministic_in_seed_and_call() {
+        let a = chaos(0.3, 42);
+        let b = chaos(0.3, 42);
+        for call in 0..500 {
+            assert_eq!(a.fault_at(call), b.fault_at(call));
+        }
+        // A different seed produces a different schedule (overwhelmingly).
+        let c = chaos(0.3, 43);
+        assert!((0..500).any(|call| a.fault_at(call) != c.fault_at(call)));
+    }
+
+    #[test]
+    fn rate_zero_is_transparent_and_rate_scales_injection() {
+        let off = chaos(0.0, 7);
+        assert!((0..1000).all(|call| off.fault_at(call).is_none()));
+        let on = chaos(0.25, 7);
+        let hits = (0..2000).filter(|&c| on.fault_at(c).is_some()).count();
+        // Loose band around 0.25 * 2000 = 500 — deterministic, so this
+        // can never flake once green.
+        assert!((300..700).contains(&hits), "hits = {hits}");
+    }
+
+    #[test]
+    fn injected_failure_leaves_inner_state_untouched() {
+        let e = chaos(1.0, 0);
+        // Find a seed position whose fault is a hard failure (not a
+        // spike) — with rate 1.0 every call faults.
+        let ord = GenOrdering::new((0..16).collect(), 0);
+        let toks = vec![1u32; 16];
+        let spec = ForwardSpec {
+            tokens: &toks,
+            ord: &ord,
+            known: 16,
+            want: &[0],
+        };
+        let mut failures = 0;
+        for _ in 0..20 {
+            match e.forward_ord(std::slice::from_ref(&spec)) {
+                Err(err) => {
+                    failures += 1;
+                    // Typed and transient: the retry ladder's contract.
+                    assert_eq!(
+                        err.class(),
+                        super::super::error::ErrorClass::Transient,
+                        "laneless faults must degrade to transient"
+                    );
+                }
+                Ok(rows) => assert_eq!(rows[0].len(), 258),
+            }
+        }
+        assert!(failures > 0, "rate-1.0 schedule never failed a call");
+        // Failed calls never reached the inner engine: NFE counts only
+        // the served (spike) calls.
+        assert_eq!(e.nfe(), 20 - failures);
+    }
+
+    #[test]
+    fn latency_spike_output_is_bit_identical() {
+        let plain = MockEngine::new(3, 16, 258, 1.0);
+        let e = chaos(1.0, 0);
+        let ord = GenOrdering::new((0..16).collect(), 0);
+        let toks = vec![1u32; 16];
+        let spec = ForwardSpec {
+            tokens: &toks,
+            ord: &ord,
+            known: 16,
+            want: &[0, 5],
+        };
+        let want = plain.forward_ord(std::slice::from_ref(&spec)).unwrap();
+        for _ in 0..50 {
+            if let Ok(rows) = e.forward_ord(std::slice::from_ref(&spec)) {
+                assert_eq!(rows, want, "spiked call altered the output");
+                return;
+            }
+        }
+        panic!("no spike (served) call in 50 tries at rate 1.0");
+    }
+}

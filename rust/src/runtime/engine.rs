@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
+use super::error::{EngineError, EngineResult};
 use super::paged::{chain_extend, chain_hashes, KvStats, PagedKv, PagedKvConfig, PrefixKey};
 use super::{compile_artifact, forward_ord_dense, Engine, ForwardSpec, IncSpec};
 use crate::model::ModelMeta;
@@ -670,22 +671,12 @@ impl XlaEngine {
         self.nfe.fetch_add(1, Ordering::Relaxed);
         Ok(logits)
     }
-}
-
-impl Engine for XlaEngine {
-    fn seq_len(&self) -> usize {
-        self.meta.seq_len
-    }
-
-    fn vocab(&self) -> usize {
-        self.meta.vocab
-    }
-
-    fn batch_sizes(&self) -> Vec<usize> {
-        self.fwd.keys().copied().collect()
-    }
-
-    fn forward(
+    /// Dense forward body. XlaEngine's forward internals stay on
+    /// `anyhow` (the xla crate's errors and `.context` chains convert
+    /// freely); the [`Engine`] impl below maps to the typed
+    /// [`EngineError`] taxonomy at the trait boundary, recovering the
+    /// class of any `EngineError` buried in the chain by downcast.
+    fn forward_impl(
         &self,
         batch: usize,
         tokens: &[u32],
@@ -705,7 +696,7 @@ impl Engine for XlaEngine {
             let mut off = 0;
             while off < batch {
                 let take = (batch - off).min(max_b);
-                let part = self.forward(
+                let part = self.forward_impl(
                     take,
                     &tokens[off * n..(off + take) * n],
                     &mask_h[off * n * n..(off + take) * n * n],
@@ -760,13 +751,13 @@ impl Engine for XlaEngine {
     /// `model::mask::g_allows`). Falls back to [`forward_ord_dense`] when
     /// the artifact set predates the compact family or a request wants
     /// more rows than the compiled gather width R.
-    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_ord_impl(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
         if specs.is_empty() {
             return Ok(vec![]);
         }
         let r = self.ord_rows;
         if self.fwd_ord.is_empty() {
-            return forward_ord_dense(self, specs);
+            return Ok(forward_ord_dense(self, specs)?);
         }
         // Attribution tap: the compact rung is serving (part of) this
         // call. A mixed batch that also routes rows to the dense
@@ -797,7 +788,7 @@ impl Engine for XlaEngine {
             } else {
                 // No oversized entries remain, so this recursion takes the
                 // compact path below.
-                self.forward_ord(&compact)?.into_iter().map(Some).collect()
+                self.forward_ord_impl(&compact)?.into_iter().map(Some).collect()
             };
             return Ok(route
                 .into_iter()
@@ -819,7 +810,7 @@ impl Engine for XlaEngine {
         if specs.len() > max_b {
             let mut out = Vec::with_capacity(specs.len());
             for chunk in specs.chunks(max_b) {
-                out.extend(self.forward_ord(chunk)?);
+                out.extend(self.forward_ord_impl(chunk)?);
             }
             return Ok(out);
         }
@@ -907,13 +898,13 @@ impl Engine for XlaEngine {
     /// than the compiled width takes the compact path ALONE (its lane
     /// catches up on a later call — appends only need the committed token
     /// values, which stay in the buffer).
-    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_inc_impl(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
         if specs.is_empty() {
             return Ok(vec![]);
         }
         if self.fwd_inc.is_empty() {
             let plain: Vec<ForwardSpec<'_>> = specs.iter().map(|s| s.spec).collect();
-            return self.forward_ord(&plain);
+            return self.forward_ord_impl(&plain);
         }
         // Attribution tap: the incremental rung is serving (part of)
         // this call; oversized specs routed to the compact path tag Ord
@@ -935,11 +926,11 @@ impl Engine for XlaEngine {
                 }
             }
             let mut big_out: Vec<Option<Vec<f32>>> =
-                self.forward_ord(&big)?.into_iter().map(Some).collect();
+                self.forward_ord_impl(&big)?.into_iter().map(Some).collect();
             let mut small_out: Vec<Option<Vec<f32>>> = if small.is_empty() {
                 vec![]
             } else {
-                self.forward_inc(&small)?.into_iter().map(Some).collect()
+                self.forward_inc_impl(&small)?.into_iter().map(Some).collect()
             };
             return Ok(route
                 .into_iter()
@@ -959,7 +950,7 @@ impl Engine for XlaEngine {
         if specs.len() > max_b {
             let mut out = Vec::with_capacity(specs.len());
             for chunk in specs.chunks(max_b) {
-                out.extend(self.forward_inc(chunk)?);
+                out.extend(self.forward_inc_impl(chunk)?);
             }
             return Ok(out);
         }
@@ -968,6 +959,39 @@ impl Engine for XlaEngine {
             self.prepare_lane(inc)?;
         }
         self.exec_inc(specs)
+    }
+}
+
+impl Engine for XlaEngine {
+    fn seq_len(&self) -> usize {
+        self.meta.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.meta.vocab
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.fwd.keys().copied().collect()
+    }
+
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> EngineResult<Vec<f32>> {
+        self.forward_impl(batch, tokens, mask_h, mask_g)
+            .map_err(EngineError::from_anyhow)
+    }
+
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        self.forward_ord_impl(specs).map_err(EngineError::from_anyhow)
+    }
+
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        self.forward_inc_impl(specs).map_err(EngineError::from_anyhow)
     }
 
     fn inc_lanes(&self) -> usize {

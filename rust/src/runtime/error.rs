@@ -1,0 +1,168 @@
+//! Typed engine-error taxonomy for the forward surface.
+//!
+//! The scheduler's fault-isolation ladder keys off the **class** of a
+//! failure, not its message:
+//!
+//! - [`EngineError::Transient`] — the call failed but the engine is
+//!   intact (allocator pressure, injected chaos, a flaky device step).
+//!   Safe to retry: `DecodeMachine::forward_request` is idempotent
+//!   between absorbs, so re-issuing the same spec reproduces the same
+//!   logits bit-for-bit.
+//! - [`EngineError::LaneCorrupt`] — one KV lane's cached state can no
+//!   longer be trusted (invalidation raced a crash, chaos invalidated
+//!   it). Recovery is `reset_lane(lane)` + re-route through
+//!   `forward_ord`; the paged-KV chain-hash invariant makes the
+//!   recomputed prefix bit-identical to the cached one.
+//! - [`EngineError::Fatal`] — the engine itself is gone (device lost,
+//!   poisoned state). The worker exits and the supervisor re-provisions
+//!   the replica through the pool factory.
+//!
+//! Errors cross into `anyhow` freely (`EngineError` is a std error), and
+//! [`EngineError::from_anyhow`] recovers the class on the way back by
+//! downcasting — so helpers deep in an engine can keep returning
+//! `anyhow::Result` without flattening the taxonomy.
+
+use std::time::Duration;
+
+/// Failure class — the retry ladder's routing key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorClass {
+    Transient,
+    LaneCorrupt,
+    Fatal,
+}
+
+impl ErrorClass {
+    /// Stable snake_case label used by the metrics counters
+    /// (`engine_errors_total{class="..."}`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorClass::Transient => "transient",
+            ErrorClass::LaneCorrupt => "lane_corrupt",
+            ErrorClass::Fatal => "fatal",
+        }
+    }
+}
+
+/// Typed error for the `Engine` forward surface
+/// (`forward` / `forward_ord` / `forward_inc`).
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum EngineError {
+    /// The call failed but engine state is intact; a bit-identical retry
+    /// is safe.
+    #[error("transient engine error: {0}")]
+    Transient(String),
+    /// One lane's cached state is untrustworthy; reset the lane and
+    /// recompute through the ordinary compact path.
+    #[error("lane {lane} corrupt: {reason}")]
+    LaneCorrupt { lane: usize, reason: String },
+    /// The engine is unusable; the replica must be re-provisioned.
+    #[error("fatal engine error: {0}")]
+    Fatal(String),
+}
+
+/// Result alias for the typed forward surface.
+pub type EngineResult<T> = Result<T, EngineError>;
+
+impl EngineError {
+    pub fn class(&self) -> ErrorClass {
+        match self {
+            EngineError::Transient(_) => ErrorClass::Transient,
+            EngineError::LaneCorrupt { .. } => ErrorClass::LaneCorrupt,
+            EngineError::Fatal(_) => ErrorClass::Fatal,
+        }
+    }
+
+    pub fn transient(msg: impl Into<String>) -> Self {
+        EngineError::Transient(msg.into())
+    }
+
+    pub fn lane_corrupt(lane: usize, reason: impl Into<String>) -> Self {
+        EngineError::LaneCorrupt {
+            lane,
+            reason: reason.into(),
+        }
+    }
+
+    pub fn fatal(msg: impl Into<String>) -> Self {
+        EngineError::Fatal(msg.into())
+    }
+
+    /// Convert an `anyhow` chain back into the taxonomy: if the chain
+    /// bottoms out in an `EngineError` its class survives; anything
+    /// else (device errors, I/O, panics stringified by callers) is
+    /// conservatively `Fatal` — the worker cannot prove the engine is
+    /// still sound, so the supervisor gets the call.
+    pub fn from_anyhow(err: anyhow::Error) -> Self {
+        match err.downcast::<EngineError>() {
+            Ok(e) => e,
+            Err(e) => EngineError::Fatal(format!("{e:#}")),
+        }
+    }
+}
+
+impl From<anyhow::Error> for EngineError {
+    fn from(err: anyhow::Error) -> Self {
+        EngineError::from_anyhow(err)
+    }
+}
+
+/// The kind of fault a [`crate::runtime::chaos::ChaosEngine`] injects at
+/// one forward call. Derived deterministically from the seeded schedule;
+/// enumerated here so the taxonomy and the injector agree on coverage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the call with [`EngineError::Transient`].
+    TransientFailure,
+    /// Sleep, then serve the call normally (tests the latency path, not
+    /// the error path — output must be unaffected).
+    LatencySpike { delay: Duration },
+    /// Invalidate the first lane named by the call, then fail with
+    /// [`EngineError::LaneCorrupt`] (degrades to a transient failure on
+    /// lane-less calls).
+    LaneInvalidation,
+    /// Fail with a transient allocation-exhaustion error (the pool is
+    /// intact; a retry after batch-mates release blocks succeeds).
+    AllocExhausted,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn class_labels_are_stable() {
+        assert_eq!(ErrorClass::Transient.as_str(), "transient");
+        assert_eq!(ErrorClass::LaneCorrupt.as_str(), "lane_corrupt");
+        assert_eq!(ErrorClass::Fatal.as_str(), "fatal");
+        assert_eq!(
+            EngineError::lane_corrupt(3, "x").class(),
+            ErrorClass::LaneCorrupt
+        );
+    }
+
+    #[test]
+    fn roundtrip_through_anyhow_preserves_class() {
+        let e = EngineError::transient("injected");
+        let any: anyhow::Error = e.into();
+        assert_eq!(EngineError::from_anyhow(any).class(), ErrorClass::Transient);
+    }
+
+    #[test]
+    fn context_wrapped_chain_still_downcasts() {
+        // `.context(...)` wraps but keeps the chain downcastable.
+        let r: anyhow::Result<()> = Err(EngineError::lane_corrupt(7, "chaos").into());
+        let wrapped = r.context("executing forward_inc").unwrap_err();
+        match EngineError::from_anyhow(wrapped) {
+            EngineError::LaneCorrupt { lane, .. } => assert_eq!(lane, 7),
+            other => panic!("lost class: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn foreign_errors_become_fatal() {
+        let any = anyhow::anyhow!("device lost");
+        assert_eq!(EngineError::from_anyhow(any).class(), ErrorClass::Fatal);
+    }
+}

@@ -20,11 +20,10 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::Result;
-
 use crate::model::mask::{g_allows, Ordering as GenOrdering};
 use crate::tokenizer::MASK;
 
+use super::error::{EngineError, EngineResult};
 use super::paged::{chain_extend, chain_hashes, KvStats, PagedKv, PagedKvConfig, PrefixKey};
 use super::{Engine, ForwardSpec, IncSpec};
 
@@ -241,7 +240,7 @@ impl Engine for MockEngine {
         tokens: &[u32],
         _mask_h: &[f32],
         mask_g: &[f32],
-    ) -> Result<Vec<f32>> {
+    ) -> EngineResult<Vec<f32>> {
         let (n, v) = (self.n, self.v);
         assert_eq!(tokens.len(), batch * n);
         assert_eq!(mask_g.len(), batch * n * n);
@@ -263,7 +262,7 @@ impl Engine for MockEngine {
     /// Native compact path: compute ONLY the wanted rows, masks never
     /// materialized. One call = one NFE, same as the dense path, so the
     /// Theorem-1 accounting is path-independent.
-    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
         if specs.is_empty() {
             return Ok(vec![]);
         }
@@ -304,7 +303,7 @@ impl Engine for MockEngine {
     /// model booked in [`MockEngine::modeled_cells`]. One call = one NFE,
     /// so Theorem-1 accounting stays path-independent (the mock needs no
     /// separate prefill launch; XlaEngine books its real ones).
-    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
         if specs.is_empty() {
             return Ok(vec![]);
         }
@@ -377,7 +376,13 @@ impl Engine for MockEngine {
                 let pos = lane.sigma[j];
                 let tok = spec.tokens[pos];
                 assert_ne!(tok, MASK, "appending an uncommitted (MASK) row");
-                store.append_row(&mut lane.table, j)?[0] = tok;
+                // Pool exhaustion is transient by contract: batch-mates
+                // releasing blocks (or a lane reset) frees capacity, so a
+                // retry can succeed — the taxonomy must not escalate it.
+                store
+                    .append_row(&mut lane.table, j)
+                    .map_err(|e| EngineError::transient(format!("kv allocation: {e:#}")))?[0] =
+                    tok;
                 if j >= lane.chain.len() {
                     let prev = lane.chain[j - 1];
                     lane.chain.push(chain_extend(prev, pos, tok));
@@ -473,17 +478,17 @@ impl Engine for SlowEngine {
         tokens: &[u32],
         mask_h: &[f32],
         mask_g: &[f32],
-    ) -> Result<Vec<f32>> {
+    ) -> EngineResult<Vec<f32>> {
         std::thread::sleep(self.delay);
         self.inner.forward(batch, tokens, mask_h, mask_g)
     }
 
-    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
         std::thread::sleep(self.delay);
         self.inner.forward_ord(specs)
     }
 
-    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
         std::thread::sleep(self.delay);
         self.inner.forward_inc(specs)
     }

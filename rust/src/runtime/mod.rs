@@ -6,7 +6,9 @@
 //! hermetically against [`mock::MockEngine`] (an analytic log-linear model
 //! with exact conditionals) without compiled artifacts.
 
+pub mod chaos;
 pub mod engine;
+pub mod error;
 pub mod mock;
 pub mod paged;
 pub mod pool;
@@ -17,9 +19,11 @@ use anyhow::{Context, Result};
 
 use crate::model::mask::{draft_masks_into, Ordering};
 
+pub use chaos::{ChaosConfig, ChaosEngine};
 pub use engine::{TrainOutput, XlaEngine};
+pub use error::{EngineError, EngineResult, ErrorClass, FaultKind};
 pub use paged::{KvStats, PagedKvConfig};
-pub use pool::{EnginePool, PoolConfig};
+pub use pool::{EnginePool, Health, HealthPolicy, HealthTracker, PoolConfig, SupervisorPolicy};
 
 /// One sequence's COMPACT forward request: instead of materialized
 /// `[N, N]` attention masks, it carries the generation ordering and decode
@@ -87,6 +91,12 @@ pub struct IncSpec<'a> {
 /// the resulting engine for its lifetime. The coordinator serves
 /// concurrent requests to the worker(s) through the shared admission
 /// queue (see coordinator/).
+/// All three forward entry points return [`EngineResult`] — a typed
+/// taxonomy (transient / lane-corrupt / fatal, see [`error`]) the
+/// scheduler's fault-isolation ladder routes on. Engine internals may
+/// keep using `anyhow` and convert at the boundary with
+/// [`EngineError::from_anyhow`], which preserves the class of any
+/// `EngineError` buried in the chain.
 pub trait Engine {
     fn seq_len(&self) -> usize;
     fn vocab(&self) -> usize;
@@ -96,7 +106,7 @@ pub trait Engine {
         tokens: &[u32],
         mask_h: &[f32],
         mask_g: &[f32],
-    ) -> Result<Vec<f32>>;
+    ) -> EngineResult<Vec<f32>>;
 
     /// Compact batched forward: one entry per sequence, returning for each
     /// spec the gathered logit rows (`spec.want.len() * vocab` f32s,
@@ -114,7 +124,7 @@ pub trait Engine {
     /// native path override it (MockEngine computes only the wanted rows;
     /// XlaEngine executes `fwd_ord_b{B}` artifacts that rebuild the masks
     /// on device and gather before crossing back to the host).
-    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
         forward_ord_dense(self, specs)
     }
 
@@ -141,7 +151,7 @@ pub trait Engine {
     /// override it and report `inc_lanes() > 0`; the scheduler only
     /// routes through `forward_inc` in that case, so engines without
     /// caches keep their exact one-launch-per-iteration batching.
-    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> Result<Vec<Vec<f32>>> {
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
         let plain: Vec<ForwardSpec<'_>> = specs.iter().map(|s| s.spec).collect();
         self.forward_ord(&plain)
     }
@@ -209,7 +219,7 @@ thread_local! {
 pub fn forward_ord_dense<E: Engine + ?Sized>(
     engine: &E,
     specs: &[ForwardSpec<'_>],
-) -> Result<Vec<Vec<f32>>> {
+) -> EngineResult<Vec<Vec<f32>>> {
     if specs.is_empty() {
         return Ok(vec![]);
     }
@@ -282,7 +292,7 @@ impl<E: Engine + ?Sized> Engine for DensePath<'_, E> {
         tokens: &[u32],
         mask_h: &[f32],
         mask_g: &[f32],
-    ) -> Result<Vec<f32>> {
+    ) -> EngineResult<Vec<f32>> {
         self.0.forward(batch, tokens, mask_h, mask_g)
     }
 

@@ -16,6 +16,7 @@
 //! layers reuse replica provisioning without pulling in the serving stack.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -104,6 +105,120 @@ impl EnginePool {
     }
 }
 
+/// Replica health, as driven by [`HealthTracker`]:
+///
+/// ```text
+/// Healthy --errors >= degrade_after--> Degraded
+/// Degraded --errors >= quarantine_after--> Quarantined
+/// Healthy/Degraded --any success--> Healthy
+/// ```
+///
+/// `Quarantined` is terminal for the current engine incarnation: the
+/// worker stops serving on it and hands the replica back to the
+/// supervisor for re-provisioning (see
+/// [`crate::coordinator::scheduler::spawn_pool`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+    Quarantined,
+}
+
+/// Thresholds for the health state machine, in CONSECUTIVE failed
+/// batched forwards (a success resets the streak — transient blips under
+/// retry never accumulate into a quarantine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthPolicy {
+    /// Consecutive errors before the replica is marked Degraded (still
+    /// serving; surfaced via `/healthz` and `/replicas`).
+    pub degrade_after: u32,
+    /// Consecutive errors before the replica is Quarantined and handed
+    /// to the supervisor for re-provisioning.
+    pub quarantine_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> HealthPolicy {
+        HealthPolicy {
+            degrade_after: 3,
+            quarantine_after: 16,
+        }
+    }
+}
+
+/// Worker-local health state machine (plain struct: it lives on the
+/// replica's own thread; the worker mirrors transitions into the shared
+/// [`crate::coordinator::ReplicaStats`] for observability).
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    policy: HealthPolicy,
+    streak: u32,
+    health: Health,
+}
+
+impl HealthTracker {
+    pub fn new(policy: HealthPolicy) -> HealthTracker {
+        HealthTracker {
+            policy,
+            streak: 0,
+            health: Health::Healthy,
+        }
+    }
+
+    pub fn health(&self) -> Health {
+        self.health
+    }
+
+    /// A batched forward succeeded: any error streak ends and the
+    /// replica recovers to Healthy (quarantine is never revoked — the
+    /// worker has already stopped consulting the tracker by then).
+    pub fn record_success(&mut self) -> Health {
+        self.streak = 0;
+        if self.health != Health::Quarantined {
+            self.health = Health::Healthy;
+        }
+        self.health
+    }
+
+    /// A batched forward failed: advance the streak and derive the
+    /// state. Called once per failed BATCHED call (not once per
+    /// per-slot retry), so the thresholds count independent faults.
+    pub fn record_error(&mut self) -> Health {
+        self.streak = self.streak.saturating_add(1);
+        self.health = if self.streak >= self.policy.quarantine_after {
+            Health::Quarantined
+        } else if self.streak >= self.policy.degrade_after {
+            Health::Degraded
+        } else {
+            self.health
+        };
+        self.health
+    }
+}
+
+/// Restart policy for the replica supervisor: how many times a dead
+/// engine incarnation (fatal error, quarantine, panic, or a failed
+/// provision) may be re-provisioned through the pool factory before the
+/// replica is declared Failed for good.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SupervisorPolicy {
+    /// Re-provision attempts per replica across its lifetime. 0 restores
+    /// the pre-supervision behavior (first death is final).
+    pub max_restarts: u32,
+    /// Pause before each re-provision — keeps a crash-looping factory
+    /// from spinning a core (kept small: tests restart in-process).
+    pub restart_backoff: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> SupervisorPolicy {
+        SupervisorPolicy {
+            max_restarts: 2,
+            restart_backoff: Duration::from_millis(10),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +261,24 @@ mod tests {
     fn pool_is_send_and_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<EnginePool>();
+    }
+
+    #[test]
+    fn health_tracker_degrades_quarantines_and_recovers() {
+        let mut t = HealthTracker::new(HealthPolicy {
+            degrade_after: 2,
+            quarantine_after: 4,
+        });
+        assert_eq!(t.health(), Health::Healthy);
+        assert_eq!(t.record_error(), Health::Healthy);
+        assert_eq!(t.record_error(), Health::Degraded);
+        // A success anywhere before quarantine fully recovers.
+        assert_eq!(t.record_success(), Health::Healthy);
+        assert_eq!(t.record_error(), Health::Healthy);
+        assert_eq!(t.record_error(), Health::Degraded);
+        assert_eq!(t.record_error(), Health::Degraded);
+        assert_eq!(t.record_error(), Health::Quarantined);
+        // Quarantine is terminal for this incarnation.
+        assert_eq!(t.record_success(), Health::Quarantined);
     }
 }

@@ -60,6 +60,12 @@ struct State<T> {
     /// `None` = unbounded.
     capacity: Option<usize>,
     closed: bool,
+    /// Set when the LAST receiver dropped (as opposed to an explicit
+    /// consumer-side [`Receiver::close`] or all senders dropping): every
+    /// worker that could have drained the queue is dead, so queued items
+    /// are stranded until a producer reclaims them. The coordinator maps
+    /// this to `SubmitError::ReplicaLost`.
+    lost: bool,
 }
 
 /// Error returned by [`Sender::send`] on a closed channel; carries the
@@ -115,6 +121,7 @@ fn with_capacity<T>(capacity: Option<usize>) -> (Sender<T>, Receiver<T>) {
             receivers: 1,
             capacity,
             closed: false,
+            lost: false,
         }),
         cv: Condvar::new(),
         cv_space: Condvar::new(),
@@ -182,6 +189,25 @@ impl<T> Sender<T> {
     /// event).
     pub fn len(&self) -> usize {
         self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// True iff the channel closed because the LAST receiver dropped
+    /// (worker death) — as opposed to an orderly consumer-side
+    /// [`Receiver::close`], which drains and answers the backlog itself.
+    /// When true, anything still queued is stranded until a producer
+    /// takes it back via [`Sender::reclaim`].
+    pub fn is_lost(&self) -> bool {
+        self.shared.state.lock().unwrap().lost
+    }
+
+    /// Drain every queued item back to the producer. Only meaningful on
+    /// a closed channel (receivers may still pop on an open one); the
+    /// coordinator uses this after [`Sender::is_lost`] to fail the
+    /// stranded jobs' lifecycles instead of leaving their clients
+    /// waiting forever.
+    pub fn reclaim(&self) -> Vec<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue.drain(..).collect()
     }
 }
 
@@ -299,8 +325,12 @@ impl<T> Drop for Receiver<T> {
         st.receivers -= 1;
         if st.receivers == 0 {
             // Nobody can ever drain the queue again: close so senders see
-            // an abandoned channel instead of enqueueing into the void.
+            // an abandoned channel instead of enqueueing into the void,
+            // and flag the loss so producers can reclaim whatever was
+            // queued (an explicit `close()` does NOT set `lost` — that
+            // path drains and answers the backlog itself).
             st.closed = true;
+            st.lost = true;
             drop(st);
             self.shared.cv_space.notify_all();
         }
@@ -492,6 +522,33 @@ mod tests {
             other => panic!("expected Closed(1), got {other:?}"),
         }
         assert!(tx.send(2).is_err());
+    }
+
+    /// Regression: the last receiver dying with items still queued used
+    /// to strand them silently — the channel closed, but nothing could
+    /// drain the backlog and producers had no way to tell worker-death
+    /// from orderly shutdown. Now the loss is flagged and the producer
+    /// reclaims the queued items to fail them explicitly.
+    #[test]
+    fn last_receiver_drop_with_backlog_is_reclaimable() {
+        let (tx, rx) = bounded::<u32>(8);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        tx.try_send(3).unwrap();
+        assert!(!tx.is_lost());
+        drop(rx); // worker death: 3 items stranded
+        assert!(tx.is_closed());
+        assert!(tx.is_lost(), "last-receiver drop must flag the loss");
+        assert_eq!(tx.reclaim(), vec![1, 2, 3]);
+        assert_eq!(tx.len(), 0, "reclaim drains the backlog");
+        // An orderly consumer-side close is NOT a loss: that path drains
+        // and answers the backlog itself.
+        let (tx2, rx2) = bounded::<u32>(8);
+        tx2.try_send(9).unwrap();
+        rx2.close();
+        assert!(tx2.is_closed());
+        assert!(!tx2.is_lost());
+        assert_eq!(rx2.try_recv(), Ok(9));
     }
 
     #[test]

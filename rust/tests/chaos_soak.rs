@@ -1,0 +1,261 @@
+//! Chaos soak: the fault-tolerance headline, end to end. A seeded
+//! [`ChaosConfig`] schedule injects transient faults, lane
+//! invalidations, and latency spikes into every decode mode (ASSD over
+//! all drafters, sequential, diffusion); the suite asserts that every
+//! request completes BIT-IDENTICAL to its fault-free twin, that
+//! recovery never perturbs NFE accounting (Theorem 2's
+//! `model_nfe <= tokens_committed` bound survives every retry), and
+//! that a fatally dead replica is re-provisioned by the supervisor with
+//! subsequent requests succeeding over HTTP.
+//!
+//! The schedule seed is pinned by `make chaos` via `ASARM_CHAOS_SEED`
+//! (default 20260808) so CI failures reproduce locally with
+//! `ASARM_CHAOS_SEED=<seed> cargo test --release --test chaos_soak`.
+//! On mismatch the suite still writes `TRACE_chaos.json` (a Chrome
+//! trace of the last chaos-run request) BEFORE asserting, so the CI
+//! artifact upload has something to grab.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use asarm::coordinator::http::{http_get, http_post, HttpServer};
+use asarm::coordinator::scheduler::{spawn, spawn_pool};
+use asarm::coordinator::{
+    DraftSpec, InfillRequest, InfillResponse, Metrics, SamplerKind, SchedulerConfig,
+    SchedulerHandle,
+};
+use asarm::draft::{DraftKind, DraftOptions};
+use asarm::runtime::mock::MockEngine;
+use asarm::runtime::{ChaosConfig, Engine, EngineError, EnginePool, EngineResult, PoolConfig};
+use asarm::util::json::Json;
+
+/// Fault rate for the soak. The acceptance bar is >= 0.1; 0.2 trips
+/// roughly one fault per request on the 10-char infill workload while
+/// staying far from the retry budget.
+const CHAOS_RATE: f64 = 0.2;
+
+fn chaos_seed() -> u64 {
+    std::env::var("ASARM_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20260808)
+}
+
+/// One single-replica scheduler over a MockEngine, with chaos injection
+/// at `rate` (0.0 = the fault-free twin). The generous retry budget and
+/// effectively-disabled quarantine keep the incarnation alive for the
+/// whole soak — supervision is exercised separately, deterministically,
+/// by [`replica_death_supervised_restart_over_http`].
+fn chaos_handle(rate: f64, seed: u64) -> (SchedulerHandle, Metrics) {
+    let metrics = Metrics::new();
+    let handle = spawn(
+        move || Ok(Box::new(MockEngine::new(5, 32, 258, 1.0)) as Box<dyn Engine>),
+        SchedulerConfig {
+            max_batch: 3,
+            idle_poll: Duration::from_millis(2),
+            chaos: ChaosConfig {
+                seed,
+                rate,
+                spike: Duration::from_micros(20),
+            },
+            retry_budget: 64,
+            health: asarm::runtime::HealthPolicy {
+                degrade_after: 3,
+                quarantine_after: 1_000_000,
+            },
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    (handle, metrics)
+}
+
+fn run(h: &SchedulerHandle, sampler: SamplerKind, draft: DraftKind, seed: u64) -> InfillResponse {
+    h.submit(InfillRequest {
+        text: "ab______cd".to_string(),
+        sampler,
+        draft: DraftSpec::from_options(DraftOptions {
+            kind: draft,
+            max_len: 4,
+            adaptive: true,
+        }),
+        seed,
+        ..Default::default()
+    })
+    .expect("submit")
+    .wait()
+    .expect("request failed instead of recovering")
+}
+
+/// Every decode mode, under injected faults, completes bit-identical to
+/// the fault-free run with NFE accounting untouched — the tentpole's
+/// headline property. Aggregate counters then prove faults were
+/// actually injected and recovered (not silently skipped).
+#[test]
+fn chaos_soak_bit_identical_across_all_modes() {
+    let seed = chaos_seed();
+    let (clean, _clean_metrics) = chaos_handle(0.0, seed);
+    let (chaos, metrics) = chaos_handle(CHAOS_RATE, seed);
+
+    // (sampler, drafter) matrix: ASSD over every drafter, the legacy
+    // ngram alias, and both non-speculative baselines.
+    let mut modes: Vec<(SamplerKind, DraftKind)> = DraftKind::ALL
+        .iter()
+        .map(|&d| (SamplerKind::Assd, d))
+        .collect();
+    modes.push((SamplerKind::AssdNgram, DraftKind::Bigram));
+    modes.push((SamplerKind::Sequential, DraftKind::SelfModel));
+    modes.push((SamplerKind::Diffusion, DraftKind::SelfModel));
+
+    let mut mismatches: Vec<String> = Vec::new();
+    let mut last_chaos_id = 0u64;
+    for &(sampler, draft) in &modes {
+        for seed_r in [1u64, 2, 3] {
+            let want = run(&clean, sampler, draft, seed_r);
+            let got = run(&chaos, sampler, draft, seed_r);
+            last_chaos_id = got.request_id;
+            if got.text != want.text {
+                mismatches.push(format!(
+                    "{}/{} seed {seed_r}: text {:?} != fault-free {:?}",
+                    sampler.name(),
+                    draft.name(),
+                    got.text,
+                    want.text
+                ));
+            }
+            if got.model_nfe != want.model_nfe {
+                mismatches.push(format!(
+                    "{}/{} seed {seed_r}: model_nfe {} != fault-free {} (retries leaked in)",
+                    sampler.name(),
+                    draft.name(),
+                    got.model_nfe,
+                    want.model_nfe
+                ));
+            }
+            // Theorem 2 per request: one verification launch per
+            // committed token at worst. Diffusion is exempt (its NFE is
+            // the step count, not bounded by tokens).
+            if sampler != SamplerKind::Diffusion && got.model_nfe > got.n_generated as u64 {
+                mismatches.push(format!(
+                    "{}/{} seed {seed_r}: model_nfe {} > tokens {} (Theorem 2 violated)",
+                    sampler.name(),
+                    draft.name(),
+                    got.model_nfe,
+                    got.n_generated
+                ));
+            }
+        }
+    }
+
+    // Dump the chaos-run trace BEFORE asserting so a red CI run still
+    // uploads an artifact to debug from.
+    if let Some(trace) = chaos.trace_chrome_json(last_chaos_id) {
+        let _ = std::fs::write("TRACE_chaos.json", trace.to_string());
+    }
+
+    assert!(
+        mismatches.is_empty(),
+        "chaos run diverged from fault-free run (seed {seed}):\n{}",
+        mismatches.join("\n")
+    );
+
+    // The soak only proves something if faults actually fired.
+    let (transient, lane_corrupt, fatal) = metrics.engine_errors();
+    assert!(
+        transient + lane_corrupt > 0,
+        "chaos rate {CHAOS_RATE} injected no faults (seed {seed}) — soak proved nothing"
+    );
+    assert_eq!(fatal, 0, "chaos schedule must not inject fatal faults");
+    assert!(metrics.forward_retries() > 0, "faults recovered without retries?");
+    assert_eq!(
+        metrics.requests_failed(),
+        0,
+        "requests failed under chaos despite the retry budget"
+    );
+    assert_eq!(
+        metrics.replica_restarts(),
+        0,
+        "soak incarnation should survive (quarantine disabled)"
+    );
+    assert_eq!(metrics.theorem2_violations(), 0);
+}
+
+/// A replica whose engine dies fatally is re-provisioned by the
+/// supervisor; the in-flight request fails with a typed error, the NEXT
+/// request succeeds, and `/healthz` keeps reporting the pool serving —
+/// all observed from outside, over HTTP.
+struct DeadOnArrival;
+
+impl Engine for DeadOnArrival {
+    fn seq_len(&self) -> usize {
+        32
+    }
+    fn vocab(&self) -> usize {
+        258
+    }
+    fn forward(
+        &self,
+        _batch: usize,
+        _tokens: &[u32],
+        _mask_h: &[f32],
+        _mask_g: &[f32],
+    ) -> EngineResult<Vec<f32>> {
+        Err(EngineError::fatal("device lost (chaos soak)"))
+    }
+    fn nfe(&self) -> u64 {
+        0
+    }
+}
+
+#[test]
+fn replica_death_supervised_restart_over_http() {
+    let metrics = Metrics::new();
+    let built = Arc::new(AtomicUsize::new(0));
+    let b2 = Arc::clone(&built);
+    // Incarnation 0 is fatally broken; every re-provision yields a
+    // healthy engine.
+    let pool = EnginePool::from_fn(PoolConfig { replicas: 1 }, move |_id| {
+        let incarnation = b2.fetch_add(1, Ordering::SeqCst);
+        if incarnation == 0 {
+            Ok(Box::new(DeadOnArrival) as Box<dyn Engine>)
+        } else {
+            Ok(Box::new(MockEngine::new(5, 32, 258, 1.0)) as Box<dyn Engine>)
+        }
+    });
+    let handle = spawn_pool(
+        pool,
+        SchedulerConfig {
+            max_batch: 2,
+            idle_poll: Duration::from_millis(2),
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle, metrics.clone(), 2).unwrap();
+    let addr = server.serve_background();
+
+    let (code, body) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "{body}");
+
+    // First request lands on the dead incarnation: typed failure.
+    let body = r#"{"text":"ab____cd","sampler":"assd","seed":7}"#;
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 400, "{resp}");
+    assert!(
+        resp.contains("engine incarnation lost") && resp.contains("fatal"),
+        "expected typed fatal error, got: {resp}"
+    );
+
+    // The supervisor re-provisions; the next request is served by the
+    // fresh incarnation (it queues through the restart backoff).
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 200, "after restart: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert!(!j.get("text").unwrap().as_str().unwrap().contains('_'));
+
+    assert_eq!(built.load(Ordering::SeqCst), 2, "exactly one re-provision");
+    assert_eq!(metrics.replica_restarts(), 1);
+    let (code, body) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "pool must report serving after recovery: {body}");
+}
