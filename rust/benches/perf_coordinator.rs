@@ -23,6 +23,7 @@ fn run_load(
     n_requests: usize,
     draft: Option<DraftOptions>,
     trace: bool,
+    flight_rate: f64,
 ) -> (f64, Metrics) {
     let metrics = Metrics::new();
     // Same seed per replica: share-nothing copies of one model.
@@ -39,6 +40,7 @@ fn run_load(
             // (no shedding in this bench).
             queue_depth: n_requests.max(1),
             trace,
+            flight_sample_rate: flight_rate,
             ..Default::default()
         },
         metrics.clone(),
@@ -79,7 +81,7 @@ fn main() -> anyhow::Result<()> {
         "mean occupancy",
     ]);
     for &max_batch in &[1usize, 2, 4, 8] {
-        let (wall, metrics) = run_load(1, max_batch, n_requests, None, true);
+        let (wall, metrics) = run_load(1, max_batch, n_requests, None, true, 0.05);
         let j = metrics.snapshot_json();
         let p50 = j.get("latency_p50_s").unwrap().as_f64().unwrap() * 1e3;
         let p99 = j.get("latency_p99_s").unwrap().as_f64().unwrap() * 1e3;
@@ -100,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     let mut pool_table = Table::new(&["replicas", "req/s", "speedup", "p99 (ms)"]);
     let mut base_rps = 0.0;
     for &replicas in &[1usize, 4] {
-        let (wall, metrics) = run_load(replicas, 4, n_requests, None, true);
+        let (wall, metrics) = run_load(replicas, 4, n_requests, None, true, 0.05);
         let rps = n_requests as f64 / wall;
         if replicas == 1 {
             base_rps = rps;
@@ -134,7 +136,7 @@ fn main() -> anyhow::Result<()> {
             max_len: 5,
             adaptive,
         };
-        let (wall, metrics) = run_load(2, 4, n_requests, Some(draft), true);
+        let (wall, metrics) = run_load(2, 4, n_requests, Some(draft), true, 0.05);
         let j = metrics.snapshot_json();
         let accept = j.get("acceptance_rate").unwrap().as_f64().unwrap();
         let nfe = j.get("model_nfe").unwrap().as_f64().unwrap();
@@ -161,7 +163,7 @@ fn main() -> anyhow::Result<()> {
     let best_rps = |trace: bool| -> f64 {
         (0..3)
             .map(|_| {
-                let (wall, _) = run_load(2, 4, n_requests, None, trace);
+                let (wall, _) = run_load(2, 4, n_requests, None, trace, 0.0);
                 n_requests as f64 / wall
             })
             .fold(0.0_f64, f64::max)
@@ -179,5 +181,33 @@ fn main() -> anyhow::Result<()> {
         "tracing overhead gate failed: on={on:.1} req/s vs off={off:.1} req/s ({ratio:.2}x < 0.95x)"
     );
     println!("(gate: tracing-on must hold >= 0.95x of tracing-off throughput — passed)");
+
+    // --- axis 5: flight-recorder overhead gate ---
+    // Worst case deliberately: sample rate 1.0 records EVERY request's
+    // speculation anatomy (per-position outcomes plus two O(vocab)
+    // entropy sweeps per wanted row). Production default is 0.05; even
+    // the saturated recorder must stay within 5% of off.
+    let best_flight_rps = |rate: f64| -> f64 {
+        (0..3)
+            .map(|_| {
+                let (wall, _) = run_load(2, 4, n_requests, None, true, rate);
+                n_requests as f64 / wall
+            })
+            .fold(0.0_f64, f64::max)
+    };
+    let off = best_flight_rps(0.0);
+    let on = best_flight_rps(1.0);
+    let ratio = on / off;
+    let mut flight_table = Table::new(&["flight recorder", "req/s (best of 3)", "ratio"]);
+    flight_table.row(&["off (rate 0.0)".into(), format!("{off:.1}"), "1.00x".into()]);
+    flight_table.row(&["on (rate 1.0)".into(), format!("{on:.1}"), format!("{ratio:.2}x")]);
+    println!("\n=== perf_coordinator: flight-recorder overhead (replicas=2, max_batch=4) ===");
+    flight_table.print();
+    anyhow::ensure!(
+        ratio >= 0.95,
+        "flight-recorder overhead gate failed: on={on:.1} req/s vs off={off:.1} req/s \
+         ({ratio:.2}x < 0.95x)"
+    );
+    println!("(gate: flight-on (rate 1.0) must hold >= 0.95x of flight-off throughput — passed)");
     Ok(())
 }

@@ -245,12 +245,32 @@ fn main() -> Result<()> {
     std::fs::write(&out_path, report.to_string())?;
     eprintln!("perf_streaming: wrote {out_path}");
 
-    // Sample observability artifact: one traced request's span timeline
-    // as Chrome trace-event JSON (same bytes GET /trace/{id} serves) —
-    // uploadable from CI and loadable into chrome://tracing or Perfetto.
+    // Sample observability artifacts: one request's span timeline as
+    // Chrome trace-event JSON (same bytes GET /trace/{id} serves) plus
+    // its speculation flight record (same bytes GET /debug/flight/{id}
+    // serves) — uploadable from CI; the trace loads into
+    // chrome://tracing or Perfetto. Flight sampling forced to 1.0 here
+    // so the artifact request is guaranteed recorded.
     let trace_path =
         std::env::var("ASARM_TRACE_OUT").unwrap_or_else(|_| "TRACE_streaming.json".to_string());
-    let h = spawn_slow(4);
+    let flight_path =
+        std::env::var("ASARM_FLIGHT_OUT").unwrap_or_else(|_| "FLIGHT_streaming.json".to_string());
+    let h = spawn(
+        move || {
+            Ok(Box::new(SlowEngine::new(
+                MockEngine::new(7, 64, 258, 1.0),
+                FORWARD_DELAY,
+            )) as Box<dyn Engine>)
+        },
+        SchedulerConfig {
+            max_batch: 4,
+            idle_poll: Duration::from_millis(1),
+            queue_depth: 4096,
+            flight_sample_rate: 1.0,
+            ..Default::default()
+        },
+        Metrics::new(),
+    );
     let rh = h
         .submit(request(
             0,
@@ -268,6 +288,11 @@ fn main() -> Result<()> {
         .expect("tracing is on by default; the retired trace must be in the ring");
     std::fs::write(&trace_path, chrome.to_string())?;
     eprintln!("perf_streaming: wrote {trace_path} (load into chrome://tracing)");
+    let flight = h
+        .flight_json(id)
+        .expect("flight sampling is 1.0; the record must be in the ring");
+    std::fs::write(&flight_path, flight.to_string())?;
+    eprintln!("perf_streaming: wrote {flight_path} (per-window speculation anatomy)");
 
     if regressed {
         bail!("TTFT regression: streaming first-token latency >= blocking total latency");

@@ -17,10 +17,21 @@
 //!   GET  /replicas         — per-replica stats JSON array
 //!   GET  /trace/recent     — index of recently retired request
 //!                            traces (one summary object per trace,
-//!                            newest first; `[]` when tracing is off)
+//!                            newest first; `[]` when tracing is off);
+//!                            `?limit=N` bounds the response, clamped
+//!                            to the trace-ring capacity
 //!   GET  /trace/{id}       — full trace for one request as Chrome
 //!                            trace-event JSON (load into
 //!                            chrome://tracing or Perfetto)
+//!   GET  /debug/vars       — JSON snapshot of the rolling per-second
+//!                            time-series (merged across replicas) plus
+//!                            the speculation heatmap/curve aggregates;
+//!                            `?window=N` selects the trailing seconds
+//!   GET  /debug/flight/{id}— one sampled request's speculation flight
+//!                            record (windows, per-position outcomes,
+//!                            entropies, adaptive-window trajectory)
+//!   GET  /debug/dashboard  — self-contained HTML dashboard polling
+//!                            /debug/vars (no external assets)
 //!   GET  /healthz          — pool liveness: 200 while any replica is
 //!                            serving (or restarting under supervision),
 //!                            503 once every replica is Stopped/Failed;
@@ -58,10 +69,24 @@ use super::scheduler::{SchedulerHandle, SubmitError};
 /// keepalive comment (which doubles as disconnect detection).
 const SSE_KEEPALIVE: Duration = Duration::from_millis(500);
 
-/// How many trace summaries GET /trace/recent returns (newest first).
-/// The full per-replica rings usually hold more; this bounds the
-/// response body, not the retention.
+/// How many trace summaries GET /trace/recent returns (newest first)
+/// when the client passes no `?limit=`. The full per-replica rings
+/// usually hold more; this bounds the response body, not the retention.
 const TRACE_RECENT_LIMIT: usize = 64;
+
+/// Default trailing window (seconds) for GET /debug/vars when the client
+/// passes no `?window=`.
+const DEBUG_VARS_WINDOW: usize = 60;
+
+/// First value of `key` in a raw query string (`a=1&b=2`). No percent
+/// decoding: every parameter this server accepts is numeric.
+fn query_param<'q>(query: &'q str, key: &str) -> Option<&'q str> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v)
+}
 
 pub struct HttpServer {
     pub addr: std::net::SocketAddr,
@@ -138,6 +163,148 @@ impl Request {
         self.accept.to_ascii_lowercase().contains("text/plain")
     }
 }
+
+/// The GET /debug/dashboard payload: one self-contained page (inline
+/// CSS/JS, no external assets — it must render from an air-gapped box)
+/// that polls /debug/vars and draws the rolling time-series plus the
+/// positional-acceptance heatmap and entropy acceptance curves.
+const DASHBOARD_HTML: &str = r##"<!doctype html>
+<html lang="en">
+<head>
+<meta charset="utf-8">
+<title>asarm dashboard</title>
+<style>
+ body{font:13px/1.4 system-ui,sans-serif;margin:16px;background:#111;color:#ddd}
+ h1{font-size:16px;margin:0 0 4px}
+ h2{font-size:13px;margin:14px 0 4px;color:#9cf}
+ .meta{color:#888}
+ .grid{display:flex;flex-wrap:wrap;gap:16px}
+ canvas{background:#1a1a1a;border:1px solid #333}
+ table{border-collapse:collapse;margin-top:4px}
+ td,th{border:1px solid #333;padding:2px 6px;text-align:right;font-variant-numeric:tabular-nums}
+ th{color:#9cf;font-weight:normal}
+ td.hm{color:#111;min-width:34px}
+ #err{color:#f66}
+</style>
+</head>
+<body>
+<h1>asarm — speculation &amp; serving dashboard</h1>
+<div class="meta">polls <code>/debug/vars?window=120</code> every 2s
+ &middot; uptime <span id="up">?</span>s
+ &middot; queue depth <span id="qd">?</span>
+ &middot; flight records <span id="fr">?</span> (dropped <span id="fd">?</span>, rate <span id="fs">?</span>)
+ <span id="err"></span></div>
+<div class="grid">
+ <div><h2>tokens/s &amp; model NFE/s</h2><canvas id="tps" width="460" height="140"></canvas></div>
+ <div><h2>accept rate (per second)</h2><canvas id="acc" width="460" height="140"></canvas></div>
+ <div><h2>queue depth &amp; batch occupancy</h2><canvas id="load" width="460" height="140"></canvas></div>
+ <div><h2>KV blocks free &amp; engine errors</h2><canvas id="kv" width="460" height="140"></canvas></div>
+</div>
+<h2>positional acceptance heatmap (accept rate &times; window position &times; drafter)</h2>
+<div id="heat"></div>
+<h2>entropy-bucketed acceptance (accept rate by target-entropy bucket, nats)</h2>
+<div id="curves"></div>
+<script>
+"use strict";
+function line(id, rows, series, colors, ymaxHint) {
+  const c = document.getElementById(id), g = c.getContext("2d");
+  g.clearRect(0, 0, c.width, c.height);
+  if (!rows.length) return;
+  let ymax = ymaxHint || 0;
+  for (const s of series) for (const r of rows) ymax = Math.max(ymax, s.get(r));
+  ymax = ymax || 1;
+  g.strokeStyle = "#333";
+  g.strokeRect(0.5, 0.5, c.width - 1, c.height - 1);
+  series.forEach((s, si) => {
+    g.strokeStyle = colors[si];
+    g.beginPath();
+    rows.forEach((r, i) => {
+      const x = rows.length < 2 ? c.width / 2 : i * (c.width - 8) / (rows.length - 1) + 4;
+      const y = c.height - 4 - (s.get(r) / ymax) * (c.height - 8);
+      i ? g.lineTo(x, y) : g.moveTo(x, y);
+    });
+    g.stroke();
+    g.fillStyle = colors[si];
+    g.fillText(s.name + " (max " + ymax.toFixed(ymax < 2 ? 2 : 0) + ")", 6, 12 + 12 * si);
+  });
+}
+function shade(rate) {
+  const t = Math.max(0, Math.min(1, rate));
+  return "rgb(" + Math.round(230 - 160 * t) + "," + Math.round(70 + 160 * t) + ",80)";
+}
+function heatTable(heat) {
+  let maxPos = 0;
+  for (const h of heat) maxPos = Math.max(maxPos, ...h.positions.map(p => p.pos + 1));
+  if (!heat.length || !maxPos) return "<div class=meta>no speculation windows recorded yet</div>";
+  let html = "<table><tr><th>drafter</th><th>windows</th>";
+  for (let p = 0; p < maxPos; p++) html += "<th>p" + p + "</th>";
+  html += "</tr>";
+  for (const h of heat) {
+    html += "<tr><th>" + h.drafter + "</th><td>" + h.windows + "</td>";
+    for (let p = 0; p < maxPos; p++) {
+      const cell = h.positions.find(x => x.pos === p);
+      html += cell
+        ? "<td class=hm style='background:" + shade(cell.accept_rate) + "' title='" +
+          cell.accepted + "/" + cell.proposed + "'>" + cell.accept_rate.toFixed(2) + "</td>"
+        : "<td></td>";
+    }
+    html += "</tr>";
+  }
+  return html + "</table>";
+}
+function curveTable(heat) {
+  if (!heat.length) return "<div class=meta>no data</div>";
+  const les = heat[0].entropy_curve.map(b => b.le);
+  let html = "<table><tr><th>drafter</th>";
+  for (const le of les) html += "<th>&le;" + le + "</th>";
+  html += "</tr>";
+  for (const h of heat) {
+    html += "<tr><th>" + h.drafter + "</th>";
+    for (const b of h.entropy_curve) {
+      html += b.proposed > 0
+        ? "<td class=hm style='background:" + shade(b.accept_rate) + "' title='" +
+          b.accepted + "/" + b.proposed + "'>" + b.accept_rate.toFixed(2) + "</td>"
+        : "<td></td>";
+    }
+    html += "</tr>";
+  }
+  return html + "</table>";
+}
+async function tick() {
+  try {
+    const v = await (await fetch("/debug/vars?window=120")).json();
+    document.getElementById("err").textContent = "";
+    document.getElementById("up").textContent = v.uptime_sec;
+    document.getElementById("qd").textContent = v.queue_depth;
+    document.getElementById("fr").textContent = v.flight.recorded;
+    document.getElementById("fd").textContent = v.flight.dropped;
+    document.getElementById("fs").textContent = v.flight.sample_rate;
+    const rows = v.series;
+    line("tps", rows, [
+      { name: "tokens/s", get: r => r.tokens },
+      { name: "model NFE/s", get: r => r.model_nfe },
+    ], ["#6cf", "#fc6"]);
+    line("acc", rows, [{ name: "accept rate", get: r => r.accept_rate }], ["#6f6"], 1);
+    line("load", rows, [
+      { name: "queue depth", get: r => r.queue_depth },
+      { name: "batch occupancy", get: r => r.batch_occupancy },
+    ], ["#f96", "#96f"]);
+    line("kv", rows, [
+      { name: "kv blocks free", get: r => r.kv_blocks_free },
+      { name: "engine errors/s", get: r => r.errors_transient + r.errors_lane_corrupt + r.errors_fatal },
+    ], ["#9cf", "#f66"]);
+    document.getElementById("heat").innerHTML = heatTable(v.heatmap);
+    document.getElementById("curves").innerHTML = curveTable(v.heatmap);
+  } catch (e) {
+    document.getElementById("err").textContent = " — fetch failed: " + e;
+  }
+}
+tick();
+setInterval(tick, 2000);
+</script>
+</body>
+</html>
+"##;
 
 fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -273,7 +440,13 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
             return write_response(&mut stream, 400, "Bad Request", &body);
         }
     };
-    match (req.method.as_str(), req.path.as_str()) {
+    // The request target may carry a query string; routing matches on
+    // the bare path and each route parses its own parameters.
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
             // Liveness is pool-level: 200 while any replica serves or
             // will serve again (Starting/Running/Degraded/Quarantined-
@@ -314,12 +487,27 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
         ("GET", "/replicas") => {
             write_response(&mut stream, 200, "OK", &handle.replicas_json().to_string())
         }
-        ("GET", "/trace/recent") => write_response(
-            &mut stream,
-            200,
-            "OK",
-            &handle.trace_recent_json(TRACE_RECENT_LIMIT).to_string(),
-        ),
+        ("GET", "/trace/recent") => {
+            // `?limit=N` bounds the response body; clamped to the ring
+            // capacity because a larger limit cannot return more than
+            // the per-replica rings retain anyway.
+            let limit = match query_param(query, "limit") {
+                None => TRACE_RECENT_LIMIT,
+                Some(raw) => match raw.parse::<usize>() {
+                    Ok(n) => n.min(handle.trace_capacity()),
+                    Err(_) => {
+                        let body = r#"{"error":"limit must be a non-negative integer"}"#;
+                        return write_response(&mut stream, 400, "Bad Request", body);
+                    }
+                },
+            };
+            write_response(
+                &mut stream,
+                200,
+                "OK",
+                &handle.trace_recent_json(limit).to_string(),
+            )
+        }
         ("GET", p) if p.starts_with("/trace/") => {
             match p["/trace/".len()..].parse::<u64>() {
                 Err(_) => {
@@ -340,6 +528,46 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
                 },
             }
         }
+        ("GET", "/debug/vars") => {
+            // `?window=N` selects the trailing seconds of time-series
+            // history; the ring snapshot clamps it to its capacity.
+            let window = match query_param(query, "window") {
+                None => DEBUG_VARS_WINDOW,
+                Some(raw) => match raw.parse::<usize>() {
+                    Ok(n) => n.max(1),
+                    Err(_) => {
+                        let body = r#"{"error":"window must be a positive integer (seconds)"}"#;
+                        return write_response(&mut stream, 400, "Bad Request", body);
+                    }
+                },
+            };
+            write_response(&mut stream, 200, "OK", &handle.debug_vars_json(window).to_string())
+        }
+        ("GET", p) if p.starts_with("/debug/flight/") => {
+            match p["/debug/flight/".len()..].parse::<u64>() {
+                Err(_) => {
+                    let body = r#"{"error":"flight id must be a decimal request id"}"#;
+                    write_response(&mut stream, 400, "Bad Request", body)
+                }
+                Ok(id) => match handle.flight_json(id) {
+                    Some(j) => write_response(&mut stream, 200, "OK", &j.to_string()),
+                    None => write_response(
+                        &mut stream,
+                        404,
+                        "Not Found",
+                        r#"{"error":"no flight record for that request id (not sampled, or evicted from the ring)"}"#,
+                    ),
+                },
+            }
+        }
+        ("GET", "/debug/dashboard") => write_response_typed(
+            &mut stream,
+            200,
+            "OK",
+            "text/html; charset=utf-8",
+            &[],
+            DASHBOARD_HTML,
+        ),
         ("POST", "/v1/infill") => {
             let infill = match parse_infill(&req.body) {
                 Ok(r) => r,

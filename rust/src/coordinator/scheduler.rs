@@ -91,6 +91,8 @@ use crate::decode::sequential::SequentialMachine;
 use crate::decode::{DecodeMachine, DecodeOutcome, IterPhase, IterStats};
 use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
+use crate::obs::flight::{self, FlightBuilder, FlightRecorder};
+use crate::obs::timeseries::{self, Bucket, CounterFold, TsRing};
 use crate::obs::{chrome, tap, Rung, SpanKind, SpanRecorder, TraceBuilder, DEFAULT_SPAN_CAP};
 use crate::runtime::{
     ChaosConfig, ChaosEngine, Engine, EngineError, EnginePool, ErrorClass, ForwardSpec, Health,
@@ -137,6 +139,16 @@ pub struct SchedulerConfig {
     /// Completed traces retained PER REPLICA in its drop-oldest
     /// [`SpanRecorder`] ring (`--trace-capacity`).
     pub trace_capacity: usize,
+    /// Fraction of requests whose speculation flight is recorded
+    /// (`--flight-sample-rate`; docs/ARCHITECTURE.md §Speculation
+    /// analytics & time-series). The decision is a deterministic hash of
+    /// the request id — never the decode RNG — so sampled and unsampled
+    /// runs stay bit-identical. 0 disables the recorder entirely.
+    pub flight_sample_rate: f64,
+    /// Retired flight records retained PER REPLICA in its drop-oldest
+    /// [`FlightRecorder`] ring (`--flight-capacity`). Heatmap aggregates
+    /// fold at record time and survive ring eviction.
+    pub flight_capacity: usize,
     /// Deterministic fault injection wrapped around every replica's
     /// engine at provision time (`--chaos-seed`/`--chaos-rate`; docs/
     /// ARCHITECTURE.md §Fault tolerance & supervision). The default zero
@@ -164,6 +176,8 @@ impl Default for SchedulerConfig {
             event_capacity: 256,
             trace: true,
             trace_capacity: 256,
+            flight_sample_rate: 0.05,
+            flight_capacity: 64,
             chaos: ChaosConfig::default(),
             retry_budget: 8,
             health: HealthPolicy::default(),
@@ -208,9 +222,20 @@ pub struct SchedulerHandle {
     tx: mpmc::Sender<Job>,
     replicas: Arc<Vec<ReplicaStats>>,
     recorders: Arc<Vec<SpanRecorder>>,
+    flights: Arc<Vec<FlightRecorder>>,
+    /// Per-replica per-second activity rings plus one pool-level ring
+    /// for queue depth (the admission queue is shared, so folding it
+    /// per replica would overcount under the sum-merge).
+    rings: Arc<Vec<TsRing>>,
+    pool_ring: Arc<TsRing>,
+    /// Shared epoch for the time-series clock (bucket seconds are
+    /// `origin.elapsed().as_secs()` on every worker).
+    origin: Instant,
     metrics: Metrics,
     queue_depth: usize,
     event_capacity: usize,
+    trace_capacity: usize,
+    flight_sample_rate: f64,
 }
 
 impl SchedulerHandle {
@@ -293,10 +318,172 @@ impl SchedulerHandle {
         Json::Arr(all.iter().map(|t| t.summary_json()).collect())
     }
 
+    /// Ring capacity of the per-replica trace recorders — the clamp for
+    /// `/trace/recent?limit=` (a larger limit cannot return more than
+    /// the rings retain).
+    pub fn trace_capacity(&self) -> usize {
+        self.trace_capacity
+    }
+
+    /// Look up a retired request's flight record across every replica's
+    /// ring (the GET /debug/flight/{id} payload).
+    pub fn flight_json(&self, request_id: u64) -> Option<Json> {
+        self.flights
+            .iter()
+            .find_map(|f| f.get(request_id))
+            .map(|r| r.to_json())
+    }
+
+    /// Pool-merged positional-acceptance heatmap + entropy curves.
+    fn merged_heat(&self) -> Vec<flight::DrafterHeat> {
+        flight::merge_heat(self.flights.iter().map(|f| f.heat()).collect())
+    }
+
+    /// The GET /debug/vars payload: windowed pool time-series (replica
+    /// rings merged field-wise, plus the shared-queue ring), the flight
+    /// heatmap/curve aggregates, and recorder accounting.
+    pub fn debug_vars_json(&self, window: usize) -> Json {
+        let mut snaps: Vec<Vec<Bucket>> =
+            self.rings.iter().map(|r| r.snapshot(window)).collect();
+        snaps.push(self.pool_ring.snapshot(window));
+        let series = timeseries::merge(&snaps);
+        let recorded: u64 = self.flights.iter().map(|f| f.recorded()).sum();
+        let dropped: u64 = self.flights.iter().map(|f| f.dropped()).sum();
+        Json::obj(vec![
+            ("uptime_sec", Json::num(self.origin.elapsed().as_secs() as f64)),
+            ("window", Json::num(window as f64)),
+            ("queue_depth", Json::num(self.tx.len() as f64)),
+            ("series", timeseries::series_json(&series)),
+            ("heatmap", flight::heat_json(&self.merged_heat())),
+            (
+                "flight",
+                Json::obj(vec![
+                    ("sample_rate", Json::num(self.flight_sample_rate)),
+                    ("recorded", Json::num(recorded as f64)),
+                    ("dropped", Json::num(dropped as f64)),
+                ]),
+            ),
+        ])
+    }
+
     /// Prometheus text exposition of the pool aggregate plus per-replica
-    /// counters (the GET /metrics payload under `Accept: text/plain`).
+    /// counters (the GET /metrics payload under `Accept: text/plain`),
+    /// with the flight-recorder heatmap/curve families appended.
     pub fn prometheus_text(&self) -> String {
-        self.metrics.prometheus(&self.replicas)
+        let mut out = self.metrics.prometheus(&self.replicas);
+        out.push_str(&self.prometheus_flight_text());
+        out
+    }
+
+    /// Flight-recorder families: positional acceptance heatmap and
+    /// entropy-bucketed acceptance curves as per-drafter labeled
+    /// counters, plus a per-drafter target-entropy histogram.
+    fn prometheus_flight_text(&self) -> String {
+        use crate::obs::prometheus::PromText;
+        let heat = self.merged_heat();
+        let recorded: u64 = self.flights.iter().map(|f| f.recorded()).sum();
+        let dropped: u64 = self.flights.iter().map(|f| f.dropped()).sum();
+        let mut w = PromText::new();
+        w.counter(
+            "asarm_flight_records_total",
+            "Flight records captured (sampled requests retired).",
+            recorded as f64,
+        );
+        w.counter(
+            "asarm_flight_records_dropped_total",
+            "Flight records evicted from the per-replica rings.",
+            dropped as f64,
+        );
+        w.header(
+            "asarm_flight_windows_total",
+            "Speculation windows recorded, by drafter.",
+            "counter",
+        );
+        for h in &heat {
+            w.sample("asarm_flight_windows_total", &[("drafter", &h.drafter)], h.windows as f64);
+        }
+        w.header(
+            "asarm_flight_position_proposed_total",
+            "Window positions verified, by drafter and window position.",
+            "counter",
+        );
+        for h in &heat {
+            for (i, &(p, _)) in h.pos.iter().enumerate().filter(|(_, c)| c.0 > 0) {
+                let pos = i.to_string();
+                w.sample(
+                    "asarm_flight_position_proposed_total",
+                    &[("drafter", &h.drafter), ("pos", &pos)],
+                    p as f64,
+                );
+            }
+        }
+        w.header(
+            "asarm_flight_position_accepted_total",
+            "Window positions accepted, by drafter and window position.",
+            "counter",
+        );
+        for h in &heat {
+            for (i, &(p, a)) in h.pos.iter().enumerate().filter(|(_, c)| c.0 > 0) {
+                let _ = p;
+                let pos = i.to_string();
+                w.sample(
+                    "asarm_flight_position_accepted_total",
+                    &[("drafter", &h.drafter), ("pos", &pos)],
+                    a as f64,
+                );
+            }
+        }
+        w.header(
+            "asarm_flight_entropy_proposed_total",
+            "Window positions verified, by drafter and target-entropy bucket (le = nats).",
+            "counter",
+        );
+        for h in &heat {
+            for (i, &(p, _)) in h.entropy.iter().enumerate() {
+                let le = flight::ENTROPY_BOUNDS
+                    .get(i)
+                    .map(|b| b.to_string())
+                    .unwrap_or_else(|| "+Inf".to_string());
+                w.sample(
+                    "asarm_flight_entropy_proposed_total",
+                    &[("drafter", &h.drafter), ("le", &le)],
+                    p as f64,
+                );
+            }
+        }
+        w.header(
+            "asarm_flight_entropy_accepted_total",
+            "Window positions accepted, by drafter and target-entropy bucket (le = nats).",
+            "counter",
+        );
+        for h in &heat {
+            for (i, &(_, a)) in h.entropy.iter().enumerate() {
+                let le = flight::ENTROPY_BOUNDS
+                    .get(i)
+                    .map(|b| b.to_string())
+                    .unwrap_or_else(|| "+Inf".to_string());
+                w.sample(
+                    "asarm_flight_entropy_accepted_total",
+                    &[("drafter", &h.drafter), ("le", &le)],
+                    a as f64,
+                );
+            }
+        }
+        if !heat.is_empty() {
+            w.header(
+                "asarm_flight_target_entropy_nats",
+                "Target-distribution entropy of verified rows, by drafter.",
+                "histogram",
+            );
+            for h in &heat {
+                w.histogram_series(
+                    "asarm_flight_target_entropy_nats",
+                    &[("drafter", &h.drafter)],
+                    &h.target_entropy,
+                );
+            }
+        }
+        w.finish()
     }
 
     /// Pool liveness — the GET /healthz criterion: true while at least
@@ -347,6 +534,10 @@ struct Slot {
     n_targets: usize,
     /// Per-request span/counter accumulator; `None` with tracing off.
     trace: Option<TraceBuilder>,
+    /// Speculation flight accumulator; `Some` only for requests chosen
+    /// by the deterministic id-hash sampler. Its presence is what arms
+    /// the machine-side flight tap around this slot's absorbs.
+    flight: Option<FlightBuilder>,
     /// Remaining single-spec retry launches for fault recovery
     /// ([`SchedulerConfig::retry_budget`]); decremented per attempt,
     /// never replenished.
@@ -391,6 +582,18 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
             .map(|_| SpanRecorder::new(cfg.trace_capacity))
             .collect(),
     );
+    let flights: Arc<Vec<FlightRecorder>> = Arc::new(
+        (0..n_workers)
+            .map(|_| FlightRecorder::new(cfg.flight_capacity))
+            .collect(),
+    );
+    let rings: Arc<Vec<TsRing>> = Arc::new(
+        (0..n_workers)
+            .map(|_| TsRing::new(TS_RING_CAPACITY))
+            .collect(),
+    );
+    let pool_ring = Arc::new(TsRing::new(TS_RING_CAPACITY));
+    let origin = Instant::now();
     let live = Arc::new(AtomicUsize::new(n_workers));
     let pool = Arc::new(pool);
     for id in 0..n_workers {
@@ -398,6 +601,9 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
         let metrics = metrics.clone();
         let replicas = Arc::clone(&replicas);
         let recorders = Arc::clone(&recorders);
+        let flights = Arc::clone(&flights);
+        let rings = Arc::clone(&rings);
+        let pool_ring = Arc::clone(&pool_ring);
         let live = Arc::clone(&live);
         let pool = Arc::clone(&pool);
         thread::Builder::new()
@@ -413,6 +619,12 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
                 };
                 let stats = &replicas[id];
                 let recorder = &recorders[id];
+                let obs = WorkerObs {
+                    flight: &flights[id],
+                    ring: &rings[id],
+                    pool_ring: &pool_ring,
+                    origin,
+                };
                 // SUPERVISION: each pass provisions one engine
                 // INCARNATION and serves on it until the queue closes
                 // (orderly exit) or the incarnation dies — a fatal engine
@@ -429,7 +641,7 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
                             let engine = ChaosEngine::wrap(engine, cfg.chaos);
                             stats.set_state(ReplicaState::Running);
                             match catch_unwind(AssertUnwindSafe(|| {
-                                run_worker(engine.as_ref(), &rx, cfg, &metrics, stats, recorder)
+                                run_worker(engine.as_ref(), &rx, cfg, &metrics, stats, recorder, &obs)
                             })) {
                                 Ok(WorkerExit::Drained) => {
                                     stats.set_state(ReplicaState::Stopped);
@@ -467,9 +679,105 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
         tx,
         replicas,
         recorders,
+        flights,
+        rings,
+        pool_ring,
+        origin,
         metrics,
         queue_depth: cfg.queue_depth,
         event_capacity: cfg.event_capacity,
+        trace_capacity: cfg.trace_capacity,
+        flight_sample_rate: cfg.flight_sample_rate,
+    }
+}
+
+/// Per-second buckets retained per ring: ten minutes of history — enough
+/// for the dashboard's widest window while keeping a ring at a few tens
+/// of KiB.
+const TS_RING_CAPACITY: usize = 600;
+
+/// The per-worker observability surfaces threaded into [`run_worker`]
+/// alongside the replica's trace recorder (grouped so incarnation
+/// restarts keep reusing the same rings and flight ring).
+struct WorkerObs<'a> {
+    flight: &'a FlightRecorder,
+    ring: &'a TsRing,
+    pool_ring: &'a TsRing,
+    origin: Instant,
+}
+
+/// Cumulative-to-delta folds for the per-second bucket ring, plus the
+/// engine-error deltas that have no cumulative per-class source on
+/// [`ReplicaStats`] (its error counter is classless) and are therefore
+/// counted directly at the `e.class()` match sites.
+#[derive(Default)]
+struct TsFolds {
+    tokens: CounterFold,
+    model_nfe: CounterFold,
+    aux_nfe: CounterFold,
+    proposed: CounterFold,
+    accepted: CounterFold,
+    requests: CounterFold,
+    err_transient: u64,
+    err_lane_corrupt: u64,
+    err_fatal: u64,
+}
+
+impl TsFolds {
+    fn note_engine_error(&mut self, class: ErrorClass) {
+        match class {
+            ErrorClass::Transient => self.err_transient += 1,
+            ErrorClass::LaneCorrupt => self.err_lane_corrupt += 1,
+            ErrorClass::Fatal => self.err_fatal += 1,
+        }
+    }
+
+    /// Fold this replica's cumulative counters into the current
+    /// one-second bucket and overwrite its gauges. Queue depth is a
+    /// POOL-level gauge (the admission queue is shared), so it lands in
+    /// the pool ring only — writing it per-replica would overcount it
+    /// N-fold under the field-wise sum that merges replica rings.
+    fn tick(
+        &mut self,
+        obs: &WorkerObs<'_>,
+        stats: &ReplicaStats,
+        engine: &dyn Engine,
+        queue_depth: usize,
+        occupancy: usize,
+    ) {
+        let at = obs.origin.elapsed().as_secs();
+        let tokens = self.tokens.fold(stats.tokens_generated());
+        let model_nfe = self.model_nfe.fold(stats.model_nfe());
+        let aux_nfe = self.aux_nfe.fold(stats.aux_nfe());
+        let proposed = self.proposed.fold(stats.proposed());
+        let accepted = self.accepted.fold(stats.accepted());
+        let requests = self.requests.fold(stats.requests());
+        let (et, el, ef) = (self.err_transient, self.err_lane_corrupt, self.err_fatal);
+        self.err_transient = 0;
+        self.err_lane_corrupt = 0;
+        self.err_fatal = 0;
+        let kv = engine.kv_stats();
+        let serving = stats.state().is_serving() as u64;
+        obs.ring.record_at(at, |b| {
+            b.tokens += tokens;
+            b.model_nfe += model_nfe;
+            b.aux_nfe += aux_nfe;
+            b.proposed += proposed;
+            b.accepted += accepted;
+            b.requests += requests;
+            b.errors_transient += et;
+            b.errors_lane_corrupt += el;
+            b.errors_fatal += ef;
+            b.batch_occupancy = occupancy as u64;
+            if let Some(kv) = &kv {
+                b.kv_blocks_free = kv.free_blocks as u64;
+                b.kv_blocks_total = kv.total_blocks as u64;
+            }
+            b.serving = serving;
+        });
+        obs.pool_ring.record_at(at, |b| {
+            b.queue_depth = queue_depth as u64;
+        });
     }
 }
 
@@ -538,6 +846,19 @@ fn finish_trace(
     }
 }
 
+/// Close and publish a slot's flight record (if this request was
+/// sampled). The trace-path twin of [`finish_trace`].
+fn finish_flight(
+    flight: Option<FlightBuilder>,
+    completed: bool,
+    draft_kind: String,
+    flight_rec: &FlightRecorder,
+) {
+    if let Some(b) = flight {
+        flight_rec.record(b.finish(completed, draft_kind));
+    }
+}
+
 /// Retire a slot whose lifecycle ended before the decode finished: book
 /// the right counter and send the terminal error (with partial progress).
 fn abort_slot(
@@ -546,6 +867,7 @@ fn abort_slot(
     metrics: &Metrics,
     stats: &ReplicaStats,
     recorder: &SpanRecorder,
+    flight_rec: &FlightRecorder,
 ) {
     let what = record_abort(reason, metrics, stats);
     let s = slot.machine.iter_stats();
@@ -558,6 +880,7 @@ fn abort_slot(
         stats,
         recorder,
     );
+    finish_flight(slot.flight.take(), false, String::new(), flight_rec);
     slot.life.finish(Err(anyhow!(
         "{what} after {}/{} tokens",
         slot.committed,
@@ -613,9 +936,18 @@ fn absorb_traced(
             tb.note_rung(r);
         }
     }
+    // Arm the flight tap for exactly this absorb (the arm also clears
+    // any residue a panicking batch-mate could have left in the
+    // thread-local buffer), and drain it right after. Machines only
+    // *read* sampling buffers under the tap — the RNG stream is
+    // untouched — so recording cannot perturb decode outputs.
+    flight::begin(slot.flight.is_some());
     let t = Instant::now();
     slot.machine.absorb(rows);
     let dur = t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+    if let Some(fb) = slot.flight.as_mut() {
+        fb.drain_tap();
+    }
     let post = slot.machine.iter_stats();
     if let Some(tb) = slot.trace.as_mut() {
         let (kind, a, b) = match phase {
@@ -665,6 +997,7 @@ fn retire_failed(
     metrics: &Metrics,
     stats: &ReplicaStats,
     recorder: &SpanRecorder,
+    flight_rec: &FlightRecorder,
 ) {
     metrics.record_failure();
     stats.record_failure();
@@ -680,6 +1013,7 @@ fn retire_failed(
         stats,
         recorder,
     );
+    finish_flight(slot.flight.take(), false, String::new(), flight_rec);
     let (committed, targets) = (slot.committed, slot.n_targets);
     slot.life.finish(Err(err.context(format!(
         "request failed after {committed}/{targets} tokens"
@@ -717,6 +1051,7 @@ fn recover_slot(
     cause: &EngineError,
     metrics: &Metrics,
     stats: &ReplicaStats,
+    ts: &mut TsFolds,
 ) -> SlotRecovery {
     let mut last = cause.clone();
     loop {
@@ -761,6 +1096,7 @@ fn recover_slot(
                 tap::reset();
                 metrics.record_engine_error(e.class());
                 stats.record_engine_error();
+                ts.note_engine_error(e.class());
                 if e.class() == ErrorClass::Fatal {
                     return SlotRecovery::Fatal(e);
                 }
@@ -783,6 +1119,8 @@ fn recover_lanes(
     metrics: &Metrics,
     stats: &ReplicaStats,
     recorder: &SpanRecorder,
+    flight_rec: &FlightRecorder,
+    ts: &mut TsFolds,
     engine_dead: &mut Option<EngineError>,
 ) {
     for &lane in idx {
@@ -790,7 +1128,7 @@ fn recover_lanes(
             return;
         }
         let outcome = match lanes[lane].as_mut() {
-            Some(slot) => recover_slot(engine, lane, slot, cause, metrics, stats),
+            Some(slot) => recover_slot(engine, lane, slot, cause, metrics, stats, ts),
             None => continue,
         };
         match outcome {
@@ -804,6 +1142,7 @@ fn recover_lanes(
                         metrics,
                         stats,
                         recorder,
+                        flight_rec,
                     );
                 }
             }
@@ -830,6 +1169,7 @@ fn absorb_contained(
     metrics: &Metrics,
     stats: &ReplicaStats,
     recorder: &SpanRecorder,
+    flight_rec: &FlightRecorder,
 ) {
     let Some(slot) = lanes[lane].as_mut() else {
         return;
@@ -846,6 +1186,7 @@ fn absorb_contained(
                 metrics,
                 stats,
                 recorder,
+                flight_rec,
             );
         }
     }
@@ -859,6 +1200,7 @@ fn run_worker(
     metrics: &Metrics,
     stats: &ReplicaStats,
     recorder: &SpanRecorder,
+    obs: &WorkerObs<'_>,
 ) -> WorkerExit {
     let tok = ByteTokenizer::new();
     // Health is per-incarnation: a fresh tracker each time the supervisor
@@ -870,6 +1212,13 @@ fn run_worker(
     // so a prior occupant of the thread cannot leak notes into our first
     // iteration.
     tap::reset();
+    flight::reset();
+    // Per-worker time-series folds: the replica's cumulative counters are
+    // turned into per-second deltas for the bucket ring (counters fold,
+    // gauges overwrite). Per-incarnation is fine: the cumulative sources
+    // (ReplicaStats) outlive incarnations, and CounterFold's reset rule
+    // only fires when a cumulative actually goes backwards.
+    let mut ts = TsFolds::default();
     // BLOCK-BUDGET ADMISSION: on a paged-KV engine, concurrency is capped
     // by memory, not just `max_batch` — admit only as many lanes as the
     // block pool can back at their worst case (every lane growing to the
@@ -897,6 +1246,12 @@ fn run_worker(
     }
 
     while queue_open || active(&lanes) > 0 {
+        // --- time-series tick: fold this replica's cumulative counters
+        //     into the current one-second bucket. Idle iterations tick
+        //     too (the admission loop blocks at most `idle_poll`), so
+        //     seconds keep advancing and gauges stay fresh while the
+        //     replica waits for work. ---
+        ts.tick(obs, stats, engine, rx.len(), active(&lanes));
         // --- admission: top up free lanes from the shared queue ---
         while active(&lanes) < lanes.len() && queue_open {
             let job = if active(&lanes) == 0 {
@@ -943,6 +1298,11 @@ fn run_worker(
                 b.push_at(SpanKind::QueueWait, 0, 0, queue_us, 0, 0);
                 b
             });
+            // Flight sampling is deterministic in the request id, so a
+            // request is either recorded everywhere or nowhere — replays
+            // and cross-replica comparisons see the same sample set.
+            let flight = flight::sampled(job.request_id, cfg.flight_sample_rate)
+                .then(|| FlightBuilder::new(job.request_id, stats.id, sampler));
             match admit(engine, &tok, job.request, cfg.default_draft) {
                 Ok(AdmitResult::Slot(machine, text_len, n_targets)) => {
                     // The admission loop's guard guarantees a free lane;
@@ -963,6 +1323,7 @@ fn run_worker(
                             stats,
                             recorder,
                         );
+                        finish_flight(flight, false, String::new(), obs.flight);
                         job.life
                             .finish(Err(anyhow!("internal: no free lane at admission")));
                         continue;
@@ -986,6 +1347,7 @@ fn run_worker(
                         text_len,
                         n_targets,
                         trace,
+                        flight,
                         retries: cfg.retry_budget,
                     });
                 }
@@ -1003,6 +1365,7 @@ fn run_worker(
                         stats,
                         recorder,
                     );
+                    finish_flight(flight, true, String::new(), obs.flight);
                     job.life.finish(Ok(resp));
                 }
                 Err(e) => {
@@ -1017,6 +1380,7 @@ fn run_worker(
                         stats,
                         recorder,
                     );
+                    finish_flight(flight, false, String::new(), obs.flight);
                     job.life.finish(Err(e));
                 }
             }
@@ -1032,7 +1396,7 @@ fn run_worker(
             if let Some(reason) = aborted {
                 let Some(slot) = lanes[lane].take() else { continue };
                 engine.reset_lane(lane);
-                abort_slot(slot, reason, metrics, stats, recorder);
+                abort_slot(slot, reason, metrics, stats, recorder, obs.flight);
             }
         }
         let b = active(&lanes);
@@ -1144,6 +1508,7 @@ fn run_worker(
                     metrics,
                     stats,
                     recorder,
+                    obs.flight,
                 );
             }
         }
@@ -1160,6 +1525,7 @@ fn run_worker(
                 batch_errors += 1;
                 metrics.record_engine_error(e.class());
                 stats.record_engine_error();
+                ts.note_engine_error(e.class());
                 if e.class() == ErrorClass::Fatal {
                     engine_dead = Some(e);
                 } else {
@@ -1171,6 +1537,8 @@ fn run_worker(
                         metrics,
                         stats,
                         recorder,
+                        obs.flight,
+                        &mut ts,
                         &mut engine_dead,
                     );
                 }
@@ -1192,6 +1560,7 @@ fn run_worker(
                 batch_errors += 1;
                 metrics.record_engine_error(e.class());
                 stats.record_engine_error();
+                ts.note_engine_error(e.class());
                 if engine_dead.is_none() {
                     if e.class() == ErrorClass::Fatal {
                         engine_dead = Some(e);
@@ -1204,6 +1573,8 @@ fn run_worker(
                             metrics,
                             stats,
                             recorder,
+                            obs.flight,
+                            &mut ts,
                             &mut engine_dead,
                         );
                     }
@@ -1241,6 +1612,7 @@ fn run_worker(
             // untouched — the next incarnation (or a pool-mate) admits
             // them.
             tap::reset();
+            flight::reset();
             stats.set_state(ReplicaState::Quarantined);
             for (lane, cell) in lanes.iter_mut().enumerate() {
                 if let Some(slot) = cell.take() {
@@ -1251,20 +1623,25 @@ fn run_worker(
                         metrics,
                         stats,
                         recorder,
+                        obs.flight,
                     );
                 }
             }
+            // Final tick so the fatal-error delta and the incarnation's
+            // last gauges land in the ring before the thread exits.
+            ts.tick(obs, stats, engine, rx.len(), 0);
             return WorkerExit::EngineDead;
         }
         // Prefix-probe attribution: the engine noted (lane, hit) at every
         // prefix-cache lookup this batch; fold each into its slot's trace.
         for (lane, hit) in probes.drain(..) {
-            if let Some(tb) = lanes
-                .get_mut(lane)
-                .and_then(|s| s.as_mut())
-                .and_then(|s| s.trace.as_mut())
-            {
-                tb.note_prefix_probe(hit);
+            if let Some(slot) = lanes.get_mut(lane).and_then(|s| s.as_mut()) {
+                if let Some(tb) = slot.trace.as_mut() {
+                    tb.note_prefix_probe(hit);
+                }
+                if let Some(fb) = slot.flight.as_mut() {
+                    fb.note_prefix_probe(hit);
+                }
             }
         }
         for (seq_rows, &lane) in inc_rows.iter().zip(&inc_idx) {
@@ -1279,6 +1656,7 @@ fn run_worker(
                 metrics,
                 stats,
                 recorder,
+                obs.flight,
             );
         }
         for (seq_rows, &lane) in ord_rows.iter().zip(&ord_idx) {
@@ -1293,6 +1671,7 @@ fn run_worker(
                 metrics,
                 stats,
                 recorder,
+                obs.flight,
             );
         }
 
@@ -1345,11 +1724,12 @@ fn run_worker(
             // abort_reason, so an expired deadline cannot mask a
             // broken stream here).
             if let Some(reason) = slot.life.stream_broken() {
-                abort_slot(slot, reason, metrics, stats, recorder);
+                abort_slot(slot, reason, metrics, stats, recorder, obs.flight);
                 continue;
             }
             let latency = slot.t0.elapsed().as_secs_f64();
             let trace = slot.trace.take();
+            let flight = slot.flight.take();
             let outcome = slot.machine.outcome();
             let mut resp =
                 outcome_to_response(&tok, outcome, latency, slot.text_len, slot.n_targets);
@@ -1370,6 +1750,7 @@ fn run_worker(
                 stats,
                 recorder,
             );
+            finish_flight(flight, true, resp.draft_kind.clone(), obs.flight);
             metrics.record_request(
                 latency,
                 resp.n_generated as u64,
@@ -2717,6 +3098,7 @@ mod tests {
         let metrics = Metrics::new();
         let stats = ReplicaStats::new(0);
         let recorder = SpanRecorder::new(8);
+        let flight_rec = FlightRecorder::new(8);
         let (life, handle) = lifecycle::channel(None, 16, 1);
         let t0 = Instant::now();
         let mut lanes: Vec<Option<Slot>> = vec![Some(Slot {
@@ -2728,16 +3110,184 @@ mod tests {
             text_len: 4,
             n_targets: 2,
             trace: None,
+            flight: None,
             retries: 0,
         })];
         let rows = vec![0.0f32; 258];
         absorb_contained(
-            &engine, &mut lanes, 0, &rows, 0, None, 1, &metrics, &stats, &recorder,
+            &engine, &mut lanes, 0, &rows, 0, None, 1, &metrics, &stats, &recorder, &flight_rec,
         );
         assert!(lanes[0].is_none(), "panicking slot must be retired");
         let err = format!("{:#}", handle.wait().unwrap_err());
         assert!(err.contains("panicked"), "{err}");
         assert_eq!(metrics.requests_failed(), 1);
         assert_eq!(stats.requests_failed(), 1);
+    }
+
+    // --- speculation flight recorder & time-series -----------------------
+
+    fn flight_handle(rate: f64) -> (SchedulerHandle, Metrics) {
+        let metrics = Metrics::new();
+        let h = spawn(
+            move || Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>),
+            SchedulerConfig {
+                max_batch: 2,
+                idle_poll: Duration::from_millis(5),
+                flight_sample_rate: rate,
+                flight_capacity: 512,
+                ..Default::default()
+            },
+            metrics.clone(),
+        );
+        (h, metrics)
+    }
+
+    /// The flight recorder must be a pure observer: for every sampler x
+    /// drafter combination, a flight-on scheduler (sample rate 1.0) and a
+    /// flight-off scheduler (rate 0) produce bit-identical text AND
+    /// bit-identical NFE/speculation counters for the same seed — and the
+    /// off pool retains no flight records at all.
+    #[test]
+    fn flight_on_vs_off_outputs_bit_identical() {
+        let (on, _) = flight_handle(1.0);
+        let (off, _) = flight_handle(0.0);
+        let mut on_ids = vec![];
+        let mut off_ids = vec![];
+        for sampler in SamplerKind::ALL {
+            for kind in DraftKind::ALL {
+                let req = |seed| InfillRequest {
+                    text: "ab______cd".into(),
+                    sampler,
+                    draft: DraftSpec::from_options(DraftOptions {
+                        kind,
+                        max_len: 4,
+                        adaptive: true,
+                    }),
+                    seed,
+                    ..Default::default()
+                };
+                let a = on.infill(req(33)).unwrap();
+                let b = off.infill(req(33)).unwrap();
+                let what = format!("{} x {}", sampler.name(), kind.name());
+                assert_eq!(a.text, b.text, "{what}");
+                assert_eq!(a.model_nfe, b.model_nfe, "{what}");
+                assert_eq!(a.aux_nfe, b.aux_nfe, "{what}");
+                assert_eq!(a.proposed, b.proposed, "{what}");
+                assert_eq!(a.accepted, b.accepted, "{what}");
+                assert_eq!(a.iterations, b.iterations, "{what}");
+                on_ids.push(a.request_id);
+                off_ids.push(b.request_id);
+            }
+        }
+        for id in on_ids {
+            assert!(
+                on.flight_json(id).is_some(),
+                "rate 1.0 must record every request ({id})"
+            );
+        }
+        for id in off_ids {
+            assert!(off.flight_json(id).is_none(), "rate 0 must record nothing");
+        }
+    }
+
+    /// A recorded ASSD flight carries the per-window speculation anatomy:
+    /// window sizes, per-position outcomes from the accept/reject
+    /// taxonomy, entropies, and the adaptive-window trajectory.
+    #[test]
+    fn flight_record_carries_speculation_windows() {
+        let (h, _) = flight_handle(1.0);
+        let resp = h
+            .infill(InfillRequest {
+                text: "ab______cd".into(),
+                sampler: SamplerKind::Assd,
+                seed: 5,
+                ..Default::default()
+            })
+            .unwrap();
+        let body = h.flight_json(resp.request_id).unwrap().to_string();
+        for key in [
+            "\"windows\"",
+            "\"window_trajectory\"",
+            "\"outcome\"",
+            "\"target_entropy\"",
+            "\"drafter\"",
+            "\"completed\":true",
+        ] {
+            assert!(body.contains(key), "missing {key} in {body}");
+        }
+        let parsed = Json::parse(&body).unwrap();
+        assert!(
+            matches!(parsed.get("windows"), Some(Json::Arr(a)) if !a.is_empty()),
+            "{body}"
+        );
+    }
+
+    /// GET /debug/vars aggregates the per-replica rings and the flight
+    /// heatmap: after serving traffic it must expose a non-empty series
+    /// whose token sum matches activity, plus per-drafter heatmap rows.
+    #[test]
+    fn debug_vars_reports_series_and_heatmap() {
+        let (h, _) = flight_handle(1.0);
+        for seed in 0..4 {
+            h.infill(InfillRequest {
+                text: "ab____cd".into(),
+                sampler: SamplerKind::Assd,
+                seed,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        let body = h.debug_vars_json(60).to_string();
+        let parsed = Json::parse(&body).unwrap();
+        assert!(
+            matches!(parsed.get("series"), Some(Json::Arr(a)) if !a.is_empty()),
+            "{body}"
+        );
+        assert!(
+            matches!(parsed.get("heatmap"), Some(Json::Arr(a)) if !a.is_empty()),
+            "{body}"
+        );
+        assert!(body.contains("\"tokens\""), "{body}");
+        assert!(body.contains("\"positions\""), "{body}");
+        // The merged series' token total covers the 4 requests' commits.
+        let total: f64 = match parsed.get("series") {
+            Some(Json::Arr(rows)) => rows
+                .iter()
+                .filter_map(|r| match r.get("tokens") {
+                    Some(Json::Num(n)) => Some(*n),
+                    _ => None,
+                })
+                .sum(),
+            _ => 0.0,
+        };
+        assert!(total >= 4.0, "series tokens {total} < committed tokens");
+    }
+
+    /// The Prometheus exposition includes the flight heatmap families with
+    /// per-drafter labels once speculation traffic has been served.
+    #[test]
+    fn prometheus_exposes_flight_heatmap_families() {
+        let (h, _) = flight_handle(1.0);
+        h.infill(InfillRequest {
+            text: "ab______cd".into(),
+            sampler: SamplerKind::Assd,
+            seed: 9,
+            ..Default::default()
+        })
+        .unwrap();
+        let text = h.prometheus_text();
+        for family in [
+            "# TYPE asarm_flight_records_total counter",
+            "# TYPE asarm_flight_windows_total counter",
+            "# TYPE asarm_flight_position_proposed_total counter",
+            "# TYPE asarm_flight_entropy_proposed_total counter",
+            "# TYPE asarm_flight_target_entropy_nats histogram",
+        ] {
+            assert!(text.contains(family), "missing {family}");
+        }
+        assert!(
+            text.contains("asarm_flight_position_proposed_total{drafter="),
+            "heatmap samples must carry drafter labels:\n{text}"
+        );
     }
 }

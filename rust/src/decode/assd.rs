@@ -25,6 +25,7 @@
 
 use crate::draft::{AdaptiveSpeculation, DraftContext, DraftKind, DraftOptions, Drafter};
 use crate::model::mask::Ordering;
+use crate::obs::flight;
 use crate::tokenizer::MASK;
 use crate::util::rng::Rng;
 
@@ -292,6 +293,22 @@ impl DecodeMachine for AssdMachine {
                 // without verification (Lemma 1). Self-draft only.
                 if self.drafter.lemma1_exact() && self.n == nseq - 1 {
                     self.tokens[self.ord.sigma[self.n]] = self.drafted[0];
+                    if flight::enabled() {
+                        // Lemma 1: the draft row IS the oracle conditional
+                        // (p == q exactly), so this is a size-1 window
+                        // accepted with probability 1. Pure read of the
+                        // draft distribution — the RNG is never touched.
+                        let h = flight::entropy(&self.draft_probs[0]);
+                        flight::record(flight::FlightEvent::Window {
+                            size: 1,
+                            outcomes: vec![flight::PosOutcome {
+                                outcome: flight::WindowOutcome::Accepted,
+                                draft_entropy: h,
+                                target_entropy: h,
+                                accept_prob: 1.0,
+                            }],
+                        });
+                    }
                     let n_new = self.n + 1;
                     self.finish_iteration(n_new);
                     return;
@@ -303,6 +320,12 @@ impl DecodeMachine for AssdMachine {
             }
             Phase::Verify => {
                 self.model_nfe += 1;
+                // Flight recording is pure observation: entropies are
+                // computed from the p/q buffers the accept test already
+                // built, gated so the off path does zero extra work, and
+                // the RNG consumption below is identical either way.
+                let flight_on = flight::enabled();
+                let mut fl_outcomes: Vec<flight::PosOutcome> = Vec::new();
                 let mut n_new = self.t;
                 let mut acc_iter = 0usize;
                 let mut prop_iter = 0usize;
@@ -321,27 +344,55 @@ impl DecodeMachine for AssdMachine {
                     let p_i = (p_probs[drafted] as f64).max(1e-30);
                     let r = self.rng.f64();
                     prop_iter += 1;
-                    if r < (q_i / p_i).min(1.0) {
+                    let accept_p = (q_i / p_i).min(1.0);
+                    if r < accept_p {
                         acc_iter += 1;
+                        if flight_on {
+                            fl_outcomes.push(flight::PosOutcome {
+                                outcome: flight::WindowOutcome::Accepted,
+                                draft_entropy: flight::entropy(p_probs),
+                                target_entropy: flight::entropy(&self.q_buf),
+                                accept_prob: accept_p as f32,
+                            });
+                        }
                         continue;
                     }
                     // rejection: resample from (q - p)_+, clear later drafts
                     if i == self.n {
                         self.first_token_rejections += 1;
                     }
-                    let new_tok = if residual_into(&self.q_buf, p_probs, &mut self.res_buf) {
+                    let has_residual = residual_into(&self.q_buf, p_probs, &mut self.res_buf);
+                    let new_tok = if has_residual {
                         sample_probs(&mut self.rng, &self.res_buf) as u32
                     } else {
                         // Residual numerically empty => q == p; sampling q
                         // is then distributionally identical.
                         sample_probs(&mut self.rng, &self.q_buf) as u32
                     };
+                    if flight_on {
+                        fl_outcomes.push(flight::PosOutcome {
+                            outcome: if has_residual {
+                                flight::WindowOutcome::RejectedResidual
+                            } else {
+                                flight::WindowOutcome::RejectedFull
+                            },
+                            draft_entropy: flight::entropy(p_probs),
+                            target_entropy: flight::entropy(&self.q_buf),
+                            accept_prob: accept_p as f32,
+                        });
+                    }
                     self.tokens[pos] = new_tok;
                     for j in (i + 1)..self.t {
                         self.tokens[self.ord.sigma[j]] = MASK;
                     }
                     n_new = i + 1;
                     break;
+                }
+                if flight_on {
+                    flight::record(flight::FlightEvent::Window {
+                        size: self.t - self.n,
+                        outcomes: fl_outcomes,
+                    });
                 }
                 self.proposed += prop_iter as u64;
                 self.accepted += acc_iter as u64;

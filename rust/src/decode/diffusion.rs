@@ -113,6 +113,13 @@ impl DecodeMachine for DiffusionMachine {
             super::sampling::ban_ids(&mut self.row_buf, &super::sampling::BANNED);
             softmax_into(&self.row_buf, self.temp, &mut self.prob_buf);
             let tok = sample_probs(&mut self.rng, &self.prob_buf);
+            if crate::obs::flight::enabled() {
+                // Pure read of the sampling distribution (bit-identity
+                // contract: the RNG is never touched).
+                crate::obs::flight::record(crate::obs::flight::FlightEvent::Decode {
+                    target_entropy: crate::obs::flight::entropy(&self.prob_buf),
+                });
+            }
             self.tokens[pos] = tok as u32;
             self.committed.push((pos, tok as u32));
         }

@@ -85,6 +85,13 @@ impl DecodeMachine for SequentialMachine {
         super::sampling::ban_ids(&mut self.row_buf, &super::sampling::BANNED);
         softmax_into(&self.row_buf, self.temp, &mut self.prob_buf);
         let tok = sample_probs(&mut self.rng, &self.prob_buf);
+        if crate::obs::flight::enabled() {
+            // Pure read of the already-built sampling distribution —
+            // never touches the RNG (bit-identity contract).
+            crate::obs::flight::record(crate::obs::flight::FlightEvent::Decode {
+                target_entropy: crate::obs::flight::entropy(&self.prob_buf),
+            });
+        }
         self.tokens[pos] = tok as u32;
         self.committed.push((pos, tok as u32));
         self.n += 1;

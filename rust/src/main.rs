@@ -38,6 +38,13 @@ const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
          Default on; 'off' drops the builders for zero overhead)
          --trace-capacity 256 (retired traces retained per replica;
          the ring drops oldest first)
+         --flight-sample-rate 0.05 (fraction of requests whose
+         speculation flight is recorded — per-window accept/reject
+         anatomy at GET /debug/flight/{id}, aggregates at
+         /debug/vars and the /debug/dashboard page. Deterministic
+         id-hash sampling; 0 disables the recorder)
+         --flight-capacity 64 (retired flight records retained per
+         replica; heatmap aggregates survive ring eviction)
          --chaos-rate 0.0     (deterministic fault injection: per-call
          fault probability wrapped around every replica's engine;
          0 disables. For chaos drills, not production)
@@ -114,6 +121,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             event_capacity: args.usize("event-buffer", 256).max(8),
             trace: args.str("trace", "on") != "off",
             trace_capacity: args.usize("trace-capacity", 256).max(1),
+            flight_sample_rate: args.f64("flight-sample-rate", 0.05),
+            flight_capacity: args.usize("flight-capacity", 64).max(1),
             chaos: ChaosConfig {
                 seed: args.u64("chaos-seed", 0),
                 rate: args.f64("chaos-rate", 0.0),
@@ -137,6 +146,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "  GET /trace/{{id}}   GET /trace/recent   GET /metrics (Accept: text/plain => Prometheus)"
+    );
+    println!(
+        "  GET /debug/vars   GET /debug/flight/{{id}}   GET /debug/dashboard (live HTML)"
     );
     server.serve()
 }

@@ -1,0 +1,784 @@
+//! Speculation flight recorder: sampled per-request capture of *why*
+//! speculative tokens were accepted or rejected, not just when.
+//!
+//! PR 7's span tracer records phase timings; this layer records the
+//! decode-quality signals those phases throw away — per-window-position
+//! accept/reject outcomes, the rejection cause (residual resample vs
+//! numerically-empty residual), and the draft/target predictive
+//! entropies of each verified row — then folds them into a positional
+//! acceptance heatmap (accept rate × window position × drafter) and
+//! entropy-bucketed acceptance curves. Those aggregates are exactly the
+//! evidence the ROADMAP's "dependency-guided order and window
+//! selection" item needs before order sampling or window membership can
+//! be biased by per-position signal.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bit-identity by construction.** The machines write flight
+//!    events only through the thread-local tap below, and only compute
+//!    the (O(vocab)) row entropies when the tap is enabled. Every read
+//!    is of a buffer the machine already filled for sampling
+//!    (`q_buf`, the drafter's distributions, `prob_buf`); the decode
+//!    RNG is never touched. Whether the recorder is on or off therefore
+//!    cannot change a single sampled token — proven across every
+//!    sampler × drafter by `flight_on_vs_off_outputs_bit_identical` in
+//!    the scheduler tests.
+//! 2. **No signature changes.** Machines stay behind the existing
+//!    `DecodeMachine` trait; the scheduler worker arms the tap around
+//!    `absorb` and drains it after, exactly like the engine-side
+//!    [`super::tap`] (machines are thread-pinned to their worker).
+//! 3. **Bounded memory.** Requests are sampled by a deterministic hash
+//!    of the request id (`--flight-sample-rate`); per-request window
+//!    records are capped ([`WINDOW_CAP`]) with drop counting; retired
+//!    records live in a fixed drop-oldest ring per replica
+//!    (`--flight-capacity`), mirroring `SpanRecorder`.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+// ---------------------------------------------------------------------
+// Thread-local tap (machine side)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static EVENTS: RefCell<Vec<FlightEvent>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Is the current slot's absorb being flight-recorded? Machines gate
+/// all event construction (and the entropy computations feeding it)
+/// behind this — when false the decode path does no extra work.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Arm (or disarm) the tap for the absorb the worker is about to run.
+/// Arming always starts from an empty buffer so events from a previous
+/// absorb that never drained (e.g. a machine panic unwound past the
+/// drain) cannot leak into the next request's record.
+pub fn begin(on: bool) {
+    ENABLED.with(|e| e.set(on));
+    EVENTS.with(|ev| ev.borrow_mut().clear());
+}
+
+/// Append an event (no-op when the tap is disarmed).
+pub fn record(ev: FlightEvent) {
+    if !enabled() {
+        return;
+    }
+    EVENTS.with(|e| e.borrow_mut().push(ev));
+}
+
+/// Disarm and drain everything recorded since [`begin`].
+pub fn take(into: &mut Vec<FlightEvent>) {
+    ENABLED.with(|e| e.set(false));
+    EVENTS.with(|e| into.append(&mut e.borrow_mut()));
+}
+
+/// Clear all tap state (worker start).
+pub fn reset() {
+    ENABLED.with(|e| e.set(false));
+    EVENTS.with(|e| e.borrow_mut().clear());
+}
+
+// ---------------------------------------------------------------------
+// Events (what a machine emits per absorb)
+// ---------------------------------------------------------------------
+
+/// Why a window position's verification ended the way it did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowOutcome {
+    /// `r < min(1, q/p)` — the drafted token stands.
+    Accepted,
+    /// Rejected with a non-empty residual: resampled from `(q - p)_+`
+    /// (the principled correction — target and draft genuinely
+    /// disagreed on this row).
+    RejectedResidual,
+    /// Rejected but the residual was numerically empty (`q == p` to
+    /// float precision): resampled from `q` directly. A "rejection"
+    /// that carries no distributional disagreement.
+    RejectedFull,
+}
+
+impl WindowOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WindowOutcome::Accepted => "accept",
+            WindowOutcome::RejectedResidual => "reject_residual",
+            WindowOutcome::RejectedFull => "reject_full",
+        }
+    }
+
+    pub fn is_accept(&self) -> bool {
+        matches!(self, WindowOutcome::Accepted)
+    }
+}
+
+/// One verified window position: the outcome plus the signals the
+/// verify pass already held in its buffers.
+#[derive(Clone, Copy, Debug)]
+pub struct PosOutcome {
+    pub outcome: WindowOutcome,
+    /// Shannon entropy (nats) of the drafter's distribution for this row.
+    pub draft_entropy: f32,
+    /// Shannon entropy (nats) of the target (verify-pass) distribution.
+    pub target_entropy: f32,
+    /// `min(1, q_i/p_i)` — the acceptance probability the test used.
+    pub accept_prob: f32,
+}
+
+/// What one absorb contributes to the flight record.
+#[derive(Clone, Debug)]
+pub enum FlightEvent {
+    /// A speculation window's verification (or the Lemma-1 shortcut,
+    /// which is a size-1 window accepted by construction). `outcomes`
+    /// covers positions up to and including the first rejection;
+    /// later positions were rolled back unverified.
+    Window {
+        size: usize,
+        outcomes: Vec<PosOutcome>,
+    },
+    /// One sampled row of a non-speculative machine (sequential /
+    /// diffusion): no accept test, but the target entropy still feeds
+    /// the per-request record.
+    Decode { target_entropy: f32 },
+}
+
+/// Shannon entropy in nats of a (not necessarily exactly normalised)
+/// probability vector. Pure read — callers gate on [`enabled`] since
+/// this is O(len).
+pub fn entropy(probs: &[f32]) -> f32 {
+    let mut h = 0.0f64;
+    for &p in probs {
+        if p > 0.0 {
+            let p = p as f64;
+            h -= p * p.ln();
+        }
+    }
+    h as f32
+}
+
+// ---------------------------------------------------------------------
+// Request sampling
+// ---------------------------------------------------------------------
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic per-request sampling decision: a hash of the request
+/// id against `rate`, never the decode RNG (which must stay
+/// bit-identical whether or not the recorder runs). Same id + rate ⇒
+/// same decision on every replica and every retry.
+pub fn sampled(request_id: u64, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    if rate >= 1.0 {
+        return true;
+    }
+    let h = splitmix64(request_id);
+    ((h >> 11) as f64 / (1u64 << 53) as f64) < rate
+}
+
+// ---------------------------------------------------------------------
+// Per-request record
+// ---------------------------------------------------------------------
+
+/// Per-request cap on retained window records; further windows are
+/// counted as dropped, never stored (the bounded-memory contract).
+pub const WINDOW_CAP: usize = 512;
+
+/// One speculation window as retained in the record.
+#[derive(Clone, Debug)]
+pub struct WindowRecord {
+    pub size: u32,
+    pub outcomes: Vec<PosOutcome>,
+}
+
+/// A retired request's flight record.
+#[derive(Clone, Debug)]
+pub struct FlightRecord {
+    pub request_id: u64,
+    pub replica: usize,
+    pub sampler: &'static str,
+    pub drafter: String,
+    pub completed: bool,
+    pub windows: Vec<WindowRecord>,
+    pub dropped_windows: u64,
+    pub decode_rows: u64,
+    pub decode_entropy_sum: f64,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+}
+
+impl FlightRecord {
+    pub fn proposed(&self) -> u64 {
+        self.windows.iter().map(|w| w.outcomes.len() as u64).sum()
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.windows
+            .iter()
+            .flat_map(|w| &w.outcomes)
+            .filter(|o| o.outcome.is_accept())
+            .count() as u64
+    }
+
+    /// Full record for `GET /debug/flight/{id}`.
+    pub fn to_json(&self) -> Json {
+        let windows = Json::Arr(
+            self.windows
+                .iter()
+                .map(|w| {
+                    let positions = Json::Arr(
+                        w.outcomes
+                            .iter()
+                            .enumerate()
+                            .map(|(i, o)| {
+                                Json::obj(vec![
+                                    ("pos", Json::num(i as f64)),
+                                    ("outcome", Json::str(o.outcome.name())),
+                                    ("draft_entropy", Json::num(o.draft_entropy as f64)),
+                                    ("target_entropy", Json::num(o.target_entropy as f64)),
+                                    ("accept_prob", Json::num(o.accept_prob as f64)),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    Json::obj(vec![
+                        ("size", Json::num(w.size as f64)),
+                        ("positions", positions),
+                    ])
+                })
+                .collect(),
+        );
+        let trajectory = Json::Arr(
+            self.windows
+                .iter()
+                .map(|w| Json::num(w.size as f64))
+                .collect(),
+        );
+        let mean_decode_entropy = if self.decode_rows > 0 {
+            self.decode_entropy_sum / self.decode_rows as f64
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("request_id", Json::num(self.request_id as f64)),
+            ("replica", Json::num(self.replica as f64)),
+            ("sampler", Json::str(self.sampler)),
+            ("drafter", Json::str(self.drafter.clone())),
+            ("completed", Json::Bool(self.completed)),
+            ("proposed", Json::num(self.proposed() as f64)),
+            ("accepted", Json::num(self.accepted() as f64)),
+            ("windows", windows),
+            ("window_trajectory", trajectory),
+            ("dropped_windows", Json::num(self.dropped_windows as f64)),
+            ("decode_rows", Json::num(self.decode_rows as f64)),
+            ("decode_mean_entropy", Json::num(mean_decode_entropy)),
+            ("prefix_hits", Json::num(self.prefix_hits as f64)),
+            ("prefix_misses", Json::num(self.prefix_misses as f64)),
+        ])
+    }
+}
+
+/// Hot-path builder owned by a scheduler slot (single-threaded, like
+/// `TraceBuilder`). `Some(FlightBuilder)` on a slot is the *only*
+/// signal that arms the tap for that slot's absorbs.
+#[derive(Debug)]
+pub struct FlightBuilder {
+    record: FlightRecord,
+}
+
+impl FlightBuilder {
+    pub fn new(request_id: u64, replica: usize, sampler: &'static str) -> Self {
+        FlightBuilder {
+            record: FlightRecord {
+                request_id,
+                replica,
+                sampler,
+                drafter: String::new(),
+                completed: false,
+                windows: Vec::new(),
+                dropped_windows: 0,
+                decode_rows: 0,
+                decode_entropy_sum: 0.0,
+                prefix_hits: 0,
+                prefix_misses: 0,
+            },
+        }
+    }
+
+    pub fn request_id(&self) -> u64 {
+        self.record.request_id
+    }
+
+    /// Disarm the thread-local tap and fold everything the machine
+    /// emitted during the absorb into this record.
+    pub fn drain_tap(&mut self) {
+        let mut events = Vec::new();
+        take(&mut events);
+        for ev in events {
+            match ev {
+                FlightEvent::Window { size, outcomes } => {
+                    if self.record.windows.len() < WINDOW_CAP {
+                        self.record.windows.push(WindowRecord {
+                            size: size as u32,
+                            outcomes,
+                        });
+                    } else {
+                        self.record.dropped_windows += 1;
+                    }
+                }
+                FlightEvent::Decode { target_entropy } => {
+                    self.record.decode_rows += 1;
+                    self.record.decode_entropy_sum += target_entropy as f64;
+                }
+            }
+        }
+    }
+
+    pub fn note_prefix_probe(&mut self, hit: bool) {
+        if hit {
+            self.record.prefix_hits += 1;
+        } else {
+            self.record.prefix_misses += 1;
+        }
+    }
+
+    pub fn finish(mut self, completed: bool, drafter: String) -> FlightRecord {
+        self.record.completed = completed;
+        self.record.drafter = drafter;
+        self.record
+    }
+}
+
+// ---------------------------------------------------------------------
+// Aggregates: positional heatmap + entropy-bucketed acceptance curves
+// ---------------------------------------------------------------------
+
+/// Positional heatmap width: window positions at or beyond this clamp
+/// into the last cell (adaptive windows in this codebase are far
+/// smaller; the clamp just bounds the export).
+pub const MAX_HEAT_POS: usize = 32;
+
+/// Target-entropy bucket upper bounds (nats) for the acceptance curves;
+/// one overflow bucket past the last bound.
+pub const ENTROPY_BOUNDS: [f64; 7] = [0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+fn entropy_bucket(e: f64) -> usize {
+    ENTROPY_BOUNDS
+        .iter()
+        .position(|&b| e <= b)
+        .unwrap_or(ENTROPY_BOUNDS.len())
+}
+
+/// Per-drafter acceptance aggregates, folded at record time and merged
+/// across replicas at export time.
+#[derive(Clone, Debug)]
+pub struct DrafterHeat {
+    pub drafter: String,
+    pub windows: u64,
+    /// `(proposed, accepted)` by window position (clamped to
+    /// [`MAX_HEAT_POS`] cells).
+    pub pos: Vec<(u64, u64)>,
+    /// `(proposed, accepted)` by target-entropy bucket
+    /// ([`ENTROPY_BOUNDS`] + overflow).
+    pub entropy: Vec<(u64, u64)>,
+    /// Target-entropy distribution over verified rows (Prometheus
+    /// histogram export).
+    pub target_entropy: Histogram,
+}
+
+impl DrafterHeat {
+    fn new(drafter: &str) -> Self {
+        DrafterHeat {
+            drafter: drafter.to_string(),
+            windows: 0,
+            pos: vec![(0, 0); MAX_HEAT_POS],
+            entropy: vec![(0, 0); ENTROPY_BOUNDS.len() + 1],
+            target_entropy: Histogram::with_bounds(ENTROPY_BOUNDS.to_vec()),
+        }
+    }
+
+    fn fold(&mut self, rec: &FlightRecord) {
+        for w in &rec.windows {
+            self.windows += 1;
+            for (i, o) in w.outcomes.iter().enumerate() {
+                let cell = &mut self.pos[i.min(MAX_HEAT_POS - 1)];
+                cell.0 += 1;
+                let e = o.target_entropy as f64;
+                let eb = &mut self.entropy[entropy_bucket(e)];
+                eb.0 += 1;
+                if o.outcome.is_accept() {
+                    cell.1 += 1;
+                    eb.1 += 1;
+                }
+                self.target_entropy.record(e);
+            }
+        }
+    }
+
+    fn merge(&mut self, other: &DrafterHeat) {
+        self.windows += other.windows;
+        for (a, b) in self.pos.iter_mut().zip(&other.pos) {
+            a.0 += b.0;
+            a.1 += b.1;
+        }
+        for (a, b) in self.entropy.iter_mut().zip(&other.entropy) {
+            a.0 += b.0;
+            a.1 += b.1;
+        }
+        self.target_entropy.merge(&other.target_entropy);
+    }
+
+    /// JSON for `/debug/vars`: positional cells and entropy curve, with
+    /// accept rates precomputed (the dashboard charts these directly).
+    pub fn to_json(&self) -> Json {
+        let rate = |p: u64, a: u64| {
+            if p > 0 {
+                a as f64 / p as f64
+            } else {
+                0.0
+            }
+        };
+        let positions = Json::Arr(
+            self.pos
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.0 > 0)
+                .map(|(i, &(p, a))| {
+                    Json::obj(vec![
+                        ("pos", Json::num(i as f64)),
+                        ("proposed", Json::num(p as f64)),
+                        ("accepted", Json::num(a as f64)),
+                        ("accept_rate", Json::num(rate(p, a))),
+                    ])
+                })
+                .collect(),
+        );
+        let curve = Json::Arr(
+            self.entropy
+                .iter()
+                .enumerate()
+                .map(|(i, &(p, a))| {
+                    let le = ENTROPY_BOUNDS
+                        .get(i)
+                        .map(|b| b.to_string())
+                        .unwrap_or_else(|| "+Inf".to_string());
+                    Json::obj(vec![
+                        ("le", Json::str(le)),
+                        ("proposed", Json::num(p as f64)),
+                        ("accepted", Json::num(a as f64)),
+                        ("accept_rate", Json::num(rate(p, a))),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("drafter", Json::str(self.drafter.clone())),
+            ("windows", Json::num(self.windows as f64)),
+            ("positions", positions),
+            ("entropy_curve", curve),
+        ])
+    }
+}
+
+/// Merge per-replica heat snapshots into one pool view, aligned by
+/// drafter name and sorted for stable export order.
+pub fn merge_heat(snaps: Vec<Vec<DrafterHeat>>) -> Vec<DrafterHeat> {
+    let mut merged: Vec<DrafterHeat> = Vec::new();
+    for snap in snaps {
+        for h in snap {
+            match merged.iter_mut().find(|m| m.drafter == h.drafter) {
+                Some(m) => m.merge(&h),
+                None => merged.push(h),
+            }
+        }
+    }
+    merged.sort_by(|a, b| a.drafter.cmp(&b.drafter));
+    merged
+}
+
+pub fn heat_json(heat: &[DrafterHeat]) -> Json {
+    Json::Arr(heat.iter().map(|h| h.to_json()).collect())
+}
+
+// ---------------------------------------------------------------------
+// Per-replica recorder
+// ---------------------------------------------------------------------
+
+struct RecorderInner {
+    ring: VecDeque<Arc<FlightRecord>>,
+    recorded: u64,
+    dropped: u64,
+    heat: Vec<DrafterHeat>,
+}
+
+/// Fixed-capacity, drop-oldest ring of retired flight records plus the
+/// running heat aggregates — one per replica, `SpanRecorder`-shaped.
+/// Aggregates survive ring eviction (they fold at record time), so the
+/// heatmap covers every sampled request since boot, not just the ring.
+pub struct FlightRecorder {
+    inner: Mutex<RecorderInner>,
+    capacity: usize,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        FlightRecorder {
+            inner: Mutex::new(RecorderInner {
+                ring: VecDeque::with_capacity(capacity.max(1)),
+                recorded: 0,
+                dropped: 0,
+                heat: Vec::new(),
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn record(&self, rec: FlightRecord) {
+        let mut g = self.inner.lock().unwrap();
+        g.recorded += 1;
+        match g.heat.iter_mut().find(|h| h.drafter == rec.drafter) {
+            Some(h) => h.fold(&rec),
+            None => {
+                let mut h = DrafterHeat::new(&rec.drafter);
+                h.fold(&rec);
+                g.heat.push(h);
+            }
+        }
+        if g.ring.len() == self.capacity {
+            g.ring.pop_front();
+            g.dropped += 1;
+        }
+        g.ring.push_back(Arc::new(rec));
+    }
+
+    pub fn get(&self, request_id: u64) -> Option<Arc<FlightRecord>> {
+        let g = self.inner.lock().unwrap();
+        g.ring
+            .iter()
+            .rev()
+            .find(|r| r.request_id == request_id)
+            .cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().recorded
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    pub fn heat(&self) -> Vec<DrafterHeat> {
+        self.inner.lock().unwrap().heat.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pos(outcome: WindowOutcome, target_entropy: f32) -> PosOutcome {
+        PosOutcome {
+            outcome,
+            draft_entropy: 0.5,
+            target_entropy,
+            accept_prob: 0.9,
+        }
+    }
+
+    fn record_with(id: u64, drafter: &str, windows: Vec<WindowRecord>) -> FlightRecord {
+        FlightRecord {
+            request_id: id,
+            replica: 0,
+            sampler: "assd",
+            drafter: drafter.to_string(),
+            completed: true,
+            windows,
+            dropped_windows: 0,
+            decode_rows: 0,
+            decode_entropy_sum: 0.0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+        }
+    }
+
+    #[test]
+    fn tap_is_inert_when_disarmed() {
+        reset();
+        assert!(!enabled());
+        record(FlightEvent::Decode { target_entropy: 1.0 });
+        let mut out = Vec::new();
+        take(&mut out);
+        assert!(out.is_empty(), "disarmed tap must record nothing");
+    }
+
+    #[test]
+    fn tap_begin_clears_stale_events() {
+        reset();
+        begin(true);
+        record(FlightEvent::Decode { target_entropy: 1.0 });
+        // Simulate a panic unwinding past the drain: begin() for the
+        // next absorb must not see the stale event.
+        begin(true);
+        record(FlightEvent::Decode { target_entropy: 2.0 });
+        let mut out = Vec::new();
+        take(&mut out);
+        assert_eq!(out.len(), 1);
+        assert!(!enabled(), "take disarms");
+    }
+
+    #[test]
+    fn entropy_matches_closed_forms() {
+        // Uniform over k: ln k. Point mass: 0.
+        let u4 = [0.25f32; 4];
+        assert!((entropy(&u4) - (4.0f32).ln()).abs() < 1e-6);
+        assert_eq!(entropy(&[1.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_rate_shaped() {
+        assert!(!sampled(1, 0.0));
+        assert!(sampled(1, 1.0));
+        for id in 0..100u64 {
+            assert_eq!(sampled(id, 0.3), sampled(id, 0.3));
+        }
+        let hits = (0..10_000u64).filter(|&id| sampled(id, 0.25)).count();
+        assert!(
+            (1_500..=3_500).contains(&hits),
+            "rate 0.25 sampled {hits}/10000"
+        );
+    }
+
+    #[test]
+    fn builder_caps_windows_with_drop_counting() {
+        begin(true);
+        for _ in 0..(WINDOW_CAP + 5) {
+            record(FlightEvent::Window {
+                size: 2,
+                outcomes: vec![pos(WindowOutcome::Accepted, 1.0)],
+            });
+        }
+        let mut b = FlightBuilder::new(7, 0, "assd");
+        b.drain_tap();
+        let rec = b.finish(true, "self".to_string());
+        assert_eq!(rec.windows.len(), WINDOW_CAP);
+        assert_eq!(rec.dropped_windows, 5);
+    }
+
+    #[test]
+    fn recorder_ring_drops_oldest_and_keeps_aggregates() {
+        let rec = FlightRecorder::new(2);
+        for id in 1..=5u64 {
+            rec.record(record_with(
+                id,
+                "self",
+                vec![WindowRecord {
+                    size: 2,
+                    outcomes: vec![
+                        pos(WindowOutcome::Accepted, 0.3),
+                        pos(WindowOutcome::RejectedResidual, 2.5),
+                    ],
+                }],
+            ));
+        }
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.recorded(), 5);
+        assert_eq!(rec.dropped(), 3);
+        assert!(rec.get(1).is_none(), "evicted");
+        assert!(rec.get(5).is_some());
+        // Aggregates cover all 5 records despite eviction.
+        let heat = rec.heat();
+        assert_eq!(heat.len(), 1);
+        assert_eq!(heat[0].windows, 5);
+        assert_eq!(heat[0].pos[0], (5, 5), "position 0 all accepted");
+        assert_eq!(heat[0].pos[1], (5, 0), "position 1 all rejected");
+        // Entropy curve: 0.3 -> bucket le=0.5 accepted; 2.5 -> le=3.0
+        // rejected.
+        assert_eq!(heat[0].entropy[0], (5, 5));
+        assert_eq!(heat[0].entropy[entropy_bucket(2.5)], (5, 0));
+        assert_eq!(heat[0].target_entropy.count(), 10);
+    }
+
+    #[test]
+    fn heat_merge_is_field_wise_sum_across_replicas() {
+        let a = FlightRecorder::new(8);
+        let b = FlightRecorder::new(8);
+        a.record(record_with(
+            1,
+            "self",
+            vec![WindowRecord {
+                size: 1,
+                outcomes: vec![pos(WindowOutcome::Accepted, 1.2)],
+            }],
+        ));
+        b.record(record_with(
+            2,
+            "self",
+            vec![WindowRecord {
+                size: 1,
+                outcomes: vec![pos(WindowOutcome::RejectedFull, 1.2)],
+            }],
+        ));
+        b.record(record_with(
+            3,
+            "bigram",
+            vec![WindowRecord {
+                size: 1,
+                outcomes: vec![pos(WindowOutcome::Accepted, 0.1)],
+            }],
+        ));
+        let merged = merge_heat(vec![a.heat(), b.heat()]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].drafter, "bigram", "sorted by drafter");
+        let self_heat = &merged[1];
+        assert_eq!(self_heat.windows, 2);
+        assert_eq!(self_heat.pos[0], (2, 1));
+        assert_eq!(self_heat.target_entropy.count(), 2);
+    }
+
+    #[test]
+    fn record_json_carries_outcome_taxonomy() {
+        let rec = record_with(
+            9,
+            "self",
+            vec![WindowRecord {
+                size: 3,
+                outcomes: vec![
+                    pos(WindowOutcome::Accepted, 0.4),
+                    pos(WindowOutcome::RejectedResidual, 2.0),
+                ],
+            }],
+        );
+        let s = rec.to_json().to_string();
+        assert!(s.contains("\"outcome\":\"accept\""), "{s}");
+        assert!(s.contains("\"outcome\":\"reject_residual\""), "{s}");
+        assert!(s.contains("\"window_trajectory\":[3]"), "{s}");
+        assert!(s.contains("\"proposed\":2"), "{s}");
+        assert!(s.contains("\"accepted\":1"), "{s}");
+    }
+}

@@ -33,8 +33,10 @@
 //! and drained by the scheduler worker on the same thread is exact.
 
 pub mod chrome;
+pub mod flight;
 pub mod prometheus;
 pub mod tap;
+pub mod timeseries;
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};

@@ -23,12 +23,19 @@ impl PromText {
         PromText { out: String::new() }
     }
 
-    fn header(&mut self, name: &str, help: &str, kind: &str) {
+    /// Open a metric family: `# HELP` then `# TYPE`. Exposition format
+    /// 0.0.4 allows at most one header pair per family, before its
+    /// samples — callers adding series to an existing family (see
+    /// [`PromText::histogram_series`]) must not re-open it.
+    pub fn header(&mut self, name: &str, help: &str, kind: &str) {
         self.out.push_str(&format!("# HELP {name} {help}\n"));
         self.out.push_str(&format!("# TYPE {name} {kind}\n"));
     }
 
-    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+    /// One sample line. Label values are escaped per the exposition
+    /// format: backslash, double-quote, and line-feed must appear as
+    /// `\\`, `\"`, and `\n` inside the quoted value.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
         self.out.push_str(name);
         if !labels.is_empty() {
             self.out.push('{');
@@ -36,7 +43,7 @@ impl PromText {
                 if i > 0 {
                     self.out.push(',');
                 }
-                self.out.push_str(&format!("{k}=\"{v}\""));
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label_value(v)));
             }
             self.out.push('}');
         }
@@ -105,6 +112,25 @@ impl PromText {
     }
 }
 
+/// Escape a label value for the text exposition format (`\\`, `\"`,
+/// `\n`). Returns a borrowed slice when no escaping is needed — label
+/// values are almost always clean identifiers.
+fn escape_label_value(v: &str) -> std::borrow::Cow<'_, str> {
+    if !v.contains(['\\', '"', '\n']) {
+        return std::borrow::Cow::Borrowed(v);
+    }
+    let mut out = String::with_capacity(v.len() + 4);
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    std::borrow::Cow::Owned(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +178,26 @@ mod tests {
         assert!(s.contains("asarm_latency_seconds_bucket{le=\"10\"} 3\n"));
         assert!(s.contains("asarm_latency_seconds_bucket{le=\"+Inf\"} 4\n"));
         assert!(s.contains("asarm_latency_seconds_count 4\n"));
+    }
+
+    #[test]
+    fn label_values_escape_backslash_quote_and_newline() {
+        let mut w = PromText::new();
+        w.header("asarm_errors_total", "Errors by message.", "counter");
+        w.sample(
+            "asarm_errors_total",
+            &[("msg", "path \"C:\\tmp\"\nline2")],
+            1.0,
+        );
+        let s = w.finish();
+        assert!(
+            s.contains(r#"msg="path \"C:\\tmp\"\nline2""#),
+            "escaped label value missing: {s}"
+        );
+        // The sample stays a single line: the raw LF never reaches the
+        // output.
+        let sample_line = s.lines().find(|l| l.starts_with("asarm_errors_total{")).unwrap();
+        assert!(sample_line.ends_with(" 1"));
     }
 
     #[test]

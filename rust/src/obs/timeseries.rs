@@ -1,0 +1,526 @@
+//! Rolling time-series engine: a zero-dependency, fixed-resolution ring
+//! of per-second buckets backing `GET /debug/vars` and the live
+//! dashboard.
+//!
+//! Design notes:
+//!
+//! - **Explicit clock.** Every write takes the bucket second (`at_sec`)
+//!   as a parameter — seconds since a shared pool `Instant` origin in
+//!   production, a fake clock in tests. The ring itself never reads a
+//!   wall clock, which makes rotation under skew/stall directly
+//!   property-testable.
+//! - **Rotation.** A write at a *newer* second rotates the ring forward,
+//!   zeroing every skipped bucket (a stalled producer must not leave
+//!   stale data where idle seconds belong). A jump of `>= capacity`
+//!   seconds clears the whole ring. A write at an *older* second (clock
+//!   skew across replica threads, NTP step) is clamped into the newest
+//!   bucket — data is never dropped and never lands in the past where a
+//!   snapshot could double-report it.
+//! - **Counters vs gauges.** Counter fields (`tokens`, `model_nfe`, …)
+//!   accumulate deltas; gauge fields (`queue_depth`, `kv_blocks_free`,
+//!   …) are last-write-wins within their second. [`CounterFold`] turns
+//!   the cumulative counters the replicas expose into per-tick deltas,
+//!   tolerating resets (replica restart ⇒ cumulative value drops ⇒ the
+//!   new cumulative value *is* the delta).
+//! - **Cross-replica merge.** [`merge`] aligns per-replica snapshots by
+//!   absolute second and sums field-wise (gauges included: summed
+//!   occupancy / free blocks across the pool is the fleet view). The
+//!   merge-equivalence property (merged == field-wise sum) is tested.
+//!
+//! Memory is `capacity * sizeof(Bucket)` per ring, fixed at
+//! construction. All methods take `&self`; interior mutability is a
+//! single short-held mutex (writes are a few adds per scheduler
+//! iteration — far off the decode hot path).
+
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// One second of aggregated activity. Counter fields accumulate;
+/// gauge fields hold the last value written within the second.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Bucket {
+    /// Absolute second (since the pool origin) this bucket covers.
+    pub sec: u64,
+    // --- counters (summed within the second, deltas folded in) ---
+    pub tokens: u64,
+    pub model_nfe: u64,
+    pub aux_nfe: u64,
+    pub proposed: u64,
+    pub accepted: u64,
+    pub requests: u64,
+    pub errors_transient: u64,
+    pub errors_lane_corrupt: u64,
+    pub errors_fatal: u64,
+    // --- gauges (last write wins within the second) ---
+    pub queue_depth: u64,
+    pub kv_blocks_free: u64,
+    pub kv_blocks_total: u64,
+    pub batch_occupancy: u64,
+    /// 1 if the producing replica was serving when it last ticked
+    /// (summed across replicas by [`merge`] ⇒ count of serving replicas).
+    pub serving: u64,
+}
+
+impl Bucket {
+    /// Field-wise sum used by [`merge`]. Gauges sum too: the merged view
+    /// is the pool aggregate (total queue depth, total free blocks,
+    /// number of serving replicas).
+    fn add(&mut self, o: &Bucket) {
+        self.tokens += o.tokens;
+        self.model_nfe += o.model_nfe;
+        self.aux_nfe += o.aux_nfe;
+        self.proposed += o.proposed;
+        self.accepted += o.accepted;
+        self.requests += o.requests;
+        self.errors_transient += o.errors_transient;
+        self.errors_lane_corrupt += o.errors_lane_corrupt;
+        self.errors_fatal += o.errors_fatal;
+        self.queue_depth += o.queue_depth;
+        self.kv_blocks_free += o.kv_blocks_free;
+        self.kv_blocks_total += o.kv_blocks_total;
+        self.batch_occupancy += o.batch_occupancy;
+        self.serving += o.serving;
+    }
+
+    /// JSON object for `/debug/vars` (field names are the public wire
+    /// contract — the dashboard reads them).
+    pub fn to_json(&self) -> Json {
+        let accept_rate = if self.proposed > 0 {
+            self.accepted as f64 / self.proposed as f64
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("sec", Json::num(self.sec as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("model_nfe", Json::num(self.model_nfe as f64)),
+            ("aux_nfe", Json::num(self.aux_nfe as f64)),
+            ("proposed", Json::num(self.proposed as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
+            ("accept_rate", Json::num(accept_rate)),
+            ("requests", Json::num(self.requests as f64)),
+            ("errors_transient", Json::num(self.errors_transient as f64)),
+            (
+                "errors_lane_corrupt",
+                Json::num(self.errors_lane_corrupt as f64),
+            ),
+            ("errors_fatal", Json::num(self.errors_fatal as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("kv_blocks_free", Json::num(self.kv_blocks_free as f64)),
+            ("kv_blocks_total", Json::num(self.kv_blocks_total as f64)),
+            ("batch_occupancy", Json::num(self.batch_occupancy as f64)),
+            ("serving", Json::num(self.serving as f64)),
+        ])
+    }
+}
+
+struct RingInner {
+    /// `buckets[i]` covers second `newest_sec - (head_distance)` — see
+    /// `snapshot` for the layout walk. Slot `head` is the newest bucket.
+    buckets: Vec<Bucket>,
+    head: usize,
+    newest_sec: u64,
+    /// No writes yet; `snapshot` returns empty.
+    started: bool,
+}
+
+/// Fixed-capacity ring of per-second [`Bucket`]s.
+pub struct TsRing {
+    inner: Mutex<RingInner>,
+    capacity: usize,
+}
+
+impl TsRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        TsRing {
+            inner: Mutex::new(RingInner {
+                buckets: vec![Bucket::default(); capacity],
+                head: 0,
+                newest_sec: 0,
+                started: false,
+            }),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Apply `f` to the bucket covering `at_sec`, rotating the ring
+    /// forward as needed. Writes in the past (skew) clamp to the newest
+    /// bucket; see the module docs for the full rotation contract.
+    pub fn record_at<F: FnOnce(&mut Bucket)>(&self, at_sec: u64, f: F) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.started {
+            g.started = true;
+            g.newest_sec = at_sec;
+            g.head = 0;
+            g.buckets[0] = Bucket {
+                sec: at_sec,
+                ..Bucket::default()
+            };
+        } else if at_sec > g.newest_sec {
+            let jump = at_sec - g.newest_sec;
+            if jump >= self.capacity as u64 {
+                // The whole window went idle (or the producer stalled
+                // past the horizon): every retained bucket is stale.
+                for b in g.buckets.iter_mut() {
+                    *b = Bucket::default();
+                }
+                g.head = 0;
+                g.buckets[0].sec = at_sec;
+            } else {
+                // Zero each skipped second so idle gaps read as zeros,
+                // not as leftovers from `capacity` seconds ago.
+                for s in 1..=jump {
+                    let head = (g.head + 1) % self.capacity;
+                    g.head = head;
+                    g.buckets[head] = Bucket {
+                        sec: g.newest_sec + s,
+                        ..Bucket::default()
+                    };
+                }
+            }
+            g.newest_sec = at_sec;
+        }
+        // at_sec <= newest_sec (skew) folds into the newest bucket.
+        let head = g.head;
+        f(&mut g.buckets[head]);
+    }
+
+    /// The most recent `window` buckets, oldest first. Buckets that were
+    /// never written (ring not yet full) are omitted, so callers see
+    /// only real seconds.
+    pub fn snapshot(&self, window: usize) -> Vec<Bucket> {
+        let g = self.inner.lock().unwrap();
+        if !g.started {
+            return Vec::new();
+        }
+        let window = window.clamp(1, self.capacity);
+        let mut out = Vec::with_capacity(window);
+        // Walk back from head, collect live buckets, reverse.
+        for k in 0..window {
+            let idx = (g.head + self.capacity - k) % self.capacity;
+            let b = g.buckets[idx];
+            // A live bucket at walk-back distance k covers exactly
+            // newest_sec - k; anything else is unwritten wrap-around
+            // residue (ring younger than the window).
+            if k > 0 {
+                match g.newest_sec.checked_sub(k as u64) {
+                    Some(want) if b.sec == want => {}
+                    _ => break,
+                }
+            }
+            out.push(b);
+        }
+        out.reverse();
+        out
+    }
+}
+
+/// Merge per-replica snapshots into one pool-level series: align by
+/// absolute second, field-wise sum. Result is sorted oldest first.
+pub fn merge(snapshots: &[Vec<Bucket>]) -> Vec<Bucket> {
+    let mut merged: Vec<Bucket> = Vec::new();
+    for snap in snapshots {
+        for b in snap {
+            match merged.binary_search_by_key(&b.sec, |m| m.sec) {
+                Ok(i) => merged[i].add(b),
+                Err(i) => merged.insert(i, *b),
+            }
+        }
+    }
+    merged
+}
+
+/// Turns a monotonically-nondecreasing cumulative counter into per-tick
+/// deltas. On reset (replica restart: cumulative drops below the last
+/// seen value) the new cumulative value is taken as the whole delta.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CounterFold {
+    last: u64,
+}
+
+impl CounterFold {
+    pub fn new() -> Self {
+        CounterFold::default()
+    }
+
+    pub fn fold(&mut self, cumulative: u64) -> u64 {
+        let delta = if cumulative >= self.last {
+            cumulative - self.last
+        } else {
+            cumulative
+        };
+        self.last = cumulative;
+        delta
+    }
+}
+
+/// JSON array of buckets for `/debug/vars`.
+pub fn series_json(buckets: &[Bucket]) -> Json {
+    Json::Arr(buckets.iter().map(|b| b.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tick(ring: &TsRing, sec: u64, tokens: u64) {
+        ring.record_at(sec, |b| b.tokens += tokens);
+    }
+
+    #[test]
+    fn buckets_accumulate_within_a_second() {
+        let ring = TsRing::new(8);
+        tick(&ring, 10, 3);
+        tick(&ring, 10, 4);
+        let snap = ring.snapshot(8);
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].sec, 10);
+        assert_eq!(snap[0].tokens, 7);
+    }
+
+    #[test]
+    fn forward_rotation_zeroes_skipped_seconds() {
+        let ring = TsRing::new(8);
+        tick(&ring, 100, 1);
+        tick(&ring, 103, 5); // skips 101, 102
+        let snap = ring.snapshot(8);
+        assert_eq!(
+            snap.iter().map(|b| (b.sec, b.tokens)).collect::<Vec<_>>(),
+            vec![(100, 1), (101, 0), (102, 0), (103, 5)]
+        );
+    }
+
+    #[test]
+    fn jump_past_capacity_clears_the_ring() {
+        let ring = TsRing::new(4);
+        for s in 0..4 {
+            tick(&ring, s, 1);
+        }
+        tick(&ring, 1000, 9);
+        let snap = ring.snapshot(4);
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].sec, 1000);
+        assert_eq!(snap[0].tokens, 9);
+    }
+
+    #[test]
+    fn backward_skew_clamps_into_newest_bucket() {
+        let ring = TsRing::new(8);
+        tick(&ring, 50, 1);
+        tick(&ring, 52, 1);
+        tick(&ring, 51, 7); // skewed write: folds into sec 52
+        let snap = ring.snapshot(8);
+        assert_eq!(
+            snap.iter().map(|b| (b.sec, b.tokens)).collect::<Vec<_>>(),
+            vec![(50, 1), (51, 0), (52, 8)]
+        );
+    }
+
+    #[test]
+    fn gauges_last_write_wins_counters_accumulate() {
+        let ring = TsRing::new(4);
+        ring.record_at(7, |b| {
+            b.tokens += 2;
+            b.queue_depth = 5;
+        });
+        ring.record_at(7, |b| {
+            b.tokens += 3;
+            b.queue_depth = 1;
+        });
+        let snap = ring.snapshot(4);
+        assert_eq!(snap[0].tokens, 5);
+        assert_eq!(snap[0].queue_depth, 1);
+    }
+
+    #[test]
+    fn snapshot_window_clamps_and_orders_oldest_first() {
+        let ring = TsRing::new(4);
+        for s in 0..10u64 {
+            tick(&ring, s, s);
+        }
+        // Only the last 4 seconds survive; window larger than capacity
+        // clamps.
+        let snap = ring.snapshot(100);
+        assert_eq!(
+            snap.iter().map(|b| b.sec).collect::<Vec<_>>(),
+            vec![6, 7, 8, 9]
+        );
+        let snap2 = ring.snapshot(2);
+        assert_eq!(
+            snap2.iter().map(|b| b.sec).collect::<Vec<_>>(),
+            vec![8, 9]
+        );
+    }
+
+    /// Property: under an arbitrary mix of forward jumps, stalls, and
+    /// backward skew, (a) snapshots are strictly increasing in `sec`,
+    /// (b) no write is ever lost — total tokens across the live window
+    /// equals the sum of writes whose target second is still inside the
+    /// window horizon.
+    #[test]
+    fn property_rotation_under_skew_and_stalls() {
+        let mut rng = Rng::new(20260808);
+        for trial in 0..50 {
+            let cap = 2 + (rng.next_u64() % 14) as usize;
+            let ring = TsRing::new(cap);
+            let mut clock: u64 = 1_000;
+            // Model of what the ring should hold: (sec -> tokens) for
+            // every write after clamping, pruned to the live horizon.
+            let mut model: Vec<(u64, u64)> = Vec::new();
+            let mut newest = 0u64;
+            let mut started = false;
+            for _ in 0..200 {
+                // Clock behaviour: stall (same sec), step, jump, skew.
+                match rng.next_u64() % 10 {
+                    0..=3 => {}                                  // stall
+                    4..=6 => clock += 1,                         // step
+                    7 | 8 => clock += rng.next_u64() % (2 * cap as u64 + 2), // jump
+                    _ => clock = clock.saturating_sub(1 + rng.next_u64() % 3), // skew
+                }
+                let amount = 1 + rng.next_u64() % 5;
+                tick(&ring, clock, amount);
+                // Mirror the clamping contract in the model.
+                let eff = if !started {
+                    started = true;
+                    newest = clock;
+                    clock
+                } else if clock > newest {
+                    newest = clock;
+                    clock
+                } else {
+                    newest
+                };
+                match model.binary_search_by_key(&eff, |m| m.0) {
+                    Ok(i) => model[i].1 += amount,
+                    Err(i) => model.insert(i, (eff, amount)),
+                }
+            }
+            let snap = ring.snapshot(cap);
+            // (a) strictly increasing, contiguous seconds.
+            for w in snap.windows(2) {
+                assert_eq!(
+                    w[0].sec + 1,
+                    w[1].sec,
+                    "trial {trial}: snapshot seconds not contiguous"
+                );
+            }
+            assert_eq!(snap.last().map(|b| b.sec), Some(newest));
+            // (b) every in-horizon write survived with its full amount.
+            let horizon = newest.saturating_sub(cap as u64 - 1);
+            for &(sec, tokens) in model.iter().filter(|m| m.0 >= horizon) {
+                let got = snap
+                    .iter()
+                    .find(|b| b.sec == sec)
+                    .map(|b| b.tokens)
+                    .unwrap_or(0);
+                assert_eq!(
+                    got, tokens,
+                    "trial {trial}: sec {sec} holds {got}, wrote {tokens}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn counter_fold_deltas_and_reset() {
+        let mut f = CounterFold::new();
+        assert_eq!(f.fold(5), 5);
+        assert_eq!(f.fold(5), 0);
+        assert_eq!(f.fold(12), 7);
+        // Reset: cumulative drops (replica restarted) — the new
+        // cumulative is the delta, nothing negative, nothing lost twice.
+        assert_eq!(f.fold(3), 3);
+        assert_eq!(f.fold(4), 1);
+    }
+
+    /// Property: folding any nondecreasing cumulative sequence recovers
+    /// exactly the increments (sum of deltas == final cumulative).
+    #[test]
+    fn property_monotonic_counter_folding() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let mut f = CounterFold::new();
+            let mut cum = 0u64;
+            let mut total = 0u64;
+            for _ in 0..100 {
+                cum += rng.next_u64() % 9;
+                total += f.fold(cum);
+            }
+            assert_eq!(total, cum);
+        }
+    }
+
+    /// Property: cross-replica merge == field-wise sum of per-replica
+    /// buckets at every second.
+    #[test]
+    fn property_cross_replica_merge_equivalence() {
+        let mut rng = Rng::new(99);
+        for _ in 0..30 {
+            let n_replicas = 1 + (rng.next_u64() % 4) as usize;
+            let rings: Vec<TsRing> = (0..n_replicas).map(|_| TsRing::new(16)).collect();
+            for ring in &rings {
+                let mut sec = 500 + rng.next_u64() % 4;
+                for _ in 0..40 {
+                    if rng.next_u64() % 3 == 0 {
+                        sec += rng.next_u64() % 3;
+                    }
+                    let t = rng.next_u64() % 7;
+                    let q = rng.next_u64() % 5;
+                    ring.record_at(sec, |b| {
+                        b.tokens += t;
+                        b.proposed += t;
+                        b.accepted += t / 2;
+                        b.queue_depth = q;
+                        b.serving = 1;
+                    });
+                }
+            }
+            let snaps: Vec<Vec<Bucket>> = rings.iter().map(|r| r.snapshot(16)).collect();
+            let merged = merge(&snaps);
+            // Merged at second s must equal the field-wise sum of every
+            // per-replica bucket at s.
+            for m in &merged {
+                let mut want = Bucket {
+                    sec: m.sec,
+                    ..Bucket::default()
+                };
+                for snap in &snaps {
+                    if let Some(b) = snap.iter().find(|b| b.sec == m.sec) {
+                        want.add(b);
+                    }
+                }
+                assert_eq!(*m, want, "merge diverged at sec {}", m.sec);
+            }
+            // And merge introduces no phantom seconds.
+            for snap in &snaps {
+                for b in snap {
+                    assert!(merged.iter().any(|m| m.sec == b.sec));
+                }
+            }
+            // Sorted oldest first.
+            for w in merged.windows(2) {
+                assert!(w[0].sec < w[1].sec);
+            }
+        }
+    }
+
+    #[test]
+    fn json_shape_includes_accept_rate() {
+        let ring = TsRing::new(4);
+        ring.record_at(3, |b| {
+            b.proposed += 4;
+            b.accepted += 3;
+        });
+        let j = series_json(&ring.snapshot(4));
+        let s = j.to_string();
+        assert!(s.contains("\"accept_rate\":0.75"), "{s}");
+        assert!(s.contains("\"sec\":3"), "{s}");
+    }
+}

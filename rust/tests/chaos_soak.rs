@@ -64,6 +64,10 @@ fn chaos_handle(rate: f64, seed: u64) -> (SchedulerHandle, Metrics) {
                 degrade_after: 3,
                 quarantine_after: 1_000_000,
             },
+            // Record every request's speculation flight: the soak doubles
+            // as proof that the recorder rides through fault recovery,
+            // and FLIGHT_chaos.json below needs a guaranteed sample.
+            flight_sample_rate: 1.0,
             ..Default::default()
         },
         metrics.clone(),
@@ -148,10 +152,13 @@ fn chaos_soak_bit_identical_across_all_modes() {
         }
     }
 
-    // Dump the chaos-run trace BEFORE asserting so a red CI run still
-    // uploads an artifact to debug from.
+    // Dump the chaos-run trace and flight record BEFORE asserting so a
+    // red CI run still uploads artifacts to debug from.
     if let Some(trace) = chaos.trace_chrome_json(last_chaos_id) {
         let _ = std::fs::write("TRACE_chaos.json", trace.to_string());
+    }
+    if let Some(flight) = chaos.flight_json(last_chaos_id) {
+        let _ = std::fs::write("FLIGHT_chaos.json", flight.to_string());
     }
 
     assert!(

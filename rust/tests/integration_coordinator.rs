@@ -439,6 +439,253 @@ fn trace_endpoints_serve_chrome_json_and_index() {
     assert_eq!(code, 400, "{junk}");
 }
 
+/// A server that records every request's speculation flight (sample rate
+/// 1.0) — the /debug surfaces need guaranteed records to assert against.
+fn flight_server() -> (std::net::SocketAddr, Metrics) {
+    let metrics = Metrics::new();
+    let handle = spawn(
+        move || Ok(Box::new(MockEngine::new(5, 32, 258, 1.0)) as Box<dyn Engine>),
+        SchedulerConfig {
+            max_batch: 2,
+            idle_poll: Duration::from_millis(2),
+            flight_sample_rate: 1.0,
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle, metrics.clone(), 4).unwrap();
+    (server.serve_background(), metrics)
+}
+
+/// GET /trace/recent?limit=N bounds the index (clamped to the ring
+/// capacity) and junk limits are a 400, not a silent default.
+#[test]
+fn trace_recent_limit_param_clamps_and_rejects_junk() {
+    let (addr, _) = mock_server(2);
+    for seed in 0..3 {
+        let body = format!(r#"{{"text":"ab____cd","seed":{seed}}}"#);
+        let (code, resp) = http_post(&addr, "/v1/infill", &body).unwrap();
+        assert_eq!(code, 200, "{resp}");
+    }
+    let (code, body) = http_get(&addr, "/trace/recent?limit=1").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let arr = Json::parse(&body).unwrap();
+    assert_eq!(arr.as_arr().unwrap().len(), 1, "{body}");
+    // An absurd limit is clamped to the ring capacity, not an error.
+    let (code, body) = http_get(&addr, "/trace/recent?limit=999999999").unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(Json::parse(&body).unwrap().as_arr().unwrap().len() >= 3);
+    for junk in ["abc", "-1", "1.5", ""] {
+        let (code, body) = http_get(&addr, &format!("/trace/recent?limit={junk}")).unwrap();
+        assert_eq!(code, 400, "limit={junk:?} -> {body}");
+        assert!(body.contains("error"), "{body}");
+    }
+    // No query at all keeps the default behavior.
+    let (code, _) = http_get(&addr, "/trace/recent").unwrap();
+    assert_eq!(code, 200);
+}
+
+/// ACCEPTANCE: /debug/vars and /debug/dashboard are served end-to-end
+/// over a live socket, and /debug/flight/{id} round-trips a sampled
+/// request's speculation anatomy (404 on misses, 400 on junk ids).
+#[test]
+fn debug_endpoints_serve_vars_flight_and_dashboard() {
+    let (addr, _) = flight_server();
+    let body = r#"{"text":"ab________cd","sampler":"assd","seed":23,
+                   "draft":{"kind":"bigram","max_len":4}}"#;
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let id = Json::parse(&resp)
+        .unwrap()
+        .get("request_id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+
+    let (code, vars) = http_get(&addr, "/debug/vars").unwrap();
+    assert_eq!(code, 200, "{vars}");
+    let j = Json::parse(&vars).expect("debug vars must be valid JSON");
+    assert!(
+        !j.get("series").unwrap().as_arr().unwrap().is_empty(),
+        "time-series empty after serving traffic: {vars}"
+    );
+    let heat = j.get("heatmap").unwrap().as_arr().unwrap();
+    assert!(
+        heat.iter()
+            .any(|h| h.get("drafter").unwrap().as_str() == Some("bigram")),
+        "heatmap missing the bigram drafter: {vars}"
+    );
+    assert!(j.get("queue_depth").is_some(), "{vars}");
+    let (code, _) = http_get(&addr, "/debug/vars?window=5").unwrap();
+    assert_eq!(code, 200);
+    let (code, body) = http_get(&addr, "/debug/vars?window=soon").unwrap();
+    assert_eq!(code, 400, "{body}");
+
+    let (code, flight) = http_get(&addr, &format!("/debug/flight/{id}")).unwrap();
+    assert_eq!(code, 200, "{flight}");
+    let f = Json::parse(&flight).unwrap();
+    assert_eq!(f.get("request_id").unwrap().as_f64(), Some(id as f64));
+    assert_eq!(f.get("drafter").unwrap().as_str(), Some("bigram"));
+    assert!(
+        !f.get("windows").unwrap().as_arr().unwrap().is_empty(),
+        "{flight}"
+    );
+    assert!(f.get("window_trajectory").is_some(), "{flight}");
+    let (code, miss) = http_get(&addr, "/debug/flight/18446744073709551614").unwrap();
+    assert_eq!(code, 404, "{miss}");
+    assert!(miss.contains("no flight record"), "{miss}");
+    let (code, _) = http_get(&addr, "/debug/flight/nope").unwrap();
+    assert_eq!(code, 400);
+
+    let (code, page) = http_get(&addr, "/debug/dashboard").unwrap();
+    assert_eq!(code, 200);
+    assert!(page.contains("<!doctype html"), "not an HTML page");
+    assert!(
+        page.contains("/debug/vars"),
+        "dashboard must poll /debug/vars"
+    );
+    assert!(!page.contains("http://"), "dashboard must be self-contained");
+}
+
+/// Line-by-line lint of the whole /metrics text exposition against the
+/// Prometheus 0.0.4 grammar: every line is HELP/TYPE/sample, every
+/// sample's family is declared by a preceding TYPE (histogram suffixes
+/// resolve to their base family, `_bucket` carries `le`), metric and
+/// label names match the spec charset, label values are quoted with only
+/// legal escapes, and values parse.
+#[test]
+fn prometheus_exposition_passes_0_0_4_lint() {
+    let (addr, _) = flight_server();
+    let body = r#"{"text":"ab________cd","sampler":"assd","seed":31,
+                   "draft":{"kind":"bigram","max_len":4}}"#;
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let (code, text) = http_get_accept(&addr, "/metrics", "text/plain").unwrap();
+    assert_eq!(code, 200);
+    // The flight families must be part of the linted output.
+    assert!(text.contains("asarm_flight_position_proposed_total{drafter="));
+    assert_prometheus_0_0_4(&text);
+}
+
+/// Minimal 0.0.4 grammar checker (see the lint test above).
+fn assert_prometheus_0_0_4(text: &str) {
+    use std::collections::{HashMap, HashSet};
+    fn name_ok(n: &str) -> bool {
+        let mut chars = n.chars();
+        match chars.next() {
+            Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+            _ => return false,
+        }
+        chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut helps: HashSet<String> = HashSet::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("");
+            assert!(name_ok(name), "bad family name in HELP: {line:?}");
+            assert!(helps.insert(name.to_string()), "duplicate HELP: {name}");
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            assert!(name_ok(name), "bad family name in TYPE: {line:?}");
+            assert!(
+                ["counter", "gauge", "histogram", "summary", "untyped"].contains(&kind),
+                "bad TYPE kind: {line:?}"
+            );
+            assert!(
+                types.insert(name.to_string(), kind.to_string()).is_none(),
+                "duplicate TYPE: {name}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment line: {line:?}");
+        let (name_labels, value) = line.rsplit_once(' ').expect("sample needs a value");
+        assert!(
+            value.parse::<f64>().is_ok() || ["+Inf", "-Inf", "NaN"].contains(&value),
+            "bad sample value: {line:?}"
+        );
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, rest)) => {
+                assert!(rest.ends_with('}'), "unterminated label block: {line:?}");
+                (n, Some(&rest[..rest.len() - 1]))
+            }
+            None => (name_labels, None),
+        };
+        assert!(name_ok(name), "bad metric name: {line:?}");
+        if let Some(labels) = labels {
+            let mut chars = labels.chars();
+            'pairs: loop {
+                let mut key = String::new();
+                for c in chars.by_ref() {
+                    if c == '=' {
+                        break;
+                    }
+                    key.push(c);
+                }
+                assert!(name_ok(&key), "bad label name {key:?} in {line:?}");
+                assert_eq!(chars.next(), Some('"'), "label value not quoted: {line:?}");
+                let mut closed = false;
+                while let Some(c) = chars.next() {
+                    match c {
+                        '\\' => {
+                            let e = chars.next().expect("dangling backslash");
+                            assert!(
+                                ['\\', '"', 'n'].contains(&e),
+                                "illegal escape \\{e} in {line:?}"
+                            );
+                        }
+                        '"' => {
+                            closed = true;
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+                assert!(closed, "unterminated label value: {line:?}");
+                match chars.next() {
+                    None => break 'pairs,
+                    Some(',') => continue 'pairs,
+                    Some(c) => panic!("unexpected {c:?} after label value: {line:?}"),
+                }
+            }
+        }
+        // Every sample must belong to a family declared by a preceding
+        // TYPE; histogram series expose _bucket/_sum/_count suffixes.
+        let family = types
+            .iter()
+            .find(|(f, kind)| {
+                name == f.as_str()
+                    || (kind.as_str() == "histogram"
+                        && [
+                            format!("{f}_bucket"),
+                            format!("{f}_sum"),
+                            format!("{f}_count"),
+                        ]
+                        .iter()
+                        .any(|s| s == name))
+            })
+            .map(|(f, _)| f.clone())
+            .unwrap_or_else(|| panic!("sample {name} has no preceding # TYPE"));
+        if types[&family] == "histogram" && name == format!("{family}_bucket") {
+            assert!(
+                labels.unwrap_or("").contains("le="),
+                "histogram bucket without le label: {line:?}"
+            );
+        }
+    }
+    assert!(!types.is_empty(), "exposition declared no families");
+    for f in types.keys() {
+        assert!(helps.contains(f), "TYPE without HELP: {f}");
+    }
+}
+
 // --- streaming lifecycle over a real socket ----------------------------
 
 /// A server whose engine sleeps per forward: slow enough to observe
