@@ -9,12 +9,16 @@
 //! FAILS (non-zero exit — the CI regression gate) if warm decode output
 //! diverges from cold, if the warm first iteration does not beat the
 //! cold one on modeled device compute, if a repeated prompt fails to
-//! hit the cache, or if the pool's measured peak footprint exceeds the
-//! per-lane slab layout it replaced.
+//! hit the cache, if the pool's measured peak footprint exceeds the
+//! per-lane slab layout it replaced, or if resuming a preempted
+//! (checkpointed + parked) request on the engine that sealed its prefix
+//! does not beat a cold restore's full re-prefill.
 
 use anyhow::{bail, Result};
 
 use asarm::coordinator::SamplerKind;
+use asarm::decode::snapshot::restore;
+use asarm::decode::DecodeMachine;
 use asarm::draft::{DraftKind, DraftOptions};
 use asarm::eval::harness::{build_machine, masked_prose_workload, WorkItem};
 use asarm::obs::{chrome, tap, Rung, SpanKind, TraceBuilder, DEFAULT_SPAN_CAP};
@@ -77,6 +81,42 @@ fn drive_inc(
         first.get_or_insert(engine.modeled_cells() - before);
         let s = engine.kv_stats().expect("mock engine is paged");
         *min_free = (*min_free).min(s.free_blocks);
+    }
+    engine.reset_lane(lane);
+    Ok((first.unwrap_or(0), machine.outcome().tokens))
+}
+
+/// Drive an already-built machine (e.g. one restored from a
+/// [`DecodeSnapshot`](asarm::decode::snapshot::DecodeSnapshot)) to
+/// completion on `lane`, returning (first-call modeled-cells delta,
+/// final tokens). The first call is the resume cost: a lane whose
+/// committed prefix is still sealed in the engine's prefix cache seeds
+/// from it, a cold engine pays the full re-prefill.
+fn drive_machine(
+    engine: &MockEngine,
+    mut machine: Box<dyn DecodeMachine>,
+    lane: usize,
+) -> Result<(u64, Vec<u32>)> {
+    let mut first = None;
+    while !machine.done() {
+        let committed = machine.incremental();
+        let before = engine.modeled_cells();
+        let rows = {
+            let req = machine
+                .forward_request()
+                .expect("machine not done but no request");
+            let mut out = match committed {
+                Some(committed) => engine.forward_inc(&[IncSpec {
+                    spec: req,
+                    committed,
+                    lane,
+                }])?,
+                None => engine.forward_ord(std::slice::from_ref(&req))?,
+            };
+            out.pop().expect("engine returned no row batch")
+        };
+        machine.absorb(&rows);
+        first.get_or_insert(engine.modeled_cells() - before);
     }
     engine.reset_lane(lane);
     Ok((first.unwrap_or(0), machine.outcome().tokens))
@@ -178,6 +218,77 @@ fn main() -> Result<()> {
         ]));
     }
 
+    // --- preempt → resume: warm park vs cold re-prefill ----------------
+    // The scheduler's preemption path in miniature: drive a request
+    // partway, checkpoint it, and seal its lane back into the prefix
+    // cache (exactly what `park_slot` does). Resuming on the SAME engine
+    // must seed from the sealed prefix and beat a cold restore on a
+    // fresh engine — which pays the full committed-prefix re-prefill —
+    // on first-iteration modeled compute. Both resumes must reproduce
+    // the uninterrupted run's tokens bit-for-bit.
+    let e_park = MockEngine::new(9, N, V, 1.0);
+    let item = prose_item(47);
+    let park_at = item.ord.m + 16; // park with 16 tokens committed
+    let lane = 0;
+    e_park.reset_lane(lane);
+    let mut machine = build_machine(&e_park, &item, SamplerKind::Assd, opts(), 8, 1.0, 4747);
+    loop {
+        let committed = machine.incremental();
+        if machine.done() || committed.is_some_and(|c| c >= park_at) {
+            break;
+        }
+        let rows = {
+            let req = machine
+                .forward_request()
+                .expect("machine not done but no request");
+            let mut out = match committed {
+                Some(committed) => e_park.forward_inc(&[IncSpec {
+                    spec: req,
+                    committed,
+                    lane,
+                }])?,
+                None => e_park.forward_ord(std::slice::from_ref(&req))?,
+            };
+            out.pop().expect("engine returned no row batch")
+        };
+        machine.absorb(&rows);
+    }
+    if machine.done() {
+        bail!("preempt-resume leg: request finished before the park point — nothing to resume");
+    }
+    let parked_rows = machine.incremental().expect("assd is incremental");
+    let warm_snap = machine.checkpoint().expect("assd machines must checkpoint");
+    let cold_snap = machine.checkpoint().expect("assd machines must checkpoint");
+    drop(machine);
+    e_park.reset_lane(lane); // park: seal the committed prefix
+
+    let hits_before = e_park.kv_stats().expect("mock engine is paged").prefix_hits;
+    let (warm_resume_first, warm_resume_toks) = drive_machine(&e_park, restore(warm_snap), lane)?;
+    let hits_after = e_park.kv_stats().expect("mock engine is paged").prefix_hits;
+    let e_cold = MockEngine::new(9, N, V, 1.0);
+    let (cold_resume_first, cold_resume_toks) = drive_machine(&e_cold, restore(cold_snap), lane)?;
+
+    // Uninterrupted baseline on its own engine (so neither resume's
+    // prefix cache is perturbed).
+    let e_base = MockEngine::new(9, N, V, 1.0);
+    let mut mf_base = usize::MAX;
+    let (_, base_toks) = drive_inc(&e_base, &item, 4747, &mut mf_base)?;
+    if warm_resume_toks != base_toks || cold_resume_toks != base_toks {
+        bail!("preempt-resume gate: resumed decode diverged from the uninterrupted run");
+    }
+    if hits_after <= hits_before {
+        bail!(
+            "preempt-resume gate: warm resume never hit the sealed prefix — nothing was measured"
+        );
+    }
+    if warm_resume_first >= cold_resume_first {
+        bail!(
+            "preempt-resume gate: warm resume first iteration {warm_resume_first} cells >= cold \
+             restore {cold_resume_first} — parking is not sealing the committed prefix"
+        );
+    }
+    let resume_speedup = cold_resume_first as f64 / warm_resume_first.max(1) as f64;
+
     let report = Json::obj(vec![
         ("engine", Json::str("mock")),
         ("provenance", Json::str("measured (make bench-smoke)")),
@@ -205,6 +316,22 @@ fn main() -> Result<()> {
                 ),
             ]),
         ),
+        (
+            "preempt_resume",
+            Json::obj(vec![
+                ("committed_rows_at_park", Json::num(parked_rows as f64)),
+                (
+                    "warm_resume_first_iter_cells",
+                    Json::num(warm_resume_first as f64),
+                ),
+                (
+                    "cold_restore_first_iter_cells",
+                    Json::num(cold_resume_first as f64),
+                ),
+                ("speedup_warm_over_cold", Json::num(resume_speedup)),
+                ("outputs_identical", Json::Bool(true)),
+            ]),
+        ),
         ("hit_rate_sweep", Json::Arr(sweep)),
     ]);
     std::fs::write(&out_path, report.to_string())?;
@@ -220,6 +347,12 @@ fn main() -> Result<()> {
         "slab layout {slab_bytes} B, pool bound {pool_bound_bytes} B, measured peak {peak_bytes} \
          B ({:.0}% of slab)",
         100.0 * peak_bytes as f64 / slab_bytes as f64
+    );
+    println!("\n=== perf_paged: preempt → resume (warm park vs cold re-prefill) ===");
+    println!(
+        "parked at {parked_rows} committed rows; warm resume {warm_resume_first} cells, cold \
+         restore {cold_resume_first} cells ({resume_speedup:.1}x — the sealed prefix skipped \
+         re-prefill), outputs identical: true"
     );
     println!("\n=== perf_paged: prefix-cache hit-rate sweep ===");
     sweep_table.print();

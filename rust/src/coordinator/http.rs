@@ -14,7 +14,14 @@
 //!                            cancelled / shed); with
 //!                            `Accept: text/plain` the same counters
 //!                            in Prometheus text exposition instead
-//!   GET  /replicas         — per-replica stats JSON array
+//!   GET  /replicas         — per-replica stats JSON array (each object
+//!                            carries the pool's `retry_budget`)
+//!   POST /drain            — checkpoint active slots and refuse new
+//!                            admissions (drain-free restart prep);
+//!                            `?resume=1` lifts the drain and re-admits
+//!                            the parked slots; returns the drain state
+//!   GET  /drain            — drain state JSON (`draining`, `parked`,
+//!                            `preemptions`, `migrations`, `drains`)
 //!   GET  /trace/recent     — index of recently retired request
 //!                            traces (one summary object per trace,
 //!                            newest first; `[]` when tracing is off);
@@ -416,6 +423,21 @@ fn replicas_lost_response(stream: &mut TcpStream) -> Result<()> {
     )
 }
 
+/// The pool is draining (POST /drain): admissions are refused but the
+/// replicas are healthy and will serve again once the drain lifts —
+/// 503 + Retry-After, distinguishable from the 429 shed (queue full)
+/// because the client should NOT retry against this instance until its
+/// operator finishes the restart.
+fn draining_response(stream: &mut TcpStream) -> Result<()> {
+    write_response_headers(
+        stream,
+        503,
+        "Service Unavailable",
+        &[("Retry-After", "5")],
+        r#"{"error":"pool draining; new admissions refused until drain is lifted"}"#,
+    )
+}
+
 /// One HTTP chunk (`Transfer-Encoding: chunked`), flushed immediately so
 /// SSE events reach the client as they happen.
 fn write_chunk(stream: &mut TcpStream, payload: &str) -> Result<()> {
@@ -486,6 +508,18 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
         }
         ("GET", "/replicas") => {
             write_response(&mut stream, 200, "OK", &handle.replicas_json().to_string())
+        }
+        ("GET", "/drain") => {
+            write_response(&mut stream, 200, "OK", &handle.drain_json().to_string())
+        }
+        ("POST", "/drain") => {
+            // Admin surface for drain-free restarts: flip the drain flag
+            // so workers checkpoint their active slots onto the resume
+            // deque and submit() refuses admissions; `?resume=1` lifts
+            // it and the parked slots re-admit with warm-prefix restore.
+            let lift = query_param(query, "resume").is_some_and(|v| v != "0");
+            handle.set_draining(!lift);
+            write_response(&mut stream, 200, "OK", &handle.drain_json().to_string())
         }
         ("GET", "/trace/recent") => {
             // `?limit=N` bounds the response body; clamped to the ring
@@ -577,6 +611,7 @@ fn handle_conn(mut stream: TcpStream, handle: SchedulerHandle, metrics: Metrics)
                 Err(SubmitError::QueueFull(_)) => shed_response(&mut stream),
                 Err(SubmitError::ShutDown) => unavailable_response(&mut stream),
                 Err(SubmitError::ReplicaLost) => replicas_lost_response(&mut stream),
+                Err(SubmitError::Draining) => draining_response(&mut stream),
                 Ok(rh) => match wait_watching_socket(rh, &stream) {
                     Some(Ok(resp)) => {
                         write_response(&mut stream, 200, "OK", &resp.to_json().to_string())
@@ -682,6 +717,7 @@ fn handle_stream(mut stream: TcpStream, handle: SchedulerHandle, body: &[u8]) ->
         Err(SubmitError::QueueFull(_)) => return shed_response(&mut stream),
         Err(SubmitError::ShutDown) => return unavailable_response(&mut stream),
         Err(SubmitError::ReplicaLost) => return replicas_lost_response(&mut stream),
+        Err(SubmitError::Draining) => return draining_response(&mut stream),
         Ok(rh) => rh,
     };
     let cancel = rh.cancel_token();

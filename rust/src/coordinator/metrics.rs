@@ -109,6 +109,18 @@ struct Inner {
     /// exhausted, fatal engine error, contained panic, or replica loss)
     /// — a subset of `failures` excluding client-caused retires.
     requests_failed: u64,
+    // --- decode-state checkpointing (docs/ARCHITECTURE.md
+    //     §Checkpointing, preemption & migration). Each counts one slot
+    //     checkpointed and parked on the resume deque; none of these
+    //     fail the request. ---
+    /// Slots parked to relieve KV pressure (victim sealed + released its
+    /// lane so batch-mates could allocate).
+    preemptions: u64,
+    /// Slots re-queued off a dead engine incarnation instead of failing
+    /// with it.
+    migrations: u64,
+    /// Slots parked by the drain flag (POST /drain).
+    drains: u64,
 }
 
 impl Default for Metrics {
@@ -159,6 +171,9 @@ impl Metrics {
                 forward_retries: 0,
                 replica_restarts: 0,
                 requests_failed: 0,
+                preemptions: 0,
+                migrations: 0,
+                drains: 0,
             })),
         }
     }
@@ -211,6 +226,21 @@ impl Metrics {
     /// ADDITION to `record_failure`, which counts every errored retire).
     pub fn record_request_failed(&self) {
         self.inner.lock().unwrap().requests_failed += 1;
+    }
+
+    /// One slot checkpointed and parked to relieve KV pressure.
+    pub fn record_preemption(&self) {
+        self.inner.lock().unwrap().preemptions += 1;
+    }
+
+    /// One slot checkpointed off a dead engine incarnation and re-queued.
+    pub fn record_migration(&self) {
+        self.inner.lock().unwrap().migrations += 1;
+    }
+
+    /// One slot checkpointed and parked by the drain flag.
+    pub fn record_drain(&self) {
+        self.inner.lock().unwrap().drains += 1;
     }
 
     pub fn record_batch_iteration(&self, occupancy: usize) {
@@ -366,6 +396,18 @@ impl Metrics {
         self.inner.lock().unwrap().requests_failed
     }
 
+    pub fn preemptions(&self) -> u64 {
+        self.inner.lock().unwrap().preemptions
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.inner.lock().unwrap().migrations
+    }
+
+    pub fn drains(&self) -> u64 {
+        self.inner.lock().unwrap().drains
+    }
+
     pub fn snapshot_json(&self) -> Json {
         let m = self.inner.lock().unwrap();
         let elapsed = m.started.elapsed().as_secs_f64();
@@ -468,6 +510,9 @@ impl Metrics {
             ("forward_retries", Json::num(m.forward_retries as f64)),
             ("replica_restarts", Json::num(m.replica_restarts as f64)),
             ("requests_failed", Json::num(m.requests_failed as f64)),
+            ("preemptions", Json::num(m.preemptions as f64)),
+            ("migrations", Json::num(m.migrations as f64)),
+            ("drains", Json::num(m.drains as f64)),
             (
                 "acceptance_by_drafter",
                 Json::obj(
@@ -627,6 +672,21 @@ impl Metrics {
             "asarm_requests_failed_total",
             "Requests failed by the fault-isolation layer.",
             m.requests_failed as f64,
+        );
+        p.counter(
+            "asarm_preemptions_total",
+            "Slots checkpointed and parked to relieve KV pressure.",
+            m.preemptions as f64,
+        );
+        p.counter(
+            "asarm_migrations_total",
+            "Slots checkpointed off dead engine incarnations and re-queued.",
+            m.migrations as f64,
+        );
+        p.counter(
+            "asarm_drains_total",
+            "Slots checkpointed and parked by the drain flag.",
+            m.drains as f64,
         );
         p.histogram(
             "asarm_request_latency_seconds",
@@ -825,6 +885,10 @@ pub struct ReplicaStats {
     forward_retries: AtomicU64,
     restarts: AtomicU64,
     requests_failed: AtomicU64,
+    // --- decode-state checkpointing (sums across replicas equal the
+    //     pool counters; drains are pool-wide, not per-replica). ---
+    preemptions: AtomicU64,
+    migrations: AtomicU64,
 }
 
 impl ReplicaStats {
@@ -861,6 +925,8 @@ impl ReplicaStats {
             forward_retries: AtomicU64::new(0),
             restarts: AtomicU64::new(0),
             requests_failed: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
         }
     }
 
@@ -933,6 +999,14 @@ impl ReplicaStats {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_migration(&self) {
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn engine_errors(&self) -> u64 {
         self.engine_errors.load(Ordering::Relaxed)
     }
@@ -947,6 +1021,14 @@ impl ReplicaStats {
 
     pub fn requests_failed(&self) -> u64 {
         self.requests_failed.load(Ordering::Relaxed)
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions.load(Ordering::Relaxed)
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
     }
 
     pub fn record_cancelled(&self) {
@@ -1118,6 +1200,8 @@ impl ReplicaStats {
             ("forward_retries", Json::num(self.forward_retries() as f64)),
             ("restarts", Json::num(self.restarts() as f64)),
             ("requests_failed", Json::num(self.requests_failed() as f64)),
+            ("preemptions", Json::num(self.preemptions() as f64)),
+            ("migrations", Json::num(self.migrations() as f64)),
         ])
     }
 }

@@ -75,9 +75,29 @@
 //! errors instead of stranding them. Deterministic fault injection for
 //! all of the above lives in [`crate::runtime::ChaosEngine`]
 //! (`--chaos-seed`/`--chaos-rate`).
+//!
+//! CHECKPOINTING (docs/ARCHITECTURE.md §Checkpointing, preemption &
+//! migration): every decode machine can freeze into a
+//! [`crate::decode::snapshot::DecodeSnapshot`] whose restore replays the
+//! uninterrupted run bit-for-bit. The pool keeps a shared RESUME deque of
+//! checkpointed slots ([`PoolShared`]) that every worker drains ahead of
+//! the admission queue, and restructures "this request must die" into
+//! "checkpoint unless truly failed" at three seams: (1) PREEMPTION — a
+//! `forward_inc` that fails with [`EngineError::KvPressure`] parks the
+//! least-progressed checkpointable slot (seal + release its lane) instead
+//! of spinning the retry ladder against a full block pool; the survivor
+//! batch allocates, and the victim resumes later with a warm-prefix
+//! restore. (2) MIGRATION — when an engine incarnation dies, active slots
+//! that can checkpoint are re-queued instead of failed: replica death
+//! costs latency, not requests, and open SSE streams continue without
+//! re-emitting a token. (3) DRAIN — [`SchedulerHandle::set_draining`]
+//! (POST /drain) refuses new admissions with [`SubmitError::Draining`]
+//! and parks every checkpointable active slot; lifting the flag resumes
+//! them in place — a restart window with zero failed requests.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -88,6 +108,7 @@ use crate::data::masking::lattice_sigma;
 use crate::decode::assd::AssdMachine;
 use crate::decode::diffusion::DiffusionMachine;
 use crate::decode::sequential::SequentialMachine;
+use crate::decode::snapshot::DecodeSnapshot;
 use crate::decode::{DecodeMachine, DecodeOutcome, IterPhase, IterStats};
 use crate::draft::DraftOptions;
 use crate::model::mask::Ordering;
@@ -197,6 +218,35 @@ struct Job {
     request_id: u64,
 }
 
+/// A checkpointed in-flight request awaiting re-admission: everything a
+/// [`Slot`] carried that is not reconstructible from the snapshot. The
+/// lifecycle emitter rides along UNFINISHED — the client's stream stays
+/// open across the park, its deadline clock keeps running (submission
+/// epoch), and no committed token is ever re-emitted (the restored
+/// machine's commit buffer resumes exactly where it froze).
+struct ResumeJob {
+    life: LifecycleEmitter,
+    snapshot: DecodeSnapshot,
+    /// Tokens already streamed to the client (progress messages + the
+    /// TTFT-vs-ITL branch on the next commit).
+    committed: usize,
+    text_len: usize,
+    n_targets: usize,
+    trace: Option<TraceBuilder>,
+    flight: Option<FlightBuilder>,
+    /// Remaining retry budget — parking is not a free refill.
+    retries: u32,
+}
+
+/// Pool-wide shared state beyond the admission queue: the resume deque
+/// of checkpointed slots and the drain flag. Plain `Arc` held by the
+/// handle AND every worker (not extra queue senders, which would keep
+/// the admission queue open after the last handle drops).
+struct PoolShared {
+    resume: Mutex<VecDeque<ResumeJob>>,
+    draining: AtomicBool,
+}
+
 /// Submission failure: distinguishes backpressure (the caller should
 /// retry later — HTTP 429) from shutdown.
 #[derive(Debug, thiserror::Error)]
@@ -214,12 +264,20 @@ pub enum SubmitError {
     /// [`SubmitError::ShutDown`] — but equally terminal for this pool.
     #[error("all replicas lost; request cannot be served")]
     ReplicaLost,
+    /// The pool is draining (POST /drain): active requests are being
+    /// checkpointed and parked; new admissions are refused until the
+    /// drain is lifted (HTTP 503 + Retry-After, unlike the 429 of
+    /// [`SubmitError::QueueFull`] — the client should come back, not
+    /// back off).
+    #[error("pool draining; new admissions refused until drain is lifted")]
+    Draining,
 }
 
 /// Cloneable handle for submitting requests to the worker pool.
 #[derive(Clone)]
 pub struct SchedulerHandle {
     tx: mpmc::Sender<Job>,
+    shared: Arc<PoolShared>,
     replicas: Arc<Vec<ReplicaStats>>,
     recorders: Arc<Vec<SpanRecorder>>,
     flights: Arc<Vec<FlightRecorder>>,
@@ -236,6 +294,7 @@ pub struct SchedulerHandle {
     event_capacity: usize,
     trace_capacity: usize,
     flight_sample_rate: f64,
+    retry_budget: u32,
 }
 
 impl SchedulerHandle {
@@ -249,6 +308,9 @@ impl SchedulerHandle {
     /// surface). Sheds with [`SubmitError::QueueFull`] when the bounded
     /// admission queue is at capacity.
     pub fn submit(&self, request: InfillRequest) -> Result<RequestHandle, SubmitError> {
+        if self.shared.draining.load(AtomicOrdering::Relaxed) {
+            return Err(SubmitError::Draining);
+        }
         let timeout = request.timeout_ms.map(Duration::from_millis);
         let request_id = NEXT_REQUEST_ID.fetch_add(1, AtomicOrdering::Relaxed);
         let (life, handle) = lifecycle::channel(timeout, self.event_capacity, request_id);
@@ -288,8 +350,59 @@ impl SchedulerHandle {
     }
 
     /// JSON array of per-replica snapshots (the GET /replicas payload).
+    /// Each object carries the pool's effective `retry_budget`
+    /// (`--retry-budget`) so operators can read the recovery policy off
+    /// the same surface as the counters it explains.
     pub fn replicas_json(&self) -> Json {
-        Json::Arr(self.replicas.iter().map(|r| r.snapshot_json()).collect())
+        Json::Arr(
+            self.replicas
+                .iter()
+                .map(|r| {
+                    let mut j = r.snapshot_json();
+                    if let Json::Obj(m) = &mut j {
+                        m.insert(
+                            "retry_budget".to_string(),
+                            Json::num(self.retry_budget as f64),
+                        );
+                    }
+                    j
+                })
+                .collect(),
+        )
+    }
+
+    /// Flip the pool-wide drain flag (POST /drain). On: new submissions
+    /// are refused with [`SubmitError::Draining`] and every worker parks
+    /// its checkpointable active slots on the resume deque (sealing their
+    /// committed rows into the prefix cache). Off: parked checkpoints
+    /// re-admit with warm-prefix restores. Client streams stay open and
+    /// deadlines keep running throughout.
+    pub fn set_draining(&self, on: bool) {
+        self.shared.draining.store(on, AtomicOrdering::Relaxed);
+    }
+
+    /// True while the pool refuses admissions (see
+    /// [`SchedulerHandle::set_draining`]).
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Checkpointed requests currently parked on the resume deque
+    /// (waiting for a free lane, or for the drain flag to lift).
+    pub fn parked(&self) -> usize {
+        self.shared.resume.lock().unwrap().len()
+    }
+
+    /// The GET /drain payload: the flag, the park depth, and the live
+    /// checkpoint/preemption/migration counters that explain them.
+    pub fn drain_json(&self) -> Json {
+        Json::obj(vec![
+            ("draining", Json::Bool(self.draining())),
+            ("parked", Json::num(self.parked() as f64)),
+            ("preemptions", Json::num(self.metrics.preemptions() as f64)),
+            ("migrations", Json::num(self.metrics.migrations() as f64)),
+            ("drains", Json::num(self.metrics.drains() as f64)),
+        ])
     }
 
     /// Look up a retired request's trace across every replica's ring.
@@ -596,6 +709,10 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
     let origin = Instant::now();
     let live = Arc::new(AtomicUsize::new(n_workers));
     let pool = Arc::new(pool);
+    let shared = Arc::new(PoolShared {
+        resume: Mutex::new(VecDeque::new()),
+        draining: AtomicBool::new(false),
+    });
     for id in 0..n_workers {
         let rx = rx.clone();
         let metrics = metrics.clone();
@@ -606,6 +723,7 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
         let pool_ring = Arc::clone(&pool_ring);
         let live = Arc::clone(&live);
         let pool = Arc::clone(&pool);
+        let shared = Arc::clone(&shared);
         thread::Builder::new()
             .name(format!("scheduler-{id}"))
             .spawn(move || {
@@ -616,6 +734,7 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
                 let _exit = WorkerExitGuard {
                     live,
                     rx: rx.clone(),
+                    shared: Arc::clone(&shared),
                 };
                 let stats = &replicas[id];
                 let recorder = &recorders[id];
@@ -641,7 +760,16 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
                             let engine = ChaosEngine::wrap(engine, cfg.chaos);
                             stats.set_state(ReplicaState::Running);
                             match catch_unwind(AssertUnwindSafe(|| {
-                                run_worker(engine.as_ref(), &rx, cfg, &metrics, stats, recorder, &obs)
+                                run_worker(
+                                    engine.as_ref(),
+                                    &rx,
+                                    &shared,
+                                    cfg,
+                                    &metrics,
+                                    stats,
+                                    recorder,
+                                    &obs,
+                                )
                             })) {
                                 Ok(WorkerExit::Drained) => {
                                     stats.set_state(ReplicaState::Stopped);
@@ -677,6 +805,7 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
     }
     SchedulerHandle {
         tx,
+        shared,
         replicas,
         recorders,
         flights,
@@ -688,6 +817,7 @@ pub fn spawn_pool(pool: EnginePool, cfg: SchedulerConfig, metrics: Metrics) -> S
         event_capacity: cfg.event_capacity,
         trace_capacity: cfg.trace_capacity,
         flight_sample_rate: cfg.flight_sample_rate,
+        retry_budget: cfg.retry_budget,
     }
 }
 
@@ -788,6 +918,7 @@ impl TsFolds {
 struct WorkerExitGuard {
     live: Arc<AtomicUsize>,
     rx: mpmc::Receiver<Job>,
+    shared: Arc<PoolShared>,
 }
 
 impl Drop for WorkerExitGuard {
@@ -796,6 +927,17 @@ impl Drop for WorkerExitGuard {
             self.rx.close();
             while let Ok(job) = self.rx.try_recv() {
                 job.life.finish(Err(anyhow!("engine pool shut down")));
+            }
+            // Parked checkpoints can never resume once every worker is
+            // gone: fail them typed (with progress context) rather than
+            // stranding their clients on open streams.
+            let mut parked = self.shared.resume.lock().unwrap();
+            while let Some(rj) = parked.pop_front() {
+                rj.life.finish(Err(anyhow!(
+                    "engine pool shut down after {}/{} tokens",
+                    rj.committed,
+                    rj.n_targets
+                )));
             }
         }
     }
@@ -886,6 +1028,81 @@ fn abort_slot(
         slot.committed,
         slot.n_targets
     )));
+}
+
+/// Checkpoint a live slot into a [`ResumeJob`] on the shared resume
+/// deque: freeze the machine, seal the lane's committed rows into the
+/// prefix cache and release its blocks (`reset_lane` = seal-then-release
+/// on paged engines), and carry the lifecycle/trace/flight/retry state
+/// across the park. Returns false — leaving the slot untouched — when
+/// the machine is not checkpointable; the caller falls back to whatever
+/// it would have done without this layer. Must be called between
+/// absorbs (every call site is), so the restored machine re-issues the
+/// exact same forward the parked one would have.
+fn park_slot(
+    shared: &PoolShared,
+    engine: &dyn Engine,
+    lanes: &mut [Option<Slot>],
+    lane: usize,
+) -> bool {
+    let Some(snapshot) = lanes[lane]
+        .as_ref()
+        .and_then(|slot| slot.machine.checkpoint())
+    else {
+        return false;
+    };
+    let Some(slot) = lanes[lane].take() else {
+        return false;
+    };
+    engine.reset_lane(lane);
+    shared.resume.lock().unwrap().push_back(ResumeJob {
+        snapshot,
+        committed: slot.committed,
+        text_len: slot.text_len,
+        n_targets: slot.n_targets,
+        trace: slot.trace,
+        flight: slot.flight,
+        retries: slot.retries,
+        life: slot.life,
+    });
+    true
+}
+
+/// KV-pressure preemption: park the least-progressed checkpointable slot
+/// (it has the least sunk cost and the smallest sealed prefix; ties break
+/// toward the higher lane, LIFO by admission order within a batch) so its
+/// released blocks let the surviving batch allocate. Returns false when
+/// at most one slot is active — parking the sole occupant frees blocks
+/// nobody else is waiting for and risks a park/resume livelock — or when
+/// nothing checkpointable is found; the caller falls back to the retry
+/// ladder, whose compact relaunch needs no KV allocation at all.
+fn preempt_victim(
+    shared: &PoolShared,
+    engine: &dyn Engine,
+    lanes: &mut [Option<Slot>],
+    metrics: &Metrics,
+    stats: &ReplicaStats,
+) -> bool {
+    if lanes.iter().filter(|s| s.is_some()).count() <= 1 {
+        return false;
+    }
+    let victim = lanes
+        .iter()
+        .enumerate()
+        .filter_map(|(lane, s)| s.as_ref().map(|s| (lane, s)))
+        .filter(|(_, s)| s.machine.checkpoint().is_some())
+        .min_by_key(|&(lane, s)| (s.committed, std::cmp::Reverse(lane)))
+        .map(|(lane, _)| lane);
+    let Some(lane) = victim else {
+        return false;
+    };
+    if park_slot(shared, engine, lanes, lane) {
+        metrics.record_preemption();
+        stats.record_preemption();
+        true
+    } else {
+        false
+    }
 }
 
 /// Difference this replica's cumulative engine counters against the
@@ -1193,9 +1410,11 @@ fn absorb_contained(
 }
 
 /// One worker's continuous-batching loop over its private engine replica.
+#[allow(clippy::too_many_arguments)]
 fn run_worker(
     engine: &dyn Engine,
     rx: &mpmc::Receiver<Job>,
+    shared: &PoolShared,
     cfg: SchedulerConfig,
     metrics: &Metrics,
     stats: &ReplicaStats,
@@ -1252,8 +1471,106 @@ fn run_worker(
         //     seconds keep advancing and gauges stay fresh while the
         //     replica waits for work. ---
         ts.tick(obs, stats, engine, rx.len(), active(&lanes));
-        // --- admission: top up free lanes from the shared queue ---
-        while active(&lanes) < lanes.len() && queue_open {
+        let draining = shared.draining.load(AtomicOrdering::Relaxed);
+        if draining {
+            // --- drain sweep (POST /drain): park every checkpointable
+            //     active slot (aborted ones retire as usual); machines
+            //     that cannot checkpoint keep decoding to completion —
+            //     the drain waits them out rather than failing them. ---
+            for lane in 0..lanes.len() {
+                let aborted = lanes[lane].as_ref().and_then(|s| s.life.abort_reason());
+                if let Some(reason) = aborted {
+                    let Some(slot) = lanes[lane].take() else { continue };
+                    engine.reset_lane(lane);
+                    abort_slot(slot, reason, metrics, stats, recorder, obs.flight);
+                    continue;
+                }
+                if lanes[lane].is_some() && park_slot(shared, engine, &mut lanes, lane) {
+                    metrics.record_drain();
+                }
+            }
+            if active(&lanes) == 0 {
+                // Parked: nothing to decode and admission is refused.
+                // Exit only on pool shutdown (the last worker's guard
+                // fails whatever stayed parked); otherwise idle-poll so
+                // lifting the flag is noticed promptly.
+                if rx.is_closed() && rx.is_empty() {
+                    queue_open = false;
+                    continue;
+                }
+                thread::sleep(cfg.idle_poll);
+                continue;
+            }
+        }
+        // --- admission: resume parked checkpoints first, then top up
+        //     free lanes from the shared queue. A draining worker admits
+        //     nothing — new work queues behind the drain and parked
+        //     checkpoints wait for the flag to lift. ---
+        while !draining && active(&lanes) < lanes.len() && queue_open {
+            // Parked checkpoints outrank the queue: they already spent
+            // their queue wait once and their clients hold open streams.
+            let resumed = shared.resume.lock().unwrap().pop_front();
+            if let Some(rj) = resumed {
+                // Abort beats resume — and the deadline clock kept
+                // running while parked (same submission epoch), so a
+                // request that expired in the park books
+                // deadline_expired, never cancelled.
+                if let Some(reason) = rj.life.abort_reason() {
+                    let what = record_abort(reason, metrics, stats);
+                    finish_trace(
+                        rj.trace,
+                        false,
+                        IterStats::default(),
+                        String::new(),
+                        metrics,
+                        stats,
+                        recorder,
+                    );
+                    finish_flight(rj.flight, false, String::new(), obs.flight);
+                    rj.life.finish(Err(anyhow!(
+                        "{what} while queued after {}/{} tokens",
+                        rj.committed,
+                        rj.n_targets
+                    )));
+                    continue;
+                }
+                let Some(lane) = lanes.iter().position(|s| s.is_none()) else {
+                    // The loop guard said a lane was free; if the
+                    // invariant broke, re-park rather than fail.
+                    shared.resume.lock().unwrap().push_front(rj);
+                    break;
+                };
+                // Lane handoff as at first admission. The restored
+                // machine's next forward re-seeds the lane — warm via
+                // the prefix cache when its sealed rows are still
+                // resident, cold (catch-up recompute, bit-identical)
+                // otherwise.
+                engine.reset_lane(lane);
+                let machine = crate::decode::snapshot::restore(rj.snapshot);
+                let mut trace = rj.trace;
+                if let Some(b) = trace.as_mut() {
+                    b.push(
+                        SpanKind::Admit,
+                        machine.iter_stats().iterations as u32,
+                        0,
+                        rj.n_targets as u64,
+                        lane as u64,
+                    );
+                }
+                lanes[lane] = Some(Slot {
+                    machine,
+                    t0: rj.life.submitted_at(),
+                    last_commit: Instant::now(),
+                    committed: rj.committed,
+                    text_len: rj.text_len,
+                    n_targets: rj.n_targets,
+                    trace,
+                    flight: rj.flight,
+                    retries: rj.retries,
+                    life: rj.life,
+                });
+                continue;
+            }
             let job = if active(&lanes) == 0 {
                 match rx.recv_timeout(cfg.idle_poll) {
                     Ok(j) => j,
@@ -1522,13 +1839,25 @@ fn run_worker(
         let inc_rows = match inc_result {
             Ok(rows) => rows,
             Err(e) => {
-                batch_errors += 1;
                 metrics.record_engine_error(e.class());
                 stats.record_engine_error();
                 ts.note_engine_error(e.class());
                 if e.class() == ErrorClass::Fatal {
+                    batch_errors += 1;
                     engine_dead = Some(e);
+                } else if e.is_kv_pressure()
+                    && preempt_victim(shared, engine, &mut lanes, metrics, stats)
+                {
+                    // KV PRESSURE, RELIEVED BY PREEMPTION: a victim slot
+                    // checkpointed, sealed its committed rows, and
+                    // released its lane's blocks. The failed call never
+                    // reached any machine, so every survivor simply
+                    // re-issues the same idempotent forward next
+                    // iteration — bit-identical, no retry budget spent,
+                    // and not a health event (the engine is sound; the
+                    // pool was merely full).
                 } else {
+                    batch_errors += 1;
                     recover_lanes(
                         engine,
                         &mut lanes,
@@ -1557,14 +1886,20 @@ fn run_worker(
                 }
             }
             Err(e) => {
-                batch_errors += 1;
                 metrics.record_engine_error(e.class());
                 stats.record_engine_error();
                 ts.note_engine_error(e.class());
                 if engine_dead.is_none() {
                     if e.class() == ErrorClass::Fatal {
+                        batch_errors += 1;
                         engine_dead = Some(e);
+                    } else if e.is_kv_pressure()
+                        && preempt_victim(shared, engine, &mut lanes, metrics, stats)
+                    {
+                        // see the incremental arm above: preemption, not
+                        // a retry and not a health event
                     } else {
+                        batch_errors += 1;
                         recover_lanes(
                             engine,
                             &mut lanes,
@@ -1578,6 +1913,8 @@ fn run_worker(
                             &mut engine_dead,
                         );
                     }
+                } else {
+                    batch_errors += 1;
                 }
                 Vec::new()
             }
@@ -1606,16 +1943,32 @@ fn run_worker(
             }
         }
         if let Some(cause) = engine_dead {
-            // The incarnation is gone: fail the slots it was carrying
-            // (typed, with partial progress), clear the taps, and hand
-            // the replica to the supervisor. Queued requests are
-            // untouched — the next incarnation (or a pool-mate) admits
-            // them.
+            // The incarnation is gone: MIGRATE the slots it was carrying
+            // — checkpoint unless truly failed. The failed call never
+            // reached any machine, so every slot sits cleanly between
+            // absorbs and its checkpoint resumes bit-identically on the
+            // next incarnation (or a pool-mate); replica death costs
+            // latency, not requests, and the clients' streams stay open
+            // with no token re-emitted. Only aborted lifecycles and
+            // non-checkpointable machines still fail. Queued requests
+            // are untouched as before.
             tap::reset();
             flight::reset();
             stats.set_state(ReplicaState::Quarantined);
-            for (lane, cell) in lanes.iter_mut().enumerate() {
-                if let Some(slot) = cell.take() {
+            for lane in 0..lanes.len() {
+                let aborted = lanes[lane].as_ref().and_then(|s| s.life.abort_reason());
+                if let Some(reason) = aborted {
+                    let Some(slot) = lanes[lane].take() else { continue };
+                    engine.reset_lane(lane);
+                    abort_slot(slot, reason, metrics, stats, recorder, obs.flight);
+                    continue;
+                }
+                if lanes[lane].is_some() && park_slot(shared, engine, &mut lanes, lane) {
+                    metrics.record_migration();
+                    stats.record_migration();
+                    continue;
+                }
+                if let Some(slot) = lanes[lane].take() {
                     engine.reset_lane(lane);
                     retire_failed(
                         slot,
@@ -2987,9 +3340,13 @@ mod tests {
         assert!(h.healthy(), "degraded still serves");
     }
 
-    /// Supervised restart: a fatally dying first incarnation fails its
-    /// in-flight request typed, then the supervisor re-provisions through
-    /// the pool factory and the NEXT request succeeds end to end.
+    /// Supervised restart WITH MIGRATION: a fatally dying first
+    /// incarnation no longer fails its in-flight request — the slot is
+    /// checkpointed, the supervisor re-provisions through the pool
+    /// factory, and the SAME request resumes and completes on the second
+    /// incarnation. Replica death costs latency, not requests. The
+    /// failed fatal call never absorbed, so the migrated output equals a
+    /// run served entirely by the healthy engine.
     #[test]
     fn fatal_engine_death_triggers_supervised_restart_and_recovery() {
         let metrics = Metrics::new();
@@ -3016,15 +3373,29 @@ mod tests {
             seed: 4,
             ..Default::default()
         };
-        let err = format!("{:#}", h.infill(req()).unwrap_err());
-        assert!(err.contains("engine incarnation lost"), "{err}");
-        assert!(err.contains("fatal"), "typed root lost: {err}");
-        // The supervisor re-provisions; incarnation 2 serves normally.
+        // The request admitted to the dying incarnation MIGRATES and
+        // completes — no error surfaces to the client.
         let resp = h.infill(req()).unwrap();
         assert!(!resp.text.contains('_'), "unfilled masks: {}", resp.text);
         assert_eq!(built.load(AtomicOrdering::SeqCst), 2);
         assert_eq!(metrics.replica_restarts(), 1);
         assert_eq!(h.replica_stats()[0].restarts(), 1);
+        assert_eq!(metrics.migrations(), 1, "slot must migrate, not fail");
+        assert_eq!(h.replica_stats()[0].migrations(), 1);
+        assert_eq!(metrics.requests_failed(), 0, "migration must not fail requests");
+        // Migration is invisible in the output: the dead incarnation
+        // never absorbed a forward, so the text matches a pool that was
+        // healthy from the start.
+        let healthy = spawn(
+            move || Ok(Box::new(MockEngine::new(3, 16, 258, 1.0)) as Box<dyn Engine>),
+            SchedulerConfig {
+                max_batch: 2,
+                idle_poll: Duration::from_millis(5),
+                ..Default::default()
+            },
+            Metrics::new(),
+        );
+        assert_eq!(resp.text, healthy.infill(req()).unwrap().text);
         assert!(h.healthy());
     }
 
@@ -3065,6 +3436,7 @@ mod tests {
                 }
                 Err(SubmitError::ShutDown) => {}
                 Err(SubmitError::QueueFull(_)) => {}
+                Err(SubmitError::Draining) => unreachable!("nobody set the drain flag"),
             }
             assert!(Instant::now() < deadline, "never observed ReplicaLost");
             thread::sleep(Duration::from_millis(2));

@@ -32,10 +32,39 @@ use crate::util::rng::Rng;
 use super::sampling::{residual_into, sample_probs, softmax_into};
 use super::{DecodeMachine, DecodeOutcome, ForwardRequest};
 
+#[derive(Clone, Copy)]
 enum Phase {
     Draft,
     Verify,
     Done,
+}
+
+/// Frozen [`AssdMachine`] state (see [`crate::decode::snapshot`]). The
+/// phase/`t`/drafted-window fields are captured verbatim because a
+/// checkpoint may land between the draft absorb and the verify forward —
+/// the draft sampling already consumed RNG, so rolling back to re-draft
+/// would diverge. Scratch buffers (`want`, the vocab-sized softmax /
+/// residual rows) are recomputed on restore.
+pub struct AssdSnapshot {
+    ord: Ordering,
+    vocab: usize,
+    temp: f32,
+    rng: Rng,
+    tokens: Vec<u32>,
+    n: usize,
+    t: usize,
+    phase: Phase,
+    drafter: Box<dyn Drafter>,
+    spec: AdaptiveSpeculation,
+    drafted: Vec<u32>,
+    draft_probs: Vec<Vec<f32>>,
+    committed: Vec<(usize, u32)>,
+    model_nfe: u64,
+    aux_nfe: u64,
+    iterations: u64,
+    accepted: u64,
+    proposed: u64,
+    first_token_rejections: u64,
 }
 
 pub struct AssdMachine {
@@ -171,6 +200,66 @@ impl AssdMachine {
             adaptive: false,
         };
         AssdMachine::from_options(ord, tokens, vocab, opts, usize::MAX, temp, rng)
+    }
+
+    /// Freeze this machine into an [`AssdSnapshot`] (the
+    /// [`DecodeMachine::checkpoint`] payload). Pure clone of the
+    /// serialized state; the machine keeps running unaffected.
+    pub fn snapshot(&self) -> AssdSnapshot {
+        AssdSnapshot {
+            ord: self.ord.clone(),
+            vocab: self.vocab,
+            temp: self.temp,
+            rng: self.rng.clone(),
+            tokens: self.tokens.clone(),
+            n: self.n,
+            t: self.t,
+            phase: self.phase,
+            drafter: self.drafter.boxed_clone(),
+            spec: self.spec,
+            drafted: self.drafted.clone(),
+            draft_probs: self.draft_probs.clone(),
+            committed: self.committed.clone(),
+            model_nfe: self.model_nfe,
+            aux_nfe: self.aux_nfe,
+            iterations: self.iterations,
+            accepted: self.accepted,
+            proposed: self.proposed,
+            first_token_rejections: self.first_token_rejections,
+        }
+    }
+
+    /// Thaw a snapshot back into a machine. Bypasses `new()`'s
+    /// fresh-admission invariants (a mid-decode token buffer legitimately
+    /// holds committed values and in-flight drafts at target positions);
+    /// scratch buffers start empty and are rebuilt by the next
+    /// `forward_request`/`absorb` pair.
+    pub fn from_snapshot(s: AssdSnapshot) -> Self {
+        AssdMachine {
+            ord: s.ord,
+            vocab: s.vocab,
+            temp: s.temp,
+            rng: s.rng,
+            tokens: s.tokens,
+            want: vec![],
+            n: s.n,
+            t: s.t,
+            phase: s.phase,
+            drafter: s.drafter,
+            spec: s.spec,
+            drafted: s.drafted,
+            draft_probs: s.draft_probs,
+            committed: s.committed,
+            row_buf: vec![],
+            q_buf: vec![],
+            res_buf: vec![],
+            model_nfe: s.model_nfe,
+            aux_nfe: s.aux_nfe,
+            iterations: s.iterations,
+            accepted: s.accepted,
+            proposed: s.proposed,
+            first_token_rejections: s.first_token_rejections,
+        }
     }
 
     /// External (aux-NFE) drafting: fill the window synchronously from the
@@ -434,6 +523,10 @@ impl DecodeMachine for AssdMachine {
             accepted: self.accepted,
             draft_len: self.spec.current(),
         }
+    }
+
+    fn checkpoint(&self) -> Option<super::snapshot::DecodeSnapshot> {
+        Some(super::snapshot::DecodeSnapshot::Assd(self.snapshot()))
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {

@@ -42,7 +42,65 @@ pub struct DiffusionMachine {
     iterations: u64,
 }
 
+/// Frozen [`DiffusionMachine`] state (see [`crate::decode::snapshot`]).
+/// `remaining` — the randomized unmasking order — MUST be serialized:
+/// the constructor's shuffle already consumed RNG, so re-deriving it on
+/// restore would replay draws the frozen RNG no longer has. The lattice
+/// ordering is NOT serialized — it is a pure function of the token
+/// buffer's known set and is re-derived, exactly as `absorb` does after
+/// every step.
+pub struct DiffusionSnapshot {
+    vocab: usize,
+    temp: f32,
+    rng: Rng,
+    tokens: Vec<u32>,
+    remaining: Vec<usize>,
+    steps_left: usize,
+    committed: Vec<(usize, u32)>,
+    model_nfe: u64,
+    iterations: u64,
+}
+
 impl DiffusionMachine {
+    /// Freeze into a [`DiffusionSnapshot`] (pure clone; the machine keeps
+    /// running unaffected).
+    pub fn snapshot(&self) -> DiffusionSnapshot {
+        DiffusionSnapshot {
+            vocab: self.vocab,
+            temp: self.temp,
+            rng: self.rng.clone(),
+            tokens: self.tokens.clone(),
+            remaining: self.remaining.clone(),
+            steps_left: self.steps_left,
+            committed: self.committed.clone(),
+            model_nfe: self.model_nfe,
+            iterations: self.iterations,
+        }
+    }
+
+    /// Thaw a snapshot: the unmasking order resumes exactly where it was
+    /// frozen (no re-shuffle — that RNG draw already happened), and the
+    /// lattice ordering is re-derived from the current known set.
+    pub fn from_snapshot(s: DiffusionSnapshot) -> Self {
+        let ord = Self::known_ordering(&s.tokens);
+        DiffusionMachine {
+            n: s.tokens.len(),
+            vocab: s.vocab,
+            temp: s.temp,
+            rng: s.rng,
+            tokens: s.tokens,
+            remaining: s.remaining,
+            steps_left: s.steps_left,
+            ord,
+            want: vec![],
+            committed: s.committed,
+            row_buf: vec![],
+            prob_buf: vec![],
+            model_nfe: s.model_nfe,
+            iterations: s.iterations,
+        }
+    }
+
     /// `tokens`: full sequence with MASK at target positions. `steps`: the
     /// discretization (paper's baselines use 32/64 for 1/3-sentence infill).
     pub fn new(tokens: Vec<u32>, vocab: usize, steps: usize, temp: f32, mut rng: Rng) -> Self {
@@ -151,6 +209,10 @@ impl DecodeMachine for DiffusionMachine {
             iterations: self.iterations,
             ..Default::default()
         }
+    }
+
+    fn checkpoint(&self) -> Option<super::snapshot::DecodeSnapshot> {
+        Some(super::snapshot::DecodeSnapshot::Diffusion(self.snapshot()))
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {

@@ -15,6 +15,7 @@ pub mod assd;
 pub mod diffusion;
 pub mod sampling;
 pub mod sequential;
+pub mod snapshot;
 
 use anyhow::Result;
 
@@ -151,6 +152,19 @@ pub trait DecodeMachine {
     /// machines report their real counters.
     fn iter_stats(&self) -> IterStats {
         IterStats::default()
+    }
+
+    /// Freeze the machine into an owned, engine-independent
+    /// [`snapshot::DecodeSnapshot`] that [`snapshot::restore`] turns back
+    /// into an equivalent machine — the scheduler's preemption /
+    /// migration / drain primitive. Must be called between absorbs (any
+    /// point where `forward_request` would be legal); the restored
+    /// machine re-issues the same forward and continues bit-identically,
+    /// and undrained commits ride along. `None` (the default) marks the
+    /// machine non-checkpointable: the scheduler then falls back to
+    /// failing the request instead of re-queueing it.
+    fn checkpoint(&self) -> Option<snapshot::DecodeSnapshot> {
+        None
     }
 
     /// Consume the machine and return the outcome (panics if !done()).

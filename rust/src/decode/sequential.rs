@@ -33,7 +33,57 @@ pub struct SequentialMachine {
     model_nfe: u64,
 }
 
+/// Frozen [`SequentialMachine`] state (see [`crate::decode::snapshot`]):
+/// ordering, token buffer, decode state, RNG, undrained commits, and the
+/// NFE counter. The single-row `want` and the vocab-sized scratch are
+/// recomputed on restore.
+pub struct SequentialSnapshot {
+    ord: Ordering,
+    vocab: usize,
+    temp: f32,
+    rng: Rng,
+    tokens: Vec<u32>,
+    n: usize,
+    committed: Vec<(usize, u32)>,
+    model_nfe: u64,
+}
+
 impl SequentialMachine {
+    /// Freeze into a [`SequentialSnapshot`] (pure clone; the machine
+    /// keeps running unaffected).
+    pub fn snapshot(&self) -> SequentialSnapshot {
+        SequentialSnapshot {
+            ord: self.ord.clone(),
+            vocab: self.vocab,
+            temp: self.temp,
+            rng: self.rng.clone(),
+            tokens: self.tokens.clone(),
+            n: self.n,
+            committed: self.committed.clone(),
+            model_nfe: self.model_nfe,
+        }
+    }
+
+    /// Thaw a snapshot. Bypasses `new()`'s fresh-admission checks: a
+    /// mid-decode buffer holds sampled values at already-decoded target
+    /// positions, and `n` restarts from the frozen decode state rather
+    /// than the prompt size.
+    pub fn from_snapshot(s: SequentialSnapshot) -> Self {
+        SequentialMachine {
+            ord: s.ord,
+            vocab: s.vocab,
+            temp: s.temp,
+            rng: s.rng,
+            tokens: s.tokens,
+            n: s.n,
+            want: [0],
+            committed: s.committed,
+            row_buf: vec![],
+            prob_buf: vec![],
+            model_nfe: s.model_nfe,
+        }
+    }
+
     pub fn new(ord: Ordering, tokens: Vec<u32>, vocab: usize, temp: f32, rng: Rng) -> Self {
         assert_eq!(tokens.len(), ord.n());
         for (pos, &t) in tokens.iter().enumerate() {
@@ -113,6 +163,10 @@ impl DecodeMachine for SequentialMachine {
             iterations: self.model_nfe,
             ..Default::default()
         }
+    }
+
+    fn checkpoint(&self) -> Option<super::snapshot::DecodeSnapshot> {
+        Some(super::snapshot::DecodeSnapshot::Sequential(self.snapshot()))
     }
 
     fn outcome(self: Box<Self>) -> DecodeOutcome {

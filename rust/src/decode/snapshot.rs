@@ -1,0 +1,245 @@
+//! Deterministic decode-state checkpointing.
+//!
+//! A decode machine is a pure function of (request, ordering, committed
+//! tokens, RNG state, drafter/adaptive state) — the same determinism that
+//! proves bit-identity through the retry ladder means an in-flight decode
+//! can be FROZEN and RESUMED anywhere: on the same engine after a
+//! preemption, on a fresh incarnation after an engine death, or on a
+//! different replica entirely. [`DecodeSnapshot`] is that frozen form.
+//!
+//! What is serialized vs recomputed:
+//!
+//! * Serialized — everything whose value depends on PAST RNG draws or
+//!   external feedback: the RNG itself, the token buffer (committed
+//!   values + any in-flight draft window), decode state `n`, the ASSD
+//!   phase/`t`/drafted window/draft distributions (a checkpoint may land
+//!   BETWEEN a draft absorb and its verify forward, and rolling back to
+//!   Draft would re-consume RNG), the [`AdaptiveSpeculation`] EWMA, the
+//!   drafter (the bigram table has learned from committed text), the
+//!   diffusion unmasking order (its constructor shuffle consumed RNG),
+//!   undrained commits, and every NFE/speculation counter.
+//! * Recomputed — pure scratch: `want` row lists, vocab-sized softmax /
+//!   residual buffers, and diffusion's lattice ordering (re-derivable
+//!   from the token buffer's known set).
+//!
+//! The property test below proves the contract: checkpointing at EVERY
+//! iteration boundary and resuming from the snapshot reproduces the
+//! uninterrupted run bit-for-bit — tokens, model/aux NFE, iterations,
+//! and the proposed/accepted speculation counters.
+//!
+//! [`AdaptiveSpeculation`]: crate::draft::AdaptiveSpeculation
+
+use super::assd::AssdSnapshot;
+use super::diffusion::DiffusionSnapshot;
+use super::sequential::SequentialSnapshot;
+use super::DecodeMachine;
+
+/// An owned, engine-independent freeze of one decode machine, taken
+/// between absorbs via [`DecodeMachine::checkpoint`]. Opaque by design:
+/// the scheduler moves these through its resume queue without looking
+/// inside, and [`restore`] rebuilds the matching machine.
+pub enum DecodeSnapshot {
+    Assd(AssdSnapshot),
+    Sequential(SequentialSnapshot),
+    Diffusion(DiffusionSnapshot),
+}
+
+/// Rebuild the machine a snapshot was taken from. The restored machine
+/// re-issues exactly the forward the original would have issued next
+/// (`forward_request` is idempotent between absorbs, and all scratch is
+/// recomputed), so driving it to completion yields bit-identical tokens
+/// and counters.
+pub fn restore(snap: DecodeSnapshot) -> Box<dyn DecodeMachine> {
+    match snap {
+        DecodeSnapshot::Assd(s) => Box::new(super::assd::AssdMachine::from_snapshot(s)),
+        DecodeSnapshot::Sequential(s) => {
+            Box::new(super::sequential::SequentialMachine::from_snapshot(s))
+        }
+        DecodeSnapshot::Diffusion(s) => {
+            Box::new(super::diffusion::DiffusionMachine::from_snapshot(s))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::masking::lattice_sigma;
+    use crate::decode::assd::AssdMachine;
+    use crate::decode::diffusion::DiffusionMachine;
+    use crate::decode::sequential::SequentialMachine;
+    use crate::decode::{init_tokens, DecodeOutcome};
+    use crate::draft::{DraftKind, DraftOptions};
+    use crate::model::mask::Ordering;
+    use crate::runtime::mock::MockEngine;
+    use crate::runtime::Engine;
+    use crate::tokenizer::MASK;
+    use crate::util::rng::Rng;
+
+    fn ord_8() -> Ordering {
+        Ordering::new(lattice_sigma(&[0, 1, 6, 7], 8), 4)
+    }
+
+    fn toks_8() -> Vec<u32> {
+        init_tokens(&ord_8(), &[(0, 97), (1, 98), (6, 99), (7, 100)])
+    }
+
+    /// Drive a machine to completion, checkpoint-and-restoring at every
+    /// iteration boundary when `interrupt` is set. Collects the streamed
+    /// commits alongside the outcome so the test also proves the commit
+    /// stream survives a mid-flight freeze (no token lost, duplicated,
+    /// or reordered).
+    fn drive(
+        e: &MockEngine,
+        mut m: Box<dyn DecodeMachine>,
+        interrupt: bool,
+    ) -> (DecodeOutcome, Vec<(usize, u32)>) {
+        let mut commits = vec![];
+        let mut guard = 0;
+        while !m.done() {
+            if interrupt {
+                let snap = m
+                    .checkpoint()
+                    .expect("shipped machines must support checkpointing");
+                m = restore(snap);
+            }
+            let rows = {
+                let req = m.forward_request().expect("not done but no request");
+                e.forward_ord(std::slice::from_ref(&req))
+                    .unwrap()
+                    .pop()
+                    .unwrap()
+            };
+            m.absorb(&rows);
+            commits.extend(m.drain_commits());
+            guard += 1;
+            assert!(guard < 1000, "decode did not terminate");
+        }
+        // A terminal checkpoint must also round-trip (drain-while-done).
+        if interrupt {
+            let snap = m.checkpoint().expect("done machine still snapshots");
+            m = restore(snap);
+            assert!(m.done());
+        }
+        (m.outcome(), commits)
+    }
+
+    fn assert_bit_identical(want: (DecodeOutcome, Vec<(usize, u32)>), got: (DecodeOutcome, Vec<(usize, u32)>), label: &str) {
+        assert_eq!(got.0.tokens, want.0.tokens, "{label}: tokens diverged");
+        assert_eq!(got.0.model_nfe, want.0.model_nfe, "{label}: model NFE");
+        assert_eq!(got.0.aux_nfe, want.0.aux_nfe, "{label}: aux NFE");
+        assert_eq!(got.0.iterations, want.0.iterations, "{label}: iterations");
+        assert_eq!(got.0.proposed, want.0.proposed, "{label}: proposed");
+        assert_eq!(got.0.accepted, want.0.accepted, "{label}: accepted");
+        assert_eq!(got.1, want.1, "{label}: commit stream");
+    }
+
+    /// The tentpole property: checkpoint-at-every-iteration + restore ==
+    /// the uninterrupted run, bit for bit, across ASSD x every drafter x
+    /// fixed/adaptive speculation.
+    #[test]
+    fn assd_checkpoint_every_iteration_is_bit_identical() {
+        let e = MockEngine::new(11, 8, 32, 1.0);
+        for kind in DraftKind::ALL {
+            for adaptive in [false, true] {
+                for seed in [1u64, 2, 3] {
+                    let build = || {
+                        let opts = DraftOptions {
+                            kind,
+                            max_len: 3,
+                            adaptive,
+                        };
+                        Box::new(AssdMachine::from_options(
+                            ord_8(),
+                            toks_8(),
+                            e.vocab(),
+                            opts,
+                            8,
+                            1.0,
+                            Rng::new(seed),
+                        )) as Box<dyn DecodeMachine>
+                    };
+                    let want = drive(&e, build(), false);
+                    let got = drive(&e, build(), true);
+                    let label =
+                        format!("assd/{}/adaptive={adaptive}/seed={seed}", kind.name());
+                    assert!(
+                        want.0.tokens.iter().all(|&t| t != MASK),
+                        "{label}: run incomplete"
+                    );
+                    assert_bit_identical(want, got, &label);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_checkpoint_every_iteration_is_bit_identical() {
+        let e = MockEngine::new(12, 8, 32, 1.0);
+        for seed in [1u64, 2, 3] {
+            let build = || {
+                Box::new(SequentialMachine::new(
+                    ord_8(),
+                    toks_8(),
+                    e.vocab(),
+                    1.0,
+                    Rng::new(seed),
+                )) as Box<dyn DecodeMachine>
+            };
+            let want = drive(&e, build(), false);
+            let got = drive(&e, build(), true);
+            assert_bit_identical(want, got, &format!("sequential/seed={seed}"));
+        }
+    }
+
+    #[test]
+    fn diffusion_checkpoint_every_iteration_is_bit_identical() {
+        let e = MockEngine::new(13, 8, 32, 1.0);
+        for steps in [1usize, 3, 8] {
+            for seed in [1u64, 2, 3] {
+                let build = || {
+                    Box::new(DiffusionMachine::new(
+                        toks_8(),
+                        e.vocab(),
+                        steps,
+                        1.0,
+                        Rng::new(seed),
+                    )) as Box<dyn DecodeMachine>
+                };
+                let want = drive(&e, build(), false);
+                let got = drive(&e, build(), true);
+                assert_bit_identical(want, got, &format!("diffusion/steps={steps}/seed={seed}"));
+            }
+        }
+    }
+
+    /// A checkpoint taken with undrained commits must carry them: the
+    /// restored machine's next `drain_commits` returns exactly the
+    /// pending chunk (the scheduler relies on this so a preempted slot
+    /// never loses or re-emits a token).
+    #[test]
+    fn pending_commits_ride_the_snapshot() {
+        let e = MockEngine::new(14, 8, 32, 1.0);
+        let mut m: Box<dyn DecodeMachine> = Box::new(SequentialMachine::new(
+            ord_8(),
+            toks_8(),
+            e.vocab(),
+            1.0,
+            Rng::new(5),
+        ));
+        let rows = {
+            let req = m.forward_request().unwrap();
+            e.forward_ord(std::slice::from_ref(&req))
+                .unwrap()
+                .pop()
+                .unwrap()
+        };
+        m.absorb(&rows);
+        // Do NOT drain: freeze with the commit pending.
+        let mut restored = restore(m.checkpoint().unwrap());
+        let pending = restored.drain_commits();
+        assert_eq!(pending.len(), 1, "pending commit lost in the snapshot");
+        // And it is not duplicated on the next drain.
+        assert!(restored.drain_commits().is_empty());
+    }
+}

@@ -102,6 +102,7 @@ impl BigramDraft {
 
 /// [`BigramDraft`] as a pluggable [`Drafter`] (aux NFE; Lemma 1 does not
 /// apply, so even the final token is verified).
+#[derive(Clone)]
 pub struct BigramDrafter {
     table: BigramDraft,
 }
@@ -117,6 +118,10 @@ impl BigramDrafter {
 impl Drafter for BigramDrafter {
     fn name(&self) -> &'static str {
         "bigram"
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Drafter> {
+        Box::new(self.clone())
     }
 
     fn propose(

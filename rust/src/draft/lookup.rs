@@ -25,6 +25,7 @@ use super::{DraftContext, DraftProposal, Drafter};
 /// Suffix-matching drafter over the live token buffer. Stateless between
 /// iterations: every window re-reads the current prompt + generated text,
 /// so accepted tokens immediately become lookup material.
+#[derive(Clone)]
 pub struct PromptLookupDrafter {
     vocab: usize,
     /// Longest context suffix tried (then backed off to shorter ones).
@@ -116,6 +117,10 @@ impl PromptLookupDrafter {
 impl Drafter for PromptLookupDrafter {
     fn name(&self) -> &'static str {
         "lookup"
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Drafter> {
+        Box::new(self.clone())
     }
 
     fn propose(

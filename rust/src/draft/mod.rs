@@ -75,7 +75,12 @@ pub struct DraftProposal {
 /// model can never emit would be pure waste). Proposals sampled from the
 /// returned distributions — the machine relies on `dists[i][tokens[i]] > 0`
 /// for the acceptance ratio.
-pub trait Drafter {
+///
+/// `Send` is a supertrait: drafters ride inside
+/// [`crate::decode::snapshot::DecodeSnapshot`]s, which cross worker
+/// threads through the scheduler's resume queue (preemption, migration,
+/// drain). All shipped drafters are plain owned data.
+pub trait Drafter: Send {
     /// Short stable identifier ("self" / "bigram" / "lookup"), reported in
     /// responses and metrics.
     fn name(&self) -> &'static str;
@@ -120,6 +125,15 @@ pub trait Drafter {
     fn observe_commit(&mut self, tokens: &[u32], ord: &Ordering, n_old: usize, n_new: usize) {
         let _ = (tokens, ord, n_old, n_new);
     }
+
+    /// Deep-copy this drafter behind a fresh box — the checkpointing hook
+    /// ([`crate::decode::snapshot`]). Learned state (the bigram table's
+    /// counts) must be carried: a restored machine whose drafter forgot
+    /// what it learned would propose differently and, while still
+    /// distributionally exact (Theorem 2), break bit-identity with the
+    /// uninterrupted run. Required (no default): every drafter must state
+    /// its clone explicitly.
+    fn boxed_clone(&self) -> Box<dyn Drafter>;
 }
 
 /// Which [`Drafter`] implementation serves a request.

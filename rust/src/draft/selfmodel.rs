@@ -20,7 +20,7 @@ use super::{DraftContext, DraftProposal, Drafter};
 /// scratch row so the per-window ban+softmax never re-allocates (the
 /// proposal DISTRIBUTIONS are still owned Vecs: the machine stores them
 /// across the verify pass).
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct SelfDrafter {
     row_buf: Vec<f32>,
 }
@@ -32,6 +32,10 @@ impl Drafter for SelfDrafter {
 
     fn needs_model_forward(&self) -> bool {
         true
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Drafter> {
+        Box::new(self.clone())
     }
 
     fn propose(

@@ -50,6 +50,9 @@ const USAGE: &str = "usage: asarm <serve|train|infill|corpus|smoke> [--flags]
          0 disables. For chaos drills, not production)
          --chaos-seed 0       (fault-schedule seed; same seed + rate
          = same fault sequence)
+         --retry-budget 8     (transient forward failures tolerated per
+         request before it fails; surfaced per replica at
+         GET /replicas)
   train  --artifacts DIR --steps N --lr 3e-4 --batch 4 --corpus stories|expr
          --protocol lattice|permutation --prompt-lo F --prompt-hi F
          --out CKPT.bin --seed S
@@ -128,6 +131,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 rate: args.f64("chaos-rate", 0.0),
                 ..Default::default()
             },
+            retry_budget: args.u64("retry-budget", 8) as u32,
             ..Default::default()
         },
         metrics.clone(),
@@ -143,6 +147,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "  POST /v1/infill   POST /infill/stream (SSE)   GET /metrics   GET /replicas   GET /healthz"
+    );
+    println!(
+        "  POST /drain (checkpoint + refuse admissions; ?resume=1 lifts)   GET /drain"
     );
     println!(
         "  GET /trace/{{id}}   GET /trace/recent   GET /metrics (Accept: text/plain => Prometheus)"

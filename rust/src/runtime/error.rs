@@ -52,6 +52,13 @@ pub enum EngineError {
     /// is safe.
     #[error("transient engine error: {0}")]
     Transient(String),
+    /// KV allocation stalled: the engine is sound but its paged-KV pool
+    /// cannot grow the named lanes right now. Class-wise a transient — a
+    /// retry after blocks free is bit-identical — but the scheduler keys
+    /// on it specifically: instead of burning retry budget it PREEMPTS a
+    /// victim slot (checkpoint + seal + release lane) to free blocks.
+    #[error("kv pressure: {0}")]
+    KvPressure(String),
     /// One lane's cached state is untrustworthy; reset the lane and
     /// recompute through the ordinary compact path.
     #[error("lane {lane} corrupt: {reason}")]
@@ -68,6 +75,7 @@ impl EngineError {
     pub fn class(&self) -> ErrorClass {
         match self {
             EngineError::Transient(_) => ErrorClass::Transient,
+            EngineError::KvPressure(_) => ErrorClass::Transient,
             EngineError::LaneCorrupt { .. } => ErrorClass::LaneCorrupt,
             EngineError::Fatal(_) => ErrorClass::Fatal,
         }
@@ -75,6 +83,16 @@ impl EngineError {
 
     pub fn transient(msg: impl Into<String>) -> Self {
         EngineError::Transient(msg.into())
+    }
+
+    pub fn kv_pressure(msg: impl Into<String>) -> Self {
+        EngineError::KvPressure(msg.into())
+    }
+
+    /// True for the allocation-stall subclass of transient failures — the
+    /// scheduler's preemption trigger.
+    pub fn is_kv_pressure(&self) -> bool {
+        matches!(self, EngineError::KvPressure(_))
     }
 
     pub fn lane_corrupt(lane: usize, reason: impl Into<String>) -> Self {
@@ -140,6 +158,18 @@ mod tests {
             EngineError::lane_corrupt(3, "x").class(),
             ErrorClass::LaneCorrupt
         );
+    }
+
+    #[test]
+    fn kv_pressure_is_transient_class_but_detectable() {
+        let e = EngineError::kv_pressure("pool exhausted: 0 free blocks");
+        assert_eq!(e.class(), ErrorClass::Transient);
+        assert!(e.is_kv_pressure());
+        assert!(!EngineError::transient("flaky step").is_kv_pressure());
+        // The subclass survives an anyhow round trip — the worker's
+        // preemption arm downcasts after helpers bubble through anyhow.
+        let any: anyhow::Error = e.into();
+        assert!(EngineError::from_anyhow(any).is_kv_pressure());
     }
 
     #[test]

@@ -379,9 +379,12 @@ impl Engine for MockEngine {
                 // Pool exhaustion is transient by contract: batch-mates
                 // releasing blocks (or a lane reset) frees capacity, so a
                 // retry can succeed — the taxonomy must not escalate it.
+                // The KvPressure subclass lets the scheduler preempt a
+                // victim slot (checkpoint + seal + release) instead of
+                // spinning its retry budget against a full pool.
                 store
                     .append_row(&mut lane.table, j)
-                    .map_err(|e| EngineError::transient(format!("kv allocation: {e:#}")))?[0] =
+                    .map_err(|e| EngineError::kv_pressure(format!("kv allocation: {e:#}")))?[0] =
                     tok;
                 if j >= lane.chain.len() {
                     let prev = lane.chain[j - 1];

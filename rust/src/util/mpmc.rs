@@ -299,6 +299,14 @@ impl<T> Receiver<T> {
         self.shared.cv_space.notify_all();
     }
 
+    /// True once the channel is closed from either side. Queued items may
+    /// still be pending — combine with [`Receiver::is_empty`] to detect
+    /// full shutdown (used by draining workers that must keep polling a
+    /// side queue without blocking in `recv`).
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+
     /// Number of items currently queued (racy; diagnostics only).
     pub fn len(&self) -> usize {
         self.shared.state.lock().unwrap().queue.len()

@@ -6,7 +6,10 @@
 //! recovery never perturbs NFE accounting (Theorem 2's
 //! `model_nfe <= tokens_committed` bound survives every retry), and
 //! that a fatally dead replica is re-provisioned by the supervisor with
-//! subsequent requests succeeding over HTTP.
+//! the in-flight request MIGRATING (checkpoint → restore) onto the
+//! fresh incarnation instead of failing — including a kill-mid-decode
+//! leg where the engine dies with committed tokens in flight and the
+//! migrated output still matches the fault-free twin bit-for-bit.
 //!
 //! The schedule seed is pinned by `make chaos` via `ASARM_CHAOS_SEED`
 //! (default 20260808) so CI failures reproduce locally with
@@ -15,7 +18,7 @@
 //! trace of the last chaos-run request) BEFORE asserting, so the CI
 //! artifact upload has something to grab.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -27,7 +30,10 @@ use asarm::coordinator::{
 };
 use asarm::draft::{DraftKind, DraftOptions};
 use asarm::runtime::mock::MockEngine;
-use asarm::runtime::{ChaosConfig, Engine, EngineError, EnginePool, EngineResult, PoolConfig};
+use asarm::runtime::{
+    ChaosConfig, Engine, EngineError, EnginePool, EngineResult, ForwardSpec, IncSpec, KvStats,
+    PoolConfig,
+};
 use asarm::util::json::Json;
 
 /// Fault rate for the soak. The acceptance bar is >= 0.1; 0.2 trips
@@ -189,9 +195,11 @@ fn chaos_soak_bit_identical_across_all_modes() {
 }
 
 /// A replica whose engine dies fatally is re-provisioned by the
-/// supervisor; the in-flight request fails with a typed error, the NEXT
-/// request succeeds, and `/healthz` keeps reporting the pool serving —
-/// all observed from outside, over HTTP.
+/// supervisor — and the in-flight request RIDES THROUGH: its slot is
+/// checkpointed off the dead incarnation (the failed forward never
+/// absorbed), re-queued, and resumed to completion on the fresh engine.
+/// Replica death costs latency, never requests — all observed from
+/// outside, over HTTP.
 struct DeadOnArrival;
 
 impl Engine for DeadOnArrival {
@@ -245,24 +253,185 @@ fn replica_death_supervised_restart_over_http() {
     let (code, body) = http_get(&addr, "/healthz").unwrap();
     assert_eq!(code, 200, "{body}");
 
-    // First request lands on the dead incarnation: typed failure.
+    // First request lands on the dead incarnation. It does NOT fail: the
+    // slot is checkpointed, waits out the restart backoff in the resume
+    // queue, and the fresh incarnation serves it to completion.
     let body = r#"{"text":"ab____cd","sampler":"assd","seed":7}"#;
     let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
-    assert_eq!(code, 400, "{resp}");
-    assert!(
-        resp.contains("engine incarnation lost") && resp.contains("fatal"),
-        "expected typed fatal error, got: {resp}"
-    );
-
-    // The supervisor re-provisions; the next request is served by the
-    // fresh incarnation (it queues through the restart backoff).
-    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
-    assert_eq!(code, 200, "after restart: {resp}");
+    assert_eq!(code, 200, "migrated request must succeed: {resp}");
     let j = Json::parse(&resp).unwrap();
-    assert!(!j.get("text").unwrap().as_str().unwrap().contains('_'));
+    let migrated = j.get("text").unwrap().as_str().unwrap().to_string();
+    assert!(!migrated.contains('_'), "unfilled masks: {migrated}");
+
+    // Migration is invisible in the output: the dead incarnation never
+    // absorbed a forward, so the migrated text matches a pool that was
+    // healthy from the start.
+    let healthy = spawn(
+        move || Ok(Box::new(MockEngine::new(5, 32, 258, 1.0)) as Box<dyn Engine>),
+        SchedulerConfig {
+            max_batch: 2,
+            idle_poll: Duration::from_millis(2),
+            ..Default::default()
+        },
+        Metrics::new(),
+    );
+    let want = healthy
+        .infill(InfillRequest {
+            text: "ab____cd".into(),
+            seed: 7,
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(migrated, want.text, "migration must be bit-invisible");
 
     assert_eq!(built.load(Ordering::SeqCst), 2, "exactly one re-provision");
     assert_eq!(metrics.replica_restarts(), 1);
+    assert_eq!(metrics.migrations(), 1, "slot must migrate, not fail");
+    assert_eq!(metrics.requests_failed(), 0, "migration must not fail requests");
+
+    // Subsequent admissions are served directly by the fresh incarnation.
+    let (code, resp) = http_post(&addr, "/v1/infill", body).unwrap();
+    assert_eq!(code, 200, "after restart: {resp}");
     let (code, body) = http_get(&addr, "/healthz").unwrap();
     assert_eq!(code, 200, "pool must report serving after recovery: {body}");
+}
+
+/// The kill-mid-decode engine: serves `healthy_calls` forwards, then
+/// dies fatally on every later call — simulating a device lost with
+/// committed tokens in flight. The fatal call is rejected BEFORE
+/// reaching the inner engine, so the dead incarnation never absorbs it
+/// and the migrated run's NFE accounting can match the fault-free twin
+/// exactly.
+struct DiesMidDecode {
+    inner: MockEngine,
+    calls: AtomicU64,
+    healthy_calls: u64,
+}
+
+impl DiesMidDecode {
+    fn new(healthy_calls: u64) -> DiesMidDecode {
+        DiesMidDecode {
+            inner: MockEngine::new(5, 32, 258, 1.0),
+            calls: AtomicU64::new(0),
+            healthy_calls,
+        }
+    }
+
+    fn trip(&self) -> EngineResult<()> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) >= self.healthy_calls {
+            return Err(EngineError::fatal("device lost mid-decode (chaos soak)"));
+        }
+        Ok(())
+    }
+}
+
+impl Engine for DiesMidDecode {
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> EngineResult<Vec<f32>> {
+        self.trip()?;
+        self.inner.forward(batch, tokens, mask_h, mask_g)
+    }
+
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        self.trip()?;
+        self.inner.forward_ord(specs)
+    }
+
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        self.trip()?;
+        self.inner.forward_inc(specs)
+    }
+
+    fn inc_lanes(&self) -> usize {
+        self.inner.inc_lanes()
+    }
+
+    fn reset_lane(&self, lane: usize) {
+        self.inner.reset_lane(lane)
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        self.inner.kv_stats()
+    }
+
+    fn max_gather_rows(&self) -> usize {
+        self.inner.max_gather_rows()
+    }
+
+    fn nfe(&self) -> u64 {
+        self.inner.nfe()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+}
+
+/// Kill -9 mid-decode, across decode modes: the engine dies fatally
+/// AFTER absorbing two forwards (sequential and diffusion have committed
+/// tokens by then; ASSD may be mid-draft — both are legal checkpoint
+/// points). The request migrates onto the re-provisioned incarnation and
+/// completes BIT-IDENTICAL to the fault-free twin, with identical NFE
+/// accounting and zero failed requests — dying replicas cost latency,
+/// never requests.
+#[test]
+fn kill_mid_decode_migrates_and_stays_bit_identical() {
+    let modes: [(SamplerKind, DraftKind); 3] = [
+        (SamplerKind::Assd, DraftKind::SelfModel),
+        (SamplerKind::Sequential, DraftKind::SelfModel),
+        (SamplerKind::Diffusion, DraftKind::SelfModel),
+    ];
+    for (sampler, draft) in modes {
+        let metrics = Metrics::new();
+        let built = Arc::new(AtomicUsize::new(0));
+        let b2 = Arc::clone(&built);
+        // Incarnation 0 dies after two forwards; re-provisions are healthy.
+        let pool = EnginePool::from_fn(PoolConfig { replicas: 1 }, move |_id| {
+            if b2.fetch_add(1, Ordering::SeqCst) == 0 {
+                Ok(Box::new(DiesMidDecode::new(2)) as Box<dyn Engine>)
+            } else {
+                Ok(Box::new(MockEngine::new(5, 32, 258, 1.0)) as Box<dyn Engine>)
+            }
+        });
+        let handle = spawn_pool(
+            pool,
+            SchedulerConfig {
+                max_batch: 2,
+                idle_poll: Duration::from_millis(2),
+                ..Default::default()
+            },
+            metrics.clone(),
+        );
+        let (clean, _clean_metrics) = chaos_handle(0.0, 1);
+
+        let got = run(&handle, sampler, draft, 5);
+        let want = run(&clean, sampler, draft, 5);
+        let tag = format!("{}/{}", sampler.name(), draft.name());
+        assert!(!got.text.contains('_'), "{tag}: unfilled masks: {}", got.text);
+        assert_eq!(got.text, want.text, "{tag}: migrated text diverged");
+        assert_eq!(
+            got.model_nfe, want.model_nfe,
+            "{tag}: migration leaked NFEs (the dead incarnation's failed call must not count)"
+        );
+
+        assert_eq!(built.load(Ordering::SeqCst), 2, "{tag}: exactly one re-provision");
+        assert_eq!(metrics.replica_restarts(), 1, "{tag}");
+        assert_eq!(metrics.migrations(), 1, "{tag}: slot must migrate, not fail");
+        assert_eq!(metrics.requests_failed(), 0, "{tag}: migration must not fail requests");
+        assert_eq!(metrics.theorem2_violations(), 0, "{tag}");
+        assert!(handle.healthy(), "{tag}: pool must keep serving after migration");
+    }
 }

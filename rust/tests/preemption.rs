@@ -1,0 +1,498 @@
+//! Integration: decode-state checkpointing under the three seams that
+//! consume it — KV-pressure preemption, drain-free restarts, and the
+//! deadline clock while parked. All hermetic over mock engines.
+//!
+//! The correctness currency throughout is BIT-IDENTITY: a request that
+//! was checkpointed, parked, and resumed must produce exactly the token
+//! stream (no duplicate, no reorder, no divergence) of an uninterrupted
+//! run with the same seed. Migration across engine death is covered by
+//! `chaos_soak.rs`; the snapshot-layer property tests live in
+//! `decode::snapshot`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use asarm::coordinator::http::{http_get, http_post, http_post_stream, HttpServer};
+use asarm::coordinator::lifecycle::{Event, RequestHandle};
+use asarm::coordinator::scheduler::{spawn, SchedulerConfig, SchedulerHandle, SubmitError};
+use asarm::coordinator::{DraftSpec, InfillRequest, InfillResponse, Metrics, SamplerKind};
+use asarm::draft::{DraftKind, DraftOptions};
+use asarm::runtime::mock::{MockEngine, SlowEngine};
+use asarm::runtime::{Engine, EngineError, EngineResult, ForwardSpec, IncSpec, KvStats};
+use asarm::util::json::Json;
+
+/// A [`MockEngine`] that reports KV-pool exhaustion exactly once, on the
+/// first batched forward serving two or more sequences — i.e. precisely
+/// when the scheduler has a batch-mate to preempt. Every other call
+/// delegates unchanged, so outputs stay bit-identical to the plain mock.
+/// The small per-call delay widens the admission window so two
+/// back-to-back submissions reliably overlap.
+struct PressureEngine {
+    inner: MockEngine,
+    delay: Duration,
+    fired: AtomicBool,
+}
+
+impl PressureEngine {
+    fn new(inner: MockEngine) -> PressureEngine {
+        PressureEngine {
+            inner,
+            delay: Duration::from_millis(2),
+            fired: AtomicBool::new(false),
+        }
+    }
+
+    fn inject(&self, batch: usize) -> EngineResult<()> {
+        if batch >= 2 && !self.fired.swap(true, Ordering::Relaxed) {
+            return Err(EngineError::kv_pressure(
+                "injected pool exhaustion (test)",
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Engine for PressureEngine {
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn forward(
+        &self,
+        batch: usize,
+        tokens: &[u32],
+        mask_h: &[f32],
+        mask_g: &[f32],
+    ) -> EngineResult<Vec<f32>> {
+        self.inner.forward(batch, tokens, mask_h, mask_g)
+    }
+
+    fn forward_ord(&self, specs: &[ForwardSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inject(specs.len())?;
+        self.inner.forward_ord(specs)
+    }
+
+    fn forward_inc(&self, specs: &[IncSpec<'_>]) -> EngineResult<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        self.inject(specs.len())?;
+        self.inner.forward_inc(specs)
+    }
+
+    fn inc_lanes(&self) -> usize {
+        self.inner.inc_lanes()
+    }
+
+    fn reset_lane(&self, lane: usize) {
+        self.inner.reset_lane(lane)
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        self.inner.kv_stats()
+    }
+
+    fn max_gather_rows(&self) -> usize {
+        self.inner.max_gather_rows()
+    }
+
+    fn nfe(&self) -> u64 {
+        self.inner.nfe()
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+}
+
+fn mock() -> MockEngine {
+    MockEngine::new(5, 32, 258, 1.0)
+}
+
+fn pool<E, F>(factory: F, max_batch: usize) -> (SchedulerHandle, Metrics)
+where
+    E: Engine + Send + 'static,
+    F: FnOnce() -> E + Send + 'static,
+{
+    let metrics = Metrics::new();
+    let handle = spawn(
+        move || Ok(Box::new(factory()) as Box<dyn Engine>),
+        SchedulerConfig {
+            max_batch,
+            idle_poll: Duration::from_millis(1),
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    (handle, metrics)
+}
+
+/// Drain one request's event stream into its flattened (position, token)
+/// commit sequence plus the final response.
+fn drain(rh: RequestHandle) -> (Vec<(usize, u32)>, InfillResponse) {
+    let mut commits = Vec::new();
+    loop {
+        match rh.next_event() {
+            Some(Event::Committed { positions, tokens }) => {
+                commits.extend(positions.into_iter().zip(tokens));
+            }
+            Some(Event::Done(resp)) => return (commits, resp),
+            Some(Event::Error(e)) => panic!("request failed: {e}"),
+            None => panic!("scheduler dropped request"),
+        }
+    }
+}
+
+fn assert_each_target_once(commits: &[(usize, u32)], tag: &str) {
+    let mut seen = std::collections::HashSet::new();
+    for &(pos, _) in commits {
+        assert!(seen.insert(pos), "{tag}: position {pos} committed twice");
+    }
+    assert_eq!(commits.len(), 8, "{tag}: wrong commit count");
+}
+
+/// ACCEPTANCE (satellite c): preemption under KV pressure is invisible to
+/// the client — for all three decode machines and every drafter, the
+/// preempted-and-resumed run streams each target exactly once, in the
+/// same (position, token) order, to the same final text as an
+/// uninterrupted run with the same seed.
+#[test]
+fn kv_pressure_preemption_streams_bit_identically_for_all_machines() {
+    let configs: &[(&str, SamplerKind, DraftSpec)] = &[
+        (
+            "assd/self+adaptive",
+            SamplerKind::Assd,
+            DraftSpec::from_options(DraftOptions {
+                kind: DraftKind::SelfModel,
+                max_len: 4,
+                adaptive: true,
+            }),
+        ),
+        (
+            "assd/bigram",
+            SamplerKind::Assd,
+            DraftSpec::from_options(DraftOptions {
+                kind: DraftKind::Bigram,
+                max_len: 4,
+                adaptive: false,
+            }),
+        ),
+        (
+            "assd/lookup",
+            SamplerKind::Assd,
+            DraftSpec::from_options(DraftOptions {
+                kind: DraftKind::PromptLookup,
+                max_len: 4,
+                adaptive: false,
+            }),
+        ),
+        ("sequential", SamplerKind::Sequential, DraftSpec::default()),
+        ("diffusion", SamplerKind::Diffusion, DraftSpec::default()),
+    ];
+    for (tag, sampler, draft) in configs {
+        let req = |seed: u64| InfillRequest {
+            text: "ab________cd".into(),
+            sampler: *sampler,
+            draft: draft.clone(),
+            seed,
+            ..Default::default()
+        };
+        // Uninterrupted twin: same engine seed, no injected pressure.
+        let (clean, _) = pool(mock, 2);
+        let c1 = clean.submit(req(11)).unwrap();
+        let c2 = clean.submit(req(12)).unwrap();
+        let (clean1, clean_resp1) = drain(c1);
+        let (clean2, clean_resp2) = drain(c2);
+
+        let (pressured, metrics) = pool(|| PressureEngine::new(mock()), 2);
+        let p1 = pressured.submit(req(11)).unwrap();
+        let p2 = pressured.submit(req(12)).unwrap();
+        let (got1, resp1) = drain(p1);
+        let (got2, resp2) = drain(p2);
+
+        assert_eq!(
+            metrics.preemptions(),
+            1,
+            "{tag}: pressure with a batch-mate must preempt exactly once"
+        );
+        assert_eq!(metrics.requests_failed(), 0, "{tag}");
+        assert_eq!(metrics.requests(), 2, "{tag}: both requests completed");
+        assert_each_target_once(&got1, tag);
+        assert_each_target_once(&got2, tag);
+        assert_eq!(got1, clean1, "{tag}: seed 11 commit stream diverged");
+        assert_eq!(got2, clean2, "{tag}: seed 12 commit stream diverged");
+        assert_eq!(resp1.text, clean_resp1.text, "{tag}");
+        assert_eq!(resp2.text, clean_resp2.text, "{tag}");
+        assert!(!resp1.text.contains('_'), "{tag}: {}", resp1.text);
+    }
+}
+
+/// Preemption must NOT spend the request's retry budget or count as an
+/// engine-health event: with retry_budget 0, a kv-pressure failure that
+/// has a preemptable batch-mate still completes every request.
+#[test]
+fn preemption_spends_no_retry_budget() {
+    let metrics = Metrics::new();
+    let handle = spawn(
+        || Ok(Box::new(PressureEngine::new(mock())) as Box<dyn Engine>),
+        SchedulerConfig {
+            max_batch: 2,
+            idle_poll: Duration::from_millis(1),
+            retry_budget: 0,
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let req = |seed: u64| InfillRequest {
+        text: "ab________cd".into(),
+        seed,
+        ..Default::default()
+    };
+    let r1 = handle.submit(req(1)).unwrap();
+    let r2 = handle.submit(req(2)).unwrap();
+    let (_, resp1) = drain(r1);
+    let (_, resp2) = drain(r2);
+    assert!(!resp1.text.contains('_'));
+    assert!(!resp2.text.contains('_'));
+    assert_eq!(metrics.preemptions(), 1);
+    assert_eq!(metrics.requests_failed(), 0);
+}
+
+/// ACCEPTANCE (drain): POST-/drain semantics at the scheduler level —
+/// active slots checkpoint and park, admissions are refused while the
+/// flag is up, and lifting it resumes the parked slot to a final text
+/// bit-identical to an undrained run. The client's handle stays open
+/// across the park: no event is lost, none is re-emitted.
+#[test]
+fn drain_parks_then_resume_completes_bit_identically() {
+    let req = InfillRequest {
+        text: "ab________cd".into(),
+        sampler: SamplerKind::Sequential,
+        seed: 7,
+        ..Default::default()
+    };
+    // Undrained twin for the reference text.
+    let (clean, _) = pool(mock, 1);
+    let expected = clean.infill(req.clone()).unwrap().text;
+
+    let (handle, metrics) = pool(|| SlowEngine::new(mock(), Duration::from_millis(10)), 1);
+    let rh = handle.submit(req.clone()).unwrap();
+    // First commit proves the decode is mid-flight before we drain.
+    let first = rh.next_event();
+    let mut commits: Vec<(usize, u32)> = Vec::new();
+    match first {
+        Some(Event::Committed { positions, tokens }) => {
+            commits.extend(positions.into_iter().zip(tokens))
+        }
+        other => panic!("expected a commit first, got {other:?}"),
+    }
+    handle.set_draining(true);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while handle.parked() == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "drain never parked the active slot"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(handle.draining());
+    assert!(matches!(
+        handle.submit(req.clone()),
+        Err(SubmitError::Draining)
+    ));
+    let j = handle.drain_json();
+    assert_eq!(j.get("draining").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("parked").unwrap().as_f64(), Some(1.0));
+    assert!(j.get("drains").unwrap().as_f64().unwrap() >= 1.0);
+
+    handle.set_draining(false);
+    let (rest, resp) = drain(rh);
+    commits.extend(rest);
+    assert_each_target_once(&commits, "drain/resume");
+    assert_eq!(resp.text, expected, "resume diverged from undrained run");
+    assert!(metrics.drains() >= 1);
+    assert_eq!(metrics.requests_failed(), 0);
+    assert_eq!(handle.parked(), 0);
+    // The drain lifted: new admissions flow again.
+    assert!(!handle.infill(req).unwrap().text.contains('_'));
+}
+
+/// ACCEPTANCE (satellite b): the deadline clock keeps running while a
+/// checkpointed request waits in the resume queue — a preempted/drained
+/// request that expires while parked books `deadline_expired` (never
+/// `cancelled`) and reports its partial progress "while queued".
+#[test]
+fn request_expiring_while_parked_books_deadline_expired() {
+    let (handle, metrics) = pool(|| SlowEngine::new(mock(), Duration::from_millis(10)), 1);
+    let rh = handle
+        .submit(InfillRequest {
+            text: format!("ab{}cd", "_".repeat(12)),
+            sampler: SamplerKind::Sequential,
+            seed: 3,
+            timeout_ms: Some(300),
+            ..Default::default()
+        })
+        .unwrap();
+    // Admitted and progressing...
+    assert!(matches!(rh.next_event(), Some(Event::Committed { .. })));
+    // ...then parked well inside the deadline.
+    handle.set_draining(true);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while handle.parked() == 0 {
+        assert!(std::time::Instant::now() < deadline, "never parked");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // Let the deadline burn up IN THE PARK (the slot is off-engine; only
+    // the submission clock is still running), then lift the drain.
+    std::thread::sleep(Duration::from_millis(400));
+    handle.set_draining(false);
+    let err = rh.wait().unwrap_err().to_string();
+    assert!(err.contains("deadline exceeded"), "{err}");
+    assert!(err.contains("while queued"), "{err}");
+    assert!(err.contains("/12 tokens"), "{err}");
+    assert_eq!(metrics.deadline_expired(), 1, "books deadline_expired");
+    assert_eq!(metrics.cancelled(), 0, "must NOT book cancelled");
+    assert_eq!(metrics.requests(), 0);
+}
+
+/// The /drain admin surface over a live socket: POST flips the flag
+/// (503 + Retry-After on both infill endpoints while up), GET reports
+/// state, `?resume=1` lifts it — and an SSE stream opened BEFORE the
+/// drain stays open across park + resume and completes with the full
+/// text.
+#[test]
+fn drain_endpoint_over_http_keeps_streams_open() {
+    let metrics = Metrics::new();
+    let handle = spawn(
+        || {
+            Ok(Box::new(SlowEngine::new(mock(), Duration::from_millis(20))) as Box<dyn Engine>)
+        },
+        SchedulerConfig {
+            max_batch: 1,
+            idle_poll: Duration::from_millis(1),
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle.clone(), metrics.clone(), 4).unwrap();
+    let addr = server.serve_background();
+
+    // A stream in flight before the drain begins: 16 targets at 20 ms per
+    // forward is a ~320 ms decode, so the grace sleep below lands the
+    // drain mid-flight (after admission, long before completion).
+    let body = format!(
+        r#"{{"text":"ab{}cd","sampler":"sequential","seed":9}}"#,
+        "_".repeat(16)
+    );
+    let stream_body = body.clone();
+    let streamer =
+        std::thread::spawn(move || http_post_stream(&addr, "/infill/stream", &stream_body));
+    std::thread::sleep(Duration::from_millis(60));
+
+    let (code, resp) = http_post(&addr, "/drain", "").unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("draining").unwrap().as_bool(), Some(true));
+
+    // Both infill endpoints refuse with 503 + Retry-After (not the 429
+    // shed — the client must wait out the restart, not just back off).
+    let infill = r#"{"text":"ab____cd","seed":1}"#;
+    let r = http_post_stream(&addr, "/v1/infill", infill).unwrap();
+    assert_eq!(r.status, 503, "{}", r.body);
+    assert!(r.header("retry-after").is_some());
+    assert!(r.body.contains("draining"), "{}", r.body);
+    let r = http_post_stream(&addr, "/infill/stream", infill).unwrap();
+    assert_eq!(r.status, 503, "{}", r.body);
+
+    // The in-flight stream parks (visible at GET /drain) but stays open.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let (code, body) = http_get(&addr, "/drain").unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        if j.get("parked").unwrap().as_f64() == Some(1.0) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "stream never parked: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let (code, resp) = http_post(&addr, "/drain?resume=1", "").unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("draining").unwrap().as_bool(), Some(false));
+
+    // The parked stream resumed and completed; each target streamed once.
+    let stream = streamer.join().unwrap().unwrap();
+    assert_eq!(stream.status, 200, "{}", stream.body);
+    let done = stream
+        .events
+        .iter()
+        .find(|e| e.event == "done")
+        .unwrap_or_else(|| panic!("no done event: {:?}", stream.events));
+    let text = Json::parse(&done.data)
+        .unwrap()
+        .get("text")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert!(!text.contains('_'), "{text}");
+    let commits: usize = stream
+        .events
+        .iter()
+        .filter(|e| e.event == "commit")
+        .map(|e| {
+            Json::parse(&e.data)
+                .unwrap()
+                .get("positions")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len()
+        })
+        .sum();
+    assert_eq!(commits, 16, "each target exactly once across the park");
+
+    // Admissions flow again after the lift.
+    let (code, resp) = http_post(&addr, "/v1/infill", infill).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert!(metrics.drains() >= 1);
+}
+
+/// Satellite a: the pool's retry budget is a serve-level knob surfaced
+/// in every /replicas object.
+#[test]
+fn replicas_json_carries_retry_budget() {
+    let metrics = Metrics::new();
+    let handle = spawn(
+        || Ok(Box::new(mock()) as Box<dyn Engine>),
+        SchedulerConfig {
+            max_batch: 2,
+            idle_poll: Duration::from_millis(1),
+            retry_budget: 3,
+            ..Default::default()
+        },
+        metrics.clone(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", handle, metrics, 2).unwrap();
+    let addr = server.serve_background();
+    let (code, body) = http_get(&addr, "/replicas").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&body).unwrap();
+    let arr = j.as_arr().expect("array of replicas");
+    assert!(!arr.is_empty());
+    for r in arr {
+        assert_eq!(
+            r.get("retry_budget").unwrap().as_f64(),
+            Some(3.0),
+            "{body}"
+        );
+    }
+}
